@@ -1,0 +1,153 @@
+//! END-TO-END driver (the repository's headline experiment).
+//!
+//! Runs the complete Mem-Aladdin pipeline on the paper's four DSE
+//! benchmarks at paper scale:
+//!
+//!   trace → spatial locality → design-space sweep (design points scored
+//!   through the AOT Pallas cost model via PJRT) → Pareto frontiers →
+//!   performance ratios → locality correlation,
+//!
+//! writing `results/fig4_<bench>.csv` and `results/fig5.csv`, printing
+//! the figures as ASCII, and checking the paper's §IV-C claim. Also
+//! functionally validates the workload datapath artifacts (GEMM tile)
+//! against the Rust traced execution — proving all three layers compose.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example full_dse
+//! ```
+
+use amm_dse::coordinator::{Coordinator, CostBackend};
+use amm_dse::dse::{self, Sweep};
+use amm_dse::runtime::{names, Runtime};
+use amm_dse::suite::{self, Scale};
+use amm_dse::util::stats;
+use amm_dse::{locality, report};
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    let coord = Coordinator::new();
+    println!("cost backend: {:?} (Pjrt = AOT Pallas kernel through PJRT)", coord.backend);
+    if coord.backend != CostBackend::Pjrt {
+        eprintln!("warning: run `make artifacts` first to exercise the PJRT path");
+    }
+
+    // --- layer-composition check: run the GEMM datapath artifact ------
+    if coord.backend == CostBackend::Pjrt {
+        verify_gemm_artifact()?;
+    }
+
+    // --- the four-panel Fig 4 sweep ------------------------------------
+    let sweep = Sweep::default();
+    println!("\nsweep: {} design points per benchmark", sweep.configs().len());
+    let mut summaries = Vec::new();
+    for name in suite::DSE_BENCHMARKS {
+        let t0 = Instant::now();
+        let wl = suite::generate(name, Scale::Paper);
+        let loc = locality::analyze(&wl.trace).spatial_locality();
+        let points = coord.run_sweep(&wl.trace, &sweep)?;
+        let ratio = dse::performance_ratio(&points, 0.10);
+        let csv = format!("results/fig4_{name}.csv");
+        report::write_file(Path::new(&csv), &report::fig4_csv(&points))?;
+        println!(
+            "\n=== {name}: {} nodes, L_spatial {:.3}, {} points in {:.1?} -> {csv}",
+            wl.trace.len(),
+            loc,
+            points.len(),
+            t0.elapsed()
+        );
+        println!("{}", report::ascii_scatter(&points, |p| p.area(), &format!("Fig4 {name}: area vs time"), 72, 16));
+        summaries.push(dse::BenchSummary {
+            name: name.to_string(),
+            locality: loc,
+            perf_ratio: ratio,
+            best_banking_ns: dse::best_time(&points, |p| !p.is_amm),
+            best_amm_ns: dse::best_time(&points, |p| p.is_amm),
+            n_points: points.len(),
+        });
+    }
+
+    // --- Fig 5: locality for the whole suite + ratios -----------------
+    for name in suite::ALL_BENCHMARKS {
+        if suite::DSE_BENCHMARKS.contains(&name) {
+            continue;
+        }
+        let wl = suite::generate(name, Scale::Paper);
+        summaries.push(dse::BenchSummary {
+            name: name.to_string(),
+            locality: locality::analyze(&wl.trace).spatial_locality(),
+            perf_ratio: None,
+            best_banking_ns: f64::NAN,
+            best_amm_ns: f64::NAN,
+            n_points: 0,
+        });
+    }
+    summaries.sort_by(|a, b| a.name.cmp(&b.name));
+    report::write_file(Path::new("results/fig5.csv"), &report::fig5_csv(&summaries))?;
+    println!("\n{}", report::fig5_ascii(&summaries));
+
+    // --- the paper's §IV-C claim ---------------------------------------
+    let with_ratio: Vec<&dse::BenchSummary> =
+        summaries.iter().filter(|s| s.perf_ratio.is_some()).collect();
+    let xs: Vec<f64> = with_ratio.iter().map(|s| s.locality).collect();
+    let ys: Vec<f64> = with_ratio.iter().map(|s| s.perf_ratio.unwrap()).collect();
+    println!(
+        "locality vs perf-ratio: pearson {:.3}, spearman {:.3}",
+        stats::pearson(&xs, &ys),
+        stats::spearman(&xs, &ys)
+    );
+    // The paper's win criterion for "high-performance design": AMMs
+    // *extend the design space* (Fig 4's blue-shaded region — AMM points
+    // at cycle counts banking cannot reach) exactly when spatial
+    // locality is low (< 0.3); the area ratio separates KMP (AMM pays)
+    // from the rest (nearly equal / better).
+    let mut consistent = 0;
+    for s in &with_ratio {
+        let low = s.locality < 0.3;
+        let extends = s.best_amm_ns < s.best_banking_ns;
+        println!(
+            "  {:<10} L={:.3} ratio={:.3} amm-extends-frontier={} -> {}",
+            s.name,
+            s.locality,
+            s.perf_ratio.unwrap(),
+            extends,
+            if low == extends { "consistent with paper (low locality <=> AMM wins)" } else { "inconsistent" }
+        );
+        if low == extends {
+            consistent += 1;
+        }
+    }
+    println!(
+        "\n{} of {} benchmarks consistent with the paper's threshold claim; total {:.1?}",
+        consistent,
+        with_ratio.len(),
+        t_start.elapsed()
+    );
+    Ok(())
+}
+
+/// Run the AOT GEMM tile datapath through PJRT and compare with a Rust
+/// matmul — the L1→L2→L3 composition proof on real data.
+fn verify_gemm_artifact() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let exe = rt.load(names::GEMM)?;
+    let n = 64usize;
+    let mut rng = amm_dse::util::rng::Rng::new(77);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let out = exe.run_f32(&[(&a, &[n, n]), (&b, &[n, n])])?;
+    let mut max_err = 0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let mut want = 0f32;
+            for k in 0..n {
+                want += a[i * n + k] * b[k * n + j];
+            }
+            max_err = max_err.max((out[0][i * n + j] - want).abs());
+        }
+    }
+    anyhow::ensure!(max_err < 1e-3, "gemm artifact mismatch: {max_err}");
+    println!("layer-composition check: PJRT GEMM datapath matches Rust matmul (max err {max_err:.2e})");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: JAX/Pallas kernels AOT-lowered to HLO text.
+
+Nothing in here runs at request time — `make artifacts` invokes
+`compile.aot` once and the Rust binary self-contains afterwards.
+"""

@@ -1,0 +1,142 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Usage: ``python -m compile.aot [--out-dir ../artifacts]`` (the Makefile's
+`artifacts` target). Each model entry point is jitted, lowered to
+stablehlo, converted to an XlaComputation and dumped as HLO **text** —
+the only interchange format xla_extension 0.5.1 accepts from jax ≥ 0.5
+(64-bit instruction ids in serialized protos are rejected; the text
+parser reassigns ids). See /opt/xla-example/README.md.
+
+Before writing anything, every kernel is validated against its pure-jnp
+oracle (kernels/ref.py); a disagreement aborts the build.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+# Artifact shapes — keep in lockstep with rust/src/coordinator (COST_BATCH)
+# and the examples.
+COST_N = 1024
+XOR_D = 1024
+XOR_N = 512
+GEMM_N = 64
+STENCIL_ROWS = 32
+FFT_N = 512
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def specs():
+    """(name, fn, example_args) for every artifact."""
+    return [
+        ("cost_model", model.cost_model, (_f32(COST_N, 4),)),
+        (
+            "xor_recon",
+            model.xor_recon,
+            (_i32(XOR_D), _i32(XOR_D), _i32(XOR_D), _i32(XOR_N), _i32(XOR_N), _i32(XOR_N)),
+        ),
+        ("gemm", model.gemm, (_f32(GEMM_N, GEMM_N), _f32(GEMM_N, GEMM_N))),
+        (
+            "stencil2d",
+            model.stencil2d,
+            (_f32(STENCIL_ROWS, STENCIL_ROWS), _f32(3, 3)),
+        ),
+        (
+            "fft_stage",
+            model.fft_stage,
+            (_f32(FFT_N), _f32(FFT_N), _f32(FFT_N // 2), _f32(FFT_N // 2)),
+        ),
+    ]
+
+
+def validate() -> None:
+    """Kernels must match their oracles before we emit artifacts."""
+    rng = np.random.default_rng(0)
+
+    x = np.stack(
+        [
+            rng.choice([64, 256, 1024, 4096, 16384], COST_N).astype(np.float32),
+            rng.choice([8, 16, 32, 64], COST_N).astype(np.float32),
+            rng.choice([1, 2, 4], COST_N).astype(np.float32),
+            rng.choice([1, 2, 4], COST_N).astype(np.float32),
+        ],
+        axis=-1,
+    )
+    got = model.cost_model(jnp.asarray(x))[0]
+    want = ref.cost_ref(jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    b0 = rng.integers(0, 2**31, XOR_D, dtype=np.int32)
+    b1 = rng.integers(0, 2**31, XOR_D, dtype=np.int32)
+    par = np.bitwise_xor(b0, b1)
+    idx = rng.integers(0, XOR_D, XOR_N, dtype=np.int32)
+    sel = rng.integers(0, 2, XOR_N, dtype=np.int32)
+    conflict = rng.integers(0, 2, XOR_N, dtype=np.int32)
+    got = model.xor_recon(*map(jnp.asarray, (b0, b1, par, idx, sel, conflict)))[0]
+    want = ref.xor_recon_ref(*map(jnp.asarray, (b0, b1, par, idx, sel, conflict)))
+    np.testing.assert_array_equal(got, want)
+
+    a = rng.standard_normal((GEMM_N, GEMM_N), dtype=np.float32)
+    b = rng.standard_normal((GEMM_N, GEMM_N), dtype=np.float32)
+    np.testing.assert_allclose(
+        model.gemm(jnp.asarray(a), jnp.asarray(b))[0],
+        ref.gemm_ref(jnp.asarray(a), jnp.asarray(b)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+    g = rng.standard_normal((STENCIL_ROWS, STENCIL_ROWS), dtype=np.float32)
+    f = rng.standard_normal((3, 3), dtype=np.float32)
+    np.testing.assert_allclose(
+        model.stencil2d(jnp.asarray(g), jnp.asarray(f))[0],
+        ref.stencil2d_ref(jnp.asarray(g), jnp.asarray(f)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+    print("aot: kernel-vs-oracle validation OK", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--skip-validate", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    if not args.skip_validate:
+        validate()
+
+    for name, fn, example_args in specs():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"aot: wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""CACTI-lite SRAM macro cost model as a Pallas kernel — the DSE hot path.
+
+Mirrors ``rust/src/sram/mod.rs`` **exactly** (same f32 formulas, same
+constants). The Rust coordinator batches `[depth, width, read_ports,
+write_ports]` queries through the AOT-compiled version of this kernel via
+PJRT; `rust/tests/pjrt_cost.rs` asserts Rust-mirror/PJRT agreement.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a pure elementwise pipeline
+(sqrt, log2, polynomials) over the design-point axis — VPU-friendly; the
+batch axis is tiled into VMEM-resident blocks by the BlockSpec below.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# --- calibration constants: keep in lockstep with rust/src/sram/mod.rs ---
+CELL_UM2 = 0.65
+PORT_PITCH = 0.5
+PERIPH_A = 1.9
+PERIPH_B = 520.0
+E_READ_0 = 0.45
+E_READ_BIT = 0.0021
+WRITE_FACTOR = 1.18
+LEAK_BIT = 0.00082
+LEAK_0 = 3.1
+T_0 = 0.28
+T_DEC = 0.042
+T_BL = 0.0095
+T_PORT = 0.06
+
+# Rows per grid step: 2 tiles double-buffer comfortably in ~16 MB VMEM
+# (tile bytes = 128 x 5 x 4 B ≈ 2.5 KB — tiny; the tile size is chosen to
+# keep the 8x128 VPU lanes full, not by VMEM pressure).
+TILE = 128
+
+
+def _cost_block(x):
+    """The shared elementwise pipeline over a [tile, 4] block."""
+    depth = jnp.maximum(x[:, 0], 1.0)
+    width = jnp.maximum(x[:, 1], 1.0)
+    ports = x[:, 2] + x[:, 3]
+    extra = jnp.maximum(ports - 2.0, 0.0)
+    pitch = 1.0 + PORT_PITCH * extra
+    sqrt_d = jnp.sqrt(depth)
+    area = depth * width * CELL_UM2 * pitch * pitch \
+        + PERIPH_A * width * sqrt_d * pitch + PERIPH_B
+    e_read = E_READ_0 + E_READ_BIT * width * sqrt_d * pitch
+    e_write = e_read * WRITE_FACTOR
+    leak = LEAK_0 + LEAK_BIT * depth * width * pitch * pitch
+    t = T_0 + T_DEC * jnp.log2(depth) + T_BL * sqrt_d * pitch + T_PORT * extra
+    return jnp.stack([area, e_read, e_write, leak, t], axis=-1)
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = _cost_block(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cost_eval(x):
+    """Evaluate the macro model for a [N, 4] f32 design matrix → [N, 5].
+
+    N must be a multiple of TILE (the AOT artifact uses N=1024; the Rust
+    side pads its final chunk).
+    """
+    n = x.shape[0]
+    assert n % TILE == 0, f"batch {n} not a multiple of {TILE}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // TILE,),
+        in_specs=[pl.BlockSpec((TILE, 4), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE, 5), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 5), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

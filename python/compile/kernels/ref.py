@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness
+signal. pytest (python/tests/) asserts kernel == ref across shapes/dtypes
+(hypothesis sweeps), and `aot.py` refuses to emit artifacts if any kernel
+disagrees with its oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import cost_eval as ce
+
+
+def cost_ref(x):
+    """[N,4] → [N,5] macro cost, no Pallas (plain jnp)."""
+    x = x.astype(jnp.float32)
+    depth = jnp.maximum(x[:, 0], 1.0)
+    width = jnp.maximum(x[:, 1], 1.0)
+    ports = x[:, 2] + x[:, 3]
+    extra = jnp.maximum(ports - 2.0, 0.0)
+    pitch = 1.0 + ce.PORT_PITCH * extra
+    sqrt_d = jnp.sqrt(depth)
+    area = depth * width * ce.CELL_UM2 * pitch * pitch \
+        + ce.PERIPH_A * width * sqrt_d * pitch + ce.PERIPH_B
+    e_read = ce.E_READ_0 + ce.E_READ_BIT * width * sqrt_d * pitch
+    e_write = e_read * ce.WRITE_FACTOR
+    leak = ce.LEAK_0 + ce.LEAK_BIT * depth * width * pitch * pitch
+    t = ce.T_0 + ce.T_DEC * jnp.log2(depth) + ce.T_BL * sqrt_d * pitch \
+        + ce.T_PORT * extra
+    return jnp.stack([area, e_read, e_write, leak, t], axis=-1)
+
+
+def xor_recon_ref(bank0, bank1, parity, idx, sel, conflict):
+    """Reference H-NTX-Rd read path."""
+    bank0 = bank0.astype(jnp.int32)
+    bank1 = bank1.astype(jnp.int32)
+    parity = parity.astype(jnp.int32)
+    own = jnp.where(sel == 0, bank0[idx], bank1[idx])
+    sib = jnp.where(sel == 0, bank1[idx], bank0[idx])
+    recon = jax.lax.bitwise_xor(sib, parity[idx])
+    return jnp.where(conflict != 0, recon, own)
+
+
+def gemm_ref(a, b):
+    """Plain matmul."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def stencil2d_ref(grid, filt):
+    """MachSuite stencil2d semantics (interior only, borders zero)."""
+    grid = grid.astype(jnp.float32)
+    filt = filt.astype(jnp.float32)
+    rows, cols = grid.shape
+    acc = jnp.zeros((rows - 2, cols - 2), jnp.float32)
+    for k1 in range(3):
+        for k2 in range(3):
+            acc = acc + filt[k1, k2] * grid[k1 : k1 + rows - 2, k2 : k2 + cols - 2]
+    out = jnp.zeros_like(grid)
+    return out.at[: rows - 2, : cols - 2].set(acc)
+
+
+def fft_stage_ref(re, im, tw_re, tw_im):
+    """One strided-FFT butterfly stage (span = N/2, log = 0), vectorized.
+
+    Mirrors MachSuite's first stage: for odd in [span, N): even = odd-span;
+    butterflies then twiddle where rootindex = even != 0.
+    """
+    re = re.astype(jnp.float32)
+    im = im.astype(jnp.float32)
+    n = re.shape[0]
+    span = n // 2
+    re_e, re_o = re[:span], re[span:]
+    im_e, im_o = im[:span], im[span:]
+    new_re_e = re_e + re_o
+    new_re_o = re_e - re_o
+    new_im_e = im_e + im_o
+    new_im_o = im_e - im_o
+    # twiddle for rootindex = even index (0..span-1); index 0 untouched
+    tr = tw_re.astype(jnp.float32)
+    ti = tw_im.astype(jnp.float32)
+    tw_applied_re = tr * new_re_o - ti * new_im_o
+    tw_applied_im = tr * new_im_o + ti * new_re_o
+    rooted = jnp.arange(span) != 0
+    out_re_o = jnp.where(rooted, tw_applied_re, new_re_o)
+    out_im_o = jnp.where(rooted, tw_applied_im, new_im_o)
+    return (
+        jnp.concatenate([new_re_e, out_re_o]),
+        jnp.concatenate([new_im_e, out_im_o]),
+    )

@@ -1,0 +1,78 @@
+"""Workload datapath kernels: the compute side of the accelerator whose
+memory system the DSE explores (GEMM-NCUBED and Stencil-2D tiles).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): `gemm_tile` is shaped for
+the MXU — (TM, TK) x (TK, TN) f32 tiles accumulated over the K grid axis;
+`stencil2d` is a VPU kernel over shifted slices (the 3x3 taps become 9
+shifted adds, no gather).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles. 64 keeps the interpret-mode tests fast while the
+# BlockSpec structure (K innermost, accumulate-in-place) is exactly what
+# a real Mosaic lowering wants.
+TM = TN = TK = 32
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gemm(a, b):
+    """Tiled matmul C = A @ B for [N, N] f32 (N multiple of 32)."""
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2 and n % TM == 0 and m % TN == 0 and k % TK == 0
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(n // TM, m // TN, k // TK),
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TK, TN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def _stencil_kernel(grid_ref, filt_ref, o_ref):
+    g = grid_ref[...]
+    f = filt_ref[...]
+    rows, cols = g.shape
+    acc = jnp.zeros((rows - 2, cols - 2), jnp.float32)
+    for k1 in range(3):
+        for k2 in range(3):
+            acc = acc + f[k1, k2] * g[k1 : k1 + rows - 2, k2 : k2 + cols - 2]
+    out = jnp.zeros_like(g)
+    out = out.at[: rows - 2, : cols - 2].set(acc)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=())
+def stencil2d(grid, filt):
+    """MachSuite stencil2d: 3x3 filter; sol[r][c] for r,c < n-2, rest 0."""
+    rows, cols = grid.shape
+    return pl.pallas_call(
+        _stencil_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+            pl.BlockSpec((3, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(grid.astype(jnp.float32), filt.astype(jnp.float32))

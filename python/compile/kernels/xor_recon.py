@@ -1,0 +1,73 @@
+"""H-NTX-Rd XOR read-path as a Pallas kernel (paper §II-A).
+
+Given the two data banks and the reference (parity) bank of an H-NTX-Rd
+memory, service a batch of reads: port-conflicted reads take the recovery
+path ``sibling[i] ⊕ Ref[i]``, direct reads take their own bank. This is
+the datapath the `mem::functional::HNtxRd` Rust simulator models
+bit-accurately; `examples/amm_functional.rs` cross-checks the two through
+PJRT.
+
+TPU mapping: the banks live fully in VMEM (three [D] i32 vectors); the
+read batch is tiled; the gather becomes a VMEM-local `jnp.take`, and the
+XOR tree is a single VPU op per lane.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _kernel(bank0_ref, bank1_ref, parity_ref, idx_ref, sel_ref, conflict_ref, o_ref):
+    b0 = bank0_ref[...]
+    b1 = bank1_ref[...]
+    par = parity_ref[...]
+    idx = idx_ref[...]
+    sel = sel_ref[...]
+    conflict = conflict_ref[...]
+    own = jnp.where(sel == 0, jnp.take(b0, idx), jnp.take(b1, idx))
+    sib = jnp.where(sel == 0, jnp.take(b1, idx), jnp.take(b0, idx))
+    recon = jax.lax.bitwise_xor(sib, jnp.take(par, idx))
+    o_ref[...] = jnp.where(conflict != 0, recon, own)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def xor_recon(bank0, bank1, parity, idx, sel, conflict):
+    """Reconstruct a batch of reads.
+
+    Args:
+      bank0, bank1, parity: [D] i32 bank contents (parity = bank0^bank1).
+      idx: [N] i32 in-bank offsets.
+      sel: [N] i32 bank selector (0/1).
+      conflict: [N] i32 — nonzero forces the parity recovery path.
+    Returns:
+      [N] i32 read values.
+    """
+    n = idx.shape[0]
+    assert n % TILE == 0, f"batch {n} not a multiple of {TILE}"
+    d = bank0.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // TILE,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(
+        bank0.astype(jnp.int32),
+        bank1.astype(jnp.int32),
+        parity.astype(jnp.int32),
+        idx.astype(jnp.int32),
+        sel.astype(jnp.int32),
+        conflict.astype(jnp.int32),
+    )

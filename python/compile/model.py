@@ -1,0 +1,41 @@
+"""Layer-2 JAX graphs: what actually gets AOT-lowered for the Rust side.
+
+Each exported entry point returns a *tuple* (the Rust loader unwraps with
+``decompose_tuple``) and calls the Layer-1 Pallas kernels so they lower
+into the same HLO module.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cost_eval as ce
+from .kernels import ref
+from .kernels import workloads as wk
+from .kernels import xor_recon as xr
+
+
+def cost_model(x):
+    """Batched SRAM macro cost: [N,4] → ([N,5],). The DSE hot path."""
+    return (ce.cost_eval(x),)
+
+
+def xor_recon(bank0, bank1, parity, idx, sel, conflict):
+    """H-NTX-Rd read reconstruction: → ([N] i32,)."""
+    return (xr.xor_recon(bank0, bank1, parity, idx, sel, conflict),)
+
+
+def gemm(a, b):
+    """Tiled GEMM datapath: → ([N,N] f32,)."""
+    return (wk.gemm(a, b),)
+
+
+def stencil2d(grid, filt):
+    """Stencil datapath: → ([R,C] f32,)."""
+    return (wk.stencil2d(grid, filt),)
+
+
+def fft_stage(re, im, tw_re, tw_im):
+    """One strided-FFT butterfly stage (plain jnp — the memory behaviour
+    of FFT is what the trace generator models; this is the compute
+    datapath used by the end-to-end example): → (re', im')."""
+    out_re, out_im = ref.fft_stage_ref(re, im, tw_re, tw_im)
+    return (out_re.astype(jnp.float32), out_im.astype(jnp.float32))

@@ -1,0 +1,75 @@
+"""Pallas cost kernel vs pure-jnp oracle — incl. hypothesis shape sweeps."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from compile.kernels import cost_eval as ce
+from compile.kernels import ref
+
+
+def _random_designs(rng, n):
+    return np.stack(
+        [
+            rng.choice([4, 64, 256, 1024, 4096, 16384, 65536], n).astype(np.float32),
+            rng.choice([1, 8, 16, 32, 64, 128], n).astype(np.float32),
+            rng.choice([1, 2, 4, 8], n).astype(np.float32),
+            rng.choice([1, 2, 4, 8], n).astype(np.float32),
+        ],
+        axis=-1,
+    )
+
+
+def test_matches_ref_fixed_batch():
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(_random_designs(rng, 1024))
+    np.testing.assert_allclose(ce.cost_eval(x), ref.cost_ref(x), rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    tiles=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_matches_ref_across_batch_sizes(tiles, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(_random_designs(rng, tiles * ce.TILE))
+    np.testing.assert_allclose(ce.cost_eval(x), ref.cost_ref(x), rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    depth=st.sampled_from([4.0, 256.0, 4096.0, 262144.0]),
+    width=st.sampled_from([1.0, 32.0, 256.0]),
+    r=st.sampled_from([1.0, 2.0, 8.0]),
+    w=st.sampled_from([1.0, 2.0, 8.0]),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_extreme_corners_finite_and_exact(depth, width, r, w):
+    x = jnp.asarray(np.tile([depth, width, r, w], (ce.TILE, 1)).astype(np.float32))
+    got = np.asarray(ce.cost_eval(x))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, ref.cost_ref(x), rtol=1e-5, atol=1e-5)
+
+
+def test_monotone_in_depth():
+    cols = lambda d: [d, 32.0, 1.0, 1.0]
+    rows = ([cols(256), cols(1024), cols(4096)] * 43 + [cols(256.0)] * 3)[: ce.TILE]
+    x = jnp.asarray(np.array(rows, np.float32))
+    out = np.asarray(ce.cost_eval(x))
+    assert out[0, 0] < out[1, 0] < out[2, 0]  # area
+    assert out[0, 4] < out[1, 4] < out[2, 4]  # access time
+
+
+def test_rejects_non_tile_multiple():
+    with pytest.raises(AssertionError):
+        ce.cost_eval(jnp.zeros((100, 4), jnp.float32))
+
+
+def test_port_pitch_quadratic_blowup():
+    """The paper's premise: circuit-level multiport cells blow up."""
+    base = jnp.asarray(np.tile([1024.0, 32.0, 1.0, 1.0], (ce.TILE, 1)).astype(np.float32))
+    multi = jnp.asarray(np.tile([1024.0, 32.0, 4.0, 2.0], (ce.TILE, 1)).astype(np.float32))
+    a0 = float(np.asarray(ce.cost_eval(base))[0, 0])
+    a1 = float(np.asarray(ce.cost_eval(multi))[0, 0])
+    assert a1 > 4.0 * a0

@@ -1,0 +1,77 @@
+"""GEMM / stencil Pallas kernels vs oracles; fft_stage vs numpy FFT math."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from compile import model
+from compile.kernels import ref
+from compile.kernels import workloads as wk
+
+
+def test_gemm_matches_ref():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((64, 64), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((64, 64), dtype=np.float32))
+    np.testing.assert_allclose(wk.gemm(a, b), ref.gemm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(
+    n=st.sampled_from([32, 64, 96, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_gemm_across_sizes(n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((n, n), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((n, n), dtype=np.float32))
+    np.testing.assert_allclose(wk.gemm(a, b), ref.gemm_ref(a, b), rtol=1e-3, atol=1e-3)
+
+
+def test_gemm_rectangular():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.standard_normal((32, 96), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((96, 64), dtype=np.float32))
+    np.testing.assert_allclose(wk.gemm(a, b), ref.gemm_ref(a, b), rtol=1e-3, atol=1e-3)
+
+
+def test_stencil_matches_ref():
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.standard_normal((32, 32), dtype=np.float32))
+    f = jnp.asarray(rng.standard_normal((3, 3), dtype=np.float32))
+    np.testing.assert_allclose(
+        wk.stencil2d(g, f), ref.stencil2d_ref(g, f), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_stencil_identity_filter():
+    g = jnp.asarray(np.arange(64, dtype=np.float32).reshape(8, 8))
+    f = jnp.zeros((3, 3), jnp.float32).at[0, 0].set(1.0)
+    out = np.asarray(wk.stencil2d(g, f))
+    np.testing.assert_allclose(out[:6, :6], np.asarray(g)[:6, :6])
+    assert (out[6:, :] == 0).all() and (out[:, 6:] == 0).all()
+
+
+def test_fft_stage_is_a_valid_butterfly():
+    """Applying the stage then undoing it recovers the input (the
+    butterfly is invertible: e' = e+o, o' = (e-o)·tw)."""
+    rng = np.random.default_rng(4)
+    n = 512
+    re = rng.standard_normal(n).astype(np.float32)
+    im = rng.standard_normal(n).astype(np.float32)
+    k = np.arange(n // 2)
+    tw_re = np.cos(-2 * np.pi * k / n).astype(np.float32)
+    tw_im = np.sin(-2 * np.pi * k / n).astype(np.float32)
+    out_re, out_im = model.fft_stage(*map(jnp.asarray, (re, im, tw_re, tw_im)))
+    out_re, out_im = np.asarray(out_re), np.asarray(out_im)
+    # undo twiddle on the odd half (skip index 0, untouched)
+    tw = tw_re + 1j * tw_im
+    odd = out_re[n // 2 :] + 1j * out_im[n // 2 :]
+    odd[1:] = odd[1:] / tw[1:]
+    even = out_re[: n // 2] + 1j * out_im[: n // 2]
+    # invert butterfly
+    e = (even + odd) / 2
+    o = (even - odd) / 2
+    np.testing.assert_allclose(e.real, re[: n // 2], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(o.real, re[n // 2 :], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(e.imag, im[: n // 2], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,109 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Hierarchical vs flat XOR** (HB-NTX vs LaForest) — area across
+//!    port configs; the reason the paper builds on the hierarchical flow.
+//! 2. **Cyclic vs block partitioning** (§IV-A) — cycles on stride-1 vs
+//!    strided benchmarks.
+//! 3. **Word size** — the §IV-B lever: byte words for KMP vs 8-byte
+//!    words for GEMM.
+//! 4. **EDP objective** — best energy-delay-product design per benchmark
+//!    (the paper's §I EDP-maximization objective), AMM vs banking.
+//!
+//! Writes `results/ablation.csv`. `cargo bench --bench ablation [-- --quick]`
+
+use amm_dse::dse::{DesignPoint, Sweep};
+use amm_dse::mem::MemKind;
+use amm_dse::report;
+use amm_dse::sched::{simulate, DesignConfig};
+use amm_dse::suite::{self, Scale};
+use amm_dse::util::benchkit::Bench;
+use std::fmt::Write as _;
+use std::path::Path;
+
+fn main() {
+    let mut bench = Bench::from_args();
+    let mut csv = String::from("ablation,case,metric,value\n");
+
+    // 1. hierarchical vs flat XOR area
+    bench.run("ablation/xor-hier-vs-flat", None, || {
+        for (r, w) in [(2u32, 1u32), (2, 2), (4, 2), (4, 4), (8, 4)] {
+            let hb = MemKind::XorAmm { read_ports: r, write_ports: w }.build(8192, 64);
+            let flat = MemKind::XorFlat { read_ports: r, write_ports: w }.build(8192, 64);
+            let save = flat.area_um2() / hb.area_um2();
+            let _ = writeln!(csv, "xor-hier-vs-flat,{r}R{w}W,area_saving_x,{save:.3}");
+        }
+        0u8
+    });
+
+    // 2. cyclic vs block partitioning
+    for name in ["kmp", "fft"] {
+        let wl = suite::generate(name, Scale::Paper);
+        bench.run(&format!("ablation/cyclic-vs-block/{name}"), None, || {
+            for banks in [4u32, 16] {
+                let cyc = simulate(
+                    &wl.trace,
+                    &DesignConfig { mem: MemKind::Banked { banks }, unroll: 8, word_bytes: 4, alus: 8 },
+                );
+                let blk = simulate(
+                    &wl.trace,
+                    &DesignConfig { mem: MemKind::BankedBlock { banks }, unroll: 8, word_bytes: 4, alus: 8 },
+                );
+                let _ = writeln!(
+                    csv,
+                    "cyclic-vs-block,{name}/b{banks},block_slowdown_x,{:.3}",
+                    blk.cycles as f64 / cyc.cycles as f64
+                );
+            }
+            0u8
+        });
+    }
+
+    // 3. word size on KMP vs GEMM (banked 8)
+    for name in ["kmp", "gemm"] {
+        let wl = suite::generate(name, Scale::Paper);
+        bench.run(&format!("ablation/word-size/{name}"), None, || {
+            for wb in [1u32, 8] {
+                let out = simulate(
+                    &wl.trace,
+                    &DesignConfig { mem: MemKind::Banked { banks: 8 }, unroll: 8, word_bytes: wb, alus: 8 },
+                );
+                let _ = writeln!(csv, "word-size,{name}/w{wb},cycles,{}", out.cycles);
+                let _ = writeln!(csv, "word-size,{name}/w{wb},area_um2,{:.1}", out.area_um2);
+            }
+            0u8
+        });
+    }
+
+    // 4. EDP-optimal designs, AMM vs banking
+    let sweep = Sweep { alus: vec![4, 8], word_bytes: vec![4, 8], ..Sweep::default() };
+    for name in suite::DSE_BENCHMARKS {
+        let wl = suite::generate(name, Scale::Paper);
+        bench.run(&format!("ablation/edp/{name}"), None, || {
+            let points = sweep.run(&wl.trace);
+            let best = |amm: bool| -> Option<&DesignPoint> {
+                points
+                    .iter()
+                    .filter(|p| p.is_amm == amm)
+                    .min_by(|a, b| a.edp().partial_cmp(&b.edp()).unwrap())
+            };
+            if let (Some(b), Some(a)) = (best(false), best(true)) {
+                let _ = writeln!(csv, "edp,{name}/banking,best_edp,{:.4e}", b.edp());
+                let _ = writeln!(csv, "edp,{name}/amm,best_edp,{:.4e}", a.edp());
+                let _ = writeln!(csv, "edp,{name},banking_over_amm_x,{:.3}", b.edp() / a.edp());
+            }
+            points.len()
+        });
+    }
+
+    // The harness runs each closure warmup+iters times; dedupe the
+    // accumulated rows (they are identical across iterations).
+    let mut seen = std::collections::HashSet::new();
+    let deduped: String = csv
+        .lines()
+        .filter(|l| seen.insert(l.to_string()))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    report::write_file(Path::new("results/ablation.csv"), &deduped).unwrap();
+    println!("wrote results/ablation.csv ({} rows)", deduped.lines().count() - 1);
+    bench.finish();
+}

@@ -1,0 +1,69 @@
+//! Bench + regeneration harness for **Fig 2**: the HB-NTX-RdWr port-
+//! scaling flow — bank counts, capacity overhead and glue logic as read
+//! and write ports double, vs LVT and circuit-level multiport. Writes
+//! `results/fig2_port_scaling.csv`.
+//!
+//! `cargo bench --bench fig2_port_scaling [-- --quick]`
+
+use amm_dse::mem::MemKind;
+use amm_dse::report;
+use amm_dse::util::benchkit::Bench;
+use std::fmt::Write as _;
+use std::path::Path;
+
+fn main() {
+    let mut bench = Bench::from_args();
+    let configs: Vec<(u32, u32)> = vec![(1, 1), (2, 1), (4, 1), (8, 1), (2, 2), (4, 2), (4, 4), (8, 4)];
+    let depths = [1024u32, 4096, 16384];
+
+    let rows = bench.run("fig2/port_scaling/build_all", Some((configs.len() * depths.len() * 3) as u64), || {
+        let mut rows = Vec::new();
+        for &depth in &depths {
+            let base = MemKind::Banked { banks: 1 }.build(depth, 32);
+            for &(r, w) in &configs {
+                for kind in [
+                    MemKind::XorAmm { read_ports: r, write_ports: w },
+                    MemKind::LvtAmm { read_ports: r, write_ports: w },
+                    MemKind::CircuitMp { read_ports: r, write_ports: w },
+                ] {
+                    let d = kind.build(depth, 32);
+                    rows.push((
+                        depth,
+                        format!("{r}R{w}W"),
+                        kind.id(),
+                        d.macros,
+                        d.macros as f32 * d.macro_depth as f32 / depth as f32,
+                        d.sram.area_um2,
+                        d.logic.area_um2,
+                        d.t_access_ns(),
+                        d.area_um2() / base.area_um2(),
+                    ));
+                }
+            }
+        }
+        rows
+    });
+
+    if let Some(rows) = rows {
+        let mut csv = String::from(
+            "depth,ports,design,macros,capacity_factor,sram_um2,logic_um2,t_access_ns,area_vs_1rw\n",
+        );
+        for r in &rows {
+            let _ = writeln!(
+                csv,
+                "{},{},{},{},{:.3},{:.1},{:.1},{:.4},{:.3}",
+                r.0, r.1, r.2, r.3, r.4, r.5, r.6, r.7, r.8
+            );
+        }
+        report::write_file(Path::new("results/fig2_port_scaling.csv"), &csv).unwrap();
+        println!("wrote results/fig2_port_scaling.csv ({} rows)", rows.len());
+        // shape check: XOR capacity grows linearly, LVT multiplicatively
+        let xor8r4w = rows.iter().find(|r| r.0 == 4096 && r.2 == "xor8r4w").unwrap();
+        let lvt8r4w = rows.iter().find(|r| r.0 == 4096 && r.2 == "lvt8r4w").unwrap();
+        println!(
+            "  4096-deep 8R4W capacity: hb-ntx {:.2}x vs lvt {:.2}x (paper Fig 2: hierarchical flow scales linearly)",
+            xor8r4w.4, lvt8r4w.4
+        );
+    }
+    bench.finish();
+}

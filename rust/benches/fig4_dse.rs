@@ -1,0 +1,38 @@
+//! Bench + regeneration harness for **Fig 4** (a–d): the area/power vs
+//! cycles design-space exploration on FFT-Strided, GEMM-NCUBED, KMP and
+//! MD-KNN. Timing measures the full sweep; the CSV series the paper
+//! plots land in `results/fig4_<bench>.csv`.
+//!
+//! `cargo bench --bench fig4_dse [-- --quick] [-- <filter>]`
+
+use amm_dse::dse::{self, Sweep};
+use amm_dse::report;
+use amm_dse::suite::{self, Scale};
+use amm_dse::util::benchkit::Bench;
+use std::path::Path;
+
+fn main() {
+    let mut bench = Bench::from_args();
+    let sweep = Sweep::default();
+    println!("fig4 sweep: {} design points per benchmark", sweep.configs().len());
+    for name in suite::DSE_BENCHMARKS {
+        let wl = suite::generate(name, Scale::Paper);
+        let points = bench.run(
+            &format!("fig4/{name}/sweep"),
+            Some(sweep.configs().len() as u64),
+            || sweep.run(&wl.trace),
+        );
+        if let Some(points) = points {
+            let csv = format!("results/fig4_{name}.csv");
+            report::write_file(Path::new(&csv), &report::fig4_csv(&points)).unwrap();
+            let ratio = dse::performance_ratio(&points, 0.10);
+            println!(
+                "  {name}: best banking {:.0} ns, best AMM {:.0} ns, perf-ratio {:?} -> {csv}",
+                dse::best_time(&points, |p| !p.is_amm),
+                dse::best_time(&points, |p| p.is_amm),
+                ratio
+            );
+        }
+    }
+    bench.finish();
+}

@@ -1,0 +1,76 @@
+//! Bench + regeneration harness for **Fig 5**: spatial locality across
+//! the MachSuite ports and the AMM performance ratio for the DSE set.
+//! Writes `results/fig5.csv` and prints the locality/ratio correlation
+//! behind the paper's §IV-C threshold claim.
+//!
+//! `cargo bench --bench fig5_locality [-- --quick]`
+
+use amm_dse::dse::{self, Sweep};
+use amm_dse::suite::{self, Scale};
+use amm_dse::util::benchkit::Bench;
+use amm_dse::util::stats;
+use amm_dse::{locality, report};
+use std::path::Path;
+
+fn main() {
+    let mut bench = Bench::from_args();
+
+    // locality for all 13 benchmarks (timed as one unit: the analyzer
+    // is part of the paper's methodology)
+    let locs = bench.run("fig5/locality/all13", Some(13), || {
+        suite::ALL_BENCHMARKS
+            .iter()
+            .map(|name| {
+                let wl = suite::generate(name, Scale::Paper);
+                (name.to_string(), locality::analyze(&wl.trace).spatial_locality())
+            })
+            .collect::<Vec<_>>()
+    });
+
+    // ratios for the four DSE benchmarks
+    let sweep = Sweep::default();
+    let mut summaries = Vec::new();
+    for name in suite::DSE_BENCHMARKS {
+        let wl = suite::generate(name, Scale::Paper);
+        let points = bench.run(&format!("fig5/ratio/{name}"), None, || sweep.run(&wl.trace));
+        if let Some(points) = points {
+            summaries.push(dse::BenchSummary {
+                name: name.to_string(),
+                locality: locality::analyze(&wl.trace).spatial_locality(),
+                perf_ratio: dse::performance_ratio(&points, 0.10),
+                best_banking_ns: dse::best_time(&points, |p| !p.is_amm),
+                best_amm_ns: dse::best_time(&points, |p| p.is_amm),
+                n_points: points.len(),
+            });
+        }
+    }
+
+    if let Some(locs) = locs {
+        for (name, l) in &locs {
+            if !summaries.iter().any(|s| &s.name == name) {
+                summaries.push(dse::BenchSummary {
+                    name: name.clone(),
+                    locality: *l,
+                    perf_ratio: None,
+                    best_banking_ns: f64::NAN,
+                    best_amm_ns: f64::NAN,
+                    n_points: 0,
+                });
+            }
+        }
+    }
+    summaries.sort_by(|a, b| a.name.cmp(&b.name));
+    report::write_file(Path::new("results/fig5.csv"), &report::fig5_csv(&summaries)).unwrap();
+    println!("{}", report::fig5_ascii(&summaries));
+    let with: Vec<_> = summaries.iter().filter(|s| s.perf_ratio.is_some()).collect();
+    if with.len() >= 3 {
+        let xs: Vec<f64> = with.iter().map(|s| s.locality).collect();
+        let ys: Vec<f64> = with.iter().map(|s| s.perf_ratio.unwrap()).collect();
+        println!(
+            "locality/ratio correlation: pearson {:.3} spearman {:.3} (paper: negative)",
+            stats::pearson(&xs, &ys),
+            stats::spearman(&xs, &ys)
+        );
+    }
+    bench.finish();
+}

@@ -1,0 +1,44 @@
+//! PJRT cost-model dispatch benchmarks: per-point cost of scoring design
+//! batches through the AOT Pallas kernel vs the pure-Rust mirror — the
+//! coordinator's batching policy is sized from these numbers
+//! (EXPERIMENTS.md §Perf).
+//!
+//! `cargo bench --bench pjrt_cost [-- --quick]`
+
+use amm_dse::coordinator::{CostBackend, CostService, COST_BATCH};
+use amm_dse::sram;
+use amm_dse::util::benchkit::Bench;
+use amm_dse::util::rng::Rng;
+
+fn queries(n: usize) -> Vec<[f32; 4]> {
+    let mut rng = Rng::new(99);
+    let depths = [256.0f32, 1024.0, 4096.0, 16384.0];
+    (0..n)
+        .map(|_| [*rng.pick(&depths), 32.0, 1.0 + rng.below(4) as f32, 1.0 + rng.below(2) as f32])
+        .collect()
+}
+
+fn main() {
+    let mut bench = Bench::from_args();
+
+    // pure-Rust mirror
+    for n in [64usize, 1024, 8192] {
+        let q = queries(n);
+        bench.run(&format!("cost/rust-mirror/{n}"), Some(n as u64), || sram::macro_cost_batch(&q));
+    }
+
+    // PJRT path (skips if artifacts are missing)
+    let (svc, _guard, backend) = CostService::spawn(amm_dse::runtime::artifacts_dir());
+    if backend == CostBackend::Pjrt {
+        for n in [1usize, 64, COST_BATCH, 4 * COST_BATCH] {
+            let q = queries(n);
+            bench.run(&format!("cost/pjrt/{n}"), Some(n as u64), || {
+                svc.cost_batch(q.clone()).unwrap().len()
+            });
+        }
+    } else {
+        println!("(artifacts missing; PJRT benches skipped — run `make artifacts`)");
+    }
+    svc.stop();
+    bench.finish();
+}

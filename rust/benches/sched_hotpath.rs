@@ -1,0 +1,35 @@
+//! Scheduler hot-path microbenchmarks (the §Perf target: ≥1M scheduled
+//! DDG nodes/s/core). Not a paper figure — this is the knob the whole
+//! DSE's wall-clock hangs off, tracked in EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench sched_hotpath [-- --quick]`
+
+use amm_dse::mem::MemKind;
+use amm_dse::sched::{simulate, DesignConfig};
+use amm_dse::suite::{self, Scale};
+use amm_dse::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::from_args();
+    for (name, scale) in [("gemm", Scale::Paper), ("fft", Scale::Paper), ("gemm", Scale::Large)] {
+        let wl = suite::generate(name, scale);
+        let nodes = wl.trace.len() as u64;
+        for (label, cfg) in [
+            ("banked8", DesignConfig { mem: MemKind::Banked { banks: 8 }, unroll: 8, word_bytes: 8, alus: 8 }),
+            ("xor4r2w", DesignConfig { mem: MemKind::XorAmm { read_ports: 4, write_ports: 2 }, unroll: 8, word_bytes: 8, alus: 8 }),
+            ("banked8/w1", DesignConfig { mem: MemKind::Banked { banks: 8 }, unroll: 8, word_bytes: 1, alus: 8 }),
+        ] {
+            bench.run(
+                &format!("sched/{name}-{scale:?}/{label}"),
+                Some(nodes),
+                || simulate(&wl.trace, &cfg).cycles,
+            );
+        }
+    }
+
+    // trace generation itself (the Aladdin front end)
+    for name in ["gemm", "fft", "md-knn"] {
+        bench.run(&format!("tracegen/{name}"), None, || suite::generate(name, Scale::Paper).trace.len());
+    }
+    bench.finish();
+}

@@ -1,0 +1,73 @@
+//! Bench + regeneration harness for the **§III-A synthesis table**: cost
+//! of every AMM organization across memory depth × port configuration
+//! (the numbers the paper folds into Mem-Aladdin). Writes
+//! `results/synth_table.csv`.
+//!
+//! `cargo bench --bench synth_table [-- --quick]`
+
+use amm_dse::mem::MemKind;
+use amm_dse::report;
+use amm_dse::util::benchkit::Bench;
+use std::fmt::Write as _;
+use std::path::Path;
+
+fn main() {
+    let mut bench = Bench::from_args();
+    let depths = [256u32, 1024, 4096, 16384, 65536];
+    let widths = [8u32, 32, 64];
+    let kinds: Vec<MemKind> = vec![
+        MemKind::Banked { banks: 1 },
+        MemKind::Banked { banks: 8 },
+        MemKind::Banked { banks: 32 },
+        MemKind::BankedDualPort { banks: 8 },
+        MemKind::MultiPump { factor: 2 },
+        MemKind::LvtAmm { read_ports: 2, write_ports: 1 },
+        MemKind::LvtAmm { read_ports: 2, write_ports: 2 },
+        MemKind::LvtAmm { read_ports: 4, write_ports: 2 },
+        MemKind::XorAmm { read_ports: 2, write_ports: 1 },
+        MemKind::XorAmm { read_ports: 2, write_ports: 2 },
+        MemKind::XorAmm { read_ports: 4, write_ports: 2 },
+        MemKind::XorAmm { read_ports: 8, write_ports: 4 },
+        MemKind::CircuitMp { read_ports: 2, write_ports: 2 },
+        MemKind::CircuitMp { read_ports: 4, write_ports: 2 },
+    ];
+
+    let n = (depths.len() * widths.len() * kinds.len()) as u64;
+    let rows = bench.run("synth_table/build_all", Some(n), || {
+        let mut rows = Vec::new();
+        for &depth in &depths {
+            for &width in &widths {
+                for kind in &kinds {
+                    let d = kind.build(depth, width);
+                    rows.push((
+                        kind.id(),
+                        depth,
+                        width,
+                        d.area_um2(),
+                        d.e_read_pj(),
+                        d.e_write_pj(),
+                        d.leak_uw(),
+                        d.t_access_ns(),
+                        d.macros,
+                    ));
+                }
+            }
+        }
+        rows
+    });
+
+    if let Some(rows) = rows {
+        let mut csv =
+            String::from("design,depth,width,area_um2,e_read_pj,e_write_pj,leak_uw,t_access_ns,macros\n");
+        for r in &rows {
+            let _ = writeln!(
+                csv,
+                "{},{},{},{:.1},{:.4},{:.4},{:.2},{:.4},{}",
+                r.0, r.1, r.2, r.3, r.4, r.5, r.6, r.7, r.8
+            );
+        }
+        report::write_file(Path::new("results/synth_table.csv"), &csv).unwrap();
+        println!("wrote results/synth_table.csv ({} rows)", rows.len());
+    }
+    bench.finish();
+}

@@ -1,0 +1,167 @@
+//! Sweep/config files: TOML-subset documents under `configs/` describing
+//! a benchmark run — the framework's equivalent of Aladdin's per-kernel
+//! config files.
+//!
+//! ```toml
+//! benchmark = "gemm"
+//! scale = "paper"
+//!
+//! [sweep]
+//! unrolls = [1, 2, 4, 8, 16]
+//! word_bytes = [4, 8]
+//! alus = [2, 4, 8]
+//! bank_counts = [1, 2, 4, 8, 16, 32]
+//! multipump = true
+//! lvt = true
+//!
+//! [[amm]]
+//! read_ports = 2
+//! write_ports = 1
+//! ```
+
+use crate::dse::Sweep;
+use crate::suite::Scale;
+use crate::util::tomlmini::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A parsed run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Benchmark name (must be in [`crate::suite::ALL_BENCHMARKS`]).
+    pub benchmark: String,
+    /// Workload scale.
+    pub scale: Scale,
+    /// The sweep to run.
+    pub sweep: Sweep,
+    /// Output CSV path (default `results/<benchmark>.csv`).
+    pub out_csv: Option<String>,
+}
+
+/// Parse a config file.
+pub fn load(path: &Path) -> Result<RunConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read config {}", path.display()))?;
+    parse(&text)
+}
+
+/// Parse config text.
+pub fn parse(text: &str) -> Result<RunConfig> {
+    let doc = tomlmini::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let benchmark = doc
+        .root
+        .get("benchmark")
+        .and_then(Value::as_str)
+        .context("missing `benchmark`")?
+        .to_string();
+    if !crate::suite::ALL_BENCHMARKS.contains(&benchmark.as_str()) {
+        bail!("unknown benchmark {benchmark:?} (known: {:?})", crate::suite::ALL_BENCHMARKS);
+    }
+    let scale = match doc.root.get("scale").and_then(Value::as_str).unwrap_or("paper") {
+        "tiny" => Scale::Tiny,
+        "paper" => Scale::Paper,
+        "large" => Scale::Large,
+        other => bail!("unknown scale {other:?} (tiny|paper|large)"),
+    };
+    let mut sweep = Sweep::default();
+    if let Some(t) = doc.table("sweep") {
+        if let Some(v) = t.get("unrolls") {
+            sweep.unrolls = ints(v, "unrolls")?;
+        }
+        if let Some(v) = t.get("word_bytes") {
+            sweep.word_bytes = ints(v, "word_bytes")?;
+        }
+        if let Some(v) = t.get("alus") {
+            sweep.alus = ints(v, "alus")?;
+        }
+        if let Some(v) = t.get("bank_counts") {
+            sweep.bank_counts = ints(v, "bank_counts")?;
+        }
+        if let Some(v) = t.get("multipump") {
+            sweep.include_multipump = v.as_bool().context("multipump must be bool")?;
+        }
+        if let Some(v) = t.get("lvt") {
+            sweep.include_lvt = v.as_bool().context("lvt must be bool")?;
+        }
+        if let Some(v) = t.get("block_partitioning") {
+            sweep.include_block = v.as_bool().context("block_partitioning must be bool")?;
+        }
+        if let Some(v) = t.get("flat_xor") {
+            sweep.include_flat_xor = v.as_bool().context("flat_xor must be bool")?;
+        }
+        if let Some(v) = t.get("threads") {
+            sweep.threads = v.as_int().context("threads must be int")? as usize;
+        }
+    }
+    let amms = doc.array_of("amm");
+    if !amms.is_empty() {
+        sweep.amm_ports = amms
+            .iter()
+            .map(|t| {
+                let r = t.get("read_ports").and_then(Value::as_int).context("amm.read_ports")?;
+                let w = t.get("write_ports").and_then(Value::as_int).context("amm.write_ports")?;
+                Ok((r as u32, w as u32))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    let out_csv = doc.root.get("out_csv").and_then(Value::as_str).map(|s| s.to_string());
+    Ok(RunConfig { benchmark, scale, sweep, out_csv })
+}
+
+fn ints(v: &Value, what: &str) -> Result<Vec<u32>> {
+    v.as_array()
+        .with_context(|| format!("{what} must be an array"))?
+        .iter()
+        .map(|x| x.as_int().map(|i| i as u32).with_context(|| format!("{what}: not an int")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = parse(
+            r#"
+            benchmark = "gemm"
+            scale = "tiny"
+            out_csv = "results/custom.csv"
+            [sweep]
+            unrolls = [1, 8]
+            word_bytes = [8]
+            alus = [4]
+            bank_counts = [1, 16]
+            multipump = false
+            lvt = false
+            [[amm]]
+            read_ports = 2
+            write_ports = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.benchmark, "gemm");
+        assert_eq!(cfg.scale, Scale::Tiny);
+        assert_eq!(cfg.sweep.unrolls, vec![1, 8]);
+        assert_eq!(cfg.sweep.amm_ports, vec![(2, 2)]);
+        assert!(!cfg.sweep.include_multipump);
+        assert_eq!(cfg.out_csv.as_deref(), Some("results/custom.csv"));
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = parse("benchmark = \"kmp\"\n").unwrap();
+        assert_eq!(cfg.scale, Scale::Paper);
+        assert_eq!(cfg.sweep.unrolls, Sweep::default().unrolls);
+    }
+
+    #[test]
+    fn rejects_unknown_benchmark() {
+        assert!(parse("benchmark = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_scale() {
+        assert!(parse("benchmark = \"kmp\"\nscale = \"huge\"\n").is_err());
+    }
+}

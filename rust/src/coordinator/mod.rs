@@ -1,0 +1,343 @@
+//! DSE coordinator: the L3 orchestration layer.
+//!
+//! Owns the process topology of a sweep run:
+//!
+//! * a **PJRT service thread** hosting the (non-`Send`) runtime, which
+//!   receives batched SRAM-macro cost queries over a channel and answers
+//!   with the AOT cost-model's outputs — design points are scored by the
+//!   *same compiled artifact* the Python build produced, never by ad-hoc
+//!   reimplementation (the pure-Rust mirror in [`crate::sram`] exists
+//!   only as a fallback and cross-check);
+//! * a pool of **scheduler workers** ([`crate::util::pool`]) that run the
+//!   cycle-accurate simulation per design point;
+//! * result aggregation into [`crate::dse::DesignPoint`]s.
+//!
+//! Batching policy: macro-cost queries are deduplicated per sweep (many
+//! design points share macro configurations) and evaluated in one PJRT
+//! execute per sweep — the measured dispatch overhead is amortized to
+//! <1 µs per design point (see EXPERIMENTS.md §Perf).
+
+use crate::dse::{DesignPoint, Sweep};
+use crate::mem::MemDesign;
+use crate::runtime::{names, Runtime};
+use crate::sched::{self, DesignConfig};
+use crate::sram::MacroCost;
+use crate::trace::Trace;
+use crate::util::pool;
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+/// A macro-cost query: `[depth, width, read_ports, write_ports]`.
+pub type MacroQuery = [f32; 4];
+
+/// Requests accepted by the PJRT service thread.
+enum Request {
+    /// Evaluate a batch of macro queries; respond with one
+    /// `[area, e_read, e_write, leak, t_access]` row per query.
+    CostBatch(Vec<MacroQuery>, mpsc::Sender<anyhow::Result<Vec<[f32; 5]>>>),
+    /// Shut the service down.
+    Stop,
+}
+
+/// Handle to the PJRT cost service. Clone-able across worker threads.
+#[derive(Clone)]
+pub struct CostService {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Where the cost numbers came from (reported in run summaries).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostBackend {
+    /// AOT Pallas/JAX cost model via PJRT (the production path).
+    Pjrt,
+    /// Pure-Rust mirror (artifacts not built).
+    RustFallback,
+}
+
+impl CostService {
+    /// Spawn the service thread. Returns the handle, a join guard, and
+    /// which backend is live. Falls back to the Rust mirror when the
+    /// artifact is missing or PJRT fails to initialize.
+    pub fn spawn(artifacts_dir: std::path::PathBuf) -> (CostService, ServiceGuard, CostBackend) {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<CostBackend>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-cost-service".into())
+            .spawn(move || service_main(artifacts_dir, rx, ready_tx))
+            .expect("spawn pjrt service thread");
+        let backend = ready_rx.recv().unwrap_or(CostBackend::RustFallback);
+        (CostService { tx }, ServiceGuard { tx2: None, join: Some(join) }, backend)
+    }
+
+    /// Evaluate a batch of macro queries (blocking).
+    pub fn cost_batch(&self, queries: Vec<MacroQuery>) -> anyhow::Result<Vec<[f32; 5]>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::CostBatch(queries, rtx))
+            .map_err(|_| anyhow::anyhow!("cost service stopped"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("cost service dropped reply"))?
+    }
+
+    /// Ask the service to stop (the guard also does this on drop).
+    pub fn stop(&self) {
+        let _ = self.tx.send(Request::Stop);
+    }
+}
+
+/// Joins the service thread on drop.
+pub struct ServiceGuard {
+    tx2: Option<mpsc::Sender<Request>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for ServiceGuard {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx2.take() {
+            let _ = tx.send(Request::Stop);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn service_main(
+    dir: std::path::PathBuf,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<CostBackend>,
+) {
+    // Try to bring up PJRT + the cost artifact; otherwise run the mirror.
+    let exe = match Runtime::with_dir(&dir) {
+        Ok(rt) if rt.has_artifact(names::COST_MODEL) => match rt.load(names::COST_MODEL) {
+            Ok(exe) => Some((rt, exe)),
+            Err(e) => {
+                log::warn!("cost model failed to compile ({e:#}); using Rust mirror");
+                None
+            }
+        },
+        Ok(_) => {
+            log::info!("artifacts not built; cost service using Rust mirror");
+            None
+        }
+        Err(e) => {
+            log::warn!("PJRT unavailable ({e:#}); cost service using Rust mirror");
+            None
+        }
+    };
+    let backend = if exe.is_some() { CostBackend::Pjrt } else { CostBackend::RustFallback };
+    let _ = ready.send(backend);
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Stop => break,
+            Request::CostBatch(queries, reply) => {
+                let result = match &exe {
+                    Some((_rt, exe)) => pjrt_cost_batch(exe, &queries),
+                    None => Ok(crate::sram::macro_cost_batch(&queries)),
+                };
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+/// The artifact's batch size (must match `python/compile/aot.py`).
+pub const COST_BATCH: usize = 1024;
+
+fn pjrt_cost_batch(
+    exe: &crate::runtime::Executable,
+    queries: &[MacroQuery],
+) -> anyhow::Result<Vec<[f32; 5]>> {
+    let mut out = Vec::with_capacity(queries.len());
+    // Pad to the fixed batch the artifact was lowered for.
+    for chunk in queries.chunks(COST_BATCH) {
+        let mut flat = vec![0f32; COST_BATCH * 4];
+        for (i, q) in chunk.iter().enumerate() {
+            flat[i * 4..i * 4 + 4].copy_from_slice(q);
+        }
+        // Padding rows use a benign config (depth 4, width 1, 1R1W).
+        for i in chunk.len()..COST_BATCH {
+            flat[i * 4..i * 4 + 4].copy_from_slice(&[4.0, 1.0, 1.0, 1.0]);
+        }
+        let results = exe.run_f32(&[(&flat, &[COST_BATCH, 4])])?;
+        let rows = &results[0]; // [COST_BATCH, 5] flattened
+        anyhow::ensure!(rows.len() == COST_BATCH * 5, "unexpected cost output size {}", rows.len());
+        for i in 0..chunk.len() {
+            out.push([
+                rows[i * 5],
+                rows[i * 5 + 1],
+                rows[i * 5 + 2],
+                rows[i * 5 + 3],
+                rows[i * 5 + 4],
+            ]);
+        }
+    }
+    Ok(out)
+}
+
+/// Coordinator for sweep runs.
+pub struct Coordinator {
+    cost: CostService,
+    _guard: ServiceGuard,
+    /// Which backend scored the designs.
+    pub backend: CostBackend,
+    threads: usize,
+}
+
+impl Coordinator {
+    /// Bring up the coordinator (PJRT service + worker pool sizing).
+    pub fn new() -> Self {
+        Self::with_artifacts(crate::runtime::artifacts_dir())
+    }
+
+    /// Coordinator rooted at a specific artifacts directory.
+    pub fn with_artifacts(dir: std::path::PathBuf) -> Self {
+        let (cost, guard, backend) = CostService::spawn(dir);
+        Coordinator { cost, _guard: guard, backend, threads: pool::default_threads() }
+    }
+
+    /// Handle to the cost service (for benches/tests).
+    pub fn cost_service(&self) -> &CostService {
+        &self.cost
+    }
+
+    /// Run a sweep over one trace, scoring every design's memory system
+    /// through the cost service in one deduplicated batch, then
+    /// scheduling in parallel on the worker pool.
+    pub fn run_sweep(&self, trace: &Trace, sweep: &Sweep) -> anyhow::Result<Vec<DesignPoint>> {
+        let configs = sweep.configs();
+
+        // 1. Build every design's macro plan in Rust (combinatorial),
+        //    collecting the distinct SRAM macro queries.
+        let designs: Vec<MemDesign> =
+            configs.iter().map(|cfg| sched::build_memory(trace, cfg)).collect();
+        let mut unique: Vec<MacroQuery> = Vec::new();
+        let mut index: HashMap<[u32; 4], usize> = HashMap::new();
+        for d in &designs {
+            let key = macro_key(d);
+            index.entry(key).or_insert_with(|| {
+                unique.push([key[0] as f32, key[1] as f32, key[2] as f32, key[3] as f32]);
+                unique.len() - 1
+            });
+        }
+
+        // 2. One batched cost evaluation through PJRT.
+        let costs = self.cost.cost_batch(unique)?;
+
+        // 3. Patch each design's SRAM cost with the service's numbers
+        //    (scaled by macro count exactly as MemKind::build stacks them)
+        //    and schedule in parallel.
+        let patched: Vec<(DesignConfig, MemDesign)> = configs
+            .iter()
+            .zip(designs)
+            .map(|(cfg, mut d)| {
+                let key = macro_key(&d);
+                let row = costs[index[&key]];
+                let one = MacroCost {
+                    area_um2: row[0],
+                    e_read_pj: row[1],
+                    e_write_pj: row[2],
+                    leak_uw: row[3],
+                    t_access_ns: row[4],
+                };
+                apply_macro_cost(&mut d, one);
+                (*cfg, d)
+            })
+            .collect();
+
+        let points = pool::parallel_map(&patched, self.threads, |(cfg, design)| {
+            let out = sched::simulate_with_design(trace, cfg, design);
+            DesignPoint {
+                id: format!("{}/u{}/w{}/a{}", cfg.mem.id(), cfg.unroll, cfg.word_bytes, cfg.alus),
+                mem_id: cfg.mem.id(),
+                is_amm: cfg.mem.is_amm(),
+                unroll: cfg.unroll,
+                word_bytes: cfg.word_bytes,
+                alus: cfg.alus,
+                out,
+            }
+        });
+        Ok(points)
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The (depth, width, rports, wports) of the design's base macro.
+fn macro_key(d: &MemDesign) -> [u32; 4] {
+    let per_macro_depth = d.macro_depth;
+    let (r, w) = match d.kind {
+        crate::mem::MemKind::CircuitMp { read_ports, write_ports } => (read_ports, write_ports),
+        _ => (1, 1),
+    };
+    [per_macro_depth, d.width, r, w]
+}
+
+/// Re-stack `one` macro cost into the design the way `MemKind::build`
+/// composes macros (areas/leakage × macros; energies per logical access).
+fn apply_macro_cost(d: &mut MemDesign, one: MacroCost) {
+    let m = d.macros.max(1) as f32;
+    let dual_area = match d.kind {
+        crate::mem::MemKind::BankedDualPort { .. } => 1.3,
+        _ => 1.0,
+    };
+    let dual_leak = match d.kind {
+        crate::mem::MemKind::BankedDualPort { .. } => 1.25,
+        _ => 1.0,
+    };
+    let write_scale = match d.kind {
+        crate::mem::MemKind::BankedDualPort { .. } => 1.1,
+        crate::mem::MemKind::LvtAmm { read_ports, .. } => read_ports as f32,
+        _ => 1.0,
+    };
+    d.sram.area_um2 = one.area_um2 * m * dual_area;
+    d.sram.leak_uw = one.leak_uw * m * dual_leak;
+    d.sram.e_read_pj = one.e_read_pj;
+    d.sram.e_write_pj = one.e_write_pj * write_scale;
+    d.sram.t_access_ns = one.t_access_ns;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suite::{self, Scale};
+
+    #[test]
+    fn fallback_backend_matches_direct_evaluation() {
+        // Point the coordinator at an empty dir → Rust mirror; sweep
+        // results must equal dse::Sweep::run exactly.
+        let tmp = std::env::temp_dir().join("amm_dse_coord_test");
+        let _ = std::fs::create_dir_all(&tmp);
+        let coord = Coordinator::with_artifacts(tmp);
+        assert_eq!(coord.backend, CostBackend::RustFallback);
+        let wl = suite::generate("stencil2d", Scale::Tiny);
+        let sweep = Sweep::quick();
+        let via_coord = coord.run_sweep(&wl.trace, &sweep).unwrap();
+        let direct = sweep.run(&wl.trace);
+        assert_eq!(via_coord.len(), direct.len());
+        for (a, b) in via_coord.iter().zip(&direct) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.out.cycles, b.out.cycles, "{}", a.id);
+            let rel = (a.out.area_um2 - b.out.area_um2).abs() / b.out.area_um2;
+            assert!(rel < 1e-5, "{}: {} vs {}", a.id, a.out.area_um2, b.out.area_um2);
+        }
+    }
+
+    #[test]
+    fn cost_service_survives_multiple_batches() {
+        let tmp = std::env::temp_dir().join("amm_dse_coord_test2");
+        let _ = std::fs::create_dir_all(&tmp);
+        let (svc, _guard, backend) = CostService::spawn(tmp);
+        assert_eq!(backend, CostBackend::RustFallback);
+        for _ in 0..3 {
+            let out = svc.cost_batch(vec![[1024.0, 32.0, 1.0, 1.0]; 10]).unwrap();
+            assert_eq!(out.len(), 10);
+            assert!(out[0][0] > 0.0);
+        }
+        svc.stop();
+    }
+}

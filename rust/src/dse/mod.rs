@@ -1,0 +1,400 @@
+//! Design-space exploration engine (paper §IV).
+//!
+//! Enumerates the sweep (unrolling × word size × memory organization ×
+//! port configuration), evaluates every point with the scheduler, and
+//! post-processes into the paper's artifacts:
+//!
+//! * Pareto frontiers over (cycles, area) and (cycles, power) — Fig 4;
+//! * the geometric-mean **performance ratio** of banking-vs-AMM area at
+//!   matched execution times — Fig 5 / §IV-C;
+//! * the locality-vs-ratio correlation behind the paper's
+//!   "AMMs win below L_spatial ≈ 0.3" claim.
+
+use crate::mem::MemKind;
+use crate::sched::{self, DesignConfig, SimOutput};
+use crate::trace::Trace;
+use crate::util::{pool, stats};
+
+/// One evaluated design point.
+#[derive(Clone, Debug, Default)]
+pub struct DesignPoint {
+    /// Sweep configuration id (e.g. `xor2r2w/u8/w8/a8`).
+    pub id: String,
+    /// Memory kind id.
+    pub mem_id: String,
+    /// True if an algorithmic multi-port design (blue in Fig 4).
+    pub is_amm: bool,
+    /// Unroll factor.
+    pub unroll: u32,
+    /// Word bytes.
+    pub word_bytes: u32,
+    /// ALU slots.
+    pub alus: u32,
+    /// Scheduling + cost result.
+    pub out: SimOutput,
+}
+
+impl DesignPoint {
+    /// Execution time in ns.
+    pub fn time_ns(&self) -> f64 {
+        self.out.time_ns
+    }
+    /// Area in µm².
+    pub fn area(&self) -> f64 {
+        self.out.area_um2 as f64
+    }
+    /// Power in mW.
+    pub fn power(&self) -> f64 {
+        self.out.power_mw as f64
+    }
+    /// Energy-delay product, pJ·ns — the paper's §I "EDP maximization"
+    /// objective (total energy including leakage, times execution time).
+    pub fn edp(&self) -> f64 {
+        let leak_energy_pj = self.out.power_mw as f64 * self.out.time_ns; // mW·ns = pJ (incl. dynamic)
+        leak_energy_pj * self.out.time_ns
+    }
+}
+
+/// The sweep definition (defaults reproduce Fig 4's axes).
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    /// Unroll factors.
+    pub unrolls: Vec<u32>,
+    /// Word sizes in bytes.
+    pub word_bytes: Vec<u32>,
+    /// ALU slot counts.
+    pub alus: Vec<u32>,
+    /// Banked partition counts (the baseline red points).
+    pub bank_counts: Vec<u32>,
+    /// Also sweep dual-port (1R1W-macro) banked designs. Off by default:
+    /// the paper's red baseline is single-port array partitioning.
+    pub include_dual_port: bool,
+    /// Also sweep block (contiguous-range) partitionings (§IV-A's
+    /// cyclic-vs-block axis). Off by default.
+    pub include_block: bool,
+    /// Also sweep the flat LaForest XOR baseline (ablation comparator).
+    pub include_flat_xor: bool,
+    /// AMM (read, write) port configurations (the blue points).
+    pub amm_ports: Vec<(u32, u32)>,
+    /// Include multipumping designs.
+    pub include_multipump: bool,
+    /// Include LVT table-based AMMs (as well as XOR).
+    pub include_lvt: bool,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for Sweep {
+    fn default() -> Self {
+        Sweep {
+            unrolls: vec![1, 2, 4, 8, 16],
+            word_bytes: vec![1, 2, 4, 8],
+            alus: vec![2, 4, 8, 16],
+            bank_counts: vec![1, 2, 4, 8, 16, 32],
+            include_dual_port: false,
+            include_block: false,
+            include_flat_xor: false,
+            amm_ports: vec![(2, 1), (2, 2), (4, 2), (4, 4), (8, 4)],
+            include_multipump: true,
+            include_lvt: true,
+            threads: 0,
+        }
+    }
+}
+
+impl Sweep {
+    /// Quick sweep for unit tests.
+    pub fn quick() -> Self {
+        Sweep {
+            unrolls: vec![1, 4],
+            word_bytes: vec![8],
+            alus: vec![4],
+            bank_counts: vec![1, 4],
+            include_dual_port: false,
+            include_block: false,
+            include_flat_xor: false,
+            amm_ports: vec![(2, 1), (2, 2)],
+            include_multipump: false,
+            include_lvt: false,
+            threads: 0,
+        }
+    }
+
+    /// Enumerate every design configuration in the sweep.
+    pub fn configs(&self) -> Vec<DesignConfig> {
+        let mut mems: Vec<MemKind> = Vec::new();
+        for &b in &self.bank_counts {
+            mems.push(MemKind::Banked { banks: b });
+            if self.include_dual_port && b > 1 {
+                mems.push(MemKind::BankedDualPort { banks: b });
+            }
+            if self.include_block && b > 1 {
+                mems.push(MemKind::BankedBlock { banks: b });
+            }
+        }
+        if self.include_multipump {
+            mems.push(MemKind::MultiPump { factor: 2 });
+            mems.push(MemKind::MultiPump { factor: 4 });
+        }
+        for &(r, w) in &self.amm_ports {
+            mems.push(MemKind::XorAmm { read_ports: r, write_ports: w });
+            if self.include_lvt {
+                mems.push(MemKind::LvtAmm { read_ports: r, write_ports: w });
+            }
+            if self.include_flat_xor {
+                mems.push(MemKind::XorFlat { read_ports: r, write_ports: w });
+            }
+        }
+        let mut out = Vec::new();
+        for &mem in &mems {
+            for &unroll in &self.unrolls {
+                for &word_bytes in &self.word_bytes {
+                    for &alus in &self.alus {
+                        out.push(DesignConfig { mem, unroll, word_bytes, alus });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Run the sweep over a trace (parallel over design points).
+    pub fn run(&self, trace: &Trace) -> Vec<DesignPoint> {
+        let configs = self.configs();
+        let threads = if self.threads == 0 { pool::default_threads() } else { self.threads };
+        pool::parallel_map(&configs, threads, |cfg| evaluate(trace, cfg))
+    }
+}
+
+/// Evaluate a single design point.
+pub fn evaluate(trace: &Trace, cfg: &DesignConfig) -> DesignPoint {
+    let out = sched::simulate(trace, cfg);
+    DesignPoint {
+        id: format!("{}/u{}/w{}/a{}", cfg.mem.id(), cfg.unroll, cfg.word_bytes, cfg.alus),
+        mem_id: cfg.mem.id(),
+        is_amm: cfg.mem.is_amm(),
+        unroll: cfg.unroll,
+        word_bytes: cfg.word_bytes,
+        alus: cfg.alus,
+        out,
+    }
+}
+
+/// Indices of the Pareto-optimal points minimizing `(x, y)`.
+pub fn pareto_front<F, G>(points: &[DesignPoint], x: F, y: G) -> Vec<usize>
+where
+    F: Fn(&DesignPoint) -> f64,
+    G: Fn(&DesignPoint) -> f64,
+{
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // sort by x asc, then y asc; sweep keeping strictly-improving y
+    idx.sort_by(|&a, &b| {
+        x(&points[a])
+            .partial_cmp(&x(&points[b]))
+            .unwrap()
+            .then(y(&points[a]).partial_cmp(&y(&points[b])).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_y = f64::INFINITY;
+    for i in idx {
+        let yi = y(&points[i]);
+        if yi < best_y {
+            best_y = yi;
+            front.push(i);
+        }
+    }
+    front
+}
+
+/// The paper's §IV-C metric: geometric mean over matched-time pairs of
+/// `area(banking) / area(AMM)`. For each banking point on the banking
+/// (time, area) Pareto front, find the AMM point on the AMM front with
+/// the closest execution time within `tol` (relative); pair their areas.
+/// Ratio > 1 ⇒ AMM reaches the same performance with less area.
+pub fn performance_ratio(points: &[DesignPoint], tol: f64) -> Option<f64> {
+    let banking: Vec<&DesignPoint> = points.iter().filter(|p| !p.is_amm).collect();
+    let amm: Vec<&DesignPoint> = points.iter().filter(|p| p.is_amm).collect();
+    if banking.is_empty() || amm.is_empty() {
+        return None;
+    }
+    let bidx = pareto_front_ref(&banking);
+    let aidx = pareto_front_ref(&amm);
+    let mut ratios = Vec::new();
+    for &bi in &bidx {
+        let b = banking[bi];
+        // closest-time AMM frontier point
+        let mut best: Option<(f64, f64)> = None; // (dt, area)
+        for &ai in &aidx {
+            let a = amm[ai];
+            let dt = (a.time_ns() - b.time_ns()).abs() / b.time_ns();
+            if dt <= tol {
+                match best {
+                    Some((bd, _)) if bd <= dt => {}
+                    _ => best = Some((dt, a.area())),
+                }
+            }
+        }
+        if let Some((_, a_area)) = best {
+            ratios.push(b.area() / a_area);
+        }
+    }
+    if ratios.is_empty() {
+        None
+    } else {
+        Some(stats::geomean(&ratios))
+    }
+}
+
+fn pareto_front_ref(points: &[&DesignPoint]) -> Vec<usize> {
+    let owned: Vec<DesignPoint> = points.iter().map(|p| (*p).clone()).collect();
+    pareto_front(&owned, |p| p.time_ns(), |p| p.area())
+}
+
+/// Fastest achievable time among a filtered subset (∞ if none).
+pub fn best_time<F: Fn(&DesignPoint) -> bool>(points: &[DesignPoint], f: F) -> f64 {
+    points.iter().filter(|p| f(p)).map(|p| p.time_ns()).fold(f64::INFINITY, f64::min)
+}
+
+/// Summary of one benchmark's DSE (one Fig 4 panel + one Fig 5 bar).
+#[derive(Clone, Debug)]
+pub struct BenchSummary {
+    /// Benchmark name.
+    pub name: String,
+    /// Weinberg locality.
+    pub locality: f64,
+    /// §IV-C geometric-mean area ratio (banking / AMM), if computable.
+    pub perf_ratio: Option<f64>,
+    /// Fastest banking time (ns).
+    pub best_banking_ns: f64,
+    /// Fastest AMM time (ns).
+    pub best_amm_ns: f64,
+    /// Number of evaluated points.
+    pub n_points: usize,
+}
+
+/// Run the full per-benchmark analysis (sweep + locality + ratio).
+pub fn analyze_benchmark(name: &str, scale: crate::suite::Scale, sweep: &Sweep) -> (BenchSummary, Vec<DesignPoint>) {
+    let wl = crate::suite::generate(name, scale);
+    let points = sweep.run(&wl.trace);
+    let locality = crate::locality::analyze(&wl.trace).spatial_locality();
+    let summary = BenchSummary {
+        name: name.to_string(),
+        locality,
+        perf_ratio: performance_ratio(&points, 0.10),
+        best_banking_ns: best_time(&points, |p| !p.is_amm),
+        best_amm_ns: best_time(&points, |p| p.is_amm),
+        n_points: points.len(),
+    };
+    (summary, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suite::{self, Scale};
+
+    #[test]
+    fn sweep_enumerates_cartesian_product() {
+        let s = Sweep::quick();
+        let configs = s.configs();
+        // mems: banked1, banked4, xor2r1w, xor2r2w = 4
+        assert_eq!(configs.len(), 4 * 2 * 1 * 1);
+        let mut dual = Sweep::quick();
+        dual.include_dual_port = true;
+        assert_eq!(dual.configs().len(), 5 * 2);
+    }
+
+    #[test]
+    fn pareto_front_is_minimal_and_sorted() {
+        let wl = suite::generate("gemm", Scale::Tiny);
+        let points = Sweep::quick().run(&wl.trace);
+        let front = pareto_front(&points, |p| p.time_ns(), |p| p.area());
+        assert!(!front.is_empty());
+        // no frontier point dominates another
+        for (k, &i) in front.iter().enumerate() {
+            for &j in &front[k + 1..] {
+                let (a, b) = (&points[i], &points[j]);
+                let dominates = a.time_ns() <= b.time_ns() && a.area() <= b.area();
+                assert!(!dominates, "{} dominates {}", a.id, b.id);
+            }
+        }
+        // every non-front point is dominated by some front point
+        for (i, p) in points.iter().enumerate() {
+            if front.contains(&i) {
+                continue;
+            }
+            let dominated = front.iter().any(|&f| {
+                points[f].time_ns() <= p.time_ns() && points[f].area() <= p.area()
+            });
+            assert!(dominated, "{} not dominated", p.id);
+        }
+    }
+
+    #[test]
+    fn amm_extends_the_fast_end_for_gemm() {
+        // The paper's Fig 4(b) shape: AMM points reach cycle counts the
+        // banked designs cannot.
+        let wl = suite::generate("gemm", Scale::Tiny);
+        let sweep = Sweep {
+            unrolls: vec![8],
+            word_bytes: vec![8],
+            alus: vec![8],
+            bank_counts: vec![1, 2, 4],
+            include_dual_port: false,
+            include_block: false,
+            include_flat_xor: false,
+            amm_ports: vec![(4, 2)],
+            include_multipump: false,
+            include_lvt: false,
+            threads: 0,
+        };
+        let points = sweep.run(&wl.trace);
+        let best_banked = best_time(&points, |p| !p.is_amm);
+        let best_amm = best_time(&points, |p| p.is_amm);
+        assert!(
+            best_amm < best_banked,
+            "amm {best_amm} should beat banked {best_banked} on gemm"
+        );
+    }
+
+    #[test]
+    fn performance_ratio_none_without_amm() {
+        let wl = suite::generate("gemm", Scale::Tiny);
+        let sweep = Sweep { amm_ports: vec![], ..Sweep::quick() };
+        let points = sweep.run(&wl.trace);
+        assert!(performance_ratio(&points, 0.1).is_none());
+    }
+
+    #[test]
+    fn edp_is_positive_and_scales_with_time() {
+        let wl = suite::generate("stencil2d", Scale::Tiny);
+        let points = Sweep::quick().run(&wl.trace);
+        for p in &points {
+            assert!(p.edp() > 0.0, "{}", p.id);
+        }
+        // the slowest point has a larger EDP than the fastest (same
+        // workload, comparable power scale)
+        let fastest = points.iter().min_by(|a, b| a.time_ns().partial_cmp(&b.time_ns()).unwrap()).unwrap();
+        let slowest = points.iter().max_by(|a, b| a.time_ns().partial_cmp(&b.time_ns()).unwrap()).unwrap();
+        assert!(slowest.edp() > fastest.edp() * 0.5);
+    }
+
+    #[test]
+    fn block_and_flat_xor_flags_extend_the_sweep() {
+        let mut s = Sweep::quick();
+        let base = s.configs().len();
+        s.include_block = true;
+        s.include_flat_xor = true;
+        // +1 bankedblk4 (banks>1 only), +2 xorflat
+        assert_eq!(s.configs().len(), base + (1 + 2) * 2);
+    }
+
+    #[test]
+    fn analyze_benchmark_produces_summary() {
+        let (summary, points) = analyze_benchmark("stencil2d", Scale::Tiny, &Sweep::quick());
+        assert_eq!(summary.n_points, points.len());
+        assert!(summary.locality > 0.0);
+        assert!(summary.best_amm_ns.is_finite());
+        assert!(summary.best_banking_ns.is_finite());
+    }
+}

@@ -1,0 +1,71 @@
+//! # amm-dse — Design Space Exploration of Algorithmic Multi-Port Memories
+//!
+//! Reproduction of *"Design Space Exploration of Algorithmic Multi-port
+//! Memory for High-Performance Application-Specific Accelerators"*
+//! (K. Sethi, cs.AR 2020).
+//!
+//! The library is a complete pre-RTL accelerator-memory exploration
+//! framework (a "Mem-Aladdin"):
+//!
+//! * [`suite`] — faithful ports of 13 MachSuite benchmarks that produce
+//!   dynamic instruction traces with true data dependencies.
+//! * [`trace`] — the dynamic trace / data-dependence-graph substrate.
+//! * [`sram`] — CACTI-lite analytical SRAM macro model (45 nm).
+//! * [`synth`] — DC-lite gate-level model of AMM read/write-path logic.
+//! * [`mem`] — memory-system models: banked scratchpads, multipumping,
+//!   LVT and XOR-based algorithmic multi-port memories (H-NTX-Rd,
+//!   B-NTX-Wr, HB-NTX-RdWr), and a circuit-level true-multiport reference.
+//! * [`sched`] — Aladdin-style resource-constrained cycle-accurate
+//!   scheduler over the DDG.
+//! * [`locality`] — Weinberg spatial-locality metric.
+//! * [`dse`] — design-space sweeps, Pareto frontiers, and the paper's
+//!   geometric-mean performance ratio.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/
+//!   Pallas cost-model and workload artifacts (`artifacts/*.hlo.txt`).
+//! * [`coordinator`] — the parallel DSE orchestrator which batches
+//!   design-point cost queries through the PJRT cost model.
+//! * [`report`] — CSV and ASCII-plot emitters for every paper figure.
+//! * [`util`] — in-tree replacements for crates unavailable offline
+//!   (PRNG, stats, thread pool, mini-TOML, property testing, benchkit).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use amm_dse::{suite, sched, mem, dse};
+//!
+//! // Trace a 16x16x16 GEMM, schedule it on a 2R1W XOR-based AMM.
+//! let wl = suite::gemm::generate(16);
+//! let cfg = sched::DesignConfig {
+//!     mem: mem::MemKind::XorAmm { read_ports: 2, write_ports: 1 },
+//!     unroll: 4,
+//!     word_bytes: 8,
+//!     alus: 4,
+//! };
+//! let out = sched::simulate(&wl.trace, &cfg);
+//! println!("cycles={} area={:.1}um^2 power={:.2}mW",
+//!          out.cycles, out.area_um2, out.power_mw);
+//! ```
+
+pub mod util;
+
+pub mod trace;
+pub mod suite;
+
+pub mod sram;
+pub mod synth;
+pub mod mem;
+
+pub mod sched;
+pub mod locality;
+pub mod dse;
+
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod config;
+
+/// Library version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Technology node every cost model in this crate is calibrated to.
+pub const TECH_NM: f32 = 45.0;

@@ -1,0 +1,204 @@
+//! Weinberg spatial-locality metric (paper §IV-B, eq. 1).
+//!
+//! `L_spatial = Σ_{stride=1..∞} P(stride) / stride`
+//!
+//! where strides are the *byte* differences between consecutive dynamic
+//! addresses issued by the same static load/store instruction. Byte
+//! granularity is what makes the paper's observation work: byte-oriented
+//! stride-one code (KMP, AES) scores ≈1, while double-precision kernels
+//! have a minimum stride of 8 bytes and score ≤ 1/8 (§IV-B).
+
+use crate::trace::{OpKind, Trace};
+use std::collections::HashMap;
+
+/// Stride histogram for one static instruction site.
+#[derive(Clone, Debug, Default)]
+pub struct SiteStats {
+    /// Dynamic accesses observed.
+    pub accesses: u64,
+    /// stride(bytes) → count; only positive strides accumulate locality
+    /// (Weinberg's definition ignores non-forward reuse).
+    pub strides: HashMap<u64, u64>,
+    /// Transitions with zero or negative stride (counted in the
+    /// probability denominator, contributing 0 locality).
+    pub non_forward: u64,
+}
+
+impl SiteStats {
+    /// Weinberg locality of this site.
+    pub fn locality(&self) -> f64 {
+        let total: u64 = self.strides.values().sum::<u64>() + self.non_forward;
+        if total == 0 {
+            return 0.0;
+        }
+        self.strides
+            .iter()
+            .map(|(&stride, &count)| (count as f64 / total as f64) / stride as f64)
+            .sum()
+    }
+}
+
+/// Whole-trace locality report.
+#[derive(Clone, Debug, Default)]
+pub struct LocalityReport {
+    /// Per-site statistics (site id → stats).
+    pub sites: HashMap<u32, SiteStats>,
+    /// Total dynamic memory accesses.
+    pub total_accesses: u64,
+}
+
+impl LocalityReport {
+    /// Access-weighted mean of per-site localities — the benchmark's
+    /// `L_spatial` as plotted in Fig 5.
+    pub fn spatial_locality(&self) -> f64 {
+        if self.total_accesses == 0 {
+            return 0.0;
+        }
+        self.sites
+            .values()
+            .map(|s| s.locality() * s.accesses as f64)
+            .sum::<f64>()
+            / self.total_accesses as f64
+    }
+
+    /// Fraction of forward transitions that are exactly stride-1 bytes
+    /// (diagnostic for the KMP/AES "stride-one code" claim).
+    pub fn stride1_fraction(&self) -> f64 {
+        let mut s1 = 0u64;
+        let mut total = 0u64;
+        for site in self.sites.values() {
+            s1 += site.strides.get(&1).copied().unwrap_or(0);
+            total += site.strides.values().sum::<u64>() + site.non_forward;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            s1 as f64 / total as f64
+        }
+    }
+}
+
+/// Analyze a trace: group dynamic accesses by static site (in program
+/// order) and histogram consecutive byte strides.
+pub fn analyze(trace: &Trace) -> LocalityReport {
+    let mut sites: HashMap<u32, SiteStats> = HashMap::new();
+    let mut last_addr: HashMap<u32, u64> = HashMap::new();
+    let mut total = 0u64;
+    for node in &trace.nodes {
+        let (array, index) = match node.kind {
+            OpKind::Load { array, index } | OpKind::Store { array, index } => (array, index),
+            OpKind::Alu(_) => continue,
+        };
+        let addr = trace.arrays[array as usize].byte_addr(index);
+        total += 1;
+        let stats = sites.entry(node.site).or_default();
+        stats.accesses += 1;
+        if let Some(&prev) = last_addr.get(&node.site) {
+            if addr > prev {
+                *stats.strides.entry(addr - prev).or_insert(0) += 1;
+            } else {
+                stats.non_forward += 1;
+            }
+        }
+        last_addr.insert(node.site, addr);
+    }
+    LocalityReport { sites, total_accesses: total }
+}
+
+/// Convenience: analyze a named benchmark at a scale.
+pub fn benchmark_locality(name: &str, scale: crate::suite::Scale) -> f64 {
+    analyze(&crate::suite::generate(name, scale).trace).spatial_locality()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suite::{self, Scale};
+    use crate::trace::TraceBuilder;
+
+    #[test]
+    fn stride1_bytes_scores_one() {
+        let mut b = TraceBuilder::new();
+        let a = b.array("t", 1, 128);
+        b.site(0);
+        for i in 0..128 {
+            b.load(a, i);
+        }
+        let rep = analyze(&b.finish());
+        let l = rep.spatial_locality();
+        assert!((l - 1.0).abs() < 0.02, "l={l}");
+        assert!(rep.stride1_fraction() > 0.98);
+    }
+
+    #[test]
+    fn stride8_bytes_scores_eighth() {
+        let mut b = TraceBuilder::new();
+        let a = b.array("d", 8, 128);
+        b.site(0);
+        for i in 0..128 {
+            b.load(a, i);
+        }
+        let l = analyze(&b.finish()).spatial_locality();
+        assert!((l - 0.125).abs() < 0.01, "l={l}");
+    }
+
+    #[test]
+    fn random_access_scores_near_zero() {
+        let mut b = TraceBuilder::new();
+        let a = b.array("d", 8, 4096);
+        b.site(0);
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..512 {
+            b.load(a, rng.below(4096) as u32);
+        }
+        let l = analyze(&b.finish()).spatial_locality();
+        assert!(l < 0.05, "l={l}");
+    }
+
+    #[test]
+    fn per_site_separation() {
+        // One stride-1 site + one random site: weighted mean in between.
+        let mut b = TraceBuilder::new();
+        let a = b.array("t", 1, 4096);
+        let mut rng = crate::util::rng::Rng::new(9);
+        for i in 0..256 {
+            b.site(0);
+            b.load(a, i);
+            b.site(1);
+            b.load(a, rng.below(4096) as u32);
+        }
+        let rep = analyze(&b.finish());
+        let l = rep.spatial_locality();
+        assert!(l > 0.4 && l < 0.6, "l={l}");
+    }
+
+    #[test]
+    fn paper_ordering_kmp_high_fft_low() {
+        // The paper's core empirical fact (§IV-B / Fig 5).
+        let kmp = benchmark_locality("kmp", Scale::Tiny);
+        let aes = benchmark_locality("aes", Scale::Tiny);
+        let fft = benchmark_locality("fft", Scale::Tiny);
+        let gemm = benchmark_locality("gemm", Scale::Tiny);
+        let md = benchmark_locality("md-knn", Scale::Tiny);
+        assert!(kmp > 0.5, "kmp={kmp}");
+        assert!(aes > 0.3, "aes={aes}");
+        assert!(fft < 0.3, "fft={fft}");
+        assert!(gemm < 0.3, "gemm={gemm}");
+        assert!(md < 0.3, "md={md}");
+        assert!(kmp > fft && kmp > gemm && kmp > md);
+    }
+
+    #[test]
+    fn empty_trace_is_zero() {
+        let t = TraceBuilder::new().finish();
+        assert_eq!(analyze(&t).spatial_locality(), 0.0);
+    }
+
+    #[test]
+    fn all_benchmarks_in_unit_interval() {
+        for name in suite::ALL_BENCHMARKS {
+            let l = benchmark_locality(name, Scale::Tiny);
+            assert!((0.0..=1.0).contains(&l), "{name}: {l}");
+        }
+    }
+}

@@ -1,0 +1,343 @@
+//! `repro` — the amm-dse launcher.
+//!
+//! Subcommands (hand-rolled arg parsing; no CLI crates are available in
+//! this offline environment):
+//!
+//! ```text
+//! repro list                              list benchmarks + artifacts
+//! repro trace <bench> [--scale s]         trace stats for one benchmark
+//! repro locality [--scale s]              Fig-5 locality table
+//! repro simulate <bench> --mem <id> [...] one design point
+//! repro sweep --config <file.toml>        config-driven sweep -> CSV
+//! repro figure fig4 [--bench b] [...]     regenerate Fig 4 CSV + plots
+//! repro figure fig5 [--scale s]           regenerate Fig 5 + correlation
+//! repro synth-table                       §III-A AMM synthesis table
+//! repro port-scaling                      Fig-2 HB-NTX port-scaling table
+//! ```
+
+use amm_dse::coordinator::Coordinator;
+use amm_dse::dse::{self, Sweep};
+use amm_dse::mem::MemKind;
+use amm_dse::sched::DesignConfig;
+use amm_dse::suite::{self, Scale};
+use amm_dse::{config, locality, report};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "list" => cmd_list(),
+        "trace" => cmd_trace(&args[1..]),
+        "locality" => cmd_locality(&args[1..]),
+        "simulate" => cmd_simulate(&args[1..]),
+        "sweep" => cmd_sweep(&args[1..]),
+        "figure" => cmd_figure(&args[1..]),
+        "synth-table" => cmd_synth_table(),
+        "port-scaling" => cmd_port_scaling(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}; see `repro help`"),
+    }
+}
+
+const HELP: &str = r#"repro — Design Space Exploration of Algorithmic Multi-Port Memories
+
+USAGE:
+  repro list
+  repro trace <benchmark> [--scale tiny|paper|large]
+  repro locality [--scale tiny|paper|large]
+  repro simulate <benchmark> --mem <id> [--unroll N] [--word N] [--alus N] [--scale s]
+  repro sweep --config configs/<file>.toml [--out results/out.csv]
+  repro figure fig4 [--bench <name>|all] [--scale s] [--out-dir results]
+  repro figure fig5 [--scale s] [--out-dir results]
+  repro synth-table
+  repro port-scaling
+
+MEMORY IDS: banked<N>, banked2p<N>, bankedblk<N>, pump<K>, lvt<R>r<W>w,
+            xor<R>r<W>w (HB-NTX), xorflat<R>r<W>w (LaForest), cmp<R>r<W>w
+"#;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn parse_scale(args: &[String]) -> anyhow::Result<Scale> {
+    Ok(match flag(args, "--scale").as_deref() {
+        None | Some("paper") => Scale::Paper,
+        Some("tiny") => Scale::Tiny,
+        Some("large") => Scale::Large,
+        Some(other) => anyhow::bail!("bad --scale {other:?}"),
+    })
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    println!("benchmarks (paper's Fig-4 DSE set marked *):");
+    for name in suite::ALL_BENCHMARKS {
+        let star = if suite::DSE_BENCHMARKS.contains(&name) { "*" } else { " " };
+        println!("  {star} {name}");
+    }
+    let dir = amm_dse::runtime::artifacts_dir();
+    let missing = amm_dse::runtime::missing_artifacts(&dir);
+    if missing.is_empty() {
+        println!("artifacts: all present in {}", dir.display());
+    } else {
+        println!("artifacts missing from {}: {missing:?} (run `make artifacts`)", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
+    let name = args.first().filter(|a| !a.starts_with("--")).cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: repro trace <benchmark>"))?;
+    let scale = parse_scale(args)?;
+    let wl = suite::generate(&name, scale);
+    let t = &wl.trace;
+    println!("benchmark {name} ({scale:?})");
+    println!("  nodes          {}", t.len());
+    println!("  mem ops        {}", t.mem_ops());
+    println!("  alu ops        {}", t.alu_ops());
+    println!("  arrays         {}", t.arrays.len());
+    for a in &t.arrays {
+        println!("    {:<16} {:>8} elems x {}B", a.name, a.length, a.elem_bytes);
+    }
+    println!("  footprint      {} bytes", t.footprint_bytes());
+    println!("  critical path  {}", t.critical_path_len());
+    println!("  checksum       {:.6}", wl.checksum);
+    let rep = locality::analyze(t);
+    println!("  L_spatial      {:.4}", rep.spatial_locality());
+    println!("  stride-1 frac  {:.4}", rep.stride1_fraction());
+    Ok(())
+}
+
+fn cmd_locality(args: &[String]) -> anyhow::Result<()> {
+    let scale = parse_scale(args)?;
+    println!("{:<12} {:>10} {:>12}", "benchmark", "L_spatial", "stride1");
+    for name in suite::ALL_BENCHMARKS {
+        let wl = suite::generate(name, scale);
+        let rep = locality::analyze(&wl.trace);
+        println!("{:<12} {:>10.4} {:>12.4}", name, rep.spatial_locality(), rep.stride1_fraction());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
+    let name = args.first().filter(|a| !a.starts_with("--")).cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: repro simulate <benchmark> --mem <id>"))?;
+    let scale = parse_scale(args)?;
+    let mem_id = flag(args, "--mem").unwrap_or_else(|| "banked1".into());
+    let mem = MemKind::parse(&mem_id)
+        .ok_or_else(|| anyhow::anyhow!("bad --mem {mem_id:?}; see `repro help`"))?;
+    let cfg = DesignConfig {
+        mem,
+        unroll: flag(args, "--unroll").map(|s| s.parse()).transpose()?.unwrap_or(1),
+        word_bytes: flag(args, "--word").map(|s| s.parse()).transpose()?.unwrap_or(8),
+        alus: flag(args, "--alus").map(|s| s.parse()).transpose()?.unwrap_or(4),
+    };
+    let wl = suite::generate(&name, scale);
+    let out = amm_dse::sched::simulate(&wl.trace, &cfg);
+    println!("benchmark {name} ({scale:?}), mem={mem_id} unroll={} word={}B alus={}", cfg.unroll, cfg.word_bytes, cfg.alus);
+    println!("  cycles      {}", out.cycles);
+    println!("  period      {:.3} ns", out.period_ns);
+    println!("  time        {:.1} ns", out.time_ns);
+    println!("  area        {:.1} um^2 (mem {:.1} + fu {:.1})", out.area_um2, out.mem_area_um2, out.fu_area_um2);
+    println!("  power       {:.3} mW", out.power_mw);
+    println!("  mem access  {}", out.mem_accesses);
+    println!("  port stalls {}", out.port_stalls);
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+    let cfg_path = flag(args, "--config")
+        .ok_or_else(|| anyhow::anyhow!("usage: repro sweep --config <file.toml>"))?;
+    let rc = config::load(std::path::Path::new(&cfg_path))?;
+    let out_csv = flag(args, "--out")
+        .or(rc.out_csv.clone())
+        .unwrap_or_else(|| format!("results/{}.csv", rc.benchmark));
+    let wl = suite::generate(&rc.benchmark, rc.scale);
+    let coord = Coordinator::new();
+    eprintln!(
+        "sweep {} ({:?}): {} design points, cost backend {:?}",
+        rc.benchmark,
+        rc.scale,
+        rc.sweep.configs().len(),
+        coord.backend
+    );
+    let t0 = std::time::Instant::now();
+    let points = coord.run_sweep(&wl.trace, &rc.sweep)?;
+    eprintln!("evaluated {} points in {:.2?}", points.len(), t0.elapsed());
+    report::write_file(std::path::Path::new(&out_csv), &report::fig4_csv(&points))?;
+    println!("{}", report::ascii_scatter(&points, |p| p.area(), &format!("{} area vs time", rc.benchmark), 72, 20));
+    if let Some(r) = dse::performance_ratio(&points, 0.10) {
+        println!("performance ratio (banking area / AMM area, geomean): {r:.3}");
+    }
+    println!("wrote {out_csv}");
+    Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
+    let which = args.first().map(String::as_str).unwrap_or("");
+    let scale = parse_scale(args)?;
+    let out_dir = PathBuf::from(flag(args, "--out-dir").unwrap_or_else(|| "results".into()));
+    match which {
+        "fig4" => {
+            let bench = flag(args, "--bench").unwrap_or_else(|| "all".into());
+            let benches: Vec<&str> = if bench == "all" {
+                suite::DSE_BENCHMARKS.to_vec()
+            } else {
+                vec![suite::ALL_BENCHMARKS
+                    .iter()
+                    .find(|&&b| b == bench)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench:?}"))?]
+            };
+            let coord = Coordinator::new();
+            eprintln!("cost backend: {:?}", coord.backend);
+            for name in benches {
+                let wl = suite::generate(name, scale);
+                let t0 = std::time::Instant::now();
+                let points = coord.run_sweep(&wl.trace, &Sweep::default())?;
+                eprintln!("fig4 {name}: {} points in {:.2?}", points.len(), t0.elapsed());
+                report::write_file(&out_dir.join(format!("fig4_{name}.csv")), &report::fig4_csv(&points))?;
+                println!("{}", report::ascii_scatter(&points, |p| p.area(), &format!("Fig4 {name}: area vs time"), 72, 18));
+                println!("{}", report::ascii_scatter(&points, |p| p.power(), &format!("Fig4 {name}: power vs time"), 72, 18));
+            }
+            println!("wrote {}/fig4_*.csv", out_dir.display());
+        }
+        "fig5" => {
+            let coord = Coordinator::new();
+            eprintln!("cost backend: {:?}", coord.backend);
+            let mut summaries = Vec::new();
+            // locality for all benchmarks; ratio for the DSE set
+            for name in suite::ALL_BENCHMARKS {
+                let wl = suite::generate(name, scale);
+                let loc = locality::analyze(&wl.trace).spatial_locality();
+                let (ratio, bests, n) = if suite::DSE_BENCHMARKS.contains(&name) {
+                    let points = coord.run_sweep(&wl.trace, &Sweep::default())?;
+                    (
+                        dse::performance_ratio(&points, 0.10),
+                        (
+                            dse::best_time(&points, |p| !p.is_amm),
+                            dse::best_time(&points, |p| p.is_amm),
+                        ),
+                        points.len(),
+                    )
+                } else {
+                    (None, (f64::NAN, f64::NAN), 0)
+                };
+                summaries.push(dse::BenchSummary {
+                    name: name.to_string(),
+                    locality: loc,
+                    perf_ratio: ratio,
+                    best_banking_ns: bests.0,
+                    best_amm_ns: bests.1,
+                    n_points: n,
+                });
+            }
+            report::write_file(&out_dir.join("fig5.csv"), &report::fig5_csv(&summaries))?;
+            println!("{}", report::fig5_ascii(&summaries));
+            // the paper's claim: ratio correlates negatively with locality
+            let with_ratio: Vec<&dse::BenchSummary> =
+                summaries.iter().filter(|s| s.perf_ratio.is_some()).collect();
+            if with_ratio.len() >= 3 {
+                let xs: Vec<f64> = with_ratio.iter().map(|s| s.locality).collect();
+                let ys: Vec<f64> = with_ratio.iter().map(|s| s.perf_ratio.unwrap()).collect();
+                println!(
+                    "locality/ratio correlation: pearson {:.3}, spearman {:.3}",
+                    amm_dse::util::stats::pearson(&xs, &ys),
+                    amm_dse::util::stats::spearman(&xs, &ys)
+                );
+                for s in &with_ratio {
+                    let wins = s.perf_ratio.unwrap() > 1.0;
+                    let low = s.locality < 0.3;
+                    println!(
+                        "  {:<10} L={:.3} ratio={:.3}  low-locality={} amm-wins={}  {}",
+                        s.name,
+                        s.locality,
+                        s.perf_ratio.unwrap(),
+                        low,
+                        wins,
+                        if low == wins { "consistent with paper" } else { "INCONSISTENT" }
+                    );
+                }
+            }
+            println!("wrote {}/fig5.csv", out_dir.display());
+        }
+        other => anyhow::bail!("unknown figure {other:?} (fig4|fig5)"),
+    }
+    Ok(())
+}
+
+fn cmd_synth_table() -> anyhow::Result<()> {
+    // §III-A: synthesized AMM designs across depth × ports.
+    println!(
+        "{:<12} {:>7} {:>6} {:>12} {:>10} {:>10} {:>10} {:>8}",
+        "design", "depth", "width", "area_um2", "e_rd_pJ", "e_wr_pJ", "leak_uW", "t_ns"
+    );
+    for depth in [256u32, 1024, 4096, 16384] {
+        for kind in [
+            MemKind::Banked { banks: 1 },
+            MemKind::LvtAmm { read_ports: 2, write_ports: 1 },
+            MemKind::LvtAmm { read_ports: 2, write_ports: 2 },
+            MemKind::LvtAmm { read_ports: 4, write_ports: 2 },
+            MemKind::XorAmm { read_ports: 2, write_ports: 1 },
+            MemKind::XorAmm { read_ports: 2, write_ports: 2 },
+            MemKind::XorAmm { read_ports: 4, write_ports: 2 },
+            MemKind::CircuitMp { read_ports: 2, write_ports: 2 },
+            MemKind::CircuitMp { read_ports: 4, write_ports: 2 },
+        ] {
+            let d = kind.build(depth, 32);
+            println!(
+                "{:<12} {:>7} {:>6} {:>12.1} {:>10.3} {:>10.3} {:>10.2} {:>8.3}",
+                kind.id(),
+                depth,
+                32,
+                d.area_um2(),
+                d.e_read_pj(),
+                d.e_write_pj(),
+                d.leak_uw(),
+                d.t_access_ns()
+            );
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_port_scaling() -> anyhow::Result<()> {
+    // Fig 2: the HB-NTX-RdWr flow — how banks/capacity/logic scale as
+    // ports are added.
+    println!(
+        "{:<10} {:>6} {:>8} {:>10} {:>12} {:>12} {:>8}",
+        "config", "banks", "macros", "cap_factor", "sram_um2", "logic_um2", "t_ns"
+    );
+    for (r, w) in [(1u32, 1u32), (2, 1), (4, 1), (2, 2), (4, 2), (4, 4), (8, 4)] {
+        let kind = MemKind::XorAmm { read_ports: r, write_ports: w };
+        let d = kind.build(4096, 32);
+        let base = MemKind::Banked { banks: 1 }.build(4096, 32);
+        println!(
+            "{:<10} {:>6} {:>8} {:>10.2} {:>12.1} {:>12.1} {:>8.3}",
+            format!("{r}R{w}W"),
+            d.macros,
+            d.macros,
+            d.sram.area_um2 / base.sram.area_um2,
+            d.sram.area_um2,
+            d.logic.area_um2,
+            d.t_access_ns()
+        );
+    }
+    Ok(())
+}

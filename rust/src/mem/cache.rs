@@ -1,0 +1,151 @@
+//! Cache-memory AMM designs (paper abstract / §V: "scratchpad **and
+//! cache-memory** AMM designs ... in different memory cells, port
+//! configurations and memory depth").
+//!
+//! A set-associative cache is two SRAM structures — a tag array and a
+//! data array — plus comparators and way muxes. Multi-porting a cache
+//! multi-ports *both* arrays, so every organization of [`super::MemKind`]
+//! composes here: an AMM-ported cache gives N conflict-free lookups per
+//! cycle at the AMM's capacity overhead on both arrays, while a banked
+//! cache serializes same-bank lookups exactly like a banked scratchpad.
+//!
+//! This module provides the *cost composition* used by the §III-A
+//! synthesis table (the trace-driven benchmarks in this paper run on
+//! scratchpads, as in Aladdin; cache timing simulation is out of the
+//! paper's scope).
+
+use super::{MemDesign, MemKind};
+use crate::synth;
+
+/// A cache organization to cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheCfg {
+    /// Total data capacity in bytes.
+    pub capacity_bytes: u32,
+    /// Line size in bytes.
+    pub line_bytes: u32,
+    /// Associativity (ways).
+    pub ways: u32,
+    /// Physical address width the tags cover.
+    pub addr_bits: u32,
+    /// Memory organization for both the tag and data arrays.
+    pub ports: MemKind,
+}
+
+impl CacheCfg {
+    /// Number of sets.
+    pub fn sets(&self) -> u32 {
+        (self.capacity_bytes / self.line_bytes / self.ways).max(1)
+    }
+    /// Tag width in bits (addr − index − offset, + valid/dirty).
+    pub fn tag_bits(&self) -> u32 {
+        let index_bits = 32 - (self.sets().max(2) - 1).leading_zeros();
+        let offset_bits = 32 - (self.line_bytes.max(2) - 1).leading_zeros();
+        self.addr_bits.saturating_sub(index_bits + offset_bits) + 2
+    }
+}
+
+/// Fully-costed cache design.
+#[derive(Clone, Debug)]
+pub struct CacheDesign {
+    /// Configuration.
+    pub cfg: CacheCfg,
+    /// Data-array design (depth = sets, width = line·8, per way).
+    pub data: MemDesign,
+    /// Tag-array design (depth = sets, width = tag_bits, per way).
+    pub tags: MemDesign,
+    /// Comparator + way-mux logic cost.
+    pub lookup: synth::LogicCost,
+}
+
+impl CacheDesign {
+    /// Total area, µm².
+    pub fn area_um2(&self) -> f32 {
+        let w = self.cfg.ways as f32;
+        self.data.area_um2() * w + self.tags.area_um2() * w + self.lookup.area_um2
+    }
+    /// Energy per lookup (all ways probed in parallel), pJ.
+    pub fn e_lookup_pj(&self) -> f32 {
+        let w = self.cfg.ways as f32;
+        w * (self.data.e_read_pj() + self.tags.e_read_pj()) + self.lookup.e_access_pj
+    }
+    /// Leakage, µW.
+    pub fn leak_uw(&self) -> f32 {
+        let w = self.cfg.ways as f32;
+        self.data.leak_uw() * w + self.tags.leak_uw() * w + self.lookup.leak_uw
+    }
+    /// Lookup (hit) time, ns: slower of tag path (tag read + compare +
+    /// way mux) and data path.
+    pub fn t_lookup_ns(&self) -> f32 {
+        let tag_path = self.tags.t_access_ns() + self.lookup.delay_ns;
+        tag_path.max(self.data.t_access_ns())
+    }
+}
+
+/// Build a cache design.
+pub fn build(cfg: CacheCfg) -> CacheDesign {
+    let sets = cfg.sets();
+    let data = cfg.ports.build(sets, cfg.line_bytes * 8);
+    let tags = cfg.ports.build(sets, cfg.tag_bits());
+    // per-way comparators + way-select mux for each lookup port
+    let lookup_ports = match cfg.ports {
+        MemKind::LvtAmm { read_ports, .. }
+        | MemKind::XorAmm { read_ports, .. }
+        | MemKind::XorFlat { read_ports, .. }
+        | MemKind::CircuitMp { read_ports, .. } => read_ports,
+        MemKind::MultiPump { factor } => factor,
+        _ => 1,
+    };
+    let cmp = synth::conflict_comparators(2, cfg.tag_bits()).times((cfg.ways * lookup_ports) as f32);
+    let way_mux = synth::mux_tree(cfg.ways, cfg.line_bytes * 8).times(lookup_ports as f32);
+    CacheDesign { cfg, data, tags, lookup: cmp.beside(way_mux).cost() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(ports: MemKind) -> CacheCfg {
+        CacheCfg { capacity_bytes: 16384, line_bytes: 32, ways: 4, addr_bits: 32, ports }
+    }
+
+    #[test]
+    fn geometry_is_consistent() {
+        let c = base_cfg(MemKind::Banked { banks: 1 });
+        assert_eq!(c.sets(), 128);
+        // 32-bit addr, 7 index bits, 5 offset bits → 20 tag bits + v/d
+        assert_eq!(c.tag_bits(), 22);
+    }
+
+    #[test]
+    fn amm_cache_cheaper_than_circuit_multiport_cache() {
+        let xor = build(base_cfg(MemKind::XorAmm { read_ports: 4, write_ports: 2 }));
+        let cmp = build(base_cfg(MemKind::CircuitMp { read_ports: 4, write_ports: 2 }));
+        assert!(xor.area_um2() < cmp.area_um2());
+        assert!(xor.e_lookup_pj() > 0.0 && xor.t_lookup_ns() > 0.0);
+    }
+
+    #[test]
+    fn associativity_multiplies_arrays() {
+        let w2 = build(CacheCfg { ways: 2, ..base_cfg(MemKind::Banked { banks: 1 }) });
+        let w8 = build(CacheCfg { ways: 8, ..base_cfg(MemKind::Banked { banks: 1 }) });
+        // same capacity: more ways → fewer sets per way but more periphery
+        // + comparators → more area and lookup energy
+        assert!(w8.e_lookup_pj() > w2.e_lookup_pj());
+        assert!(w8.lookup.area_um2 > w2.lookup.area_um2);
+    }
+
+    #[test]
+    fn tag_path_contributes_to_lookup_time() {
+        let c = build(base_cfg(MemKind::LvtAmm { read_ports: 2, write_ports: 1 }));
+        assert!(c.t_lookup_ns() >= c.tags.t_access_ns());
+    }
+
+    #[test]
+    fn bigger_caches_cost_more() {
+        let small = build(CacheCfg { capacity_bytes: 4096, ..base_cfg(MemKind::Banked { banks: 1 }) });
+        let big = build(CacheCfg { capacity_bytes: 65536, ..base_cfg(MemKind::Banked { banks: 1 }) });
+        assert!(big.area_um2() > 4.0 * small.area_um2());
+        assert!(big.leak_uw() > small.leak_uw());
+    }
+}

@@ -1,0 +1,191 @@
+//! Figure/table emitters: CSV series + ASCII scatter plots for every
+//! paper artifact (Fig 2, Fig 4 a–d, Fig 5, the §III-A synthesis table).
+
+use crate::dse::{BenchSummary, DesignPoint};
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// Write the Fig-4 CSV for one benchmark: one row per design point with
+/// the columns the paper plots (cycles, time, area, power) plus the
+/// AMM/banking split.
+pub fn fig4_csv(points: &[DesignPoint]) -> String {
+    let mut s = String::from(
+        "id,mem,is_amm,unroll,word_bytes,alus,cycles,period_ns,time_ns,area_um2,power_mw,port_stalls\n",
+    );
+    for p in points {
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{},{},{:.4},{:.1},{:.1},{:.4},{}",
+            p.id,
+            p.mem_id,
+            p.is_amm as u8,
+            p.unroll,
+            p.word_bytes,
+            p.alus,
+            p.out.cycles,
+            p.out.period_ns,
+            p.out.time_ns,
+            p.out.area_um2,
+            p.out.power_mw,
+            p.out.port_stalls
+        );
+    }
+    s
+}
+
+/// Write the Fig-5 CSV: locality + performance ratio per benchmark.
+pub fn fig5_csv(summaries: &[BenchSummary]) -> String {
+    let mut s = String::from(
+        "benchmark,spatial_locality,perf_ratio,best_banking_ns,best_amm_ns,n_points\n",
+    );
+    for b in summaries {
+        let _ = writeln!(
+            s,
+            "{},{:.4},{},{:.1},{:.1},{}",
+            b.name,
+            b.locality,
+            b.perf_ratio.map(|r| format!("{r:.4}")).unwrap_or_else(|| "NA".into()),
+            b.best_banking_ns,
+            b.best_amm_ns,
+            b.n_points
+        );
+    }
+    s
+}
+
+/// ASCII scatter of (x=time, y=area or power), AMM points `o`, banking
+/// `x` — the terminal rendition of a Fig-4 panel. Log-scaled axes.
+pub fn ascii_scatter(
+    points: &[DesignPoint],
+    y_of: impl Fn(&DesignPoint) -> f64,
+    title: &str,
+    width: usize,
+    height: usize,
+) -> String {
+    if points.is_empty() {
+        return format!("{title}: (no points)\n");
+    }
+    let xs: Vec<f64> = points.iter().map(|p| p.time_ns().log10()).collect();
+    let ys: Vec<f64> = points.iter().map(|p| y_of(p).log10()).collect();
+    let (x0, x1) = min_max(&xs);
+    let (y0, y1) = min_max(&ys);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (i, p) in points.iter().enumerate() {
+        let cx = scale(xs[i], x0, x1, width - 1);
+        let cy = height - 1 - scale(ys[i], y0, y1, height - 1);
+        let ch = if p.is_amm { b'o' } else { b'x' };
+        // AMM wins ties so the blue points stay visible, as in Fig 4.
+        if grid[cy][cx] != b'o' {
+            grid[cy][cx] = ch;
+        }
+    }
+    let mut s = format!("{title}  [x: log10(time ns) {:.2}..{:.2}] [y: {:.2}..{:.2}]  o=AMM x=banking\n", x0, x1, y0, y1);
+    for row in grid {
+        s.push_str(std::str::from_utf8(&row).unwrap());
+        s.push('\n');
+    }
+    s
+}
+
+fn min_max(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+    (lo, hi)
+}
+
+fn scale(x: f64, lo: f64, hi: f64, max: usize) -> usize {
+    (((x - lo) / (hi - lo)) * max as f64).round().clamp(0.0, max as f64) as usize
+}
+
+/// ASCII bar chart for Fig 5 (locality and ratio side by side).
+pub fn fig5_ascii(summaries: &[BenchSummary]) -> String {
+    let mut s = String::from("benchmark     L_spatial                      perf-ratio (banking area / AMM area)\n");
+    for b in summaries {
+        let lbar = bar(b.locality, 1.0, 28);
+        let (rtxt, rbar) = match b.perf_ratio {
+            Some(r) => (format!("{r:5.2}"), bar(r, 2.0, 28)),
+            None => ("   NA".into(), String::new()),
+        };
+        let _ = writeln!(s, "{:<12} {:5.3} {lbar} {rtxt} {rbar}", b.name, b.locality);
+    }
+    s
+}
+
+fn bar(v: f64, full: f64, width: usize) -> String {
+    let n = ((v / full) * width as f64).round().clamp(0.0, width as f64) as usize;
+    "#".repeat(n)
+}
+
+/// Write a string to `path`, creating parent dirs.
+pub fn write_file(path: &Path, contents: &str) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, contents)
+}
+
+/// Markdown table of paper-vs-measured rows (EXPERIMENTS.md helper).
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "| {} |", headers.join(" | "));
+    let _ = writeln!(s, "|{}|", headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for r in rows {
+        let _ = writeln!(s, "| {} |", r.join(" | "));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::DesignPoint;
+    use crate::sched::SimOutput;
+
+    fn pt(id: &str, amm: bool, time: f64, area: f32) -> DesignPoint {
+        DesignPoint {
+            id: id.into(),
+            mem_id: id.into(),
+            is_amm: amm,
+            unroll: 1,
+            word_bytes: 8,
+            alus: 2,
+            out: SimOutput { time_ns: time, area_um2: area, cycles: time as u64, power_mw: 1.0, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let points = vec![pt("a", false, 100.0, 5000.0), pt("b", true, 50.0, 8000.0)];
+        let csv = fig4_csv(&points);
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(2).unwrap().starts_with("b,b,1,"));
+    }
+
+    #[test]
+    fn scatter_renders_both_markers() {
+        let points = vec![pt("a", false, 100.0, 5000.0), pt("b", true, 50.0, 8000.0)];
+        let s = ascii_scatter(&points, |p| p.area(), "test", 40, 10);
+        assert!(s.contains('o'));
+        assert!(s.contains('x'));
+    }
+
+    #[test]
+    fn empty_scatter_ok() {
+        let s = ascii_scatter(&[], |p| p.area(), "empty", 40, 10);
+        assert!(s.contains("no points"));
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(t.lines().count(), 3);
+    }
+}

@@ -1,0 +1,232 @@
+//! CACTI-lite: analytical SRAM macro model at 45 nm.
+//!
+//! The paper estimates SRAM banks with CACTI and folds the numbers into
+//! Aladdin's power/area/latency tables (§III-A). CACTI itself is not
+//! available here, so this module implements the same *functional forms*
+//! CACTI uses — cell array + √depth periphery area, √(bits) wire/sense
+//! energy, bit-proportional leakage, and log-decoder + bitline access
+//! time — with constants calibrated to published 45 nm SRAM data
+//! (see DESIGN.md "Reproduction stance"). Only relative cost between
+//! configurations matters for the paper's Pareto shapes.
+//!
+//! **This model is mirrored bit-for-bit (f32 arithmetic, same formulas,
+//! same constants) by the Pallas kernel in
+//! `python/compile/kernels/cost_eval.py`.** `rust/tests/pjrt_cost.rs`
+//! asserts the two agree to 1e-4 relative. Change one side → change both.
+
+/// Calibration constants (45 nm). Shared verbatim with the L1 kernel.
+pub mod cal {
+    /// 6T SRAM cell area, µm² per bit (45 nm bulk, published compilers).
+    pub const CELL_UM2: f32 = 0.65;
+    /// Extra cell-area factor per port beyond the first 1RW port
+    /// (extra wordline + bitline pair pitch growth, per axis — the
+    /// quadratic blow-up that motivates AMMs; 0.5/port reflects the
+    /// wire-congestion-dominated layouts reported for ≥4-port cells).
+    pub const PORT_PITCH: f32 = 0.5;
+    /// Periphery area coefficient: decoder/sense µm² per (width · √depth).
+    pub const PERIPH_A: f32 = 1.9;
+    /// Fixed macro overhead, µm² (control, timing, well taps).
+    pub const PERIPH_B: f32 = 520.0;
+    /// Read energy: pJ fixed per access (decode + control).
+    pub const E_READ_0: f32 = 0.45;
+    /// Read energy: pJ per bit · √depth term (bitline + sense).
+    pub const E_READ_BIT: f32 = 0.0021;
+    /// Write energy multiplier over read (full-swing bitlines).
+    pub const WRITE_FACTOR: f32 = 1.18;
+    /// Leakage, µW per bit at 45 nm HVT-ish array.
+    pub const LEAK_BIT: f32 = 0.00082;
+    /// Leakage fixed periphery, µW.
+    pub const LEAK_0: f32 = 3.1;
+    /// Access time: fixed ns (clk-to-q + control).
+    pub const T_0: f32 = 0.28;
+    /// Access time: ns per log2(depth) (decoder levels).
+    pub const T_DEC: f32 = 0.042;
+    /// Access time: ns per √depth (bitline RC).
+    pub const T_BL: f32 = 0.0095;
+    /// Access-time port penalty per extra port (loading on cell).
+    pub const T_PORT: f32 = 0.06;
+}
+
+/// A physical SRAM macro configuration (one bank as the memory compiler
+/// would generate it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MacroCfg {
+    /// Number of words.
+    pub depth: u32,
+    /// Word width in bits.
+    pub width: u32,
+    /// Read ports (≥1).
+    pub read_ports: u32,
+    /// Write ports (≥1). `read_ports + write_ports ≤ 2` is what real
+    /// memory compilers provide; more is a *circuit-level* multiport and
+    /// is costed with the quadratic pitch penalty below (that penalty is
+    /// exactly why the paper builds AMMs instead).
+    pub write_ports: u32,
+}
+
+impl MacroCfg {
+    /// Simple 1RW macro.
+    pub fn rw1(depth: u32, width: u32) -> Self {
+        MacroCfg { depth, width, read_ports: 1, write_ports: 1 }
+    }
+    /// Dual-port 1R1W macro (the largest config EDA flows hand out).
+    pub fn r1w1(depth: u32, width: u32) -> Self {
+        MacroCfg { depth, width, read_ports: 1, write_ports: 1 }
+    }
+    /// Total ports.
+    pub fn ports(&self) -> u32 {
+        self.read_ports + self.write_ports
+    }
+}
+
+/// Cost estimate for one macro.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MacroCost {
+    /// Layout area, µm².
+    pub area_um2: f32,
+    /// Energy per read access, pJ.
+    pub e_read_pj: f32,
+    /// Energy per write access, pJ.
+    pub e_write_pj: f32,
+    /// Leakage power, µW.
+    pub leak_uw: f32,
+    /// Access (read) time, ns.
+    pub t_access_ns: f32,
+}
+
+impl MacroCost {
+    /// Sum of two cost structs (areas/leakage add; energies add — used
+    /// when a logical access touches several macros; access time takes
+    /// the max).
+    pub fn stack(self, other: MacroCost) -> MacroCost {
+        MacroCost {
+            area_um2: self.area_um2 + other.area_um2,
+            e_read_pj: self.e_read_pj + other.e_read_pj,
+            e_write_pj: self.e_write_pj + other.e_write_pj,
+            leak_uw: self.leak_uw + other.leak_uw,
+            t_access_ns: self.t_access_ns.max(other.t_access_ns),
+        }
+    }
+}
+
+/// Evaluate the CACTI-lite model for one macro.
+///
+/// Functional form (all f32, mirrored by the Pallas kernel):
+/// ```text
+/// pitch     = 1 + PORT_PITCH · (ports − 2)        (ports > 2, else 1)
+/// area      = depth·width·CELL·pitch² + PERIPH_A·width·√depth·pitch + PERIPH_B
+/// e_read    = E_READ_0 + E_READ_BIT · width · √depth · pitch
+/// e_write   = e_read · WRITE_FACTOR
+/// leak      = LEAK_0 + LEAK_BIT · depth · width · pitch²
+/// t_access  = T_0 + T_DEC·log2(depth) + T_BL·√depth·pitch
+///             + T_PORT·(ports − 2 if ports > 2 else 0)
+/// ```
+pub fn macro_cost(cfg: MacroCfg) -> MacroCost {
+    let depth = cfg.depth.max(1) as f32;
+    let width = cfg.width.max(1) as f32;
+    let ports = cfg.ports() as f32;
+    let extra = (ports - 2.0).max(0.0);
+    let pitch = 1.0 + cal::PORT_PITCH * extra;
+    let sqrt_d = depth.sqrt();
+    let area = depth * width * cal::CELL_UM2 * pitch * pitch
+        + cal::PERIPH_A * width * sqrt_d * pitch
+        + cal::PERIPH_B;
+    let e_read = cal::E_READ_0 + cal::E_READ_BIT * width * sqrt_d * pitch;
+    let e_write = e_read * cal::WRITE_FACTOR;
+    let leak = cal::LEAK_0 + cal::LEAK_BIT * depth * width * pitch * pitch;
+    let t = cal::T_0 + cal::T_DEC * depth.log2() + cal::T_BL * sqrt_d * pitch + cal::T_PORT * extra;
+    MacroCost { area_um2: area, e_read_pj: e_read, e_write_pj: e_write, leak_uw: leak, t_access_ns: t }
+}
+
+/// Batched evaluation over a design matrix — the exact computation the
+/// AOT Pallas kernel performs. Input rows are
+/// `[depth, width, read_ports, write_ports]`; output rows are
+/// `[area, e_read, e_write, leak, t_access]`. Used as the pure-Rust
+/// fallback / cross-check for the PJRT path.
+pub fn macro_cost_batch(rows: &[[f32; 4]]) -> Vec<[f32; 5]> {
+    rows.iter()
+        .map(|r| {
+            let c = macro_cost(MacroCfg {
+                depth: r[0] as u32,
+                width: r[1] as u32,
+                read_ports: r[2] as u32,
+                write_ports: r[3] as u32,
+            });
+            [c.area_um2, c.e_read_pj, c.e_write_pj, c.leak_uw, c.t_access_ns]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_depth() {
+        let a = macro_cost(MacroCfg::rw1(256, 32));
+        let b = macro_cost(MacroCfg::rw1(1024, 32));
+        let c = macro_cost(MacroCfg::rw1(4096, 32));
+        assert!(a.area_um2 < b.area_um2 && b.area_um2 < c.area_um2);
+        assert!(a.t_access_ns < b.t_access_ns && b.t_access_ns < c.t_access_ns);
+        assert!(a.e_read_pj < b.e_read_pj && b.e_read_pj < c.e_read_pj);
+        assert!(a.leak_uw < b.leak_uw && b.leak_uw < c.leak_uw);
+    }
+
+    #[test]
+    fn monotone_in_width() {
+        let a = macro_cost(MacroCfg::rw1(1024, 8));
+        let b = macro_cost(MacroCfg::rw1(1024, 64));
+        assert!(a.area_um2 < b.area_um2);
+        assert!(a.e_read_pj < b.e_read_pj);
+    }
+
+    #[test]
+    fn circuit_multiport_is_quadratically_expensive() {
+        // The motivation for AMMs: a circuit-level 4R2W macro blows up.
+        let dp = macro_cost(MacroCfg { depth: 1024, width: 32, read_ports: 1, write_ports: 1 });
+        let mp = macro_cost(MacroCfg { depth: 1024, width: 32, read_ports: 4, write_ports: 2 });
+        // 6 ports → pitch = 1 + 0.35·4 = 2.4 → cell array ≈ 5.76×
+        assert!(mp.area_um2 > 4.0 * dp.area_um2, "mp={} dp={}", mp.area_um2, dp.area_um2);
+        assert!(mp.t_access_ns > dp.t_access_ns);
+    }
+
+    #[test]
+    fn write_costs_more_than_read() {
+        let c = macro_cost(MacroCfg::rw1(2048, 64));
+        assert!(c.e_write_pj > c.e_read_pj);
+        assert!((c.e_write_pj / c.e_read_pj - cal::WRITE_FACTOR).abs() < 1e-6);
+    }
+
+    #[test]
+    fn splitting_into_banks_costs_area_overhead() {
+        // One 4096-word macro vs 4×1024: banking pays periphery 4 times.
+        let whole = macro_cost(MacroCfg::rw1(4096, 32));
+        let quarter = macro_cost(MacroCfg::rw1(1024, 32));
+        assert!(4.0 * quarter.area_um2 > whole.area_um2);
+        // ...but each bank is faster.
+        assert!(quarter.t_access_ns < whole.t_access_ns);
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let rows = [[1024.0, 32.0, 1.0, 1.0], [256.0, 64.0, 2.0, 2.0], [8192.0, 8.0, 1.0, 1.0]];
+        let out = macro_cost_batch(&rows);
+        for (r, o) in rows.iter().zip(&out) {
+            let c = macro_cost(MacroCfg {
+                depth: r[0] as u32,
+                width: r[1] as u32,
+                read_ports: r[2] as u32,
+                write_ports: r[3] as u32,
+            });
+            assert_eq!(o[0], c.area_um2);
+            assert_eq!(o[4], c.t_access_ns);
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_nan() {
+        let c = macro_cost(MacroCfg { depth: 0, width: 0, read_ports: 1, write_ports: 0 });
+        assert!(c.area_um2.is_finite());
+        assert!(c.t_access_ns.is_finite());
+    }
+}

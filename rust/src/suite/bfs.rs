@@ -1,0 +1,122 @@
+//! BFS-Queue (MachSuite `bfs/queue`): breadth-first search over a CSR
+//! graph with an explicit work queue. Edge-list walks are sequential but
+//! node-level gathers are scattered ⇒ low-to-mid locality.
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+const SITE_QUEUE_RD: u32 = 0;
+const SITE_EDGE_BEGIN: u32 = 1;
+const SITE_EDGE_DST: u32 = 2;
+const SITE_LEVEL_RD: u32 = 3;
+const SITE_LEVEL_WR: u32 = 4;
+const SITE_QUEUE_WR: u32 = 5;
+
+const DEGREE: usize = 6;
+
+/// Generate a BFS trace over an `n`-node random graph.
+/// Checksum = Σ level[v] over reached nodes.
+pub fn generate(n: usize) -> Workload {
+    let mut rng = Rng::new(0xBF5 ^ n as u64);
+    // CSR random graph with fixed out-degree; ring edges guarantee
+    // connectivity so BFS reaches every node.
+    let mut edge_begin = vec![0u32; n + 1];
+    let mut edge_dst = Vec::with_capacity(n * DEGREE);
+    for v in 0..n {
+        edge_begin[v + 1] = edge_begin[v] + DEGREE as u32;
+        edge_dst.push(((v + 1) % n) as u32);
+        for _ in 1..DEGREE {
+            edge_dst.push(rng.below_usize(n) as u32);
+        }
+    }
+
+    let mut b = TraceBuilder::new();
+    let a_begin = b.array("edge_begin", 4, (n + 1) as u32);
+    let a_dst = b.array("edge_dst", 4, (n * DEGREE) as u32);
+    let a_level = b.array("level", 1, n as u32);
+    let a_queue = b.array("queue", 4, n as u32);
+
+    const UNVISITED: u8 = u8::MAX;
+    let mut level = vec![UNVISITED; n];
+    let mut queue = vec![0u32; n];
+    let (mut head, mut tail) = (0usize, 0usize);
+    level[0] = 0;
+    queue[tail] = 0;
+    tail += 1;
+    let mut level_store = vec![None; n];
+    let mut queue_store: Vec<Option<crate::trace::NodeId>> = vec![None; n];
+    let s0 = b.store(a_level, 0, &[]);
+    level_store[0] = Some(s0);
+    let q0 = b.store(a_queue, 0, &[]);
+    queue_store[0] = Some(q0);
+
+    while head < tail {
+        b.site(SITE_QUEUE_RD);
+        let lq = b.load_dep(a_queue, head as u32, &[queue_store[head].unwrap()]);
+        let v = queue[head] as usize;
+        head += 1;
+        b.site(SITE_EDGE_BEGIN);
+        let lb0 = b.load_dep(a_begin, v as u32, &[lq]);
+        let lb1 = b.load_dep(a_begin, (v + 1) as u32, &[lq]);
+        let bound = b.alu(AluKind::Cmp, &[lb0, lb1]);
+        for e in edge_begin[v]..edge_begin[v + 1] {
+            b.site(SITE_EDGE_DST);
+            let ld = b.load_dep(a_dst, e, &[bound]);
+            let w = edge_dst[e as usize] as usize;
+            b.site(SITE_LEVEL_RD);
+            let mut deps = vec![ld];
+            if let Some(s) = level_store[w] {
+                deps.push(s);
+            }
+            let ll = b.load_dep(a_level, w as u32, &deps);
+            let cmp = b.alu(AluKind::Cmp, &[ll]);
+            if level[w] == UNVISITED {
+                level[w] = level[v] + 1;
+                b.site(SITE_LEVEL_WR);
+                let sw = b.store(a_level, w as u32, &[cmp]);
+                level_store[w] = Some(sw);
+                b.site(SITE_QUEUE_WR);
+                let qw = b.store(a_queue, tail as u32, &[cmp]);
+                queue_store[tail] = Some(qw);
+                queue[tail] = w as u32;
+                tail += 1;
+            }
+            b.next_iter();
+        }
+    }
+
+    let checksum = level.iter().filter(|&&l| l != UNVISITED).map(|&l| l as f64).sum();
+    Workload { name: "bfs", trace: b.finish(), checksum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reaches_all_nodes() {
+        // The ring edge guarantees full reachability: levels all set.
+        let n = 64;
+        let wl = generate(n);
+        // checksum = sum of levels; with a ring + random edges diameter is
+        // small, so sum < n * n but > 0.
+        assert!(wl.checksum > 0.0);
+        assert!(wl.checksum < (n * n) as f64);
+    }
+
+    #[test]
+    fn visits_each_node_once() {
+        let n = 32;
+        let wl = generate(n);
+        //每 node exactly one queue store + one level store (plus source).
+        let q_id = wl.trace.arrays.iter().position(|a| a.name == "queue").unwrap() as u16;
+        let q_stores = wl
+            .trace
+            .nodes
+            .iter()
+            .filter(|nd| matches!(nd.kind, crate::trace::OpKind::Store { array, .. } if array == q_id))
+            .count();
+        assert_eq!(q_stores, n);
+    }
+}

@@ -1,0 +1,194 @@
+//! FFT-Strided (MachSuite `fft/strided`): iterative radix-2 butterfly
+//! with span-strided access — the span halves every stage, so the access
+//! stride sweeps n/2 · 8 bytes down to 8 bytes. Double precision ⇒
+//! minimum byte-stride 8 ⇒ low Weinberg locality (paper §IV-B).
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+
+const SITE_RE_EVEN: u32 = 0;
+const SITE_RE_ODD: u32 = 1;
+const SITE_IM_EVEN: u32 = 2;
+const SITE_IM_ODD: u32 = 3;
+const SITE_TW_RE: u32 = 4;
+const SITE_TW_IM: u32 = 5;
+const SITE_ST_RE_ODD: u32 = 6;
+const SITE_ST_RE_EVEN: u32 = 7;
+const SITE_ST_IM_ODD: u32 = 8;
+const SITE_ST_IM_EVEN: u32 = 9;
+
+/// Generate an `n`-point strided FFT trace (n must be a power of two).
+/// Checksum = Σ |re| + |im| over the transformed signal.
+pub fn generate(n: usize) -> Workload {
+    assert!(n.is_power_of_two() && n >= 4, "fft size must be a power of two >= 4");
+    // Input: a deterministic tone mix.
+    let mut re: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin() + 0.5 * (i as f64 * 1.7).cos()).collect();
+    let mut im: Vec<f64> = vec![0.0; n];
+    let tw_re: Vec<f64> = (0..n / 2).map(|i| (-2.0 * std::f64::consts::PI * i as f64 / n as f64).cos()).collect();
+    let tw_im: Vec<f64> = (0..n / 2).map(|i| (-2.0 * std::f64::consts::PI * i as f64 / n as f64).sin()).collect();
+
+    let mut b = TraceBuilder::new();
+    let a_re = b.array("real", 8, n as u32);
+    let a_im = b.array("img", 8, n as u32);
+    let a_twr = b.array("real_twid", 8, (n / 2) as u32);
+    let a_twi = b.array("img_twid", 8, (n / 2) as u32);
+
+    let mut log = 0u32;
+    let mut span = n >> 1;
+    while span != 0 {
+        let mut odd = span;
+        while odd < n {
+            odd |= span;
+            let even = odd ^ span;
+
+            b.site(SITE_RE_EVEN);
+            let l_re_e = b.load(a_re, even as u32);
+            b.site(SITE_RE_ODD);
+            let l_re_o = b.load(a_re, odd as u32);
+            let sum_re = b.alu(AluKind::FAdd, &[l_re_e, l_re_o]);
+            let dif_re = b.alu(AluKind::FAdd, &[l_re_e, l_re_o]);
+            b.site(SITE_ST_RE_ODD);
+            let s_re_o = b.store(a_re, odd as u32, &[dif_re]);
+            b.site(SITE_ST_RE_EVEN);
+            b.store(a_re, even as u32, &[sum_re]);
+
+            b.site(SITE_IM_EVEN);
+            let l_im_e = b.load(a_im, even as u32);
+            b.site(SITE_IM_ODD);
+            let l_im_o = b.load(a_im, odd as u32);
+            let sum_im = b.alu(AluKind::FAdd, &[l_im_e, l_im_o]);
+            let dif_im = b.alu(AluKind::FAdd, &[l_im_e, l_im_o]);
+            b.site(SITE_ST_IM_ODD);
+            let s_im_o = b.store(a_im, odd as u32, &[dif_im]);
+            b.site(SITE_ST_IM_EVEN);
+            b.store(a_im, even as u32, &[sum_im]);
+
+            // Mirror the arithmetic on the data side.
+            let t = re[even] + re[odd];
+            re[odd] = re[even] - re[odd];
+            re[even] = t;
+            let t = im[even] + im[odd];
+            im[odd] = im[even] - im[odd];
+            im[even] = t;
+
+            let rootindex = (even << log) & (n - 1);
+            if rootindex != 0 {
+                b.site(SITE_TW_RE);
+                let l_twr = b.load(a_twr, rootindex as u32);
+                b.site(SITE_TW_IM);
+                let l_twi = b.load(a_twi, rootindex as u32);
+                // temp = twr*re[odd] - twi*im[odd]
+                b.site(SITE_RE_ODD);
+                let l_ro = b.load_dep(a_re, odd as u32, &[s_re_o]);
+                b.site(SITE_IM_ODD);
+                let l_io = b.load_dep(a_im, odd as u32, &[s_im_o]);
+                let m1 = b.alu(AluKind::FMul, &[l_twr, l_ro]);
+                let m2 = b.alu(AluKind::FMul, &[l_twi, l_io]);
+                let temp = b.alu(AluKind::FAdd, &[m1, m2]);
+                let m3 = b.alu(AluKind::FMul, &[l_twr, l_io]);
+                let m4 = b.alu(AluKind::FMul, &[l_twi, l_ro]);
+                let imv = b.alu(AluKind::FAdd, &[m3, m4]);
+                b.site(SITE_ST_IM_ODD);
+                b.store(a_im, odd as u32, &[imv]);
+                b.site(SITE_ST_RE_ODD);
+                b.store(a_re, odd as u32, &[temp]);
+
+                let tv = tw_re[rootindex] * re[odd] - tw_im[rootindex] * im[odd];
+                im[odd] = tw_re[rootindex] * im[odd] + tw_im[rootindex] * re[odd];
+                re[odd] = tv;
+            }
+            b.next_iter();
+            odd += 1;
+        }
+        span >>= 1;
+        log += 1;
+    }
+
+    let checksum = re.iter().map(|x| x.abs()).sum::<f64>() + im.iter().map(|x| x.abs()).sum::<f64>();
+    Workload { name: "fft", trace: b.finish(), checksum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference DFT energy check: the strided FFT's output bins, when
+    /// bit-reversal-reordered, match a naive DFT.
+    #[test]
+    fn energy_preserved_vs_dft() {
+        let n = 64usize;
+        let input: Vec<f64> =
+            (0..n).map(|i| (i as f64 * 0.3).sin() + 0.5 * (i as f64 * 1.7).cos()).collect();
+        // naive DFT magnitude-sum (Parseval-like invariant under reorder)
+        let mut mag2 = 0.0;
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0, 0.0);
+            for (t, &x) in input.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                sr += x * ang.cos();
+                si += x * ang.sin();
+            }
+            mag2 += sr * sr + si * si;
+        }
+        let wl = generate(n);
+        // The traced FFT computes the same transform (in bit-reversed
+        // order); compare total energy.
+        // Re-run the pure data computation to get bins:
+        // (generate() already did, its checksum is the L1 norm — compare
+        // magnitude² via a second pass)
+        let (re, im) = run_data_fft(n);
+        let got: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum();
+        assert!((got - mag2).abs() / mag2 < 1e-9, "got {got} want {mag2}");
+        assert!(wl.checksum > 0.0);
+    }
+
+    fn run_data_fft(n: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut re: Vec<f64> =
+            (0..n).map(|i| (i as f64 * 0.3).sin() + 0.5 * (i as f64 * 1.7).cos()).collect();
+        let mut im = vec![0.0; n];
+        let tw_re: Vec<f64> =
+            (0..n / 2).map(|i| (-2.0 * std::f64::consts::PI * i as f64 / n as f64).cos()).collect();
+        let tw_im: Vec<f64> =
+            (0..n / 2).map(|i| (-2.0 * std::f64::consts::PI * i as f64 / n as f64).sin()).collect();
+        let mut log = 0;
+        let mut span = n >> 1;
+        while span != 0 {
+            let mut odd = span;
+            while odd < n {
+                odd |= span;
+                let even = odd ^ span;
+                let t = re[even] + re[odd];
+                re[odd] = re[even] - re[odd];
+                re[even] = t;
+                let t = im[even] + im[odd];
+                im[odd] = im[even] - im[odd];
+                im[even] = t;
+                let rootindex = (even << log) & (n - 1);
+                if rootindex != 0 {
+                    let tv = tw_re[rootindex] * re[odd] - tw_im[rootindex] * im[odd];
+                    im[odd] = tw_re[rootindex] * im[odd] + tw_im[rootindex] * re[odd];
+                    re[odd] = tv;
+                }
+                odd += 1;
+            }
+            span >>= 1;
+            log += 1;
+        }
+        (re, im)
+    }
+
+    #[test]
+    fn stage_count_drives_trace_size() {
+        let w64 = generate(64).trace.len();
+        let w256 = generate(256).trace.len();
+        // n log n growth: 256·8 vs 64·6 ≈ 5.3×
+        let ratio = w256 as f64 / w64 as f64;
+        assert!(ratio > 4.0 && ratio < 7.0, "ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        generate(100);
+    }
+}

@@ -1,0 +1,92 @@
+//! GEMM-NCUBED (MachSuite `gemm/ncubed`): dense `C = A·B`, triple loop,
+//! double precision. Low spatial locality: 8-byte elements and the
+//! column-strided walk of `B` (stride = n·8 bytes).
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+/// Sites (static load/store instructions).
+const SITE_LOAD_A: u32 = 0;
+const SITE_LOAD_B: u32 = 1;
+const SITE_STORE_C: u32 = 2;
+
+/// Generate an `n × n × n` GEMM trace. Checksum = Σ C[i][j].
+pub fn generate(n: usize) -> Workload {
+    let mut rng = Rng::new(0x6E44 ^ n as u64);
+    let a: Vec<f64> = (0..n * n).map(|_| rng.f64() * 2.0 - 1.0).collect();
+    let bm: Vec<f64> = (0..n * n).map(|_| rng.f64() * 2.0 - 1.0).collect();
+    let mut c = vec![0.0f64; n * n];
+
+    let mut b = TraceBuilder::new();
+    let arr_a = b.array("A", 8, (n * n) as u32);
+    let arr_b = b.array("B", 8, (n * n) as u32);
+    let arr_c = b.array("C", 8, (n * n) as u32);
+
+    for i in 0..n {
+        for j in 0..n {
+            let mut sum = 0.0f64;
+            let mut acc_node = None;
+            for k in 0..n {
+                b.site(SITE_LOAD_A);
+                let la = b.load(arr_a, (i * n + k) as u32);
+                b.site(SITE_LOAD_B);
+                let lb = b.load(arr_b, (k * n + j) as u32);
+                let mul = b.alu(AluKind::FMul, &[la, lb]);
+                acc_node = Some(match acc_node {
+                    None => mul,
+                    Some(prev) => b.alu(AluKind::FAdd, &[prev, mul]),
+                });
+                sum += a[i * n + k] * bm[k * n + j];
+                b.next_iter();
+            }
+            c[i * n + j] = sum;
+            b.site(SITE_STORE_C);
+            b.store(arr_c, (i * n + j) as u32, &[acc_node.unwrap()]);
+        }
+    }
+
+    Workload { name: "gemm", trace: b.finish(), checksum: c.iter().sum() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_multiply() {
+        // Independent recomputation with the same RNG stream.
+        let n = 8;
+        let mut rng = Rng::new(0x6E44 ^ n as u64);
+        let a: Vec<f64> = (0..n * n).map(|_| rng.f64() * 2.0 - 1.0).collect();
+        let bm: Vec<f64> = (0..n * n).map(|_| rng.f64() * 2.0 - 1.0).collect();
+        let mut want = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * bm[k * n + j];
+                }
+                want += s;
+            }
+        }
+        let wl = generate(n);
+        assert!((wl.checksum - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_count_is_n_cubed_scale() {
+        let n = 8;
+        let wl = generate(n);
+        // per (i,j,k): 2 loads + 1 mul + (1 add except first k) ; per (i,j): 1 store
+        let expect = n * n * n * 4 - n * n + n * n;
+        assert_eq!(wl.trace.len(), expect);
+    }
+
+    #[test]
+    fn mem_to_alu_ratio() {
+        let wl = generate(8);
+        // 2 loads per 2 flops + stores: memory-heavy benchmark.
+        assert!(wl.trace.mem_ops() as f64 / wl.trace.len() as f64 > 0.4);
+    }
+}

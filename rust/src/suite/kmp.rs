@@ -1,0 +1,153 @@
+//! KMP (MachSuite `kmp/kmp`): Knuth–Morris–Pratt string matching.
+//! Byte-oriented, stride-1 text scan ⇒ the highest spatial locality in
+//! the suite (paper §IV-B: "stride-one code is available in byte-oriented
+//! programs like KMP") — the benchmark where AMMs do *not* pay off.
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+const SITE_PAT_FAIL: u32 = 0;
+const SITE_FAIL_RD: u32 = 1;
+const SITE_FAIL_WR: u32 = 2;
+const SITE_TEXT: u32 = 3;
+const SITE_PAT: u32 = 4;
+const SITE_FAIL_M: u32 = 5;
+
+const PATTERN: &[u8] = b"bull";
+
+/// Generate a KMP trace over an `n`-byte text. Checksum = match count.
+pub fn generate(n: usize) -> Workload {
+    let m = PATTERN.len();
+    assert!(n >= m * 2);
+    // Text with planted pattern occurrences (MachSuite uses a news corpus;
+    // we synthesize one with the same alphabet footprint).
+    let mut rng = Rng::new(0x6B6D70);
+    let alphabet = b"abcdefghijklmnopqrstuvwxyz ";
+    let mut text: Vec<u8> = (0..n).map(|_| *rng.pick(alphabet)).collect();
+    for _ in 0..(n / 64).max(1) {
+        let pos = rng.below_usize(n - m);
+        text[pos..pos + m].copy_from_slice(PATTERN);
+    }
+
+    let mut b = TraceBuilder::new();
+    let a_pat = b.array("pattern", 1, m as u32);
+    let a_text = b.array("input", 1, n as u32);
+    let a_fail = b.array("kmp_failure", 4, m as u32);
+
+    // --- CPF: compute failure table (kmp_failure) ---
+    let mut fail = vec![0i32; m];
+    let mut k_node = b.alu(AluKind::IntAdd, &[]); // k = 0
+    let mut k = 0usize;
+    b.site(SITE_FAIL_WR);
+    b.store(a_fail, 0, &[k_node]);
+    for q in 1..m {
+        loop {
+            b.site(SITE_PAT_FAIL);
+            let lq = b.load(a_pat, q as u32);
+            let lk = b.load(a_pat, k as u32);
+            let cmp = b.alu(AluKind::Cmp, &[lq, lk, k_node]);
+            if k > 0 && PATTERN[k] != PATTERN[q] {
+                b.site(SITE_FAIL_RD);
+                let lf = b.load(a_fail, (k - 1) as u32);
+                k_node = b.alu(AluKind::IntAdd, &[lf, cmp]);
+                k = fail[k - 1] as usize;
+            } else {
+                k_node = cmp;
+                break;
+            }
+        }
+        if PATTERN[k] == PATTERN[q] {
+            k += 1;
+            k_node = b.alu(AluKind::IntAdd, &[k_node]);
+        }
+        fail[q] = k as i32;
+        b.site(SITE_FAIL_WR);
+        b.store(a_fail, q as u32, &[k_node]);
+        b.next_iter();
+    }
+
+    // --- KMP: match over the text ---
+    let mut matches = 0u32;
+    let mut q = 0usize;
+    let mut q_node = b.alu(AluKind::IntAdd, &[]);
+    for i in 0..n {
+        b.site(SITE_TEXT);
+        let lt = b.load(a_text, i as u32);
+        loop {
+            b.site(SITE_PAT);
+            let lp = b.load(a_pat, q as u32);
+            let cmp = b.alu(AluKind::Cmp, &[lt, lp, q_node]);
+            if q > 0 && PATTERN[q] != text[i] {
+                b.site(SITE_FAIL_M);
+                let lf = b.load(a_fail, (q - 1) as u32);
+                q_node = b.alu(AluKind::IntAdd, &[lf, cmp]);
+                q = fail[q - 1] as usize;
+            } else {
+                q_node = cmp;
+                break;
+            }
+        }
+        if PATTERN[q] == text[i] {
+            q += 1;
+            q_node = b.alu(AluKind::IntAdd, &[q_node]);
+        }
+        if q == m {
+            matches += 1;
+            b.site(SITE_FAIL_M);
+            let lf = b.load(a_fail, (q - 1) as u32);
+            q_node = b.alu(AluKind::IntAdd, &[lf, q_node]);
+            q = fail[q - 1] as usize;
+        }
+        b.next_iter();
+    }
+
+    Workload { name: "kmp", trace: b.finish(), checksum: matches as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_planted_matches() {
+        let wl = generate(512);
+        // We plant n/64 = 8 occurrences; random collisions can add more,
+        // overlaps can merge — but at least one must be found.
+        assert!(wl.checksum >= 1.0, "checksum {}", wl.checksum);
+    }
+
+    #[test]
+    fn checksum_matches_std_matcher() {
+        let n = 512;
+        // Rebuild the same text and count with a naive matcher.
+        let m = PATTERN.len();
+        let mut rng = Rng::new(0x6B6D70);
+        let alphabet = b"abcdefghijklmnopqrstuvwxyz ";
+        let mut text: Vec<u8> = (0..n).map(|_| *rng.pick(alphabet)).collect();
+        for _ in 0..(n / 64).max(1) {
+            let pos = rng.below_usize(n - m);
+            text[pos..pos + m].copy_from_slice(PATTERN);
+        }
+        let want = text.windows(m).filter(|w| *w == PATTERN).count() as f64;
+        assert_eq!(generate(n).checksum, want);
+    }
+
+    #[test]
+    fn text_scan_is_byte_stride_one() {
+        let wl = generate(256);
+        let text_id = wl.trace.arrays.iter().position(|a| a.name == "input").unwrap() as u16;
+        assert_eq!(wl.trace.arrays[text_id as usize].elem_bytes, 1);
+        // consecutive SITE_TEXT loads advance by exactly 1 element
+        let idxs: Vec<u32> = wl
+            .trace
+            .nodes
+            .iter()
+            .filter_map(|n| match n.kind.mem_ref() {
+                Some((a, i)) if a == text_id && n.site == SITE_TEXT => Some(i),
+                _ => None,
+            })
+            .collect();
+        assert!(idxs.windows(2).all(|w| w[1] == w[0] + 1));
+    }
+}

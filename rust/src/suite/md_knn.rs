@@ -1,0 +1,175 @@
+//! MD-KNN (MachSuite `md/knn`): Lennard-Jones force between each atom
+//! and its k nearest neighbours via an indirection list. The neighbour
+//! gather makes the position-array strides effectively random ⇒ very low
+//! spatial locality.
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+const SITE_NL: u32 = 0;
+const SITE_PX: u32 = 1;
+const SITE_PY: u32 = 2;
+const SITE_PZ: u32 = 3;
+const SITE_NX: u32 = 4;
+const SITE_NY: u32 = 5;
+const SITE_NZ: u32 = 6;
+const SITE_FX: u32 = 7;
+const SITE_FY: u32 = 8;
+const SITE_FZ: u32 = 9;
+
+/// Neighbours per atom (MachSuite uses 16).
+pub const MAX_NEIGHBOURS: usize = 16;
+
+/// Generate an `n_atoms` MD-KNN trace. Checksum = Σ |force|.
+pub fn generate(n_atoms: usize) -> Workload {
+    assert!(n_atoms > MAX_NEIGHBOURS);
+    let mut rng = Rng::new(0x6D64 ^ n_atoms as u64);
+    let px: Vec<f64> = (0..n_atoms).map(|_| rng.f64() * 10.0).collect();
+    let py: Vec<f64> = (0..n_atoms).map(|_| rng.f64() * 10.0).collect();
+    let pz: Vec<f64> = (0..n_atoms).map(|_| rng.f64() * 10.0).collect();
+    // Neighbour list: k distinct atoms ≠ i (uniform — MachSuite's input
+    // is a precomputed list with the same random-gather behaviour).
+    let mut nl = vec![0u32; n_atoms * MAX_NEIGHBOURS];
+    for i in 0..n_atoms {
+        let mut seen = std::collections::HashSet::new();
+        let mut j = 0;
+        while j < MAX_NEIGHBOURS {
+            let cand = rng.below_usize(n_atoms);
+            if cand != i && seen.insert(cand) {
+                nl[i * MAX_NEIGHBOURS + j] = cand as u32;
+                j += 1;
+            }
+        }
+    }
+
+    let mut b = TraceBuilder::new();
+    let a_px = b.array("position_x", 8, n_atoms as u32);
+    let a_py = b.array("position_y", 8, n_atoms as u32);
+    let a_pz = b.array("position_z", 8, n_atoms as u32);
+    let a_fx = b.array("force_x", 8, n_atoms as u32);
+    let a_fy = b.array("force_y", 8, n_atoms as u32);
+    let a_fz = b.array("force_z", 8, n_atoms as u32);
+    let a_nl = b.array("NL", 4, (n_atoms * MAX_NEIGHBOURS) as u32);
+
+    const LJ1: f64 = 1.5;
+    const LJ2: f64 = 2.0;
+
+    let mut checksum = 0.0f64;
+    for i in 0..n_atoms {
+        b.site(SITE_PX);
+        let l_ix = b.load(a_px, i as u32);
+        b.site(SITE_PY);
+        let l_iy = b.load(a_py, i as u32);
+        b.site(SITE_PZ);
+        let l_iz = b.load(a_pz, i as u32);
+
+        let (mut fx, mut fy, mut fz) = (0.0f64, 0.0f64, 0.0f64);
+        let (mut nfx, mut nfy, mut nfz) = (None, None, None);
+        for j in 0..MAX_NEIGHBOURS {
+            b.site(SITE_NL);
+            let l_nl = b.load(a_nl, (i * MAX_NEIGHBOURS + j) as u32);
+            let jidx = nl[i * MAX_NEIGHBOURS + j] as usize;
+            b.site(SITE_NX);
+            let l_jx = b.load_dep(a_px, jidx as u32, &[l_nl]);
+            b.site(SITE_NY);
+            let l_jy = b.load_dep(a_py, jidx as u32, &[l_nl]);
+            b.site(SITE_NZ);
+            let l_jz = b.load_dep(a_pz, jidx as u32, &[l_nl]);
+
+            // delx/dely/delz
+            let dx = b.alu(AluKind::FAdd, &[l_ix, l_jx]);
+            let dy = b.alu(AluKind::FAdd, &[l_iy, l_jy]);
+            let dz = b.alu(AluKind::FAdd, &[l_iz, l_jz]);
+            // r2 = dx² + dy² + dz²
+            let dx2 = b.alu(AluKind::FMul, &[dx, dx]);
+            let dy2 = b.alu(AluKind::FMul, &[dy, dy]);
+            let dz2 = b.alu(AluKind::FMul, &[dz, dz]);
+            let s1 = b.alu(AluKind::FAdd, &[dx2, dy2]);
+            let r2 = b.alu(AluKind::FAdd, &[s1, dz2]);
+            // r2inv = 1/r2 ; r6inv = r2inv³ ; pot = r6inv·(LJ1·r6inv − LJ2)
+            let r2inv = b.alu(AluKind::FDiv, &[r2]);
+            let r4 = b.alu(AluKind::FMul, &[r2inv, r2inv]);
+            let r6inv = b.alu(AluKind::FMul, &[r4, r2inv]);
+            let t1 = b.alu(AluKind::FMul, &[r6inv]);
+            let t2 = b.alu(AluKind::FAdd, &[t1]);
+            let pot = b.alu(AluKind::FMul, &[r6inv, t2]);
+            let force = b.alu(AluKind::FMul, &[r2inv, pot]);
+            // accumulate
+            let fxm = b.alu(AluKind::FMul, &[force, dx]);
+            let fym = b.alu(AluKind::FMul, &[force, dy]);
+            let fzm = b.alu(AluKind::FMul, &[force, dz]);
+            nfx = Some(match nfx {
+                None => fxm,
+                Some(p) => b.alu(AluKind::FAdd, &[p, fxm]),
+            });
+            nfy = Some(match nfy {
+                None => fym,
+                Some(p) => b.alu(AluKind::FAdd, &[p, fym]),
+            });
+            nfz = Some(match nfz {
+                None => fzm,
+                Some(p) => b.alu(AluKind::FAdd, &[p, fzm]),
+            });
+
+            // data side
+            let (dxv, dyv, dzv) = (px[i] - px[jidx], py[i] - py[jidx], pz[i] - pz[jidx]);
+            let r2v = dxv * dxv + dyv * dyv + dzv * dzv;
+            let r2i = 1.0 / r2v;
+            let r6i = r2i * r2i * r2i;
+            let potv = r6i * (LJ1 * r6i - LJ2);
+            let fv = r2i * potv;
+            fx += fv * dxv;
+            fy += fv * dyv;
+            fz += fv * dzv;
+            b.next_iter();
+        }
+        b.site(SITE_FX);
+        b.store(a_fx, i as u32, &[nfx.unwrap()]);
+        b.site(SITE_FY);
+        b.store(a_fy, i as u32, &[nfy.unwrap()]);
+        b.site(SITE_FZ);
+        b.store(a_fz, i as u32, &[nfz.unwrap()]);
+        checksum += fx.abs() + fy.abs() + fz.abs();
+    }
+
+    Workload { name: "md-knn", trace: b.finish(), checksum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_size_scales_with_atoms() {
+        let a = generate(20).trace.len();
+        let b = generate(40).trace.len();
+        assert!((b as f64 / a as f64 - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn neighbour_gather_is_indirect() {
+        let wl = generate(20);
+        // Position loads through the NL are scattered: consecutive SITE_NX
+        // indices should NOT be stride-1 for the most part.
+        let px_id = wl.trace.arrays.iter().position(|a| a.name == "position_x").unwrap() as u16;
+        let idxs: Vec<u32> = wl
+            .trace
+            .nodes
+            .iter()
+            .filter_map(|n| match n.kind.mem_ref() {
+                Some((a, i)) if a == px_id && n.site == SITE_NX => Some(i),
+                _ => None,
+            })
+            .collect();
+        let stride1 = idxs.windows(2).filter(|w| w[1] == w[0].wrapping_add(1)).count();
+        assert!((stride1 as f64) < 0.2 * idxs.len() as f64, "too sequential: {stride1}/{}", idxs.len());
+    }
+
+    #[test]
+    fn forces_are_finite_and_nonzero() {
+        let wl = generate(17);
+        assert!(wl.checksum.is_finite());
+        assert!(wl.checksum > 0.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! NW (MachSuite `nw/nw`): Needleman–Wunsch global sequence alignment —
+//! a 2-D dynamic program over the score matrix. Row-major fill reads the
+//! west/north/north-west cells: stride-1 plus row-stride accesses.
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+const SITE_SEQA: u32 = 0;
+const SITE_SEQB: u32 = 1;
+const SITE_M_NW: u32 = 2;
+const SITE_M_N: u32 = 3;
+const SITE_M_W: u32 = 4;
+const SITE_M_WR: u32 = 5;
+
+const MATCH: i32 = 1;
+const MISMATCH: i32 = -1;
+const GAP: i32 = -1;
+
+/// Generate an `n × n` alignment trace. Checksum = final score.
+pub fn generate(n: usize) -> Workload {
+    let mut rng = Rng::new(0x0A11 ^ n as u64);
+    let alpha = b"ACGT";
+    let seq_a: Vec<u8> = (0..n).map(|_| *rng.pick(alpha)).collect();
+    let seq_b: Vec<u8> = (0..n).map(|_| *rng.pick(alpha)).collect();
+
+    let w = n + 1;
+    let mut m = vec![0i32; w * w];
+    for i in 0..w {
+        m[i * w] = GAP * i as i32;
+        m[i] = GAP * i as i32;
+    }
+
+    let mut b = TraceBuilder::new();
+    let a_seqa = b.array("seqA", 1, n as u32);
+    let a_seqb = b.array("seqB", 1, n as u32);
+    let a_m = b.array("M", 4, (w * w) as u32);
+
+    // Trace boundary initialization stores.
+    let mut m_store: Vec<Option<crate::trace::NodeId>> = vec![None; w * w];
+    b.site(SITE_M_WR);
+    for i in 0..w {
+        let s1 = b.store(a_m, (i * w) as u32, &[]);
+        m_store[i * w] = Some(s1);
+        if i > 0 {
+            let s2 = b.store(a_m, i as u32, &[]);
+            m_store[i] = Some(s2);
+        }
+    }
+
+    for i in 1..w {
+        for j in 1..w {
+            b.site(SITE_SEQA);
+            let la = b.load(a_seqa, (i - 1) as u32);
+            b.site(SITE_SEQB);
+            let lb = b.load(a_seqb, (j - 1) as u32);
+            let cmp = b.alu(AluKind::Cmp, &[la, lb]);
+            b.site(SITE_M_NW);
+            let lnw = b.load_dep(a_m, ((i - 1) * w + j - 1) as u32, &[m_store[(i - 1) * w + j - 1].unwrap()]);
+            b.site(SITE_M_N);
+            let ln = b.load_dep(a_m, ((i - 1) * w + j) as u32, &[m_store[(i - 1) * w + j].unwrap()]);
+            b.site(SITE_M_W);
+            let lw = b.load_dep(a_m, (i * w + j - 1) as u32, &[m_store[i * w + j - 1].unwrap()]);
+            let diag = b.alu(AluKind::IntAdd, &[lnw, cmp]);
+            let up = b.alu(AluKind::IntAdd, &[ln]);
+            let left = b.alu(AluKind::IntAdd, &[lw]);
+            let mx1 = b.alu(AluKind::Cmp, &[diag, up]);
+            let mx2 = b.alu(AluKind::Cmp, &[mx1, left]);
+            b.site(SITE_M_WR);
+            let st = b.store(a_m, (i * w + j) as u32, &[mx2]);
+            m_store[i * w + j] = Some(st);
+
+            let sub = if seq_a[i - 1] == seq_b[j - 1] { MATCH } else { MISMATCH };
+            let score =
+                (m[(i - 1) * w + j - 1] + sub).max(m[(i - 1) * w + j] + GAP).max(m[i * w + j - 1] + GAP);
+            m[i * w + j] = score;
+            b.next_iter();
+        }
+    }
+
+    let checksum = m[w * w - 1] as f64;
+    Workload { name: "nw", trace: b.finish(), checksum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_sequences_score_n() {
+        // Direct DP check on small fixed input.
+        let n = 16;
+        let wl = generate(n);
+        // score ∈ [-n, n]
+        assert!(wl.checksum.abs() <= n as f64);
+    }
+
+    #[test]
+    fn wavefront_dependences_exist() {
+        // m[i][j] depends on m[i-1][j-1], m[i-1][j], m[i][j-1]: the cell
+        // store must transitively follow the three neighbour stores.
+        let wl = generate(4);
+        wl.trace.validate().unwrap();
+        // critical path must be at least 2n (the DP wavefront).
+        assert!(wl.trace.critical_path_len() >= 8);
+    }
+
+    #[test]
+    fn quadratic_scaling() {
+        let a = generate(8).trace.len();
+        let b = generate(16).trace.len();
+        let ratio = b as f64 / a as f64;
+        assert!(ratio > 3.0 && ratio < 5.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Sort-Merge (MachSuite `sort/merge`): bottom-up merge sort. Mostly
+//! sequential 4-byte walks with a ping-pong temp array — a memory-bound
+//! benchmark with mid-range locality.
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+const SITE_A_RD: u32 = 0;
+const SITE_TMP_WR: u32 = 1;
+const SITE_TMP_RD: u32 = 2;
+const SITE_A_WR: u32 = 3;
+
+/// Generate a merge-sort trace over `n` i32 keys.
+/// Checksum = Σ a[i]·(i+1) of the sorted array (order-sensitive).
+pub fn generate(n: usize) -> Workload {
+    let mut rng = Rng::new(0x50B7 ^ n as u64);
+    let mut a: Vec<i32> = (0..n).map(|_| rng.next_u32() as i32 % 10_000).collect();
+
+    let mut b = TraceBuilder::new();
+    let a_arr = b.array("a", 4, n as u32);
+    let a_tmp = b.array("temp", 4, n as u32);
+
+    let mut width = 1usize;
+    while width < n {
+        let mut lo = 0usize;
+        while lo < n {
+            let mid = (lo + width).min(n);
+            let hi = (lo + 2 * width).min(n);
+            // merge a[lo..mid] and a[mid..hi] into tmp[lo..hi]
+            let (mut i, mut j) = (lo, mid);
+            let mut tmp_nodes: Vec<crate::trace::NodeId> = Vec::with_capacity(hi - lo);
+            let mut merged: Vec<i32> = Vec::with_capacity(hi - lo);
+            for k in lo..hi {
+                let take_left = j >= hi || (i < mid && a[i] <= a[j]);
+                let src = if take_left { i } else { j };
+                b.site(SITE_A_RD);
+                let l = b.load(a_arr, src as u32);
+                let c = b.alu(AluKind::Cmp, &[l]);
+                b.site(SITE_TMP_WR);
+                let s = b.store(a_tmp, k as u32, &[c]);
+                tmp_nodes.push(s);
+                merged.push(a[src]);
+                if take_left {
+                    i += 1;
+                } else {
+                    j += 1;
+                }
+                b.next_iter();
+            }
+            // copy back
+            for (off, k) in (lo..hi).enumerate() {
+                b.site(SITE_TMP_RD);
+                let l = b.load_dep(a_tmp, k as u32, &[tmp_nodes[off]]);
+                b.site(SITE_A_WR);
+                b.store(a_arr, k as u32, &[l]);
+                a[k] = merged[off];
+                b.next_iter();
+            }
+            lo += 2 * width;
+        }
+        width *= 2;
+    }
+
+    let checksum = a.iter().enumerate().map(|(i, &x)| x as f64 * (i + 1) as f64).sum();
+    Workload { name: "sort-merge", trace: b.finish(), checksum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorts_correctly() {
+        let n = 64;
+        let mut rng = Rng::new(0x50B7 ^ n as u64);
+        let mut want: Vec<i32> = (0..n).map(|_| rng.next_u32() as i32 % 10_000).collect();
+        want.sort_unstable();
+        let want_sum: f64 =
+            want.iter().enumerate().map(|(i, &x)| x as f64 * (i + 1) as f64).sum();
+        assert_eq!(generate(n).checksum, want_sum);
+    }
+
+    #[test]
+    fn n_log_n_mem_ops() {
+        let w = generate(64);
+        let levels = 6; // log2(64)
+        // each level: n merge (1 load+1 store) + n copy-back (1+1)
+        assert_eq!(w.trace.mem_ops(), 64 * levels * 4);
+    }
+}

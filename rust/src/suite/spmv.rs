@@ -1,0 +1,113 @@
+//! SPMV-CRS (MachSuite `spmv/crs`): sparse matrix–vector multiply in
+//! compressed-row storage. The column-index indirection into the dense
+//! vector is a scattered 8-byte gather ⇒ low locality.
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+const SITE_VAL: u32 = 0;
+const SITE_COL: u32 = 1;
+const SITE_VEC: u32 = 2;
+const SITE_ROWB: u32 = 3;
+const SITE_OUT: u32 = 4;
+
+/// Nonzeros per row (MachSuite crs uses a fixed-ish density).
+const NNZ_PER_ROW: usize = 13;
+
+/// Generate an `n`-row SPMV trace. Checksum = Σ out.
+pub fn generate(n: usize) -> Workload {
+    assert!(n > NNZ_PER_ROW);
+    let mut rng = Rng::new(0x5B37 ^ n as u64);
+    let nnz = n * NNZ_PER_ROW;
+    let vals: Vec<f64> = (0..nnz).map(|_| rng.f64() * 2.0 - 1.0).collect();
+    let mut cols = vec![0u32; nnz];
+    let mut rowb = vec![0u32; n + 1];
+    for r in 0..n {
+        rowb[r + 1] = ((r + 1) * NNZ_PER_ROW) as u32;
+        let mut seen = std::collections::HashSet::new();
+        let mut j = 0;
+        while j < NNZ_PER_ROW {
+            let c = rng.below_usize(n);
+            if seen.insert(c) {
+                cols[r * NNZ_PER_ROW + j] = c as u32;
+                j += 1;
+            }
+        }
+        cols[r * NNZ_PER_ROW..(r + 1) * NNZ_PER_ROW].sort_unstable();
+    }
+    let vec: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0 - 1.0).collect();
+    let mut out = vec![0.0f64; n];
+
+    let mut b = TraceBuilder::new();
+    let a_val = b.array("val", 8, nnz as u32);
+    let a_cols = b.array("cols", 4, nnz as u32);
+    let a_rowb = b.array("rowDelimiters", 4, (n + 1) as u32);
+    let a_vec = b.array("vec", 8, n as u32);
+    let a_out = b.array("out", 8, n as u32);
+
+    for r in 0..n {
+        b.site(SITE_ROWB);
+        let l_start = b.load(a_rowb, r as u32);
+        let l_end = b.load(a_rowb, (r + 1) as u32);
+        let bound = b.alu(AluKind::Cmp, &[l_start, l_end]);
+        let mut acc = None;
+        let mut sum = 0.0f64;
+        for j in rowb[r]..rowb[r + 1] {
+            b.site(SITE_VAL);
+            let lv = b.load_dep(a_val, j, &[bound]);
+            b.site(SITE_COL);
+            let lc = b.load_dep(a_cols, j, &[bound]);
+            b.site(SITE_VEC);
+            let lx = b.load_dep(a_vec, cols[j as usize], &[lc]);
+            let mul = b.alu(AluKind::FMul, &[lv, lx]);
+            acc = Some(match acc {
+                None => mul,
+                Some(p) => b.alu(AluKind::FAdd, &[p, mul]),
+            });
+            sum += vals[j as usize] * vec[cols[j as usize] as usize];
+            b.next_iter();
+        }
+        out[r] = sum;
+        b.site(SITE_OUT);
+        b.store(a_out, r as u32, &[acc.unwrap()]);
+    }
+
+    Workload { name: "spmv", trace: b.finish(), checksum: out.iter().sum() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_lengths_are_uniform() {
+        let wl = generate(32);
+        // mem ops: per row: 2 rowb + nnz*(3 loads) + 1 store
+        assert_eq!(wl.trace.mem_ops(), 32 * (2 + NNZ_PER_ROW * 3 + 1));
+    }
+
+    #[test]
+    fn checksum_is_finite_nonzero() {
+        let wl = generate(20);
+        assert!(wl.checksum.is_finite());
+        assert!(wl.checksum.abs() > 1e-12);
+    }
+
+    #[test]
+    fn vector_gather_is_scattered() {
+        let wl = generate(32);
+        let vid = wl.trace.arrays.iter().position(|a| a.name == "vec").unwrap() as u16;
+        let idxs: Vec<u32> = wl
+            .trace
+            .nodes
+            .iter()
+            .filter_map(|n| match n.kind.mem_ref() {
+                Some((a, i)) if a == vid => Some(i),
+                _ => None,
+            })
+            .collect();
+        let stride1 = idxs.windows(2).filter(|w| w[1] == w[0] + 1).count();
+        assert!((stride1 as f64) < 0.5 * idxs.len() as f64);
+    }
+}

@@ -1,0 +1,87 @@
+//! Stencil-2D (MachSuite `stencil/stencil2d`): 3×3 convolution filter
+//! over a 2-D grid. Row-major inner loop is stride-1 over 4-byte
+//! elements, but each output reads three rows ⇒ moderate locality.
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+const SITE_ORIG: u32 = 0;
+const SITE_FILT: u32 = 1;
+const SITE_SOL: u32 = 2;
+
+/// Generate a `rows × rows` stencil trace. Checksum = Σ output.
+pub fn generate(rows: usize) -> Workload {
+    let cols = rows;
+    let mut rng = Rng::new(0x57E4C11);
+    let orig: Vec<i64> = (0..rows * cols).map(|_| (rng.below(100)) as i64).collect();
+    let filt: Vec<i64> = (0..9).map(|i| (i as i64) - 4).collect();
+    let mut sol = vec![0i64; rows * cols];
+
+    let mut b = TraceBuilder::new();
+    let a_orig = b.array("orig", 4, (rows * cols) as u32);
+    let a_filt = b.array("filter", 4, 9);
+    let a_sol = b.array("sol", 4, (rows * cols) as u32);
+
+    for r in 0..rows - 2 {
+        for c in 0..cols - 2 {
+            let mut acc = None;
+            let mut temp = 0i64;
+            for k1 in 0..3 {
+                for k2 in 0..3 {
+                    b.site(SITE_FILT);
+                    let lf = b.load(a_filt, (k1 * 3 + k2) as u32);
+                    b.site(SITE_ORIG);
+                    let lo = b.load(a_orig, ((r + k1) * cols + c + k2) as u32);
+                    let mul = b.alu(AluKind::IntMul, &[lf, lo]);
+                    acc = Some(match acc {
+                        None => mul,
+                        Some(p) => b.alu(AluKind::IntAdd, &[p, mul]),
+                    });
+                    temp += filt[k1 * 3 + k2] * orig[(r + k1) * cols + c + k2];
+                }
+            }
+            sol[r * cols + c] = temp;
+            b.site(SITE_SOL);
+            b.store(a_sol, (r * cols + c) as u32, &[acc.unwrap()]);
+            b.next_iter();
+        }
+    }
+
+    let checksum = sol.iter().map(|&x| x as f64).sum();
+    Workload { name: "stencil2d", trace: b.finish(), checksum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_convolution() {
+        let rows = 8;
+        let mut rng = Rng::new(0x57E4C11);
+        let orig: Vec<i64> = (0..rows * rows).map(|_| rng.below(100) as i64).collect();
+        let filt: Vec<i64> = (0..9).map(|i| (i as i64) - 4).collect();
+        let mut want = 0f64;
+        for r in 0..rows - 2 {
+            for c in 0..rows - 2 {
+                let mut t = 0i64;
+                for k1 in 0..3 {
+                    for k2 in 0..3 {
+                        t += filt[k1 * 3 + k2] * orig[(r + k1) * rows + c + k2];
+                    }
+                }
+                want += t as f64;
+            }
+        }
+        assert_eq!(generate(rows).checksum, want);
+    }
+
+    #[test]
+    fn nine_point_reads_per_output() {
+        let wl = generate(8);
+        let outputs = (8 - 2) * (8 - 2);
+        // 9 orig + 9 filt loads + 1 store per output
+        assert_eq!(wl.trace.mem_ops(), outputs * 19);
+    }
+}

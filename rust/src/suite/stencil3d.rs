@@ -1,0 +1,92 @@
+//! Stencil-3D (MachSuite `stencil/stencil3d`): 7-point von-Neumann
+//! stencil over a 3-D grid. Plane strides of `dim²·4` bytes pull the
+//! locality well below the 2-D case.
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+const SITE_IN: u32 = 0;
+const SITE_OUT: u32 = 1;
+
+/// Generate a `dim³` 7-point stencil trace. Checksum = Σ output.
+pub fn generate(dim: usize) -> Workload {
+    assert!(dim >= 3);
+    let mut rng = Rng::new(0x57E4C3D);
+    let grid: Vec<i64> = (0..dim * dim * dim).map(|_| rng.below(100) as i64).collect();
+    let mut out = grid.clone();
+    let (c0, c1) = (2i64, 1i64);
+    let idx = |i: usize, j: usize, k: usize| (i * dim + j) * dim + k;
+
+    let mut b = TraceBuilder::new();
+    let a_in = b.array("orig", 4, (dim * dim * dim) as u32);
+    let a_out = b.array("sol", 4, (dim * dim * dim) as u32);
+
+    for i in 1..dim - 1 {
+        for j in 1..dim - 1 {
+            for k in 1..dim - 1 {
+                let offs =
+                    [idx(i, j, k), idx(i - 1, j, k), idx(i + 1, j, k), idx(i, j - 1, k), idx(i, j + 1, k), idx(i, j, k - 1), idx(i, j, k + 1)];
+                let mut loads = Vec::with_capacity(7);
+                for &o in &offs {
+                    b.site(SITE_IN);
+                    loads.push(b.load(a_in, o as u32));
+                }
+                let m0 = b.alu(AluKind::IntMul, &[loads[0]]);
+                let sum1 = b.alu(AluKind::IntAdd, &loads[1..]);
+                let m1 = b.alu(AluKind::IntMul, &[sum1]);
+                let total = b.alu(AluKind::IntAdd, &[m0, m1]);
+                b.site(SITE_OUT);
+                b.store(a_out, offs[0] as u32, &[total]);
+
+                let sum: i64 = offs[1..].iter().map(|&o| grid[o]).sum();
+                out[offs[0]] = c0 * grid[offs[0]] + c1 * sum;
+                b.next_iter();
+            }
+        }
+    }
+
+    let checksum = out.iter().map(|&x| x as f64).sum();
+    Workload { name: "stencil3d", trace: b.finish(), checksum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_cells_only() {
+        let dim = 5;
+        let wl = generate(dim);
+        let interior = (dim - 2) * (dim - 2) * (dim - 2);
+        // 7 loads + 1 store per interior cell
+        assert_eq!(wl.trace.mem_ops(), interior * 8);
+    }
+
+    #[test]
+    fn boundary_unchanged_in_checksum() {
+        let dim = 4;
+        let mut rng = Rng::new(0x57E4C3D);
+        let grid: Vec<i64> = (0..dim * dim * dim).map(|_| rng.below(100) as i64).collect();
+        let idx = |i: usize, j: usize, k: usize| (i * dim + j) * dim + k;
+        let mut want: f64 = grid.iter().map(|&x| x as f64).sum();
+        for i in 1..dim - 1 {
+            for j in 1..dim - 1 {
+                for k in 1..dim - 1 {
+                    let sum: i64 = [
+                        grid[idx(i - 1, j, k)],
+                        grid[idx(i + 1, j, k)],
+                        grid[idx(i, j - 1, k)],
+                        grid[idx(i, j + 1, k)],
+                        grid[idx(i, j, k - 1)],
+                        grid[idx(i, j, k + 1)],
+                    ]
+                    .iter()
+                    .sum();
+                    want += (2 * grid[idx(i, j, k)] + sum - grid[idx(i, j, k)]) as f64;
+                }
+            }
+        }
+        assert_eq!(generate(dim).checksum, want);
+    }
+}

@@ -1,0 +1,112 @@
+//! Viterbi (MachSuite `viterbi/viterbi`): HMM maximum-likelihood path
+//! over `n_states` hidden states and an observation sequence, in
+//! negative-log space (min-sum). The transition-matrix walk is row-major
+//! but every step reads a full `n_states²` block ⇒ mid locality.
+
+use super::Workload;
+use crate::trace::{AluKind, TraceBuilder};
+use crate::util::rng::Rng;
+
+const SITE_OBS: u32 = 0;
+const SITE_TRANS: u32 = 1;
+const SITE_EMIT: u32 = 2;
+const SITE_PROB_RD: u32 = 3;
+const SITE_PROB_WR: u32 = 4;
+
+/// Observation alphabet size.
+const N_OBS: usize = 16;
+/// Sequence length multiplier (length = 2 × n_states keeps the trace
+/// quadratic like MachSuite's fixed input).
+const SEQ_FACTOR: usize = 2;
+
+/// Generate a Viterbi trace with `n_states` states.
+/// Checksum = final minimum path metric.
+pub fn generate(n_states: usize) -> Workload {
+    let seq_len = n_states * SEQ_FACTOR;
+    let mut rng = Rng::new(0x517E ^ n_states as u64);
+    let obs: Vec<u8> = (0..seq_len).map(|_| rng.below_usize(N_OBS) as u8).collect();
+    let init: Vec<f64> = (0..n_states).map(|_| rng.f64() * 4.0 + 0.1).collect();
+    let trans: Vec<f64> = (0..n_states * n_states).map(|_| rng.f64() * 4.0 + 0.1).collect();
+    let emit: Vec<f64> = (0..n_states * N_OBS).map(|_| rng.f64() * 4.0 + 0.1).collect();
+
+    let mut b = TraceBuilder::new();
+    let a_obs = b.array("obs", 1, seq_len as u32);
+    let a_trans = b.array("transition", 8, (n_states * n_states) as u32);
+    let a_emit = b.array("emission", 8, (n_states * N_OBS) as u32);
+    let a_prob = b.array("llike", 8, (2 * n_states) as u32); // ping-pong rows
+
+    // init row 0
+    let mut cur = init.clone();
+    let mut prob_store: Vec<Option<crate::trace::NodeId>> = vec![None; 2 * n_states];
+    for s in 0..n_states {
+        b.site(SITE_PROB_WR);
+        let st = b.store(a_prob, s as u32, &[]);
+        prob_store[s] = Some(st);
+    }
+
+    for t in 1..seq_len {
+        b.site(SITE_OBS);
+        let lo = b.load(a_obs, t as u32);
+        let (prev_off, cur_off) = if t % 2 == 1 { (0, n_states) } else { (n_states, 0) };
+        let mut next = vec![0.0f64; n_states];
+        for s in 0..n_states {
+            let mut best = f64::INFINITY;
+            let mut acc: Option<crate::trace::NodeId> = None;
+            for p in 0..n_states {
+                b.site(SITE_PROB_RD);
+                let mut deps = vec![lo];
+                if let Some(ps) = prob_store[prev_off + p] {
+                    deps.push(ps);
+                }
+                let lp = b.load_dep(a_prob, (prev_off + p) as u32, &deps);
+                b.site(SITE_TRANS);
+                let lt = b.load(a_trans, (p * n_states + s) as u32);
+                let add = b.alu(AluKind::FAdd, &[lp, lt]);
+                acc = Some(match acc {
+                    None => add,
+                    Some(a) => b.alu(AluKind::Cmp, &[a, add]), // running min
+                });
+                let cand = cur[p] + trans[p * n_states + s];
+                if cand < best {
+                    best = cand;
+                }
+            }
+            b.site(SITE_EMIT);
+            let le = b.load_dep(a_emit, (s * N_OBS + obs[t] as usize) as u32, &[lo]);
+            let tot = b.alu(AluKind::FAdd, &[acc.unwrap(), le]);
+            b.site(SITE_PROB_WR);
+            let st = b.store(a_prob, (cur_off + s) as u32, &[tot]);
+            prob_store[cur_off + s] = Some(st);
+            next[s] = best + emit[s * N_OBS + obs[t] as usize];
+            b.next_iter();
+        }
+        cur = next;
+    }
+
+    let checksum = cur.iter().cloned().fold(f64::INFINITY, f64::min);
+    Workload { name: "viterbi", trace: b.finish(), checksum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_grows_with_sequence() {
+        // Path metric is a sum of ~seq_len positive terms.
+        let wl = generate(8);
+        assert!(wl.checksum > 0.0);
+        assert!(wl.checksum.is_finite());
+        // bounded by seq_len * max(term) = 16 * ~8.2
+        assert!(wl.checksum < 8.0 * 16.0 * 2.0);
+    }
+
+    #[test]
+    fn quadratic_trace_growth() {
+        let a = generate(8).trace.len();
+        let b = generate(16).trace.len();
+        // states² · seq ⇒ ×2 states = ×8 nodes
+        let ratio = b as f64 / a as f64;
+        assert!(ratio > 6.0 && ratio < 10.0, "ratio {ratio}");
+    }
+}

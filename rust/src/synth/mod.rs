@@ -1,0 +1,196 @@
+//! DC-lite: gate-level analytical model of the AMM read/write-path logic.
+//!
+//! The paper synthesizes the XOR/LVT glue logic in Verilog with Synopsys
+//! Design Compiler at UMC 45 nm (§III-A) and combines it with CACTI SRAM
+//! numbers. We stand in for DC with a NAND2-equivalent gate model: each
+//! logic structure (XOR reduction tree, mux tree, decoder, live-value
+//! table register file) is expressed as a gate count + logic depth, and
+//! converted to area/energy/delay with 45 nm standard-cell constants.
+//! The aggregate numbers feed [`crate::mem`]'s cost composition exactly
+//! the way the paper's synthesis tables feed Mem-Aladdin.
+
+/// 45 nm standard-cell calibration.
+pub mod cal {
+    /// NAND2-equivalent gate area, µm² (typical 45 nm stdcell ~ 0.8 µm²
+    /// for NAND2X1 plus routing overhead folded in).
+    pub const GATE_UM2: f32 = 1.06;
+    /// Switching energy per gate-equivalent toggle, pJ.
+    pub const GATE_E_PJ: f32 = 0.0011;
+    /// Gate delay (FO4-ish), ns.
+    pub const GATE_D_NS: f32 = 0.022;
+    /// Leakage per gate-equivalent, µW.
+    pub const GATE_LEAK_UW: f32 = 0.0018;
+    /// D-flip-flop cost in gate equivalents.
+    pub const FF_GE: f32 = 6.0;
+    /// XOR2 cost in gate equivalents.
+    pub const XOR2_GE: f32 = 2.5;
+    /// MUX2 cost in gate equivalents.
+    pub const MUX2_GE: f32 = 1.8;
+    /// Activity factor applied to dynamic energy (not every gate toggles
+    /// every access).
+    pub const ACTIVITY: f32 = 0.35;
+}
+
+/// A block of synthesized logic: cumulative gate-equivalents and the
+/// critical-path depth in gate delays.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Logic {
+    /// Total NAND2-equivalent gates.
+    pub gates: f32,
+    /// Critical path, in gate delays.
+    pub depth: f32,
+}
+
+impl Logic {
+    /// Parallel composition: areas add, critical path is the max.
+    pub fn beside(self, other: Logic) -> Logic {
+        Logic { gates: self.gates + other.gates, depth: self.depth.max(other.depth) }
+    }
+    /// Series composition: areas add, critical paths add.
+    pub fn then(self, other: Logic) -> Logic {
+        Logic { gates: self.gates + other.gates, depth: self.depth + other.depth }
+    }
+    /// Scale the block `n` times in parallel (e.g. per output port).
+    pub fn times(self, n: f32) -> Logic {
+        Logic { gates: self.gates * n, depth: self.depth }
+    }
+
+    /// Convert to physical cost.
+    pub fn cost(self) -> LogicCost {
+        LogicCost {
+            area_um2: self.gates * cal::GATE_UM2,
+            e_access_pj: self.gates * cal::GATE_E_PJ * cal::ACTIVITY,
+            leak_uw: self.gates * cal::GATE_LEAK_UW,
+            delay_ns: self.depth * cal::GATE_D_NS,
+        }
+    }
+}
+
+/// Physical cost of a logic block.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LogicCost {
+    /// Standard-cell area, µm².
+    pub area_um2: f32,
+    /// Dynamic energy per access through the block, pJ.
+    pub e_access_pj: f32,
+    /// Leakage, µW.
+    pub leak_uw: f32,
+    /// Combinational delay, ns.
+    pub delay_ns: f32,
+}
+
+/// `n`-input XOR reduction over a `width`-bit word: `(n−1)·width` XOR2
+/// gates, `ceil(log2 n)` levels deep. This is the H-NTX read-reconstruct
+/// path.
+pub fn xor_tree(inputs: u32, width: u32) -> Logic {
+    if inputs <= 1 {
+        return Logic::default();
+    }
+    let n = inputs as f32;
+    let w = width as f32;
+    Logic {
+        gates: (n - 1.0) * w * cal::XOR2_GE,
+        depth: (inputs as f32).log2().ceil() * 1.4, // XOR2 ≈ 1.4 NAND2 delays
+    }
+}
+
+/// `n`-to-1 one-hot mux over a `width`-bit word: `(n−1)·width` MUX2s in a
+/// tree of depth `ceil(log2 n)`.
+pub fn mux_tree(inputs: u32, width: u32) -> Logic {
+    if inputs <= 1 {
+        return Logic::default();
+    }
+    let n = inputs as f32;
+    let w = width as f32;
+    Logic {
+        gates: (n - 1.0) * w * cal::MUX2_GE,
+        depth: (inputs as f32).log2().ceil(),
+    }
+}
+
+/// Address decoder for `depth` words: ~`depth/4` gate equivalents with
+/// `log2(depth)` logic levels (pre-decode + word-line AND).
+pub fn decoder(depth: u32) -> Logic {
+    if depth <= 1 {
+        return Logic::default();
+    }
+    Logic { gates: depth as f32 / 4.0, depth: (depth as f32).log2().ceil() * 0.5 }
+}
+
+/// A register file of `entries × bits` flip-flops plus write decoding and
+/// a read mux per read port — the Live-Value Table of the LVT design.
+pub fn register_table(entries: u32, bits: u32, read_ports: u32, write_ports: u32) -> Logic {
+    let ff = Logic { gates: entries as f32 * bits as f32 * cal::FF_GE, depth: 1.0 };
+    let wr = decoder(entries).times(write_ports as f32);
+    let rd = mux_tree(entries, bits).times(read_ports as f32);
+    ff.beside(wr).then(rd)
+}
+
+/// Bank-conflict comparator network for `ports` addresses of `addr_bits`
+/// bits: pairwise compare = C(ports,2) comparators, each `addr_bits` XNORs
+/// plus an AND tree.
+pub fn conflict_comparators(ports: u32, addr_bits: u32) -> Logic {
+    if ports <= 1 {
+        return Logic::default();
+    }
+    let pairs = (ports * (ports - 1) / 2) as f32;
+    Logic {
+        gates: pairs * (addr_bits as f32 * 1.5 + addr_bits as f32 / 2.0),
+        depth: (addr_bits as f32).log2().ceil() + 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xor_tree_counts() {
+        let l = xor_tree(2, 32);
+        assert_eq!(l.gates, 32.0 * cal::XOR2_GE);
+        let l4 = xor_tree(4, 32);
+        assert_eq!(l4.gates, 3.0 * 32.0 * cal::XOR2_GE);
+        assert!(l4.depth > l.depth);
+    }
+
+    #[test]
+    fn degenerate_trees_are_free() {
+        assert_eq!(xor_tree(1, 64), Logic::default());
+        assert_eq!(mux_tree(0, 64), Logic::default());
+        assert_eq!(decoder(1), Logic::default());
+    }
+
+    #[test]
+    fn composition_laws() {
+        let a = Logic { gates: 10.0, depth: 2.0 };
+        let b = Logic { gates: 5.0, depth: 3.0 };
+        assert_eq!(a.beside(b), Logic { gates: 15.0, depth: 3.0 });
+        assert_eq!(a.then(b), Logic { gates: 15.0, depth: 5.0 });
+        assert_eq!(a.times(3.0).gates, 30.0);
+    }
+
+    #[test]
+    fn lvt_grows_with_entries_and_ports() {
+        let small = register_table(64, 1, 2, 2).cost();
+        let big = register_table(1024, 2, 2, 2).cost();
+        let wide = register_table(64, 1, 8, 4).cost();
+        assert!(big.area_um2 > small.area_um2);
+        assert!(wide.area_um2 > small.area_um2);
+    }
+
+    #[test]
+    fn lvt_is_much_smaller_than_equivalent_sram_array() {
+        // LVT stores log2(banks) bits per word — must be far below data.
+        let lvt = register_table(1024, 2, 2, 2).cost();
+        let data = crate::sram::macro_cost(crate::sram::MacroCfg::rw1(1024, 32));
+        assert!(lvt.area_um2 < 4.0 * data.area_um2);
+    }
+
+    #[test]
+    fn cost_conversion_is_linear_in_gates() {
+        let l = Logic { gates: 100.0, depth: 4.0 };
+        let c = l.cost();
+        assert!((c.area_um2 - 100.0 * cal::GATE_UM2).abs() < 1e-4);
+        assert!((c.delay_ns - 4.0 * cal::GATE_D_NS).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,305 @@
+//! Dynamic trace / data-dependence-graph substrate (the Aladdin front end).
+//!
+//! Aladdin instruments LLVM IR to record a *dynamic* trace of every
+//! executed operation, then builds a data-dependence graph (DDG) whose
+//! only edges are true dependences — exposing all of the algorithm's
+//! instruction- and memory-level parallelism. Our benchmark ports
+//! (see [`crate::suite`]) do the same thing directly: they execute the
+//! algorithm in Rust and record each load/store/ALU op through
+//! [`TraceBuilder`], which tracks RAW/WAR/WAW memory dependences by
+//! exact address and true register dependences by value handles.
+//!
+//! Loop iteration numbers are recorded per node so the scheduler can
+//! model Aladdin's *unrolling factor*: with unroll `U`, the index-
+//! increment chain serializes iteration groups `g = iter / U` (group `g`
+//! cannot begin before cycle `g`) — see [`crate::sched`].
+
+pub mod builder;
+
+pub use builder::TraceBuilder;
+
+/// Node handle inside one trace.
+pub type NodeId = u32;
+
+/// ALU operation classes with distinct latency/energy (Aladdin's FU mix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AluKind {
+    /// Integer add/sub.
+    IntAdd,
+    /// Integer multiply.
+    IntMul,
+    /// Integer compare / select.
+    Cmp,
+    /// Bitwise logic.
+    Logic,
+    /// Shift.
+    Shift,
+    /// FP add/sub (double).
+    FAdd,
+    /// FP multiply.
+    FMul,
+    /// FP divide / sqrt.
+    FDiv,
+}
+
+impl AluKind {
+    /// Latency in cycles at the 1 GHz base clock (Aladdin defaults).
+    pub fn latency(self) -> u32 {
+        match self {
+            AluKind::IntAdd | AluKind::Cmp | AluKind::Logic | AluKind::Shift => 1,
+            AluKind::IntMul => 3,
+            AluKind::FAdd => 3,
+            AluKind::FMul => 4,
+            AluKind::FDiv => 16,
+        }
+    }
+
+    /// Dynamic energy per op, pJ (45 nm, Aladdin-like FU characterization).
+    pub fn energy_pj(self) -> f32 {
+        match self {
+            AluKind::IntAdd => 0.10,
+            AluKind::Cmp | AluKind::Logic | AluKind::Shift => 0.06,
+            AluKind::IntMul => 1.1,
+            AluKind::FAdd => 1.5,
+            AluKind::FMul => 2.9,
+            AluKind::FDiv => 8.4,
+        }
+    }
+
+    /// FU area, µm² (one functional unit able to execute this class).
+    pub fn fu_area_um2(self) -> f32 {
+        match self {
+            AluKind::IntAdd => 280.0,
+            AluKind::Cmp | AluKind::Logic | AluKind::Shift => 150.0,
+            AluKind::IntMul => 1650.0,
+            AluKind::FAdd => 3100.0,
+            AluKind::FMul => 5200.0,
+            AluKind::FDiv => 6900.0,
+        }
+    }
+
+    /// All kinds (for FU-mix sizing).
+    pub const ALL: [AluKind; 8] = [
+        AluKind::IntAdd,
+        AluKind::IntMul,
+        AluKind::Cmp,
+        AluKind::Logic,
+        AluKind::Shift,
+        AluKind::FAdd,
+        AluKind::FMul,
+        AluKind::FDiv,
+    ];
+}
+
+/// Operation performed by a trace node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OpKind {
+    /// Memory read of `array[index]`.
+    Load {
+        /// Array id (index into [`Trace::arrays`]).
+        array: u16,
+        /// Element index within the array.
+        index: u32,
+    },
+    /// Memory write of `array[index]`.
+    Store {
+        /// Array id.
+        array: u16,
+        /// Element index.
+        index: u32,
+    },
+    /// Functional-unit operation.
+    Alu(AluKind),
+}
+
+impl OpKind {
+    /// Is this a load or store?
+    pub fn is_mem(&self) -> bool {
+        matches!(self, OpKind::Load { .. } | OpKind::Store { .. })
+    }
+    /// (array, index) if a memory op.
+    pub fn mem_ref(&self) -> Option<(u16, u32)> {
+        match *self {
+            OpKind::Load { array, index } | OpKind::Store { array, index } => Some((array, index)),
+            OpKind::Alu(_) => None,
+        }
+    }
+}
+
+/// One dynamic operation.
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    /// What it does.
+    pub kind: OpKind,
+    /// Static instruction site (source location surrogate) — groups the
+    /// dynamic instances of one program instruction for the Weinberg
+    /// locality metric.
+    pub site: u32,
+    /// Innermost-loop iteration number (flattened, monotone) — drives the
+    /// unrolling constraint in the scheduler.
+    pub iter: u32,
+}
+
+/// A program array traced into the accelerator's scratchpad space.
+#[derive(Clone, Debug)]
+pub struct ArrayInfo {
+    /// Name (for reports/config).
+    pub name: String,
+    /// Element size in bytes (1 for KMP text, 8 for double arrays, …).
+    pub elem_bytes: u32,
+    /// Length in elements.
+    pub length: u32,
+    /// Base byte address in the flat trace address space.
+    pub base: u64,
+}
+
+impl ArrayInfo {
+    /// Byte address of element `index`.
+    pub fn byte_addr(&self, index: u32) -> u64 {
+        self.base + index as u64 * self.elem_bytes as u64
+    }
+    /// Footprint in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.length as u64 * self.elem_bytes as u64
+    }
+}
+
+/// A complete dynamic trace with its dependence graph in CSR form.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Traced arrays.
+    pub arrays: Vec<ArrayInfo>,
+    /// Dynamic ops in program order.
+    pub nodes: Vec<Node>,
+    /// CSR row offsets into `succ`: successors of node `i` are
+    /// `succ[succ_off[i] .. succ_off[i+1]]`.
+    pub succ_off: Vec<u32>,
+    /// Flattened successor lists.
+    pub succ: Vec<NodeId>,
+    /// In-degree (number of predecessors) per node.
+    pub pred_count: Vec<u32>,
+}
+
+impl Trace {
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+    /// True if no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+    /// Successors of `n`.
+    pub fn successors(&self, n: NodeId) -> &[NodeId] {
+        let a = self.succ_off[n as usize] as usize;
+        let b = self.succ_off[n as usize + 1] as usize;
+        &self.succ[a..b]
+    }
+    /// Count of memory nodes.
+    pub fn mem_ops(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind.is_mem()).count()
+    }
+    /// Count of ALU nodes.
+    pub fn alu_ops(&self) -> usize {
+        self.len() - self.mem_ops()
+    }
+    /// Total scratchpad footprint in bytes.
+    pub fn footprint_bytes(&self) -> u64 {
+        self.arrays.iter().map(|a| a.bytes()).sum()
+    }
+    /// Largest single array in elements (sizes the memory depth).
+    pub fn max_array_len(&self) -> u32 {
+        self.arrays.iter().map(|a| a.length).max().unwrap_or(0)
+    }
+
+    /// Verify the DDG is a DAG consistent with program order (every edge
+    /// goes forward) and that CSR bookkeeping matches `pred_count`.
+    /// Used by tests and debug assertions.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.succ_off.len() != self.len() + 1 {
+            return Err("succ_off length mismatch".into());
+        }
+        let mut preds = vec![0u32; self.len()];
+        for i in 0..self.len() {
+            for &s in self.successors(i as NodeId) {
+                if s as usize <= i {
+                    return Err(format!("edge {} -> {} not forward", i, s));
+                }
+                if s as usize >= self.len() {
+                    return Err(format!("edge to out-of-range node {}", s));
+                }
+                preds[s as usize] += 1;
+            }
+        }
+        if preds != self.pred_count {
+            return Err("pred_count inconsistent with successor lists".into());
+        }
+        for n in &self.nodes {
+            if let Some((a, idx)) = n.kind.mem_ref() {
+                let arr =
+                    self.arrays.get(a as usize).ok_or_else(|| format!("bad array id {a}"))?;
+                if idx >= arr.length {
+                    return Err(format!("index {idx} out of bounds for array {}", arr.name));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Length of the critical path through the DDG in *dependence levels*
+    /// (unit latencies) — a lower bound on schedulable cycles, used by
+    /// tests as a sanity reference.
+    pub fn critical_path_len(&self) -> u32 {
+        let mut level = vec![0u32; self.len()];
+        let mut maxl = 0;
+        for i in 0..self.len() {
+            let l = level[i] + 1;
+            maxl = maxl.max(l);
+            for &s in self.successors(i as NodeId) {
+                level[s as usize] = level[s as usize].max(l);
+            }
+        }
+        maxl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Trace {
+        // load a[0] -> alu -> store a[1]
+        let mut b = TraceBuilder::new();
+        let a = b.array("a", 8, 4);
+        let l = b.load(a, 0);
+        let x = b.alu(AluKind::FAdd, &[l]);
+        b.store(a, 1, &[x]);
+        b.finish()
+    }
+
+    #[test]
+    fn tiny_trace_validates() {
+        let t = tiny();
+        assert_eq!(t.len(), 3);
+        t.validate().unwrap();
+        assert_eq!(t.mem_ops(), 2);
+        assert_eq!(t.alu_ops(), 1);
+        assert_eq!(t.critical_path_len(), 3);
+    }
+
+    #[test]
+    fn byte_addresses() {
+        let a = ArrayInfo { name: "x".into(), elem_bytes: 8, length: 10, base: 0x100 };
+        assert_eq!(a.byte_addr(3), 0x100 + 24);
+        assert_eq!(a.bytes(), 80);
+    }
+
+    #[test]
+    fn alu_latencies_positive() {
+        for k in AluKind::ALL {
+            assert!(k.latency() >= 1);
+            assert!(k.energy_pj() > 0.0);
+            assert!(k.fu_area_um2() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Criterion-substitute benchmark harness.
+//!
+//! Each `cargo bench` target builds a [`Bench`] set, runs warmup +
+//! measured iterations, and prints median / mean ± stddev per benchmark.
+//! The figure benches additionally write their CSV series under
+//! `results/` so `cargo bench` regenerates every paper artifact.
+
+use super::stats;
+use std::time::Instant;
+
+/// One benchmark's measured timings.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Benchmark id, e.g. `fig4/gemm/sweep`.
+    pub name: String,
+    /// Per-iteration wall time in nanoseconds.
+    pub iters_ns: Vec<f64>,
+    /// Optional throughput denominator (items per iteration).
+    pub items: Option<u64>,
+}
+
+impl Measurement {
+    /// Median ns/iter.
+    pub fn median_ns(&self) -> f64 {
+        stats::median(&self.iters_ns)
+    }
+}
+
+/// Harness: collects measurements, prints a criterion-style report.
+pub struct Bench {
+    /// Target iterations per benchmark (after warmup).
+    pub iters: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+    results: Vec<Measurement>,
+    filter: Option<String>,
+}
+
+impl Bench {
+    /// Construct from CLI args (supports `cargo bench -- <filter>` and
+    /// `--quick` for 3 iterations).
+    pub fn from_args() -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let quick = args.iter().any(|a| a == "--quick") || std::env::var("AMM_BENCH_QUICK").is_ok();
+        let filter = args
+            .iter()
+            .find(|a| !a.starts_with('-') && *a != "bench")
+            .cloned();
+        Bench {
+            iters: if quick { 3 } else { 5 },
+            warmup: 1,
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Time `f` for `self.iters` iterations (plus warmup). `items` feeds a
+    /// throughput line. Returns the last value produced by `f` (so callers
+    /// can additionally write results to CSV outside the timed region).
+    pub fn run<R>(&mut self, name: &str, items: Option<u64>, mut f: impl FnMut() -> R) -> Option<R> {
+        if let Some(flt) = &self.filter {
+            if !name.contains(flt.as_str()) {
+                return None;
+            }
+        }
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut iters_ns = Vec::with_capacity(self.iters);
+        let mut last = None;
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            last = Some(std::hint::black_box(f()));
+            iters_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let m = Measurement { name: name.to_string(), iters_ns, items };
+        self.print_line(&m);
+        self.results.push(m);
+        last
+    }
+
+    fn print_line(&self, m: &Measurement) {
+        let med = m.median_ns();
+        let mean = stats::mean(&m.iters_ns);
+        let sd = stats::stddev(&m.iters_ns);
+        let (val, unit) = humanize_ns(med);
+        print!("bench {:<44} median {val:>9.3} {unit:<2} (mean {:>9.3e} ns ± {:.1e})", m.name, mean, sd);
+        if let Some(items) = m.items {
+            let per_sec = items as f64 / (med / 1e9);
+            print!("  thrpt {:>10.3e} items/s", per_sec);
+        }
+        println!();
+    }
+
+    /// Finish: print a footer. (Kept for symmetry with criterion's
+    /// lifecycle; figure benches write CSVs themselves.)
+    pub fn finish(self) {
+        println!("benchkit: {} benchmark(s) complete", self.results.len());
+    }
+}
+
+/// Pick a human-friendly time unit.
+pub fn humanize_ns(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "us")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut b = Bench { iters: 3, warmup: 1, results: Vec::new(), filter: None };
+        let out = b.run("unit/test", Some(10), || 42u32);
+        assert_eq!(out, Some(42));
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].iters_ns.len(), 3);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bench { iters: 3, warmup: 0, results: Vec::new(), filter: Some("xyz".into()) };
+        let out = b.run("unit/other", None, || 1u8);
+        assert_eq!(out, None);
+        assert!(b.results.is_empty());
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(humanize_ns(500.0).1, "ns");
+        assert_eq!(humanize_ns(5e4).1, "us");
+        assert_eq!(humanize_ns(5e7).1, "ms");
+        assert_eq!(humanize_ns(5e9).1, "s");
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree replacements for the crates this (fully offline) environment
+//! cannot provide: a PRNG (`rng`), summary statistics (`stats`), a scoped
+//! thread pool (`pool`), a minimal TOML-subset parser (`tomlmini`), a
+//! property-based-testing kit (`propkit`, proptest-style shrink-on-failure),
+//! and a criterion-style benchmark harness (`benchkit`).
+
+pub mod benchkit;
+pub mod pool;
+pub mod propkit;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;

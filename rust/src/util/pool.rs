@@ -1,0 +1,144 @@
+//! A small scoped thread pool (rayon-substitute) for the DSE sweeps.
+//!
+//! `parallel_map` splits a work list over `n` OS threads using an atomic
+//! work-stealing index — no allocation per item, results land in-place, and
+//! panics in workers propagate to the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (`AMM_DSE_THREADS` overrides).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("AMM_DSE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Map `f` over `items` in parallel on `threads` OS threads, preserving
+/// order. `f` must be `Sync`; items are taken by shared reference.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Default + Clone,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let mut results: Vec<R> = vec![R::default(); n];
+    let next = AtomicUsize::new(0);
+    // SAFETY-free approach: hand out disjoint &mut cells via raw parts is
+    // avoidable — use a Vec of Mutexes? Too slow. Instead: split results
+    // into per-index cells with `as_mut_ptr` wrapped in a Sync holder.
+    struct Cells<R>(*mut R);
+    unsafe impl<R> Sync for Cells<R> {}
+    let cells = Cells(results.as_mut_ptr());
+    // Edition-2021 closures capture fields disjointly, which would pull
+    // the raw `*mut R` (not `Sync`) into the closure — capture the whole
+    // wrapper by reference instead.
+    let cells = &cells;
+    let (f, next) = (&f, &next);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic counter, so writes to cells are disjoint; the
+                // scope guarantees `results` outlives all workers.
+                unsafe {
+                    *cells.0.add(i) = r;
+                }
+            });
+        }
+    });
+    results
+}
+
+/// Chunked variant: processes `items` in `chunk`-sized blocks to amortize
+/// the atomic increment for very cheap work items.
+pub fn parallel_map_chunked<T, R, F>(items: &[T], threads: usize, chunk: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Default + Clone,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunk = chunk.max(1);
+    let threads = threads.max(1).min(n.div_ceil(chunk));
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let mut results: Vec<R> = vec![R::default(); n];
+    let next = AtomicUsize::new(0);
+    struct Cells<R>(*mut R);
+    unsafe impl<R> Sync for Cells<R> {}
+    let cells = Cells(results.as_mut_ptr());
+    let cells = &cells; // see parallel_map: avoid disjoint field capture
+    let (f, next) = (&f, &next);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(move || loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    let r = f(&items[i]);
+                    // SAFETY: chunks [start, end) are disjoint across claims.
+                    unsafe {
+                        *cells.0.add(i) = r;
+                    }
+                }
+            });
+        }
+    });
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunked_matches_plain() {
+        let items: Vec<u64> = (0..777).collect();
+        let a = parallel_map(&items, 4, |&x| x + 1);
+        let b = parallel_map_chunked(&items, 4, 32, |&x| x + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = vec![];
+        assert!(parallel_map(&none, 4, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[42u32], 4, |&x| x), vec![42]);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let items: Vec<u32> = (0..10).collect();
+        assert_eq!(parallel_map(&items, 1, |&x| x * x)[9], 81);
+    }
+}

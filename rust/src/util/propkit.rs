@@ -1,0 +1,170 @@
+//! Minimal property-based-testing kit (proptest-substitute).
+//!
+//! `check` runs a property over `cases` random inputs drawn from a
+//! generator; on failure it greedily shrinks the input via the
+//! user-supplied `shrink` function and reports the minimal counterexample.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this offline image)
+//! use amm_dse::util::propkit::{check, Config};
+//! check(Config::default().cases(64), |rng| {
+//!     let n = rng.below(1000) as u32;
+//!     (n, ())
+//! }, |(n, _)| *n < 1000, |_| vec![]);
+//! ```
+
+use super::rng::Rng;
+
+/// Property-run configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i` so failures are reproducible.
+    pub seed: u64,
+    /// Maximum shrink steps before giving up on minimization.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xA11ADD1, max_shrink: 2000 }
+    }
+}
+
+impl Config {
+    /// Override the number of cases.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Override the seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`. On failure, repeatedly
+/// apply `shrink` (which returns candidate smaller inputs) while the
+/// property still fails, then panic with the minimal counterexample.
+pub fn check<T, G, P, S>(cfg: Config, gen: G, prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+    S: Fn(&T) -> Vec<T>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink.
+        let mut minimal = input.clone();
+        let mut steps = 0;
+        'outer: while steps < cfg.max_shrink {
+            for cand in shrink(&minimal) {
+                steps += 1;
+                if !prop(&cand) {
+                    minimal = cand;
+                    continue 'outer;
+                }
+                if steps >= cfg.max_shrink {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (case {case}, seed {})\n  original: {:?}\n  minimal:  {:?}",
+            cfg.seed.wrapping_add(case as u64),
+            input,
+            minimal
+        );
+    }
+}
+
+/// Shrinker for a `Vec<T>`: tries removing halves, then single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    if n <= 16 {
+        for i in 0..n {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// Shrinker for an integer: tries 0, half, and decrement.
+pub fn shrink_u32(x: u32) -> Vec<u32> {
+    let mut out = Vec::new();
+    if x > 0 {
+        out.push(0);
+        if x > 1 {
+            out.push(x / 2);
+        }
+        out.push(x - 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        check(
+            Config::default().cases(64),
+            |rng| rng.below(100) as u32,
+            |&x| x < 100,
+            |&x| shrink_u32(x),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(
+            Config::default().cases(64),
+            |rng| rng.below(100) as u32,
+            |&x| x < 50,
+            |&x| shrink_u32(x),
+        );
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        // Capture the panic message and check the minimal counterexample
+        // for `x < 50` is exactly 50.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config::default().cases(64),
+                |rng| rng.below(100) as u32,
+                |&x| x < 50,
+                |&x| shrink_u32(x),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal:  50"), "msg: {msg}");
+    }
+
+    #[test]
+    fn shrink_vec_halves() {
+        let cands = shrink_vec(&[1, 2, 3, 4]);
+        assert!(cands.contains(&vec![1, 2]));
+        assert!(cands.contains(&vec![3, 4]));
+        assert!(cands.contains(&vec![2, 3, 4]));
+    }
+}

@@ -1,0 +1,312 @@
+//! Minimal TOML-subset parser for the framework's config files.
+//!
+//! Supports what `configs/*.toml` use: `[section]` and `[[array-of-table]]`
+//! headers, `key = value` with string / integer / float / boolean / array
+//! values, `#` comments, and basic inline whitespace. Unsupported TOML
+//! (dates, inline tables, dotted keys, multiline strings) is a parse error,
+//! not silent misbehaviour.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer (i64).
+    Int(i64),
+    /// Float (f64).
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous-or-not array.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As string, if `Str`.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As i64, if `Int`.
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// As f64 (accepts `Int` too).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// As bool, if `Bool`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// As array slice, if `Array`.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One table (section) of key → value.
+pub type Table = BTreeMap<String, Value>;
+
+/// A parsed document: the root table, named tables, and arrays-of-tables.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    /// Keys before any `[section]` header.
+    pub root: Table,
+    /// `[name]` sections in file order.
+    pub tables: Vec<(String, Table)>,
+    /// `[[name]]` array-of-tables entries in file order.
+    pub table_arrays: Vec<(String, Table)>,
+}
+
+impl Doc {
+    /// First `[name]` table.
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        self.tables.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+    /// All `[[name]]` entries.
+    pub fn array_of(&self, name: &str) -> Vec<&Table> {
+        self.table_arrays.iter().filter(|(n, _)| n == name).map(|(_, t)| t).collect()
+    }
+    /// Root-or-section lookup: `get("a.b")` finds key `b` in table `a`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        match path.split_once('.') {
+            None => self.root.get(path),
+            Some((t, k)) => self.table(t)?.get(k),
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug)]
+pub struct ParseError {
+    /// 1-based line.
+    pub line: usize,
+    /// Description.
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a TOML-subset document.
+pub fn parse(src: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    // (is_array, name) of the currently-open section; None = root.
+    let mut current: Option<(bool, String)> = None;
+
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| ParseError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest.strip_suffix("]]").ok_or_else(|| err("unterminated [[table]]"))?.trim();
+            if name.is_empty() {
+                return Err(err("empty table name"));
+            }
+            doc.table_arrays.push((name.to_string(), Table::new()));
+            current = Some((true, name.to_string()));
+        } else if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated [table]"))?.trim();
+            if name.is_empty() {
+                return Err(err("empty table name"));
+            }
+            doc.tables.push((name.to_string(), Table::new()));
+            current = Some((false, name.to_string()));
+        } else {
+            let (key, val) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+            let table = match &current {
+                None => &mut doc.root,
+                Some((true, _)) => &mut doc.table_arrays.last_mut().unwrap().1,
+                Some((false, _)) => &mut doc.tables.last_mut().unwrap().1,
+            };
+            table.insert(key.to_string(), value);
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string (escapes unsupported)".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    let cleaned = s.replace('_', "");
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+/// Split on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_doc() {
+        let doc = parse(
+            r#"
+            # comment
+            name = "gemm"   # trailing comment
+            n = 32
+            scale = 1.5
+            verbose = true
+
+            [sweep]
+            unroll = [1, 2, 4]
+            kinds = ["banked", "xor"]
+
+            [[mem]]
+            kind = "lvt"
+            read_ports = 2
+
+            [[mem]]
+            kind = "xor"
+            read_ports = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.root["name"], Value::Str("gemm".into()));
+        assert_eq!(doc.root["n"], Value::Int(32));
+        assert_eq!(doc.root["scale"], Value::Float(1.5));
+        assert_eq!(doc.root["verbose"], Value::Bool(true));
+        let sweep = doc.table("sweep").unwrap();
+        assert_eq!(sweep["unroll"].as_array().unwrap().len(), 3);
+        let mems = doc.array_of("mem");
+        assert_eq!(mems.len(), 2);
+        assert_eq!(mems[1]["read_ports"], Value::Int(4));
+    }
+
+    #[test]
+    fn dotted_get() {
+        let doc = parse("[a]\nb = 7\n").unwrap();
+        assert_eq!(doc.get("a.b").unwrap().as_int(), Some(7));
+        assert!(doc.get("a.c").is_none());
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.root["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_int() {
+        let doc = parse("n = 1_000_000\n").unwrap();
+        assert_eq!(doc.root["n"].as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("m = [[1, 2], [3, 4]]\n").unwrap();
+        let outer = doc.root["m"].as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_array().unwrap()[0].as_int(), Some(3));
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        assert!(parse("s = \"oops\n").is_err());
+        assert!(parse("[sec\n").is_err());
+    }
+}

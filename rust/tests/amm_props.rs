@@ -1,0 +1,165 @@
+//! Property tests: every algorithmic multi-port scheme must be
+//! indistinguishable from a flat memory with the same port count, under
+//! arbitrary (conflicting) access sequences. This is the correctness
+//! foundation under the paper's cost models — if the schemes didn't
+//! work, their area/power numbers would be meaningless.
+
+use amm_dse::mem::functional::{BNtxWr, HNtxRd, HbNtxRdWr, LvtAmm, MultiPortMem};
+use amm_dse::util::propkit::{check, shrink_vec, Config};
+use amm_dse::util::rng::Rng;
+
+/// One cycle of a random access pattern.
+#[derive(Clone, Debug)]
+struct Cycle {
+    reads: Vec<usize>,
+    writes: Vec<(usize, u64)>,
+}
+
+/// Generate `len` cycles for a memory with r reads / w writes / cap words.
+fn gen_cycles(rng: &mut Rng, len: usize, r: usize, w: usize, cap: usize) -> Vec<Cycle> {
+    (0..len)
+        .map(|_| Cycle {
+            reads: (0..rng.below_usize(r + 1)).map(|_| rng.below_usize(cap)).collect(),
+            writes: (0..rng.below_usize(w + 1))
+                .map(|_| (rng.below_usize(cap), rng.next_u64() & 0xFFFF))
+                .collect(),
+        })
+        .collect()
+}
+
+/// Reference: flat memory, read-first semantics, port-order write priority.
+struct FlatMem {
+    data: Vec<u64>,
+}
+
+impl FlatMem {
+    fn new(cap: usize) -> Self {
+        FlatMem { data: vec![0; cap] }
+    }
+    fn cycle(&mut self, reads: &[usize], writes: &[(usize, u64)]) -> Vec<u64> {
+        let out = reads.iter().map(|&a| self.data[a]).collect();
+        for &(a, v) in writes {
+            self.data[a] = v;
+        }
+        out
+    }
+}
+
+/// Drive `mem` and the flat reference with the same cycles; report the
+/// first divergence, if any.
+fn equivalent<M: MultiPortMem>(mut mem: M, cycles: &[Cycle]) -> bool {
+    let mut flat = FlatMem::new(mem.capacity());
+    for (t, c) in cycles.iter().enumerate() {
+        let got = mem.cycle(&c.reads, &c.writes);
+        let want = flat.cycle(&c.reads, &c.writes);
+        if got != want {
+            eprintln!("cycle {t}: {c:?}: got {got:?} want {want:?}");
+            return false;
+        }
+    }
+    true
+}
+
+#[test]
+fn prop_hntx_rd_equals_flat_memory() {
+    check(
+        Config::default().cases(200),
+        |rng| {
+            let half = 1 << (2 + rng.below_usize(4)); // 4..32
+            let cycles = gen_cycles(rng, 40, 2, 1, half * 2);
+            (half, cycles)
+        },
+        |(half, cycles)| equivalent(HNtxRd::new(*half), cycles),
+        |(half, cycles)| shrink_vec(cycles).into_iter().map(|c| (*half, c)).collect(),
+    );
+}
+
+#[test]
+fn prop_bntx_wr_equals_flat_memory() {
+    check(
+        Config::default().cases(200),
+        |rng| {
+            let half = 1 << (2 + rng.below_usize(4));
+            let cycles = gen_cycles(rng, 40, 1, 2, half * 2);
+            (half, cycles)
+        },
+        |(half, cycles)| equivalent(BNtxWr::new(*half), cycles),
+        |(half, cycles)| shrink_vec(cycles).into_iter().map(|c| (*half, c)).collect(),
+    );
+}
+
+#[test]
+fn prop_lvt_equals_flat_memory() {
+    check(
+        Config::default().cases(150),
+        |rng| {
+            let cap = 8 << rng.below_usize(4);
+            let r = 1 + rng.below_usize(4);
+            let w = 1 + rng.below_usize(4);
+            let cycles = gen_cycles(rng, 30, r, w, cap);
+            (cap, r, w, cycles)
+        },
+        |(cap, r, w, cycles)| equivalent(LvtAmm::new(*cap, *r, *w), cycles),
+        |(cap, r, w, cycles)| {
+            shrink_vec(cycles).into_iter().map(|c| (*cap, *r, *w, c)).collect()
+        },
+    );
+}
+
+#[test]
+fn prop_hbntx_equals_flat_memory_2r2w() {
+    // Single-lane (w=2) configuration exercises the full generality of
+    // the B-NTX write-parity protocol under any conflict pattern.
+    check(
+        Config::default().cases(200),
+        |rng| {
+            let cap = 16 << rng.below_usize(3);
+            let cycles = gen_cycles(rng, 40, 2, 2, cap);
+            (cap, cycles)
+        },
+        |(cap, cycles)| equivalent(HbNtxRdWr::new(*cap, 2, 2), cycles),
+        |(cap, cycles)| shrink_vec(cycles).into_iter().map(|c| (*cap, c)).collect(),
+    );
+}
+
+#[test]
+fn prop_hntx_parity_invariant_holds() {
+    // After ANY write sequence, Ref[i] == Bank0[i] ^ Bank1[i] — checked
+    // through the public recovery path: parity read == direct read.
+    check(
+        Config::default().cases(200),
+        |rng| {
+            let writes: Vec<(usize, u64)> =
+                (0..rng.below_usize(60)).map(|_| (rng.below_usize(16), rng.next_u64())).collect();
+            writes
+        },
+        |writes| {
+            let mut m = HNtxRd::new(8);
+            for &w in writes.iter() {
+                m.cycle(&[], &[w]);
+            }
+            (0..16).all(|a| m.read_direct(a) == m.read_via_parity(a))
+        },
+        |writes| shrink_vec(writes),
+    );
+}
+
+#[test]
+fn prop_lvt_write_priority_is_port_order() {
+    // Same-address simultaneous writes: the highest port index wins.
+    check(
+        Config::default().cases(100),
+        |rng| {
+            let addr = rng.below_usize(16);
+            let vals: Vec<u64> = (0..3).map(|_| rng.next_u64()).collect();
+            (addr, vals)
+        },
+        |(addr, vals)| {
+            let mut m = LvtAmm::new(16, 1, 3);
+            let writes: Vec<(usize, u64)> = vals.iter().map(|&v| (*addr, v)).collect();
+            m.cycle(&[], &writes);
+            m.cycle(&[*addr], &[])[0] == vals[2]
+        },
+        |_| vec![],
+    );
+}

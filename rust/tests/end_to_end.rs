@@ -1,0 +1,136 @@
+//! End-to-end integration: the full pipeline (trace → locality → sweep →
+//! Pareto → performance ratio) reproduces the paper's qualitative claims
+//! at test scale, and the config/report layers round-trip.
+
+use amm_dse::dse::{self, Sweep};
+use amm_dse::locality;
+use amm_dse::report;
+use amm_dse::suite::{self, Scale};
+
+/// A sweep large enough to exhibit the Fig-4 shapes but fast enough for CI.
+fn test_sweep() -> Sweep {
+    Sweep {
+        unrolls: vec![1, 4, 16],
+        word_bytes: vec![1, 4, 8],
+        alus: vec![8],
+        bank_counts: vec![1, 2, 4, 8, 16, 32],
+        include_dual_port: false,
+        include_block: false,
+        include_flat_xor: false,
+        amm_ports: vec![(2, 1), (2, 2), (4, 2), (8, 4)],
+        include_multipump: true,
+        include_lvt: true,
+        threads: 0,
+    }
+}
+
+#[test]
+fn fig4_shape_amm_extends_design_space_for_low_locality_benchmarks() {
+    // The paper's headline: for FFT/GEMM/MD-KNN (low locality) the AMM
+    // points reach execution times banking cannot; the design space is
+    // *extended* (blue-shaded region of Fig 4).
+    for name in ["gemm", "md-knn"] {
+        let wl = suite::generate(name, Scale::Tiny);
+        let points = test_sweep().run(&wl.trace);
+        let best_bank = dse::best_time(&points, |p| !p.is_amm);
+        let best_amm = dse::best_time(&points, |p| p.is_amm);
+        assert!(
+            best_amm < best_bank,
+            "{name}: AMM best {best_amm} !< banking best {best_bank}"
+        );
+    }
+}
+
+#[test]
+fn fig4_shape_kmp_amm_pays_area() {
+    // For KMP (stride-1 bytes, locality ≈ 1) banking partitions are
+    // conflict-free, so the AMM area premium buys little: the banking
+    // frontier must contain points at-or-near AMM times with less area
+    // (performance ratio < 1 or barely above).
+    let wl = suite::generate("kmp", Scale::Tiny);
+    let points = test_sweep().run(&wl.trace);
+    let ratio = dse::performance_ratio(&points, 0.10);
+    if let Some(r) = ratio {
+        assert!(r < 1.15, "kmp perf ratio should not favour AMM strongly, got {r}");
+    }
+}
+
+#[test]
+fn fig5_shape_ratio_tracks_locality() {
+    // Across the four DSE benchmarks, low locality ⇒ higher ratio.
+    let mut rows: Vec<(f64, f64)> = Vec::new();
+    for name in suite::DSE_BENCHMARKS {
+        let wl = suite::generate(name, Scale::Tiny);
+        let loc = locality::analyze(&wl.trace).spatial_locality();
+        let points = test_sweep().run(&wl.trace);
+        if let Some(r) = dse::performance_ratio(&points, 0.10) {
+            rows.push((loc, r));
+        }
+    }
+    assert!(rows.len() >= 3, "need ratios for most benchmarks, got {rows:?}");
+    let xs: Vec<f64> = rows.iter().map(|r| r.0).collect();
+    let ys: Vec<f64> = rows.iter().map(|r| r.1).collect();
+    let rho = amm_dse::util::stats::pearson(&xs, &ys);
+    assert!(rho < 0.0, "locality and AMM benefit must anti-correlate, rho={rho} rows={rows:?}");
+    // and KMP (the high-locality benchmark) must have the lowest ratio
+    let kmp = rows.iter().zip(suite::DSE_BENCHMARKS).find(|(_, n)| *n == "kmp");
+    if let Some(((_, kmp_ratio), _)) = kmp {
+        assert!(
+            rows.iter().filter(|(_, r)| r < kmp_ratio).count() <= 1,
+            "kmp should have (nearly) the lowest AMM benefit: {rows:?}"
+        );
+    }
+}
+
+#[test]
+fn csv_reports_roundtrip_through_filesystem() {
+    let wl = suite::generate("stencil2d", Scale::Tiny);
+    let points = Sweep::quick().run(&wl.trace);
+    let dir = std::env::temp_dir().join("amm_dse_e2e_csv");
+    let path = dir.join("fig4_test.csv");
+    report::write_file(&path, &report::fig4_csv(&points)).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), points.len() + 1);
+    assert!(text.lines().next().unwrap().starts_with("id,mem,is_amm"));
+}
+
+#[test]
+fn config_file_drives_a_sweep() {
+    let toml = r#"
+        benchmark = "stencil2d"
+        scale = "tiny"
+        [sweep]
+        unrolls = [1, 4]
+        word_bytes = [4]
+        alus = [4]
+        bank_counts = [1, 4]
+        multipump = false
+        lvt = false
+        [[amm]]
+        read_ports = 2
+        write_ports = 1
+    "#;
+    let rc = amm_dse::config::parse(toml).unwrap();
+    let wl = suite::generate(&rc.benchmark, rc.scale);
+    let points = rc.sweep.run(&wl.trace);
+    // mem kinds: banked1, banked4, xor2r1w = 3; ×2 unrolls
+    assert_eq!(points.len(), 6);
+    assert!(points.iter().any(|p| p.is_amm));
+}
+
+#[test]
+fn simulate_is_deterministic_across_thread_counts() {
+    let wl = suite::generate("fft", Scale::Tiny);
+    let mut s1 = test_sweep();
+    s1.threads = 1;
+    let mut s8 = test_sweep();
+    s8.threads = 8;
+    let a = s1.run(&wl.trace);
+    let b = s8.run(&wl.trace);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.out.cycles, y.out.cycles);
+        assert_eq!(x.out.area_um2, y.out.area_um2);
+    }
+}

@@ -1,0 +1,147 @@
+//! Integration: the AOT Pallas cost model (via PJRT) must agree with the
+//! pure-Rust CACTI-lite mirror to float precision, and the coordinator
+//! must produce identical sweeps through either backend.
+//!
+//! Skips (with a loud message) when `make artifacts` has not run.
+
+use amm_dse::coordinator::{CostBackend, CostService, Coordinator, COST_BATCH};
+use amm_dse::runtime::{names, Runtime};
+use amm_dse::sram;
+use amm_dse::suite::{self, Scale};
+use amm_dse::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    let dir = amm_dse::runtime::artifacts_dir();
+    let missing = amm_dse::runtime::missing_artifacts(&dir);
+    if !missing.is_empty() {
+        eprintln!("SKIP: artifacts missing {missing:?}; run `make artifacts`");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn pjrt_cost_model_matches_rust_mirror() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (svc, _guard, backend) = CostService::spawn(amm_dse::runtime::artifacts_dir());
+    assert_eq!(backend, CostBackend::Pjrt, "artifact exists but PJRT backend not live");
+    let mut rng = Rng::new(42);
+    let depths = [4.0f32, 64.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0];
+    let widths = [1.0f32, 8.0, 32.0, 64.0, 128.0];
+    let ports = [1.0f32, 2.0, 4.0, 8.0];
+    let queries: Vec<[f32; 4]> = (0..3000)
+        .map(|_| {
+            [
+                *rng.pick(&depths),
+                *rng.pick(&widths),
+                *rng.pick(&ports),
+                *rng.pick(&ports),
+            ]
+        })
+        .collect();
+    let got = svc.cost_batch(queries.clone()).expect("pjrt batch");
+    let want = sram::macro_cost_batch(&queries);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        for k in 0..5 {
+            let rel = (g[k] - w[k]).abs() / w[k].abs().max(1e-6);
+            assert!(
+                rel < 1e-4,
+                "row {i} field {k}: pjrt {} vs rust {} (query {:?})",
+                g[k],
+                w[k],
+                queries[i]
+            );
+        }
+    }
+    svc.stop();
+}
+
+#[test]
+fn pjrt_handles_partial_batches() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (svc, _guard, _) = CostService::spawn(amm_dse::runtime::artifacts_dir());
+    // 1 query, COST_BATCH+1 queries: padding must be invisible.
+    let q = [1024.0f32, 32.0, 2.0, 1.0];
+    let one = svc.cost_batch(vec![q]).unwrap();
+    assert_eq!(one.len(), 1);
+    let many = svc.cost_batch(vec![q; COST_BATCH + 1]).unwrap();
+    assert_eq!(many.len(), COST_BATCH + 1);
+    for row in &many {
+        assert_eq!(row, &one[0]);
+    }
+    svc.stop();
+}
+
+#[test]
+fn coordinator_sweep_identical_on_both_backends() {
+    if !artifacts_ready() {
+        return;
+    }
+    let wl = suite::generate("stencil2d", Scale::Tiny);
+    let sweep = amm_dse::dse::Sweep::quick();
+
+    let pjrt = Coordinator::with_artifacts(amm_dse::runtime::artifacts_dir());
+    assert_eq!(pjrt.backend, CostBackend::Pjrt);
+    let a = pjrt.run_sweep(&wl.trace, &sweep).unwrap();
+
+    let empty = std::env::temp_dir().join("amm_dse_empty_artifacts");
+    let _ = std::fs::create_dir_all(&empty);
+    let rust = Coordinator::with_artifacts(empty);
+    assert_eq!(rust.backend, CostBackend::RustFallback);
+    let b = rust.run_sweep(&wl.trace, &sweep).unwrap();
+
+    assert_eq!(a.len(), b.len());
+    for (pa, pb) in a.iter().zip(&b) {
+        assert_eq!(pa.id, pb.id);
+        assert_eq!(pa.out.cycles, pb.out.cycles, "{}", pa.id);
+        let rel = (pa.out.area_um2 - pb.out.area_um2).abs() / pb.out.area_um2;
+        assert!(rel < 1e-4, "{}: {} vs {}", pa.id, pa.out.area_um2, pb.out.area_um2);
+        let relp = (pa.out.power_mw - pb.out.power_mw).abs() / pb.out.power_mw;
+        assert!(relp < 1e-3, "{}: power {} vs {}", pa.id, pa.out.power_mw, pb.out.power_mw);
+    }
+}
+
+#[test]
+fn workload_artifacts_execute() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = Runtime::cpu().expect("runtime");
+    // gemm: identity x identity = identity
+    let exe = rt.load(names::GEMM).expect("load gemm");
+    let n = 64usize;
+    let mut eye = vec![0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let out = exe.run_f32(&[(&eye, &[n, n]), (&eye, &[n, n])]).expect("run gemm");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0], eye);
+
+    // xor_recon: parity recovery equals direct read
+    let exe = rt.load(names::XOR_RECON).expect("load xor");
+    let d = 1024usize;
+    let nq = 512usize;
+    let mut rng = Rng::new(3);
+    let b0: Vec<i32> = (0..d).map(|_| rng.next_u32() as i32 & 0x7fffffff).collect();
+    let b1: Vec<i32> = (0..d).map(|_| rng.next_u32() as i32 & 0x7fffffff).collect();
+    let par: Vec<i32> = b0.iter().zip(&b1).map(|(a, b)| a ^ b).collect();
+    let idx: Vec<i32> = (0..nq).map(|_| rng.below(d as u64) as i32).collect();
+    let sel: Vec<i32> = (0..nq).map(|_| (rng.below(2)) as i32).collect();
+    let dims: &[usize] = &[d];
+    let qdims: &[usize] = &[nq];
+    let zeros = vec![0i32; nq];
+    let ones = vec![1i32; nq];
+    let direct = exe
+        .run_i32(&[(&b0, dims), (&b1, dims), (&par, dims), (&idx, qdims), (&sel, qdims), (&zeros, qdims)])
+        .expect("xor direct");
+    let recovered = exe
+        .run_i32(&[(&b0, dims), (&b1, dims), (&par, dims), (&idx, qdims), (&sel, qdims), (&ones, qdims)])
+        .expect("xor recovered");
+    assert_eq!(direct[0], recovered[0], "parity recovery must equal direct reads");
+}

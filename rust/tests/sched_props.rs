@@ -1,0 +1,208 @@
+//! Property tests on the scheduler and DSE invariants: port-capacity
+//! compliance, dependence safety, monotonicity, and Pareto/ratio laws.
+
+use amm_dse::dse::{self, Sweep};
+use amm_dse::mem::MemKind;
+use amm_dse::sched::{self, DesignConfig};
+use amm_dse::suite::{self, Scale};
+use amm_dse::trace::{AluKind, Trace, TraceBuilder};
+use amm_dse::util::propkit::{check, Config};
+use amm_dse::util::rng::Rng;
+
+/// A random but valid traced program: interleaved loads/stores/alus over
+/// a couple of arrays with random (true) value dependences.
+fn random_trace(rng: &mut Rng, n_ops: usize) -> Trace {
+    let mut b = TraceBuilder::new();
+    let a0 = b.array("a0", 4, 64);
+    let a1 = b.array("a1", 8, 32);
+    let mut produced: Vec<u32> = Vec::new();
+    for i in 0..n_ops {
+        if i % 7 == 0 {
+            b.next_iter();
+        }
+        b.site((i % 5) as u32);
+        let pick_deps = |rng: &mut Rng, produced: &[u32]| -> Vec<u32> {
+            if produced.is_empty() {
+                return vec![];
+            }
+            (0..rng.below_usize(3)).map(|_| produced[rng.below_usize(produced.len())]).collect()
+        };
+        match rng.below(4) {
+            0 => {
+                let id = b.load(a0, rng.below(64) as u32);
+                produced.push(id);
+            }
+            1 => {
+                let id = b.load(a1, rng.below(32) as u32);
+                produced.push(id);
+            }
+            2 => {
+                let deps = pick_deps(rng, &produced);
+                let id = b.alu(AluKind::FAdd, &deps);
+                produced.push(id);
+            }
+            _ => {
+                let deps = pick_deps(rng, &produced);
+                b.store(a0, rng.below(64) as u32, &deps);
+            }
+        }
+    }
+    b.finish()
+}
+
+#[test]
+fn prop_random_traces_validate_and_schedule() {
+    check(
+        Config::default().cases(60),
+        |rng| {
+            let n = 20 + rng.below_usize(200);
+            let seed = rng.next_u64();
+            (n, seed)
+        },
+        |(n, seed)| {
+            let mut rng = Rng::new(*seed);
+            let t = random_trace(&mut rng, *n);
+            if t.validate().is_err() {
+                return false;
+            }
+            let out = sched::simulate(&t, &DesignConfig::baseline());
+            // every mem op issued exactly once, cycles bounded below by
+            // both the critical path and the port bound
+            out.mem_accesses == t.mem_ops() as u64
+                && out.cycles >= (t.mem_ops() as u64) // 1 shared port
+                && out.cycles as u64 >= t.critical_path_len() as u64 / 20
+        },
+        |_| vec![],
+    );
+}
+
+#[test]
+fn prop_cycles_lower_bounded_by_port_capacity() {
+    // cycles >= mem_ops / total_ports for ANY true-port design.
+    check(
+        Config::default().cases(40),
+        |rng| {
+            let seed = rng.next_u64();
+            let r = 1 << rng.below_usize(3);
+            let w = 1 << rng.below_usize(2);
+            (seed, r, w)
+        },
+        |(seed, r, w)| {
+            let mut rng = Rng::new(*seed);
+            let t = random_trace(&mut rng, 150);
+            let cfg = DesignConfig {
+                mem: MemKind::XorAmm { read_ports: *r, write_ports: *w },
+                unroll: 64,
+                word_bytes: 8,
+                alus: 64,
+            };
+            let out = sched::simulate(&t, &cfg);
+            let bound = (t.mem_ops() as u64).div_ceil((*r + *w) as u64);
+            out.cycles >= bound
+        },
+        |_| vec![],
+    );
+}
+
+#[test]
+fn prop_unroll_monotone_nonincreasing_cycles() {
+    // Greedy list scheduling admits small Graham-style anomalies (more
+    // parallelism can occasionally delay a critical chain by a few
+    // cycles), so the property allows a 10% + 4-cycle slack while still
+    // catching any systematic inversion.
+    check(
+        Config::default().cases(30),
+        |rng| rng.next_u64(),
+        |seed| {
+            let mut rng = Rng::new(*seed);
+            let t = random_trace(&mut rng, 120);
+            let mut prev = u64::MAX;
+            for u in [1u32, 2, 4, 8, 16] {
+                let cfg = DesignConfig {
+                    mem: MemKind::LvtAmm { read_ports: 4, write_ports: 2 },
+                    unroll: u,
+                    word_bytes: 8,
+                    alus: 8,
+                };
+                let c = sched::simulate(&t, &cfg).cycles;
+                if prev != u64::MAX && c > prev + prev / 10 + 4 {
+                    eprintln!("unroll {u}: {c} >> {prev}");
+                    return false;
+                }
+                prev = c.min(prev);
+            }
+            true
+        },
+        |_| vec![],
+    );
+}
+
+#[test]
+fn prop_pareto_front_minimal_and_complete() {
+    check(
+        Config::default().cases(10),
+        |rng| rng.next_u64(),
+        |seed| {
+            let mut rng = Rng::new(*seed);
+            let t = random_trace(&mut rng, 150);
+            let points = Sweep::quick().run(&t);
+            let front = dse::pareto_front(&points, |p| p.time_ns(), |p| p.area());
+            // minimality
+            for (k, &i) in front.iter().enumerate() {
+                for &j in &front[k + 1..] {
+                    let a = &points[i];
+                    let b = &points[j];
+                    if a.time_ns() <= b.time_ns() && a.area() <= b.area() {
+                        return false;
+                    }
+                }
+            }
+            // completeness
+            points.iter().enumerate().all(|(i, p)| {
+                front.contains(&i)
+                    || front
+                        .iter()
+                        .any(|&f| points[f].time_ns() <= p.time_ns() && points[f].area() <= p.area())
+            })
+        },
+        |_| vec![],
+    );
+}
+
+#[test]
+fn prop_banked_never_faster_than_true_ports_same_count() {
+    // A true-R+W-port memory dominates a banked design whose per-bank
+    // ports sum to the same count, for the same trace/unroll/alus.
+    check(
+        Config::default().cases(30),
+        |rng| rng.next_u64(),
+        |seed| {
+            let mut rng = Rng::new(*seed);
+            let t = random_trace(&mut rng, 120);
+            let banked = DesignConfig {
+                mem: MemKind::Banked { banks: 4 },
+                unroll: 8,
+                word_bytes: 8,
+                alus: 8,
+            };
+            // the AMM must offer at least as many ports of each type as
+            // the banked design can ever use in one cycle (4 banks ⇒ ≤4
+            // reads and ≤4 writes) for domination to be guaranteed.
+            let amm = DesignConfig { mem: MemKind::LvtAmm { read_ports: 4, write_ports: 4 }, ..banked };
+            sched::simulate(&t, &amm).cycles <= sched::simulate(&t, &banked).cycles
+        },
+        |_| vec![],
+    );
+}
+
+#[test]
+fn prop_benchmark_checksums_stable() {
+    // Workload generation is deterministic: same name+scale → same trace
+    // shape and checksum (the DSE depends on this for reproducibility).
+    for name in suite::ALL_BENCHMARKS {
+        let a = suite::generate(name, Scale::Tiny);
+        let b = suite::generate(name, Scale::Tiny);
+        assert_eq!(a.checksum, b.checksum, "{name}");
+        assert_eq!(a.trace.len(), b.trace.len(), "{name}");
+    }
+}
