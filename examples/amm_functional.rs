@@ -15,7 +15,7 @@ use amm_dse::mem::functional::{BNtxWr, HNtxRd, HbNtxRdWr, LvtAmm, MultiPortMem};
 use amm_dse::runtime::{names, Runtime};
 use amm_dse::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> amm_dse::Result<()> {
     let mut rng = Rng::new(2020);
 
     // --- 1. conflict storm vs flat oracle ------------------------------
@@ -26,7 +26,13 @@ fn main() -> anyhow::Result<()> {
     storm(&mut rng, "HB-NTX     (2R2W)", HbNtxRdWr::new(512, 2, 2));
 
     // --- 2. H-NTX-Rd vs the Pallas kernel through PJRT -----------------
-    let rt = Runtime::cpu()?;
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\n({e}; skipping the PJRT cross-check)");
+            return Ok(());
+        }
+    };
     if !rt.has_artifact(names::XOR_RECON) {
         println!("\n(xor_recon artifact missing; run `make artifacts` for the PJRT cross-check)");
         return Ok(());

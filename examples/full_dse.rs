@@ -1,16 +1,17 @@
 //! END-TO-END driver (the repository's headline experiment).
 //!
 //! Runs the complete Mem-Aladdin pipeline on the paper's four DSE
-//! benchmarks at paper scale:
+//! benchmarks at paper scale through the `Explorer` facade:
 //!
 //!   trace → spatial locality → design-space sweep (design points scored
-//!   through the AOT Pallas cost model via PJRT) → Pareto frontiers →
-//!   performance ratios → locality correlation,
+//!   through the coordinator's batched cost service) → Pareto frontiers
+//!   → performance ratios → locality correlation,
 //!
 //! writing `results/fig4_<bench>.csv` and `results/fig5.csv`, printing
 //! the figures as ASCII, and checking the paper's §IV-C claim. Also
 //! functionally validates the workload datapath artifacts (GEMM tile)
-//! against the Rust traced execution — proving all three layers compose.
+//! against the Rust traced execution when the PJRT backend is live —
+//! proving all three layers compose.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example full_dse
@@ -21,51 +22,42 @@ use amm_dse::dse::{self, Sweep};
 use amm_dse::runtime::{names, Runtime};
 use amm_dse::suite::{self, Scale};
 use amm_dse::util::stats;
-use amm_dse::{locality, report};
-use std::path::Path;
+use amm_dse::{locality, Explorer};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> amm_dse::Result<()> {
     let t_start = Instant::now();
+
+    // One coordinator for the whole run: the PJRT cost model compiles
+    // once and every benchmark's sweep batches through it.
     let coord = Coordinator::new();
     println!("cost backend: {:?} (Pjrt = AOT Pallas kernel through PJRT)", coord.backend);
     if coord.backend != CostBackend::Pjrt {
         eprintln!("warning: run `make artifacts` first to exercise the PJRT path");
-    }
-
-    // --- layer-composition check: run the GEMM datapath artifact ------
-    if coord.backend == CostBackend::Pjrt {
+    } else {
+        // layer-composition check: run the GEMM datapath artifact
         verify_gemm_artifact()?;
     }
 
     // --- the four-panel Fig 4 sweep ------------------------------------
     let sweep = Sweep::default();
-    println!("\nsweep: {} design points per benchmark", sweep.configs().len());
+    println!("sweep: {} design points per benchmark", sweep.points().len());
     let mut summaries = Vec::new();
     for name in suite::DSE_BENCHMARKS {
         let t0 = Instant::now();
-        let wl = suite::generate(name, Scale::Paper);
-        let loc = locality::analyze(&wl.trace).spatial_locality();
-        let points = coord.run_sweep(&wl.trace, &sweep)?;
-        let ratio = dse::performance_ratio(&points, 0.10);
+        let ex =
+            Explorer::new().workload(name, Scale::Paper).sweep(sweep.clone()).run_with(&coord)?;
         let csv = format!("results/fig4_{name}.csv");
-        report::write_file(Path::new(&csv), &report::fig4_csv(&points))?;
+        ex.write_csv(&csv)?;
         println!(
             "\n=== {name}: {} nodes, L_spatial {:.3}, {} points in {:.1?} -> {csv}",
-            wl.trace.len(),
-            loc,
-            points.len(),
+            ex.trace_nodes,
+            ex.locality,
+            ex.points().len(),
             t0.elapsed()
         );
-        println!("{}", report::ascii_scatter(&points, |p| p.area(), &format!("Fig4 {name}: area vs time"), 72, 16));
-        summaries.push(dse::BenchSummary {
-            name: name.to_string(),
-            locality: loc,
-            perf_ratio: ratio,
-            best_banking_ns: dse::best_time(&points, |p| !p.is_amm),
-            best_amm_ns: dse::best_time(&points, |p| p.is_amm),
-            n_points: points.len(),
-        });
+        println!("{}", ex.scatter_area(72, 16));
+        summaries.push(ex.summary());
     }
 
     // --- Fig 5: locality for the whole suite + ratios -----------------
@@ -84,8 +76,12 @@ fn main() -> anyhow::Result<()> {
         });
     }
     summaries.sort_by(|a, b| a.name.cmp(&b.name));
-    report::write_file(Path::new("results/fig5.csv"), &report::fig5_csv(&summaries))?;
-    println!("\n{}", report::fig5_ascii(&summaries));
+    amm_dse::report::write_file(
+        std::path::Path::new("results/fig5.csv"),
+        &amm_dse::report::fig5_csv(&summaries),
+    )
+    .map_err(|e| amm_dse::Error::io("write results/fig5.csv", e))?;
+    println!("\n{}", amm_dse::report::fig5_ascii(&summaries));
 
     // --- the paper's §IV-C claim ---------------------------------------
     let with_ratio: Vec<&dse::BenchSummary> =
@@ -129,7 +125,7 @@ fn main() -> anyhow::Result<()> {
 
 /// Run the AOT GEMM tile datapath through PJRT and compare with a Rust
 /// matmul — the L1→L2→L3 composition proof on real data.
-fn verify_gemm_artifact() -> anyhow::Result<()> {
+fn verify_gemm_artifact() -> amm_dse::Result<()> {
     let rt = Runtime::cpu()?;
     let exe = rt.load(names::GEMM)?;
     let n = 64usize;
@@ -147,7 +143,9 @@ fn verify_gemm_artifact() -> anyhow::Result<()> {
             max_err = max_err.max((out[0][i * n + j] - want).abs());
         }
     }
-    anyhow::ensure!(max_err < 1e-3, "gemm artifact mismatch: {max_err}");
+    if max_err >= 1e-3 {
+        return Err(amm_dse::Error::runtime(format!("gemm artifact mismatch: {max_err}")));
+    }
     println!("layer-composition check: PJRT GEMM datapath matches Rust matmul (max err {max_err:.2e})");
     Ok(())
 }

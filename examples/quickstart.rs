@@ -1,54 +1,64 @@
-//! Quickstart: trace one benchmark, compare a banked baseline against an
-//! XOR-based AMM on the same workload.
+//! Quickstart: explore GEMM with the `Explorer` facade — one run covers
+//! the banked baseline, the HB-NTX XOR AMM, the LVT AMM and a
+//! circuit-level multiport comparator (added by registry id).
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use amm_dse::mem::MemKind;
-use amm_dse::sched::{simulate, DesignConfig};
-use amm_dse::suite::{self, Scale};
-use amm_dse::locality;
+use amm_dse::dse::Sweep;
+use amm_dse::suite::Scale;
+use amm_dse::Explorer;
 
-fn main() {
-    let wl = suite::generate("gemm", Scale::Paper);
-    println!("workload: GEMM-NCUBED ({} trace nodes, checksum {:.4})", wl.trace.len(), wl.checksum);
-    let rep = locality::analyze(&wl.trace);
-    println!("spatial locality (Weinberg, byte strides): {:.3}\n", rep.spatial_locality());
-
-    let configs = [
-        ("banked x8 (array partitioning)", DesignConfig {
-            mem: MemKind::Banked { banks: 8 },
-            unroll: 8,
-            word_bytes: 8,
-            alus: 8,
-        }),
-        ("HB-NTX XOR AMM 4R2W", DesignConfig {
-            mem: MemKind::XorAmm { read_ports: 4, write_ports: 2 },
-            unroll: 8,
-            word_bytes: 8,
-            alus: 8,
-        }),
-        ("LVT AMM 4R2W", DesignConfig {
-            mem: MemKind::LvtAmm { read_ports: 4, write_ports: 2 },
-            unroll: 8,
-            word_bytes: 8,
-            alus: 8,
-        }),
-    ];
-
+fn main() -> amm_dse::Result<()> {
+    // A focused sweep: banked 1/8, XOR + LVT 4R2W, three unroll factors.
+    let sweep = Sweep {
+        unrolls: vec![1, 4, 8],
+        word_bytes: vec![8],
+        alus: vec![8],
+        bank_counts: vec![1, 8],
+        amm_ports: vec![(4, 2)],
+        include_multipump: false,
+        include_lvt: true,
+        ..Sweep::default()
+    };
+    let ex = Explorer::new()
+        .workload("gemm", Scale::Paper)
+        .sweep(sweep)
+        .model("cmp4r2w") // any registry id composes into the sweep
+        .run()?;
     println!(
-        "{:<34} {:>10} {:>10} {:>12} {:>10} {:>10}",
-        "design", "cycles", "time(ns)", "area(um2)", "power(mW)", "stalls"
+        "workload: GEMM-NCUBED ({} trace nodes, checksum {:.4})",
+        ex.trace_nodes, ex.checksum
     );
-    for (name, cfg) in configs {
-        let out = simulate(&wl.trace, &cfg);
+    println!("spatial locality (Weinberg, byte strides): {:.3}", ex.locality);
+    println!(
+        "sweep: {} design points, cost backend {}",
+        ex.points().len(),
+        ex.backend_label()
+    );
+
+    // The head-to-head table at unroll 8 (one row per organization).
+    println!(
+        "\n{:<28} {:>10} {:>10} {:>12} {:>10} {:>10}",
+        "design (u8/w8/a8)", "cycles", "time(ns)", "area(um2)", "power(mW)", "stalls"
+    );
+    for p in ex.points().iter().filter(|p| p.unroll == 8) {
         println!(
-            "{:<34} {:>10} {:>10.0} {:>12.0} {:>10.3} {:>10}",
-            name, out.cycles, out.time_ns, out.area_um2, out.power_mw, out.port_stalls
+            "{:<28} {:>10} {:>10.0} {:>12.0} {:>10.3} {:>10}",
+            p.mem_id, p.out.cycles, p.out.time_ns, p.out.area_um2, p.out.power_mw, p.out.port_stalls
+        );
+    }
+
+    println!("\n(time, area) Pareto frontier across the whole sweep:");
+    for p in ex.pareto_area() {
+        println!(
+            "  {:<22} {:>10} cycles {:>12.0} um^2 {:>8.3} mW",
+            p.id, p.out.cycles, p.area(), p.power()
         );
     }
     println!("\nAMM true ports remove the bank conflicts the static banked schedule");
     println!("stalls on — at the cost of parity/replica capacity. Run the full");
     println!("sweep with `cargo run --release --example full_dse`.");
+    Ok(())
 }

@@ -13,6 +13,8 @@
 //! bank_counts = [1, 2, 4, 8, 16, 32]
 //! multipump = true
 //! lvt = true
+//! # extra memory models by registry id (any registered organization)
+//! models = ["xorflat4r2w", "cmp4r4w"]
 //!
 //! [[amm]]
 //! read_ports = 2
@@ -20,9 +22,9 @@
 //! ```
 
 use crate::dse::Sweep;
+use crate::error::{Error, Result};
 use crate::suite::Scale;
 use crate::util::tomlmini::{self, Value};
-use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// A parsed run configuration.
@@ -38,30 +40,39 @@ pub struct RunConfig {
     pub out_csv: Option<String>,
 }
 
+impl RunConfig {
+    /// Build the [`crate::Explorer`] this configuration describes.
+    pub fn explorer(&self) -> crate::Explorer {
+        crate::Explorer::new()
+            .workload(self.benchmark.clone(), self.scale)
+            .sweep(self.sweep.clone())
+    }
+}
+
 /// Parse a config file.
 pub fn load(path: &Path) -> Result<RunConfig> {
     let text = std::fs::read_to_string(path)
-        .with_context(|| format!("read config {}", path.display()))?;
+        .map_err(|e| Error::io(format!("read config {}", path.display()), e))?;
     parse(&text)
 }
 
 /// Parse config text.
 pub fn parse(text: &str) -> Result<RunConfig> {
-    let doc = tomlmini::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let doc = tomlmini::parse(text).map_err(|e| Error::config(e.to_string()))?;
     let benchmark = doc
         .root
         .get("benchmark")
         .and_then(Value::as_str)
-        .context("missing `benchmark`")?
+        .ok_or_else(|| Error::config("missing `benchmark`"))?
         .to_string();
     if !crate::suite::ALL_BENCHMARKS.contains(&benchmark.as_str()) {
-        bail!("unknown benchmark {benchmark:?} (known: {:?})", crate::suite::ALL_BENCHMARKS);
+        return Err(Error::UnknownBenchmark { name: benchmark });
     }
     let scale = match doc.root.get("scale").and_then(Value::as_str).unwrap_or("paper") {
         "tiny" => Scale::Tiny,
         "paper" => Scale::Paper,
         "large" => Scale::Large,
-        other => bail!("unknown scale {other:?} (tiny|paper|large)"),
+        other => return Err(Error::config(format!("unknown scale {other:?} (tiny|paper|large)"))),
     };
     let mut sweep = Sweep::default();
     if let Some(t) = doc.table("sweep") {
@@ -78,19 +89,37 @@ pub fn parse(text: &str) -> Result<RunConfig> {
             sweep.bank_counts = ints(v, "bank_counts")?;
         }
         if let Some(v) = t.get("multipump") {
-            sweep.include_multipump = v.as_bool().context("multipump must be bool")?;
+            sweep.include_multipump =
+                v.as_bool().ok_or_else(|| Error::config("multipump must be bool"))?;
         }
         if let Some(v) = t.get("lvt") {
-            sweep.include_lvt = v.as_bool().context("lvt must be bool")?;
+            sweep.include_lvt = v.as_bool().ok_or_else(|| Error::config("lvt must be bool"))?;
         }
         if let Some(v) = t.get("block_partitioning") {
-            sweep.include_block = v.as_bool().context("block_partitioning must be bool")?;
+            sweep.include_block =
+                v.as_bool().ok_or_else(|| Error::config("block_partitioning must be bool"))?;
         }
         if let Some(v) = t.get("flat_xor") {
-            sweep.include_flat_xor = v.as_bool().context("flat_xor must be bool")?;
+            sweep.include_flat_xor =
+                v.as_bool().ok_or_else(|| Error::config("flat_xor must be bool"))?;
+        }
+        if let Some(v) = t.get("models") {
+            // Extra organizations by registry id — validated through the
+            // model registry, so registered extensions work here too.
+            let ids = v.as_array().ok_or_else(|| Error::config("models must be an array"))?;
+            for id in ids {
+                let id = id
+                    .as_str()
+                    .ok_or_else(|| Error::config("models entries must be strings"))?;
+                if crate::mem::parse_model(id).is_none() {
+                    return Err(Error::UnknownModel { id: id.to_string() });
+                }
+                sweep.extra_models.push(id.to_string());
+            }
         }
         if let Some(v) = t.get("threads") {
-            sweep.threads = v.as_int().context("threads must be int")? as usize;
+            sweep.threads =
+                v.as_int().ok_or_else(|| Error::config("threads must be int"))? as usize;
         }
     }
     let amms = doc.array_of("amm");
@@ -98,8 +127,14 @@ pub fn parse(text: &str) -> Result<RunConfig> {
         sweep.amm_ports = amms
             .iter()
             .map(|t| {
-                let r = t.get("read_ports").and_then(Value::as_int).context("amm.read_ports")?;
-                let w = t.get("write_ports").and_then(Value::as_int).context("amm.write_ports")?;
+                let r = t
+                    .get("read_ports")
+                    .and_then(Value::as_int)
+                    .ok_or_else(|| Error::config("amm.read_ports missing or not an int"))?;
+                let w = t
+                    .get("write_ports")
+                    .and_then(Value::as_int)
+                    .ok_or_else(|| Error::config("amm.write_ports missing or not an int"))?;
                 Ok((r as u32, w as u32))
             })
             .collect::<Result<Vec<_>>>()?;
@@ -110,9 +145,13 @@ pub fn parse(text: &str) -> Result<RunConfig> {
 
 fn ints(v: &Value, what: &str) -> Result<Vec<u32>> {
     v.as_array()
-        .with_context(|| format!("{what} must be an array"))?
+        .ok_or_else(|| Error::config(format!("{what} must be an array")))?
         .iter()
-        .map(|x| x.as_int().map(|i| i as u32).with_context(|| format!("{what}: not an int")))
+        .map(|x| {
+            x.as_int()
+                .map(|i| i as u32)
+                .ok_or_else(|| Error::config(format!("{what}: not an int")))
+        })
         .collect()
 }
 
@@ -134,6 +173,7 @@ mod tests {
             bank_counts = [1, 16]
             multipump = false
             lvt = false
+            models = ["cmp4r2w"]
             [[amm]]
             read_ports = 2
             write_ports = 2
@@ -145,6 +185,7 @@ mod tests {
         assert_eq!(cfg.sweep.unrolls, vec![1, 8]);
         assert_eq!(cfg.sweep.amm_ports, vec![(2, 2)]);
         assert!(!cfg.sweep.include_multipump);
+        assert_eq!(cfg.sweep.extra_models, vec!["cmp4r2w".to_string()]);
         assert_eq!(cfg.out_csv.as_deref(), Some("results/custom.csv"));
     }
 
@@ -153,15 +194,31 @@ mod tests {
         let cfg = parse("benchmark = \"kmp\"\n").unwrap();
         assert_eq!(cfg.scale, Scale::Paper);
         assert_eq!(cfg.sweep.unrolls, Sweep::default().unrolls);
+        assert!(cfg.sweep.extra_models.is_empty());
     }
 
     #[test]
     fn rejects_unknown_benchmark() {
-        assert!(parse("benchmark = \"nope\"\n").is_err());
+        let err = parse("benchmark = \"nope\"\n").unwrap_err();
+        assert!(matches!(err, Error::UnknownBenchmark { .. }), "{err}");
     }
 
     #[test]
     fn rejects_bad_scale() {
         assert!(parse("benchmark = \"kmp\"\nscale = \"huge\"\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_model_id() {
+        let err = parse("benchmark = \"kmp\"\n[sweep]\nmodels = [\"warp9\"]\n").unwrap_err();
+        assert!(matches!(err, Error::UnknownModel { .. }), "{err}");
+    }
+
+    #[test]
+    fn explorer_builder_carries_the_config() {
+        let cfg = parse("benchmark = \"stencil2d\"\nscale = \"tiny\"\n").unwrap();
+        // The facade validates the same invariants the parser enforced.
+        let ex = cfg.explorer().offline().run().unwrap();
+        assert_eq!(ex.benchmark, "stencil2d");
     }
 }

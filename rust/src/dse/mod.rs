@@ -10,8 +10,8 @@
 //! * the locality-vs-ratio correlation behind the paper's
 //!   "AMMs win below L_spatial ≈ 0.3" claim.
 
-use crate::mem::MemKind;
-use crate::sched::{self, DesignConfig, SimOutput};
+use crate::mem::{self, MemKind, MemModel};
+use crate::sched::{self, DesignConfig, Knobs, SimOutput};
 use crate::trace::Trace;
 use crate::util::{pool, stats};
 
@@ -80,6 +80,12 @@ pub struct Sweep {
     pub include_multipump: bool,
     /// Include LVT table-based AMMs (as well as XOR).
     pub include_lvt: bool,
+    /// Additional memory-model ids resolved through the registry
+    /// ([`crate::mem::parse_model`]) — the hook that sweeps organizations
+    /// the built-in axes don't know about (registry extensions included).
+    /// Unknown ids are skipped here; [`crate::Explorer`] validates them
+    /// up front.
+    pub extra_models: Vec<String>,
     /// Worker threads (0 = auto).
     pub threads: usize,
 }
@@ -97,9 +103,19 @@ impl Default for Sweep {
             amm_ports: vec![(2, 1), (2, 2), (4, 2), (4, 4), (8, 4)],
             include_multipump: true,
             include_lvt: true,
+            extra_models: Vec::new(),
             threads: 0,
         }
     }
+}
+
+/// One enumerated sweep point: a memory model plus the non-memory knobs.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// The memory organization (trait object — built-in or registered).
+    pub model: Box<dyn MemModel>,
+    /// Unroll / word size / ALU knobs.
+    pub knobs: Knobs,
 }
 
 impl Sweep {
@@ -110,47 +126,63 @@ impl Sweep {
             word_bytes: vec![8],
             alus: vec![4],
             bank_counts: vec![1, 4],
-            include_dual_port: false,
-            include_block: false,
-            include_flat_xor: false,
             amm_ports: vec![(2, 1), (2, 2)],
             include_multipump: false,
             include_lvt: false,
-            threads: 0,
+            ..Sweep::default()
         }
     }
 
-    /// Enumerate every design configuration in the sweep.
-    pub fn configs(&self) -> Vec<DesignConfig> {
-        let mut mems: Vec<MemKind> = Vec::new();
+    /// The memory organizations of this sweep, as trait objects.
+    pub fn models(&self) -> Vec<Box<dyn MemModel>> {
+        let mut kinds: Vec<MemKind> = Vec::new();
         for &b in &self.bank_counts {
-            mems.push(MemKind::Banked { banks: b });
+            kinds.push(MemKind::Banked { banks: b });
             if self.include_dual_port && b > 1 {
-                mems.push(MemKind::BankedDualPort { banks: b });
+                kinds.push(MemKind::BankedDualPort { banks: b });
             }
             if self.include_block && b > 1 {
-                mems.push(MemKind::BankedBlock { banks: b });
+                kinds.push(MemKind::BankedBlock { banks: b });
             }
         }
         if self.include_multipump {
-            mems.push(MemKind::MultiPump { factor: 2 });
-            mems.push(MemKind::MultiPump { factor: 4 });
+            kinds.push(MemKind::MultiPump { factor: 2 });
+            kinds.push(MemKind::MultiPump { factor: 4 });
         }
         for &(r, w) in &self.amm_ports {
-            mems.push(MemKind::XorAmm { read_ports: r, write_ports: w });
+            kinds.push(MemKind::XorAmm { read_ports: r, write_ports: w });
             if self.include_lvt {
-                mems.push(MemKind::LvtAmm { read_ports: r, write_ports: w });
+                kinds.push(MemKind::LvtAmm { read_ports: r, write_ports: w });
             }
             if self.include_flat_xor {
-                mems.push(MemKind::XorFlat { read_ports: r, write_ports: w });
+                kinds.push(MemKind::XorFlat { read_ports: r, write_ports: w });
             }
         }
+        let mut models: Vec<Box<dyn MemModel>> = kinds.iter().map(MemKind::model).collect();
+        for id in &self.extra_models {
+            if let Some(m) = mem::parse_model(id) {
+                // dedupe against axis-produced models (and repeated
+                // extras) so e.g. flat_xor + models=["xorflat4r2w"]
+                // doesn't enumerate the same design twice
+                if !models.iter().any(|e| e.id() == m.id()) {
+                    models.push(m);
+                }
+            }
+        }
+        models
+    }
+
+    /// Enumerate every sweep point (models × unroll × word × alus).
+    pub fn points(&self) -> Vec<SweepPoint> {
         let mut out = Vec::new();
-        for &mem in &mems {
+        for model in self.models() {
             for &unroll in &self.unrolls {
                 for &word_bytes in &self.word_bytes {
                     for &alus in &self.alus {
-                        out.push(DesignConfig { mem, unroll, word_bytes, alus });
+                        out.push(SweepPoint {
+                            model: model.clone(),
+                            knobs: Knobs { unroll, word_bytes, alus },
+                        });
                     }
                 }
             }
@@ -158,24 +190,52 @@ impl Sweep {
         out
     }
 
+    /// Compat enumeration as [`DesignConfig`]s (built-in organizations
+    /// only — `extra_models` need the trait-object path of [`points`]).
+    pub fn configs(&self) -> Vec<DesignConfig> {
+        self.points()
+            .into_iter()
+            .filter_map(|p| {
+                MemKind::parse(&p.model.id()).map(|mem| DesignConfig {
+                    mem,
+                    unroll: p.knobs.unroll,
+                    word_bytes: p.knobs.word_bytes,
+                    alus: p.knobs.alus,
+                })
+            })
+            .collect()
+    }
+
     /// Run the sweep over a trace (parallel over design points).
     pub fn run(&self, trace: &Trace) -> Vec<DesignPoint> {
-        let configs = self.configs();
+        let points = self.points();
         let threads = if self.threads == 0 { pool::default_threads() } else { self.threads };
-        pool::parallel_map(&configs, threads, |cfg| evaluate(trace, cfg))
+        pool::parallel_map(&points, threads, |p| evaluate_model(trace, &*p.model, &p.knobs))
     }
 }
 
-/// Evaluate a single design point.
+/// Evaluate a single design point (compat wrapper over the model path).
 pub fn evaluate(trace: &Trace, cfg: &DesignConfig) -> DesignPoint {
-    let out = sched::simulate(trace, cfg);
+    evaluate_model(trace, &*cfg.mem.model(), &cfg.knobs())
+}
+
+/// Evaluate one (model, knobs) sweep point: size + build the memory,
+/// schedule, and label the result.
+pub fn evaluate_model(trace: &Trace, model: &dyn MemModel, knobs: &Knobs) -> DesignPoint {
+    let design = sched::build_memory_model(trace, model, knobs.word_bytes);
+    let out = sched::simulate_design(trace, knobs, &design);
+    point_from(&design.id, design.is_amm, knobs, out)
+}
+
+/// Assemble a [`DesignPoint`] from its labels + scheduling result.
+pub fn point_from(mem_id: &str, is_amm: bool, knobs: &Knobs, out: SimOutput) -> DesignPoint {
     DesignPoint {
-        id: format!("{}/u{}/w{}/a{}", cfg.mem.id(), cfg.unroll, cfg.word_bytes, cfg.alus),
-        mem_id: cfg.mem.id(),
-        is_amm: cfg.mem.is_amm(),
-        unroll: cfg.unroll,
-        word_bytes: cfg.word_bytes,
-        alus: cfg.alus,
+        id: format!("{}/u{}/w{}/a{}", mem_id, knobs.unroll, knobs.word_bytes, knobs.alus),
+        mem_id: mem_id.to_string(),
+        is_amm,
+        unroll: knobs.unroll,
+        word_bytes: knobs.word_bytes,
+        alus: knobs.alus,
         out,
     }
 }
@@ -340,13 +400,10 @@ mod tests {
             word_bytes: vec![8],
             alus: vec![8],
             bank_counts: vec![1, 2, 4],
-            include_dual_port: false,
-            include_block: false,
-            include_flat_xor: false,
             amm_ports: vec![(4, 2)],
             include_multipump: false,
             include_lvt: false,
-            threads: 0,
+            ..Sweep::default()
         };
         let points = sweep.run(&wl.trace);
         let best_banked = best_time(&points, |p| !p.is_amm);
@@ -387,6 +444,18 @@ mod tests {
         s.include_flat_xor = true;
         // +1 bankedblk4 (banks>1 only), +2 xorflat
         assert_eq!(s.configs().len(), base + (1 + 2) * 2);
+    }
+
+    #[test]
+    fn extra_models_extend_the_sweep_via_the_registry() {
+        let mut s = Sweep::quick();
+        let base = s.points().len();
+        s.extra_models = vec!["cmp2r2w".into(), "not-a-model".into()];
+        // unknown ids are skipped; cmp2r2w adds unrolls × words × alus
+        assert_eq!(s.points().len(), base + 2);
+        assert!(s.points().iter().any(|p| p.model.id() == "cmp2r2w"));
+        // the compat DesignConfig view still resolves built-ins
+        assert!(s.configs().iter().any(|c| c.mem == MemKind::CircuitMp { read_ports: 2, write_ports: 2 }));
     }
 
     #[test]

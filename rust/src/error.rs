@@ -1,0 +1,139 @@
+//! Unified error type for the crate (in-tree `anyhow` replacement).
+//!
+//! Every fallible public API returns [`Result`]. Variants are coarse on
+//! purpose: callers branch on *category* (bad config vs missing runtime
+//! support), and the payload carries the human-readable detail.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error for config parsing, exploration, reporting and the
+/// (optional) PJRT runtime.
+#[derive(Debug)]
+pub enum Error {
+    /// Filesystem failure, with the path or operation that failed.
+    Io {
+        /// What was being done (e.g. `read config configs/gemm.toml`).
+        what: String,
+        /// Underlying I/O error.
+        source: std::io::Error,
+    },
+    /// Malformed config file or option value.
+    Config(String),
+    /// Benchmark name not in [`crate::suite::ALL_BENCHMARKS`].
+    UnknownBenchmark {
+        /// The offending name.
+        name: String,
+    },
+    /// Memory-model id not resolvable through [`crate::mem::parse_model`].
+    UnknownModel {
+        /// The offending id.
+        id: String,
+    },
+    /// PJRT / cost-service failure (backend died, artifact mismatch, or
+    /// PJRT support not compiled in).
+    Runtime(String),
+    /// Anything else.
+    Msg(String),
+}
+
+impl Error {
+    /// Free-form error (the `anyhow::anyhow!` replacement).
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error::Msg(m.into())
+    }
+
+    /// Config-category error.
+    pub fn config(m: impl Into<String>) -> Error {
+        Error::Config(m.into())
+    }
+
+    /// Runtime-category error.
+    pub fn runtime(m: impl Into<String>) -> Error {
+        Error::Runtime(m.into())
+    }
+
+    /// Wrap an I/O error with context.
+    pub fn io(what: impl Into<String>, source: std::io::Error) -> Error {
+        Error::Io { what: what.into(), source }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io { what, source } => write!(f, "{what}: {source}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::UnknownBenchmark { name } => write!(
+                f,
+                "unknown benchmark {name:?} (known: {:?})",
+                crate::suite::ALL_BENCHMARKS
+            ),
+            Error::UnknownModel { id } => write!(
+                f,
+                "unknown memory model {id:?}; registered prefixes: {}",
+                crate::mem::registry()
+                    .iter()
+                    .map(|e| e.prefix)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io { what: "io".into(), source: e }
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::Config(format!("bad integer: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_detail() {
+        assert!(Error::config("bad key").to_string().contains("bad key"));
+        assert!(Error::runtime("no pjrt").to_string().contains("no pjrt"));
+        let e = Error::UnknownBenchmark { name: "nope".into() };
+        assert!(e.to_string().contains("nope"));
+        assert!(e.to_string().contains("gemm"));
+    }
+
+    #[test]
+    fn unknown_model_lists_registry_prefixes() {
+        let e = Error::UnknownModel { id: "weird9".into() };
+        let s = e.to_string();
+        assert!(s.contains("weird9"));
+        assert!(s.contains("banked"), "{s}");
+        assert!(s.contains("xor"), "{s}");
+    }
+
+    #[test]
+    fn io_errors_chain_a_source() {
+        use std::error::Error as _;
+        let e = Error::io("read x", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("read x"));
+    }
+}

@@ -1,0 +1,406 @@
+//! The `Explorer` facade — the crate's front door.
+//!
+//! One builder replaces the `suite::generate` → `Coordinator::run_sweep`
+//! → `dse::*` → `report::*` free-function choreography:
+//!
+//! ```no_run
+//! use amm_dse::{Explorer, dse::Sweep, suite::Scale};
+//!
+//! let ex = Explorer::new()
+//!     .workload("gemm", Scale::Paper)
+//!     .sweep(Sweep::default())
+//!     .threads(8)
+//!     .run()
+//!     .expect("exploration failed");
+//! println!("{} points, ratio {:?}", ex.points().len(), ex.performance_ratio());
+//! ex.write_csv("results/gemm.csv").unwrap();
+//! ```
+//!
+//! `run()` validates everything up front (benchmark name, registry
+//! model ids) and returns a single [`Exploration`] handle carrying the
+//! evaluated design points plus locality, Pareto, ratio and report
+//! accessors. Cost scoring goes through the [`Coordinator`]'s batched
+//! cost service (PJRT when artifacts + the `pjrt` feature are present,
+//! the pure-Rust mirror otherwise) unless [`Explorer::offline`]
+//! disables it.
+
+use crate::coordinator::{Coordinator, CostBackend};
+use crate::dse::{self, BenchSummary, DesignPoint, Sweep};
+use crate::error::{Error, Result};
+use crate::locality;
+use crate::report;
+use crate::suite::{self, Scale};
+use std::path::{Path, PathBuf};
+
+/// Builder for one design-space exploration run.
+#[derive(Clone, Debug)]
+pub struct Explorer {
+    benchmark: Option<String>,
+    scale: Scale,
+    sweep: Sweep,
+    /// Models added via [`Explorer::model`] — kept separate from the
+    /// sweep so [`Explorer::sweep`] can truly replace it.
+    models: Vec<String>,
+    threads: usize,
+    artifacts: Option<PathBuf>,
+    offline: bool,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Explorer {
+    /// Start a new exploration (defaults: paper scale, default sweep,
+    /// auto threads, batched cost service on).
+    pub fn new() -> Self {
+        Explorer {
+            benchmark: None,
+            scale: Scale::Paper,
+            sweep: Sweep::default(),
+            models: Vec::new(),
+            threads: 0,
+            artifacts: None,
+            offline: false,
+        }
+    }
+
+    /// Select the benchmark and scale to explore (required).
+    pub fn workload(mut self, name: impl Into<String>, scale: Scale) -> Self {
+        self.benchmark = Some(name.into());
+        self.scale = scale;
+        self
+    }
+
+    /// Replace the sweep definition. Models added with
+    /// [`Explorer::model`] are tracked separately and survive the
+    /// replacement, so builder order doesn't matter.
+    pub fn sweep(mut self, sweep: Sweep) -> Self {
+        self.sweep = sweep;
+        self
+    }
+
+    /// Add one memory model by registry id (on top of the sweep's axes).
+    pub fn model(mut self, id: impl Into<String>) -> Self {
+        self.models.push(id.into());
+        self
+    }
+
+    /// Scheduler worker threads (0 = auto).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Artifacts directory for the PJRT cost model (default:
+    /// [`crate::runtime::artifacts_dir`]).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Skip the coordinator/cost-service entirely and evaluate in-process
+    /// with the pure-Rust cost model (useful for tests and doctests).
+    pub fn offline(mut self) -> Self {
+        self.offline = true;
+        self
+    }
+
+    /// Validate, run the sweep, and hand back the results. Brings up a
+    /// private [`Coordinator`] (unless [`Explorer::offline`]); to share
+    /// one cost service across several explorations, use
+    /// [`Explorer::run_with`].
+    pub fn run(self) -> Result<Exploration> {
+        if self.offline {
+            let (benchmark, scale, sweep, wl) = self.prepare()?;
+            let locality = locality::analyze(&wl.trace).spatial_locality();
+            let points = sweep.run(&wl.trace);
+            return Ok(Exploration {
+                benchmark,
+                scale,
+                locality,
+                backend: None,
+                trace_nodes: wl.trace.len(),
+                checksum: wl.checksum,
+                points,
+            });
+        }
+        let dir = self.artifacts.clone().unwrap_or_else(crate::runtime::artifacts_dir);
+        let threads = if self.threads != 0 { self.threads } else { self.sweep.threads };
+        let coord = Coordinator::with_artifacts(dir).threads(threads);
+        self.run_with(&coord)
+    }
+
+    /// Validate and run the sweep through a caller-provided coordinator,
+    /// so several explorations share one cost service (and one compiled
+    /// PJRT cost artifact).
+    pub fn run_with(self, coord: &Coordinator) -> Result<Exploration> {
+        let (benchmark, scale, sweep, wl) = self.prepare()?;
+        let locality = locality::analyze(&wl.trace).spatial_locality();
+        let points = coord.run_sweep(&wl.trace, &sweep)?;
+        Ok(Exploration {
+            benchmark,
+            scale,
+            locality,
+            backend: Some(coord.backend),
+            trace_nodes: wl.trace.len(),
+            checksum: wl.checksum,
+            points,
+        })
+    }
+
+    /// Shared validation + trace generation for the run paths.
+    fn prepare(self) -> Result<(String, Scale, Sweep, suite::Workload)> {
+        let benchmark = self
+            .benchmark
+            .ok_or_else(|| Error::config("no workload selected: call .workload(name, scale)"))?;
+        if !suite::ALL_BENCHMARKS.contains(&benchmark.as_str()) {
+            return Err(Error::UnknownBenchmark { name: benchmark });
+        }
+        for id in self.sweep.extra_models.iter().chain(&self.models) {
+            if crate::mem::parse_model(id).is_none() {
+                return Err(Error::UnknownModel { id: id.clone() });
+            }
+        }
+        let mut sweep = self.sweep;
+        sweep.extra_models.extend(self.models);
+        if self.threads != 0 {
+            sweep.threads = self.threads;
+        }
+        let wl = suite::generate(&benchmark, self.scale);
+        Ok((benchmark, self.scale, sweep, wl))
+    }
+}
+
+/// Results of one exploration run: evaluated design points plus the
+/// post-processing the paper's figures need.
+#[derive(Clone, Debug)]
+pub struct Exploration {
+    /// Benchmark name.
+    pub benchmark: String,
+    /// Workload scale.
+    pub scale: Scale,
+    /// Weinberg spatial locality of the trace.
+    pub locality: f64,
+    /// Cost backend used (`None` for [`Explorer::offline`] runs).
+    pub backend: Option<CostBackend>,
+    /// Number of trace nodes scheduled per design point.
+    pub trace_nodes: usize,
+    /// Functional checksum of the traced execution.
+    pub checksum: f64,
+    /// Every evaluated design point.
+    pub points: Vec<DesignPoint>,
+}
+
+impl Exploration {
+    /// The evaluated design points.
+    pub fn points(&self) -> &[DesignPoint] {
+        &self.points
+    }
+
+    /// Human label for the cost backend (`"Pjrt"`, `"RustFallback"`, or
+    /// `"Offline"` for [`Explorer::offline`] runs).
+    pub fn backend_label(&self) -> &'static str {
+        match self.backend {
+            Some(CostBackend::Pjrt) => "Pjrt",
+            Some(CostBackend::RustFallback) => "RustFallback",
+            None => "Offline",
+        }
+    }
+
+    /// Pareto frontier minimizing (time, area) — one Fig-4 panel.
+    pub fn pareto_area(&self) -> Vec<&DesignPoint> {
+        dse::pareto_front(&self.points, |p| p.time_ns(), |p| p.area())
+            .into_iter()
+            .map(|i| &self.points[i])
+            .collect()
+    }
+
+    /// Pareto frontier minimizing (time, power).
+    pub fn pareto_power(&self) -> Vec<&DesignPoint> {
+        dse::pareto_front(&self.points, |p| p.time_ns(), |p| p.power())
+            .into_iter()
+            .map(|i| &self.points[i])
+            .collect()
+    }
+
+    /// §IV-C geometric-mean area ratio (banking / AMM) at 10% matched
+    /// time, if both families produced frontier points.
+    pub fn performance_ratio(&self) -> Option<f64> {
+        self.performance_ratio_tol(0.10)
+    }
+
+    /// [`Exploration::performance_ratio`] with an explicit relative
+    /// time-matching tolerance.
+    pub fn performance_ratio_tol(&self, tol: f64) -> Option<f64> {
+        dse::performance_ratio(&self.points, tol)
+    }
+
+    /// Fastest banking (non-AMM) execution time, ns.
+    pub fn best_banking_ns(&self) -> f64 {
+        dse::best_time(&self.points, |p| !p.is_amm)
+    }
+
+    /// Fastest AMM execution time, ns.
+    pub fn best_amm_ns(&self) -> f64 {
+        dse::best_time(&self.points, |p| p.is_amm)
+    }
+
+    /// Fig-5 row for this benchmark.
+    pub fn summary(&self) -> BenchSummary {
+        BenchSummary {
+            name: self.benchmark.clone(),
+            locality: self.locality,
+            perf_ratio: self.performance_ratio(),
+            best_banking_ns: self.best_banking_ns(),
+            best_amm_ns: self.best_amm_ns(),
+            n_points: self.points.len(),
+        }
+    }
+
+    /// The Fig-4 CSV (one row per design point).
+    pub fn to_csv(&self) -> String {
+        report::fig4_csv(&self.points)
+    }
+
+    /// Write the Fig-4 CSV to `path`, creating parent directories.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        report::write_file(path, &self.to_csv())
+            .map_err(|e| Error::io(format!("write {}", path.display()), e))
+    }
+
+    /// ASCII scatter of area vs time (the terminal Fig-4 panel).
+    pub fn scatter_area(&self, width: usize, height: usize) -> String {
+        report::ascii_scatter(
+            &self.points,
+            |p| p.area(),
+            &format!("{}: area vs time", self.benchmark),
+            width,
+            height,
+        )
+    }
+
+    /// ASCII scatter of power vs time.
+    pub fn scatter_power(&self, width: usize, height: usize) -> String {
+        report::ascii_scatter(
+            &self.points,
+            |p| p.power(),
+            &format!("{}: power vs time", self.benchmark),
+            width,
+            height,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_requires_a_workload() {
+        let err = Explorer::new().run().unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn run_rejects_unknown_benchmark() {
+        let err = Explorer::new().workload("nope", Scale::Tiny).run().unwrap_err();
+        assert!(matches!(err, Error::UnknownBenchmark { .. }), "{err}");
+    }
+
+    #[test]
+    fn run_rejects_unknown_model_id() {
+        let err = Explorer::new()
+            .workload("gemm", Scale::Tiny)
+            .sweep(Sweep::quick())
+            .model("nonsense42")
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, Error::UnknownModel { .. }), "{err}");
+    }
+
+    #[test]
+    fn offline_exploration_produces_points_and_summaries() {
+        let ex = Explorer::new()
+            .workload("stencil2d", Scale::Tiny)
+            .sweep(Sweep::quick())
+            .offline()
+            .run()
+            .unwrap();
+        assert!(!ex.points().is_empty());
+        assert!(ex.locality > 0.0);
+        assert!(ex.backend.is_none());
+        assert!(!ex.pareto_area().is_empty());
+        assert!(!ex.pareto_power().is_empty());
+        let s = ex.summary();
+        assert_eq!(s.n_points, ex.points().len());
+        assert!(ex.to_csv().lines().count() == ex.points().len() + 1);
+    }
+
+    #[test]
+    fn facade_matches_the_free_function_path() {
+        // Golden equivalence: the facade must reproduce exactly what the
+        // scattered free-function choreography produced.
+        let ex = Explorer::new()
+            .workload("gemm", Scale::Tiny)
+            .sweep(Sweep::quick())
+            .offline()
+            .run()
+            .unwrap();
+        let wl = suite::generate("gemm", Scale::Tiny);
+        let direct = Sweep::quick().run(&wl.trace);
+        assert_eq!(ex.points().len(), direct.len());
+        for (a, b) in ex.points().iter().zip(&direct) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.out.cycles, b.out.cycles, "{}", a.id);
+            assert_eq!(a.out.area_um2, b.out.area_um2, "{}", a.id);
+        }
+    }
+
+    #[test]
+    fn coordinator_backed_run_reports_a_backend() {
+        let tmp = std::env::temp_dir().join("amm_dse_explorer_test");
+        let _ = std::fs::create_dir_all(&tmp);
+        let ex = Explorer::new()
+            .workload("stencil2d", Scale::Tiny)
+            .sweep(Sweep::quick())
+            .artifacts(&tmp)
+            .run()
+            .unwrap();
+        assert_eq!(ex.backend, Some(CostBackend::RustFallback));
+        assert_eq!(ex.backend_label(), "RustFallback");
+        assert!(!ex.points().is_empty());
+    }
+
+    #[test]
+    fn model_calls_survive_a_later_sweep_replacement() {
+        // Builder order must not matter: .model() before .sweep() sticks.
+        let ex = Explorer::new()
+            .workload("stencil2d", Scale::Tiny)
+            .model("cmp2r2w")
+            .sweep(Sweep::quick())
+            .offline()
+            .run()
+            .unwrap();
+        assert!(ex.points().iter().any(|p| p.mem_id == "cmp2r2w"));
+    }
+
+    #[test]
+    fn run_with_shares_one_coordinator_across_explorations() {
+        let tmp = std::env::temp_dir().join("amm_dse_explorer_shared");
+        let _ = std::fs::create_dir_all(&tmp);
+        let coord = Coordinator::with_artifacts(tmp);
+        for bench in ["stencil2d", "gemm"] {
+            let ex = Explorer::new()
+                .workload(bench, Scale::Tiny)
+                .sweep(Sweep::quick())
+                .run_with(&coord)
+                .unwrap();
+            assert_eq!(ex.backend, Some(CostBackend::RustFallback));
+            assert!(!ex.points().is_empty());
+        }
+    }
+}

@@ -5,36 +5,47 @@
 //! (K. Sethi, cs.AR 2020).
 //!
 //! The library is a complete pre-RTL accelerator-memory exploration
-//! framework (a "Mem-Aladdin"):
+//! framework (a "Mem-Aladdin") organized around two seams:
 //!
-//! * [`suite`] — faithful ports of 13 MachSuite benchmarks that produce
-//!   dynamic instruction traces with true data dependencies.
-//! * [`trace`] — the dynamic trace / data-dependence-graph substrate.
-//! * [`sram`] — CACTI-lite analytical SRAM macro model (45 nm).
-//! * [`synth`] — DC-lite gate-level model of AMM read/write-path logic.
-//! * [`mem`] — memory-system models: banked scratchpads, multipumping,
-//!   LVT and XOR-based algorithmic multi-port memories (H-NTX-Rd,
-//!   B-NTX-Wr, HB-NTX-RdWr), and a circuit-level true-multiport reference.
-//! * [`sched`] — Aladdin-style resource-constrained cycle-accurate
-//!   scheduler over the DDG.
-//! * [`locality`] — Weinberg spatial-locality metric.
-//! * [`dse`] — design-space sweeps, Pareto frontiers, and the paper's
-//!   geometric-mean performance ratio.
-//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/
-//!   Pallas cost-model and workload artifacts (`artifacts/*.hlo.txt`).
-//! * [`coordinator`] — the parallel DSE orchestrator which batches
-//!   design-point cost queries through the PJRT cost model.
-//! * [`report`] — CSV and ASCII-plot emitters for every paper figure.
-//! * [`util`] — in-tree replacements for crates unavailable offline
-//!   (PRNG, stats, thread pool, mini-TOML, property testing, benchkit).
+//! * **Memory models as a trait** ([`mem::MemModel`] + [`mem::registry`]):
+//!   every organization — banked scratchpads, multipumping, LVT and XOR
+//!   AMMs, circuit-level multiport — is a registered trait object that
+//!   knows its id, port semantics and cost composition. Adding a new
+//!   AMM scheme is a one-module change in `mem/`.
+//! * **The [`Explorer`] facade**: one builder that traces a benchmark,
+//!   runs the sweep through the batched cost service, and returns an
+//!   [`Exploration`] with design points, Pareto frontiers, performance
+//!   ratios and CSV emitters.
 //!
 //! ## Quickstart
 //!
 //! ```no_run
-//! use amm_dse::{suite, sched, mem, dse};
+//! use amm_dse::{Explorer, dse::Sweep, suite::Scale};
 //!
-//! // Trace a 16x16x16 GEMM, schedule it on a 2R1W XOR-based AMM.
-//! let wl = suite::gemm::generate(16);
+//! let ex = Explorer::new()
+//!     .workload("gemm", Scale::Paper)
+//!     .sweep(Sweep::default())
+//!     .threads(8)
+//!     .run()
+//!     .expect("exploration failed");
+//! println!("{} design points, L_spatial {:.3}", ex.points().len(), ex.locality);
+//! for p in ex.pareto_area() {
+//!     println!("  {:<24} {:>10} cycles {:>12.0} um^2", p.id, p.out.cycles, p.area());
+//! }
+//! if let Some(r) = ex.performance_ratio() {
+//!     println!("banking/AMM area ratio (gmean): {r:.3}");
+//! }
+//! ex.write_csv("results/gemm.csv").expect("write csv");
+//! ```
+//!
+//! Single design points are still available through the value-level
+//! compat API:
+//!
+//! ```no_run
+//! use amm_dse::{suite, sched, mem};
+//!
+//! // Trace a GEMM, schedule it on a 2R1W XOR-based AMM.
+//! let wl = suite::generate("gemm", suite::Scale::Tiny);
 //! let cfg = sched::DesignConfig {
 //!     mem: mem::MemKind::XorAmm { read_ports: 2, write_ports: 1 },
 //!     unroll: 4,
@@ -45,7 +56,33 @@
 //! println!("cycles={} area={:.1}um^2 power={:.2}mW",
 //!          out.cycles, out.area_um2, out.power_mw);
 //! ```
+//!
+//! ## Module map
+//!
+//! * [`suite`] — faithful ports of 13 MachSuite benchmarks that produce
+//!   dynamic instruction traces with true data dependencies.
+//! * [`trace`] — the dynamic trace / data-dependence-graph substrate.
+//! * [`sram`] — CACTI-lite analytical SRAM macro model (45 nm).
+//! * [`synth`] — DC-lite gate-level model of AMM read/write-path logic.
+//! * [`mem`] — the memory-model trait, registry, and the eight built-in
+//!   organizations; functional (bit-accurate) AMM simulators.
+//! * [`sched`] — Aladdin-style resource-constrained cycle-accurate
+//!   scheduler over the DDG.
+//! * [`locality`] — Weinberg spatial-locality metric.
+//! * [`dse`] — sweep enumeration, Pareto frontiers, and the paper's
+//!   geometric-mean performance ratio.
+//! * [`explore`] — the [`Explorer`]/[`Exploration`] facade.
+//! * [`runtime`] — PJRT client wrapper for the AOT-compiled JAX/Pallas
+//!   cost-model artifacts (stubbed without the `pjrt` feature).
+//! * [`coordinator`] — the parallel DSE orchestrator which batches
+//!   design-point cost queries through the cost service.
+//! * [`report`] — CSV and ASCII-plot emitters for every paper figure.
+//! * [`config`] — TOML-subset run configuration files.
+//! * [`error`] — the unified [`Error`]/[`Result`] pair.
+//! * [`util`] — in-tree replacements for crates unavailable offline
+//!   (PRNG, stats, thread pool, mini-TOML, property testing, benchkit).
 
+pub mod error;
 pub mod util;
 
 pub mod trace;
@@ -59,10 +96,14 @@ pub mod sched;
 pub mod locality;
 pub mod dse;
 
+pub mod explore;
 pub mod runtime;
 pub mod coordinator;
 pub mod report;
 pub mod config;
+
+pub use error::{Error, Result};
+pub use explore::{Exploration, Explorer};
 
 /// Library version (mirrors `Cargo.toml`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -5,6 +5,7 @@
 //!
 //! ```text
 //! repro list                              list benchmarks + artifacts
+//! repro models                            list registered memory models
 //! repro trace <bench> [--scale s]         trace stats for one benchmark
 //! repro locality [--scale s]              Fig-5 locality table
 //! repro simulate <bench> --mem <id> [...] one design point
@@ -14,13 +15,16 @@
 //! repro synth-table                       §III-A AMM synthesis table
 //! repro port-scaling                      Fig-2 HB-NTX port-scaling table
 //! ```
+//!
+//! `simulate`, `sweep` and `figure` resolve memory organizations through
+//! the model registry and run through the [`Explorer`] facade — they
+//! work unchanged for any registered [`amm_dse::mem::MemModel`].
 
-use amm_dse::coordinator::Coordinator;
 use amm_dse::dse::{self, Sweep};
-use amm_dse::mem::MemKind;
-use amm_dse::sched::DesignConfig;
+use amm_dse::mem;
+use amm_dse::sched::Knobs;
 use amm_dse::suite::{self, Scale};
-use amm_dse::{config, locality, report};
+use amm_dse::{config, locality, report, Error, Explorer, Result};
 use std::path::PathBuf;
 use std::process::ExitCode;
 
@@ -29,16 +33,17 @@ fn main() -> ExitCode {
     match run(&args) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             ExitCode::FAILURE
         }
     }
 }
 
-fn run(args: &[String]) -> anyhow::Result<()> {
+fn run(args: &[String]) -> Result<()> {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "list" => cmd_list(),
+        "models" => cmd_models(),
         "trace" => cmd_trace(&args[1..]),
         "locality" => cmd_locality(&args[1..]),
         "simulate" => cmd_simulate(&args[1..]),
@@ -50,7 +55,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             print!("{}", HELP);
             Ok(())
         }
-        other => anyhow::bail!("unknown command {other:?}; see `repro help`"),
+        other => Err(Error::msg(format!("unknown command {other:?}; see `repro help`"))),
     }
 }
 
@@ -58,6 +63,7 @@ const HELP: &str = r#"repro — Design Space Exploration of Algorithmic Multi-Po
 
 USAGE:
   repro list
+  repro models
   repro trace <benchmark> [--scale tiny|paper|large]
   repro locality [--scale tiny|paper|large]
   repro simulate <benchmark> --mem <id> [--unroll N] [--word N] [--alus N] [--scale s]
@@ -67,24 +73,32 @@ USAGE:
   repro synth-table
   repro port-scaling
 
-MEMORY IDS: banked<N>, banked2p<N>, bankedblk<N>, pump<K>, lvt<R>r<W>w,
-            xor<R>r<W>w (HB-NTX), xorflat<R>r<W>w (LaForest), cmp<R>r<W>w
+MEMORY IDS: any id resolvable by the model registry (`repro models`),
+e.g. banked<N>, banked2p<N>, bankedblk<N>, pump<K>, lvt<R>r<W>w,
+xor<R>r<W>w (HB-NTX), xorflat<R>r<W>w (LaForest), cmp<R>r<W>w
 "#;
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
 }
 
-fn parse_scale(args: &[String]) -> anyhow::Result<Scale> {
+fn parse_scale(args: &[String]) -> Result<Scale> {
     Ok(match flag(args, "--scale").as_deref() {
         None | Some("paper") => Scale::Paper,
         Some("tiny") => Scale::Tiny,
         Some("large") => Scale::Large,
-        Some(other) => anyhow::bail!("bad --scale {other:?}"),
+        Some(other) => return Err(Error::config(format!("bad --scale {other:?}"))),
     })
 }
 
-fn cmd_list() -> anyhow::Result<()> {
+fn parse_u32(args: &[String], name: &str, default: u32) -> Result<u32> {
+    match flag(args, name) {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|_| Error::config(format!("bad {name} {s:?}"))),
+    }
+}
+
+fn cmd_list() -> Result<()> {
     println!("benchmarks (paper's Fig-4 DSE set marked *):");
     for name in suite::ALL_BENCHMARKS {
         let star = if suite::DSE_BENCHMARKS.contains(&name) { "*" } else { " " };
@@ -100,9 +114,20 @@ fn cmd_list() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
+fn cmd_models() -> Result<()> {
+    println!("{:<12} {:<14} description", "prefix", "example");
+    for e in mem::registry() {
+        println!("{:<12} {:<14} {}", e.prefix, e.example, e.synopsis);
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
     let name = args.first().filter(|a| !a.starts_with("--")).cloned()
-        .ok_or_else(|| anyhow::anyhow!("usage: repro trace <benchmark>"))?;
+        .ok_or_else(|| Error::config("usage: repro trace <benchmark>"))?;
+    if !suite::ALL_BENCHMARKS.contains(&name.as_str()) {
+        return Err(Error::UnknownBenchmark { name });
+    }
     let scale = parse_scale(args)?;
     let wl = suite::generate(&name, scale);
     let t = &wl.trace;
@@ -123,7 +148,7 @@ fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_locality(args: &[String]) -> anyhow::Result<()> {
+fn cmd_locality(args: &[String]) -> Result<()> {
     let scale = parse_scale(args)?;
     println!("{:<12} {:>10} {:>12}", "benchmark", "L_spatial", "stride1");
     for name in suite::ALL_BENCHMARKS {
@@ -134,22 +159,33 @@ fn cmd_locality(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
+fn cmd_simulate(args: &[String]) -> Result<()> {
     let name = args.first().filter(|a| !a.starts_with("--")).cloned()
-        .ok_or_else(|| anyhow::anyhow!("usage: repro simulate <benchmark> --mem <id>"))?;
+        .ok_or_else(|| Error::config("usage: repro simulate <benchmark> --mem <id>"))?;
+    if !suite::ALL_BENCHMARKS.contains(&name.as_str()) {
+        return Err(Error::UnknownBenchmark { name });
+    }
     let scale = parse_scale(args)?;
     let mem_id = flag(args, "--mem").unwrap_or_else(|| "banked1".into());
-    let mem = MemKind::parse(&mem_id)
-        .ok_or_else(|| anyhow::anyhow!("bad --mem {mem_id:?}; see `repro help`"))?;
-    let cfg = DesignConfig {
-        mem,
-        unroll: flag(args, "--unroll").map(|s| s.parse()).transpose()?.unwrap_or(1),
-        word_bytes: flag(args, "--word").map(|s| s.parse()).transpose()?.unwrap_or(8),
-        alus: flag(args, "--alus").map(|s| s.parse()).transpose()?.unwrap_or(4),
+    // Registry resolution: any registered model id works, not just the
+    // built-in MemKind variants.
+    let model = mem::parse_model(&mem_id).ok_or(Error::UnknownModel { id: mem_id.clone() })?;
+    let knobs = Knobs {
+        unroll: parse_u32(args, "--unroll", 1)?,
+        word_bytes: parse_u32(args, "--word", 8)?,
+        alus: parse_u32(args, "--alus", 4)?,
     };
     let wl = suite::generate(&name, scale);
-    let out = amm_dse::sched::simulate(&wl.trace, &cfg);
-    println!("benchmark {name} ({scale:?}), mem={mem_id} unroll={} word={}B alus={}", cfg.unroll, cfg.word_bytes, cfg.alus);
+    let p = dse::evaluate_model(&wl.trace, &*model, &knobs);
+    let out = &p.out;
+    println!(
+        "benchmark {name} ({scale:?}), mem={} ({}) unroll={} word={}B alus={}",
+        model.id(),
+        model.describe(),
+        knobs.unroll,
+        knobs.word_bytes,
+        knobs.alus
+    );
     println!("  cycles      {}", out.cycles);
     println!("  period      {:.3} ns", out.period_ns);
     println!("  time        {:.1} ns", out.time_ns);
@@ -160,35 +196,37 @@ fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+fn cmd_sweep(args: &[String]) -> Result<()> {
     let cfg_path = flag(args, "--config")
-        .ok_or_else(|| anyhow::anyhow!("usage: repro sweep --config <file.toml>"))?;
+        .ok_or_else(|| Error::config("usage: repro sweep --config <file.toml>"))?;
     let rc = config::load(std::path::Path::new(&cfg_path))?;
     let out_csv = flag(args, "--out")
         .or(rc.out_csv.clone())
         .unwrap_or_else(|| format!("results/{}.csv", rc.benchmark));
-    let wl = suite::generate(&rc.benchmark, rc.scale);
-    let coord = Coordinator::new();
     eprintln!(
-        "sweep {} ({:?}): {} design points, cost backend {:?}",
+        "sweep {} ({:?}): {} design points",
         rc.benchmark,
         rc.scale,
-        rc.sweep.configs().len(),
-        coord.backend
+        rc.sweep.points().len(),
     );
     let t0 = std::time::Instant::now();
-    let points = coord.run_sweep(&wl.trace, &rc.sweep)?;
-    eprintln!("evaluated {} points in {:.2?}", points.len(), t0.elapsed());
-    report::write_file(std::path::Path::new(&out_csv), &report::fig4_csv(&points))?;
-    println!("{}", report::ascii_scatter(&points, |p| p.area(), &format!("{} area vs time", rc.benchmark), 72, 20));
-    if let Some(r) = dse::performance_ratio(&points, 0.10) {
+    let ex = rc.explorer().run()?;
+    eprintln!(
+        "evaluated {} points in {:.2?} (cost backend {})",
+        ex.points().len(),
+        t0.elapsed(),
+        ex.backend_label()
+    );
+    ex.write_csv(&out_csv)?;
+    println!("{}", ex.scatter_area(72, 20));
+    if let Some(r) = ex.performance_ratio() {
         println!("performance ratio (banking area / AMM area, geomean): {r:.3}");
     }
     println!("wrote {out_csv}");
     Ok(())
 }
 
-fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
+fn cmd_figure(args: &[String]) -> Result<()> {
     let which = args.first().map(String::as_str).unwrap_or("");
     let scale = parse_scale(args)?;
     let out_dir = PathBuf::from(flag(args, "--out-dir").unwrap_or_else(|| "results".into()));
@@ -202,52 +240,52 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
                     .iter()
                     .find(|&&b| b == bench)
                     .copied()
-                    .ok_or_else(|| anyhow::anyhow!("unknown benchmark {bench:?}"))?]
+                    .ok_or(Error::UnknownBenchmark { name: bench })?]
             };
-            let coord = Coordinator::new();
-            eprintln!("cost backend: {:?}", coord.backend);
+            // one coordinator for the whole figure: the PJRT cost model
+            // compiles once and every benchmark batches through it
+            let coord = amm_dse::coordinator::Coordinator::new();
             for name in benches {
-                let wl = suite::generate(name, scale);
                 let t0 = std::time::Instant::now();
-                let points = coord.run_sweep(&wl.trace, &Sweep::default())?;
-                eprintln!("fig4 {name}: {} points in {:.2?}", points.len(), t0.elapsed());
-                report::write_file(&out_dir.join(format!("fig4_{name}.csv")), &report::fig4_csv(&points))?;
-                println!("{}", report::ascii_scatter(&points, |p| p.area(), &format!("Fig4 {name}: area vs time"), 72, 18));
-                println!("{}", report::ascii_scatter(&points, |p| p.power(), &format!("Fig4 {name}: power vs time"), 72, 18));
+                let ex =
+                    Explorer::new().workload(name, scale).sweep(Sweep::default()).run_with(&coord)?;
+                eprintln!(
+                    "fig4 {name}: {} points in {:.2?} (cost backend {})",
+                    ex.points().len(),
+                    t0.elapsed(),
+                    ex.backend_label()
+                );
+                ex.write_csv(out_dir.join(format!("fig4_{name}.csv")))?;
+                println!("{}", ex.scatter_area(72, 18));
+                println!("{}", ex.scatter_power(72, 18));
             }
             println!("wrote {}/fig4_*.csv", out_dir.display());
         }
         "fig5" => {
-            let coord = Coordinator::new();
-            eprintln!("cost backend: {:?}", coord.backend);
+            let coord = amm_dse::coordinator::Coordinator::new();
             let mut summaries = Vec::new();
             // locality for all benchmarks; ratio for the DSE set
             for name in suite::ALL_BENCHMARKS {
-                let wl = suite::generate(name, scale);
-                let loc = locality::analyze(&wl.trace).spatial_locality();
-                let (ratio, bests, n) = if suite::DSE_BENCHMARKS.contains(&name) {
-                    let points = coord.run_sweep(&wl.trace, &Sweep::default())?;
-                    (
-                        dse::performance_ratio(&points, 0.10),
-                        (
-                            dse::best_time(&points, |p| !p.is_amm),
-                            dse::best_time(&points, |p| p.is_amm),
-                        ),
-                        points.len(),
-                    )
+                if suite::DSE_BENCHMARKS.contains(&name) {
+                    let ex = Explorer::new()
+                        .workload(name, scale)
+                        .sweep(Sweep::default())
+                        .run_with(&coord)?;
+                    summaries.push(ex.summary());
                 } else {
-                    (None, (f64::NAN, f64::NAN), 0)
-                };
-                summaries.push(dse::BenchSummary {
-                    name: name.to_string(),
-                    locality: loc,
-                    perf_ratio: ratio,
-                    best_banking_ns: bests.0,
-                    best_amm_ns: bests.1,
-                    n_points: n,
-                });
+                    let wl = suite::generate(name, scale);
+                    summaries.push(dse::BenchSummary {
+                        name: name.to_string(),
+                        locality: locality::analyze(&wl.trace).spatial_locality(),
+                        perf_ratio: None,
+                        best_banking_ns: f64::NAN,
+                        best_amm_ns: f64::NAN,
+                        n_points: 0,
+                    });
+                }
             }
-            report::write_file(&out_dir.join("fig5.csv"), &report::fig5_csv(&summaries))?;
+            report::write_file(&out_dir.join("fig5.csv"), &report::fig5_csv(&summaries))
+                .map_err(|e| Error::io("write fig5.csv", e))?;
             println!("{}", report::fig5_ascii(&summaries));
             // the paper's claim: ratio correlates negatively with locality
             let with_ratio: Vec<&dse::BenchSummary> =
@@ -276,33 +314,28 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
             }
             println!("wrote {}/fig5.csv", out_dir.display());
         }
-        other => anyhow::bail!("unknown figure {other:?} (fig4|fig5)"),
+        other => return Err(Error::config(format!("unknown figure {other:?} (fig4|fig5)"))),
     }
     Ok(())
 }
 
-fn cmd_synth_table() -> anyhow::Result<()> {
-    // §III-A: synthesized AMM designs across depth × ports.
+fn cmd_synth_table() -> Result<()> {
+    // §III-A: synthesized AMM designs across depth × ports — resolved
+    // through the registry so new models can be added to the table by id.
     println!(
         "{:<12} {:>7} {:>6} {:>12} {:>10} {:>10} {:>10} {:>8}",
         "design", "depth", "width", "area_um2", "e_rd_pJ", "e_wr_pJ", "leak_uW", "t_ns"
     );
     for depth in [256u32, 1024, 4096, 16384] {
-        for kind in [
-            MemKind::Banked { banks: 1 },
-            MemKind::LvtAmm { read_ports: 2, write_ports: 1 },
-            MemKind::LvtAmm { read_ports: 2, write_ports: 2 },
-            MemKind::LvtAmm { read_ports: 4, write_ports: 2 },
-            MemKind::XorAmm { read_ports: 2, write_ports: 1 },
-            MemKind::XorAmm { read_ports: 2, write_ports: 2 },
-            MemKind::XorAmm { read_ports: 4, write_ports: 2 },
-            MemKind::CircuitMp { read_ports: 2, write_ports: 2 },
-            MemKind::CircuitMp { read_ports: 4, write_ports: 2 },
+        for id in [
+            "banked1", "lvt2r1w", "lvt2r2w", "lvt4r2w", "xor2r1w", "xor2r2w", "xor4r2w",
+            "cmp2r2w", "cmp4r2w",
         ] {
-            let d = kind.build(depth, 32);
+            let model = mem::parse_model(id).ok_or(Error::UnknownModel { id: id.into() })?;
+            let d = model.build(depth, 32);
             println!(
                 "{:<12} {:>7} {:>6} {:>12.1} {:>10.3} {:>10.3} {:>10.2} {:>8.3}",
-                kind.id(),
+                d.id,
                 depth,
                 32,
                 d.area_um2(),
@@ -317,17 +350,17 @@ fn cmd_synth_table() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_port_scaling() -> anyhow::Result<()> {
+fn cmd_port_scaling() -> Result<()> {
     // Fig 2: the HB-NTX-RdWr flow — how banks/capacity/logic scale as
     // ports are added.
     println!(
         "{:<10} {:>6} {:>8} {:>10} {:>12} {:>12} {:>8}",
         "config", "banks", "macros", "cap_factor", "sram_um2", "logic_um2", "t_ns"
     );
+    let base = mem::MemKind::Banked { banks: 1 }.build(4096, 32);
     for (r, w) in [(1u32, 1u32), (2, 1), (4, 1), (2, 2), (4, 2), (4, 4), (8, 4)] {
-        let kind = MemKind::XorAmm { read_ports: r, write_ports: w };
+        let kind = mem::MemKind::XorAmm { read_ports: r, write_ports: w };
         let d = kind.build(4096, 32);
-        let base = MemKind::Banked { banks: 1 }.build(4096, 32);
         println!(
             "{:<10} {:>6} {:>8} {:>10.2} {:>12.1} {:>12.1} {:>8.3}",
             format!("{r}R{w}W"),

@@ -87,14 +87,12 @@ pub fn build(cfg: CacheCfg) -> CacheDesign {
     let sets = cfg.sets();
     let data = cfg.ports.build(sets, cfg.line_bytes * 8);
     let tags = cfg.ports.build(sets, cfg.tag_bits());
-    // per-way comparators + way-select mux for each lookup port
-    let lookup_ports = match cfg.ports {
-        MemKind::LvtAmm { read_ports, .. }
-        | MemKind::XorAmm { read_ports, .. }
-        | MemKind::XorFlat { read_ports, .. }
-        | MemKind::CircuitMp { read_ports, .. } => read_ports,
-        MemKind::MultiPump { factor } => factor,
-        _ => 1,
+    // Per-way comparators + way-select mux for each lookup port. The
+    // port count comes from the built design's PortModel, so any
+    // registered organization composes here without a per-kind match.
+    let lookup_ports = match data.ports {
+        super::PortModel::TruePorts { reads, .. } => reads,
+        super::PortModel::PerBank { .. } => 1,
     };
     let cmp = synth::conflict_comparators(2, cfg.tag_bits()).times((cfg.ways * lookup_ports) as f32);
     let way_mux = synth::mux_tree(cfg.ways, cfg.line_bytes * 8).times(lookup_ports as f32);

@@ -1,92 +1,99 @@
 //! Memory-system models — the paper's §II design space.
 //!
-//! Two things live here, deliberately separated:
+//! Three things live here, deliberately separated:
 //!
-//! 1. **Cost composition** ([`MemKind::build`] → [`MemDesign`]): how many
-//!    SRAM macros, how much glue logic, and what access-time / frequency
-//!    penalty each organization pays. This folds [`crate::sram`] (CACTI
-//!    stand-in) and [`crate::synth`] (Design-Compiler stand-in) exactly
-//!    the way the paper folds CACTI + DC tables into Aladdin.
-//! 2. **Port arbitration** ([`PortModel`]): the per-cycle conflict
+//! 1. **The model seam** ([`MemModel`] + [`registry`]): every memory
+//!    organization is a trait object that knows its id, its port
+//!    semantics and how to build a costed design. The eight paper
+//!    organizations are in [`models`]; new schemes register a
+//!    [`ModelEntry`] and work everywhere (configs, sweeps, `Explorer`,
+//!    reports) without touching any other module.
+//! 2. **Cost composition** ([`MemModel::build`] → [`MemDesign`]): how
+//!    many SRAM macros, how much glue logic, and what access-time /
+//!    frequency penalty each organization pays. This folds
+//!    [`crate::sram`] (CACTI stand-in) and [`crate::synth`]
+//!    (Design-Compiler stand-in) exactly the way the paper folds
+//!    CACTI + DC tables into Aladdin. The design also carries the
+//!    *re-stacking scales* the coordinator uses to swap in
+//!    PJRT-evaluated macro costs without knowing the organization.
+//! 3. **Port arbitration** ([`PortModel`]): the per-cycle conflict
 //!    semantics the scheduler consults — banked structures serialize
 //!    same-bank conflicts, AMMs provide true conflict-free ports,
-//!    multipumping provides conflict-free ports at an external frequency
-//!    penalty.
+//!    multipumping provides conflict-free ports at an external
+//!    frequency penalty.
 //!
-//! Functional (bit-accurate) simulators of the XOR and LVT schemes are in
-//! [`functional`]; property tests prove the algorithmic schemes actually
-//! implement a coherent multi-port memory before we trust their cost
-//! models.
+//! [`MemKind`] survives as a thin `Copy` enum that forwards into the
+//! trait implementations — the value type configs and examples hold.
+//!
+//! Functional (bit-accurate) simulators of the XOR and LVT schemes are
+//! in [`functional`]; property tests prove the algorithmic schemes
+//! actually implement a coherent multi-port memory before we trust
+//! their cost models.
 
 pub mod cache;
 pub mod functional;
+pub mod model;
+pub mod models;
 
-use crate::sram::{macro_cost, MacroCfg, MacroCost};
-use crate::synth::{self, LogicCost};
+pub use model::{parse_model, register_model, registry, MemModel, ModelEntry};
+
+use crate::sram::MacroCost;
+use crate::synth::LogicCost;
 
 /// Memory organization being explored (the paper's design axes).
+///
+/// Compat shim: a `Copy` value type whose methods forward into the
+/// corresponding [`MemModel`] implementations in [`models`]. New code
+/// (and new organizations) should use the trait + registry directly;
+/// this enum only exists so configs and call sites can hold a cheap
+/// copyable value for the built-in organizations.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum MemKind {
     /// Array-partitioned banked scratchpad: `banks` cyclic partitions,
-    /// each a single-port (1RW) macro. Conflicting same-bank accesses
-    /// serialize — the paper's baseline.
+    /// each a single-port (1RW) macro — the paper's baseline.
     Banked {
         /// Number of cyclic partitions.
         banks: u32,
     },
-    /// Banked scratchpad of dual-port (1R1W) macros: one read and one
-    /// write per bank per cycle.
+    /// Banked scratchpad of dual-port (1R1W) macros.
     BankedDualPort {
         /// Number of cyclic partitions.
         banks: u32,
     },
-    /// Multipumping: a single macro internally clocked `factor`× faster,
-    /// exposing `factor` pseudo-ports while degrading the accelerator's
-    /// external operating frequency by the same factor (paper §I).
+    /// Multipumping: `factor` pseudo-ports at `1/factor` external clock.
     MultiPump {
         /// Internal clock multiple (2 or 4 in practice).
         factor: u32,
     },
     /// Table-based AMM: Live-Value-Table design (LaForest & Steffan).
-    /// `read_ports × write_ports` replicated 1R1W banks plus an LVT in
-    /// flops selecting the most-recently-written replica.
     LvtAmm {
         /// True read ports.
         read_ports: u32,
         /// True write ports.
         write_ports: u32,
     },
-    /// Non-table XOR-based AMM (HB-NTX-RdWr flow, paper Fig 2): read
-    /// ports doubled via H-NTX-Rd parity banks, write ports added via
-    /// B-NTX-Wr read-modify-write parity updates.
+    /// Non-table XOR-based AMM (HB-NTX-RdWr flow, paper Fig 2).
     XorAmm {
-        /// True read ports (power of two in the HB-NTX flow).
+        /// True read ports (rounded up to a power of two).
         read_ports: u32,
-        /// True write ports (power of two).
+        /// True write ports (rounded up to a power of two).
         write_ports: u32,
     },
-    /// Circuit-level true multiport macro — the design the paper says has
-    /// "no inherent EDA support"; costed with the quadratic cell-pitch
-    /// penalty as the upper-bound comparator.
+    /// Circuit-level true multiport macro (upper-bound comparator).
     CircuitMp {
         /// True read ports.
         read_ports: u32,
         /// True write ports.
         write_ports: u32,
     },
-    /// Flat (non-hierarchical) XOR AMM — LaForest et al.'s original
-    /// design: `W·(R+W−1)` full-depth 1R1W banks. The baseline HB-NTX's
-    /// hierarchical flow improves on (ablation comparator).
+    /// Flat (non-hierarchical) LaForest XOR AMM (ablation comparator).
     XorFlat {
         /// True read ports.
         read_ports: u32,
         /// True write ports.
         write_ports: u32,
     },
-    /// Block-partitioned banked scratchpad: bank = index / ceil(depth/B)
-    /// (contiguous ranges). The paper's §IV-A cyclic-vs-block axis:
-    /// block partitioning only parallelizes accesses that are *far
-    /// apart*, so stride-1 bursts all hit one bank.
+    /// Block-partitioned banked scratchpad (paper §IV-A).
     BankedBlock {
         /// Number of block partitions.
         banks: u32,
@@ -94,85 +101,54 @@ pub enum MemKind {
 }
 
 impl MemKind {
-    /// Short id used in CSV output and configs.
-    pub fn id(&self) -> String {
-        match self {
-            MemKind::Banked { banks } => format!("banked{banks}"),
-            MemKind::BankedDualPort { banks } => format!("banked2p{banks}"),
-            MemKind::MultiPump { factor } => format!("pump{factor}"),
-            MemKind::LvtAmm { read_ports, write_ports } => format!("lvt{read_ports}r{write_ports}w"),
-            MemKind::XorAmm { read_ports, write_ports } => format!("xor{read_ports}r{write_ports}w"),
-            MemKind::CircuitMp { read_ports, write_ports } => format!("cmp{read_ports}r{write_ports}w"),
-            MemKind::XorFlat { read_ports, write_ports } => format!("xorflat{read_ports}r{write_ports}w"),
-            MemKind::BankedBlock { banks } => format!("bankedblk{banks}"),
+    /// The trait-object view of this organization — the seam every
+    /// downstream layer actually consumes.
+    pub fn model(&self) -> Box<dyn MemModel> {
+        match *self {
+            MemKind::Banked { banks } => Box::new(models::Banked { banks }),
+            MemKind::BankedDualPort { banks } => Box::new(models::BankedDualPort { banks }),
+            MemKind::MultiPump { factor } => Box::new(models::MultiPump { factor }),
+            MemKind::LvtAmm { read_ports, write_ports } => {
+                Box::new(models::LvtAmm { read_ports, write_ports })
+            }
+            MemKind::XorAmm { read_ports, write_ports } => {
+                Box::new(models::XorAmm { read_ports, write_ports })
+            }
+            MemKind::CircuitMp { read_ports, write_ports } => {
+                Box::new(models::CircuitMp { read_ports, write_ports })
+            }
+            MemKind::XorFlat { read_ports, write_ports } => {
+                Box::new(models::XorFlat { read_ports, write_ports })
+            }
+            MemKind::BankedBlock { banks } => Box::new(models::BankedBlock { banks }),
         }
+    }
+
+    /// Short id used in CSV output and configs (forwards to the model).
+    pub fn id(&self) -> String {
+        self.model().id()
     }
 
     /// Is this one of the paper's AMM organizations (blue points in
     /// Fig 4)?
     pub fn is_amm(&self) -> bool {
-        matches!(self, MemKind::LvtAmm { .. } | MemKind::XorAmm { .. } | MemKind::XorFlat { .. })
+        self.model().is_amm()
     }
 
-    /// Parse an id produced by [`MemKind::id`] (used by the config layer).
+    /// Parse an id produced by [`MemKind::id`]. Delegates to the
+    /// registry's single id grammar ([`parse_model`]) and maps back via
+    /// [`MemModel::compat_kind`]; registry extensions (which have no
+    /// `MemKind`) yield `None` here — hold them as trait objects
+    /// instead.
     pub fn parse(s: &str) -> Option<MemKind> {
-        fn rw(s: &str) -> Option<(u32, u32)> {
-            let (r, rest) = s.split_once('r')?;
-            let w = rest.strip_suffix('w')?;
-            Some((r.parse().ok()?, w.parse().ok()?))
-        }
-        if let Some(rest) = s.strip_prefix("banked2p") {
-            return Some(MemKind::BankedDualPort { banks: rest.parse().ok()? });
-        }
-        if let Some(rest) = s.strip_prefix("bankedblk") {
-            return Some(MemKind::BankedBlock { banks: rest.parse().ok()? });
-        }
-        if let Some(rest) = s.strip_prefix("xorflat") {
-            let (r, w) = rw(rest)?;
-            return Some(MemKind::XorFlat { read_ports: r, write_ports: w });
-        }
-        if let Some(rest) = s.strip_prefix("banked") {
-            return Some(MemKind::Banked { banks: rest.parse().ok()? });
-        }
-        if let Some(rest) = s.strip_prefix("pump") {
-            return Some(MemKind::MultiPump { factor: rest.parse().ok()? });
-        }
-        if let Some(rest) = s.strip_prefix("lvt") {
-            let (r, w) = rw(rest)?;
-            return Some(MemKind::LvtAmm { read_ports: r, write_ports: w });
-        }
-        if let Some(rest) = s.strip_prefix("xor") {
-            let (r, w) = rw(rest)?;
-            return Some(MemKind::XorAmm { read_ports: r, write_ports: w });
-        }
-        if let Some(rest) = s.strip_prefix("cmp") {
-            let (r, w) = rw(rest)?;
-            return Some(MemKind::CircuitMp { read_ports: r, write_ports: w });
-        }
-        None
+        parse_model(s)?.compat_kind()
     }
 
     /// Build the physical design for a logical memory of `depth` words ×
-    /// `width` bits.
+    /// `width` bits (forwards to the model).
     pub fn build(&self, depth: u32, width: u32) -> MemDesign {
         let depth = depth.max(4);
-        match *self {
-            MemKind::Banked { banks } => banked(depth, width, banks, false),
-            MemKind::BankedDualPort { banks } => banked(depth, width, banks, true),
-            MemKind::MultiPump { factor } => multipump(depth, width, factor),
-            MemKind::LvtAmm { read_ports, write_ports } => lvt(depth, width, read_ports, write_ports),
-            MemKind::XorAmm { read_ports, write_ports } => xor_hbntx(depth, width, read_ports, write_ports),
-            MemKind::CircuitMp { read_ports, write_ports } => circuit_mp(depth, width, read_ports, write_ports),
-            MemKind::XorFlat { read_ports, write_ports } => xor_flat(depth, width, read_ports, write_ports),
-            MemKind::BankedBlock { banks } => {
-                let mut d = banked(depth, width, banks, false);
-                d.kind = MemKind::BankedBlock { banks: banks.max(1) };
-                if let PortModel::PerBank { block, .. } = &mut d.ports {
-                    *block = true;
-                }
-                d
-            }
-        }
+        self.model().build(depth, width)
     }
 }
 
@@ -205,10 +181,18 @@ pub enum PortModel {
 }
 
 /// A fully-costed memory design.
+///
+/// Self-describing: it carries the producing model's id, AMM flag, and
+/// the cost-composition scales, so downstream layers (scheduler,
+/// coordinator, reports) never need to know *which* organization built
+/// it — the seam that lets new [`MemModel`]s plug in without touching
+/// those layers.
 #[derive(Clone, Debug)]
 pub struct MemDesign {
-    /// Organization that produced this design.
-    pub kind: MemKind,
+    /// Id of the model that produced this design (e.g. `xor4r2w`).
+    pub id: String,
+    /// Whether the producing model is an algorithmic multi-port design.
+    pub is_amm: bool,
     /// Logical depth (words).
     pub depth: u32,
     /// Word width (bits).
@@ -227,12 +211,23 @@ pub struct MemDesign {
     /// Depth of each physical macro in words (what the memory compiler
     /// is asked for — the coordinator re-queries cost per macro config).
     pub macro_depth: u32,
+    /// (read, write) ports of each physical macro — 1R1W-as-1RW for all
+    /// algorithmic schemes, the true port counts for circuit multiport.
+    pub macro_ports: (u32, u32),
     /// Reads internally triggered per logical write (B-NTX-Wr parity
     /// read-modify-write) — inflates write energy.
     pub reads_per_write: f32,
     /// Physical banks read per logical read (H-NTX reads all banks in a
     /// row group) — inflates read energy.
     pub reads_per_read: f32,
+    /// Re-stacking: per-macro area multiplier beyond `macros` copies
+    /// (e.g. 1.3 for dual-port cell growth).
+    pub area_scale: f32,
+    /// Re-stacking: per-macro leakage multiplier.
+    pub leak_scale: f32,
+    /// Re-stacking: logical-write energy in units of one macro write
+    /// (e.g. `r` for LVT replica updates).
+    pub write_energy_scale: f32,
 }
 
 impl MemDesign {
@@ -256,212 +251,18 @@ impl MemDesign {
     pub fn t_access_ns(&self) -> f32 {
         self.sram.t_access_ns + self.logic.delay_ns
     }
-}
-
-/// Split `depth` into `banks` equal partitions (cyclic), minimum 4 words.
-fn bank_depth(depth: u32, banks: u32) -> u32 {
-    depth.div_ceil(banks.max(1)).max(4)
-}
-
-fn banked(depth: u32, width: u32, banks: u32, dual_port: bool) -> MemDesign {
-    let banks = banks.max(1);
-    let bd = bank_depth(depth, banks);
-    let cfg = MacroCfg { depth: bd, width, read_ports: 1, write_ports: 1 };
-    let one = macro_cost(cfg);
-    let mut sram = MacroCost::default();
-    for _ in 0..banks {
-        sram = sram.stack(one);
-    }
-    // energies: a logical access touches exactly one bank
-    sram.e_read_pj = one.e_read_pj;
-    sram.e_write_pj = if dual_port { one.e_write_pj * 1.1 } else { one.e_write_pj };
-    if dual_port {
-        // 1R1W macro: ~1.3× the 1RW area/leakage (second port on the cell)
-        sram.area_um2 *= 1.3;
-        sram.leak_uw *= 1.25;
-    }
-    // Crossbar + arbitration: every one of the (up to `banks`) concurrent
-    // requesters needs a banks-to-1 return mux, every bank an input mux,
-    // and the arbiter compares all pairs of in-flight bank addresses.
-    // This quadratic-ish glue is precisely why array partitioning stops
-    // scaling (paper §I: banking "provides memory ports with conflicts" —
-    // and resolving them dynamically costs interconnect).
-    let lanes = banks * if dual_port { 2 } else { 1 };
-    let xbar = synth::mux_tree(banks, width).times(lanes as f32);
-    let addr_bits = 32 - depth.leading_zeros().min(31);
-    let conflict = synth::conflict_comparators(lanes, addr_bits);
-    let logic = xbar.beside(conflict).cost();
-    MemDesign {
-        kind: if dual_port { MemKind::BankedDualPort { banks } } else { MemKind::Banked { banks } },
-        depth,
-        width,
-        sram,
-        logic,
-        ports: PortModel::PerBank {
-            banks,
-            reads: 1,
-            writes: 1,
-            shared: !dual_port,
-            block: false,
-        },
-        freq_factor: 1.0,
-        macros: banks,
-        macro_depth: bd,
-        reads_per_write: 0.0,
-        reads_per_read: 1.0,
-    }
-}
-
-fn multipump(depth: u32, width: u32, factor: u32) -> MemDesign {
-    let factor = factor.max(2);
-    let cfg = MacroCfg { depth, width, read_ports: 1, write_ports: 1 };
-    let one = macro_cost(cfg);
-    // fast-clock retiming registers on the port interface
-    let iface = synth::register_table(1, width * factor, 1, 1);
-    MemDesign {
-        kind: MemKind::MultiPump { factor },
-        depth,
-        width,
-        sram: one,
-        logic: iface.cost(),
-        ports: PortModel::TruePorts { reads: factor, writes: factor },
-        freq_factor: factor as f32,
-        macros: 1,
-        macro_depth: depth,
-        reads_per_write: 0.0,
-        reads_per_read: 1.0,
-    }
-}
-
-fn lvt(depth: u32, width: u32, read_ports: u32, write_ports: u32) -> MemDesign {
-    let r = read_ports.max(1);
-    let w = write_ports.max(1);
-    // LaForest LVT: w×r banks of 1R1W, full depth each; LVT tracks the
-    // most-recent writer (log2 w bits per word) in flops.
-    let replicas = r * w;
-    let one = macro_cost(MacroCfg { depth, width, read_ports: 1, write_ports: 1 });
-    let mut sram = MacroCost::default();
-    for _ in 0..replicas {
-        sram = sram.stack(one);
-    }
-    sram.e_read_pj = one.e_read_pj; // a read hits one replica (post-LVT mux)
-    sram.e_write_pj = one.e_write_pj * r as f32; // a write updates its row of r replicas
-    let lvt_bits = (32 - (w - 1).leading_zeros()).max(1);
-    let table = synth::register_table(depth, lvt_bits, r, w);
-    let outmux = synth::mux_tree(w, width).times(r as f32);
-    let logic = table.beside(outmux).cost();
-    MemDesign {
-        kind: MemKind::LvtAmm { read_ports: r, write_ports: w },
-        depth,
-        width,
-        sram,
-        logic,
-        ports: PortModel::TruePorts { reads: r, writes: w },
-        freq_factor: 1.0,
-        macros: replicas,
-        macro_depth: depth,
-        reads_per_write: 0.0,
-        reads_per_read: 1.0,
-    }
-}
-
-fn xor_hbntx(depth: u32, width: u32, read_ports: u32, write_ports: u32) -> MemDesign {
-    let r = read_ports.max(1).next_power_of_two();
-    let w = write_ports.max(1).next_power_of_two();
-    // HB-NTX-RdWr hierarchical composition (paper Fig 2): each port
-    // doubling splits the data banks in two and adds *one* reference
-    // (parity) layer over the split — a binary tree of parity banks.
-    //  · level k adds 2^(k-1) parity banks of depth/2^k ⇒ +0.5× capacity
-    //    per level (linear, the scheme's selling point over the flat
-    //    LaForest XOR design's W·(R+W−1) full copies);
-    //  · data banks: 2^L of depth/2^L; parity banks: 2^L − 1.
-    let rd_levels = r.trailing_zeros();
-    let wr_levels = w.trailing_zeros();
-    let levels = rd_levels + wr_levels;
-    let group = 2u32.pow(levels);
-    let n_banks = 2 * group - 1; // data + parity tree
-    let capacity = depth as f32 * (1.0 + 0.5 * levels as f32);
-    let bd = ((capacity / n_banks as f32).ceil() as u32).max(4);
-    let one = macro_cost(MacroCfg { depth: bd, width, read_ports: 1, write_ports: 1 });
-    let mut sram = MacroCost::default();
-    for _ in 0..n_banks {
-        sram = sram.stack(one);
-    }
-    // A conflicted read XORs one word per level of its parity chain;
-    // average between the direct hit (1) and full chain (levels+1).
-    sram.e_read_pj = one.e_read_pj;
-    // A write updates its data bank and one parity bank per level
-    // (each via read-modify-write).
-    sram.e_write_pj = one.e_write_pj * (1.0 + levels as f32);
-    let xor_rd = synth::xor_tree(levels + 1, width).times(r as f32);
-    let xor_wr = synth::xor_tree(3, width).times(w as f32 * levels.max(1) as f32);
-    let addr_bits = 32 - depth.leading_zeros().min(31);
-    let conflict = synth::conflict_comparators(r + w, addr_bits);
-    let logic = xor_rd.beside(xor_wr).beside(conflict).cost();
-    MemDesign {
-        kind: MemKind::XorAmm { read_ports: r, write_ports: w },
-        depth,
-        width,
-        sram,
-        logic,
-        ports: PortModel::TruePorts { reads: r, writes: w },
-        freq_factor: 1.0,
-        macros: n_banks,
-        macro_depth: bd,
-        reads_per_write: levels as f32, // parity-chain RMW reads
-        reads_per_read: (1.0 + (levels + 1) as f32) * 0.5,
-    }
-}
-
-fn circuit_mp(depth: u32, width: u32, read_ports: u32, write_ports: u32) -> MemDesign {
-    let cfg = MacroCfg { depth, width, read_ports, write_ports };
-    let one = macro_cost(cfg);
-    MemDesign {
-        kind: MemKind::CircuitMp { read_ports, write_ports },
-        depth,
-        width,
-        sram: one,
-        logic: LogicCost::default(),
-        ports: PortModel::TruePorts { reads: read_ports, writes: write_ports },
-        freq_factor: 1.0,
-        macros: 1,
-        macro_depth: depth,
-        reads_per_write: 0.0,
-        reads_per_read: 1.0,
-    }
-}
-
-/// LaForest flat XOR: W·(R+W−1) full-depth 1R1W banks — each write port
-/// owns (R + W−1) banks (R read copies + W−1 parity partners); reads XOR
-/// one word from each write lane. The paper cites this as the design the
-/// hierarchical HB-NTX flow improves on.
-fn xor_flat(depth: u32, width: u32, read_ports: u32, write_ports: u32) -> MemDesign {
-    let r = read_ports.max(1);
-    let w = write_ports.max(1);
-    let n_banks = w * (r + w - 1);
-    let one = macro_cost(MacroCfg { depth, width, read_ports: 1, write_ports: 1 });
-    let mut sram = MacroCost::default();
-    for _ in 0..n_banks {
-        sram = sram.stack(one);
-    }
-    sram.e_read_pj = one.e_read_pj;
-    sram.e_write_pj = one.e_write_pj * (r + w - 1) as f32; // update own lane
-    let xor_rd = synth::xor_tree(w, width).times(r as f32);
-    let addr_bits = 32 - depth.leading_zeros().min(31);
-    let conflict = synth::conflict_comparators(r + w, addr_bits);
-    let logic = xor_rd.beside(conflict).cost();
-    MemDesign {
-        kind: MemKind::XorFlat { read_ports: r, write_ports: w },
-        depth,
-        width,
-        sram,
-        logic,
-        ports: PortModel::TruePorts { reads: r, writes: w },
-        freq_factor: 1.0,
-        macros: n_banks,
-        macro_depth: depth,
-        reads_per_write: (w - 1) as f32,
-        reads_per_read: w as f32,
+    /// Rebuild the SRAM cost from a fresh per-macro cost, applying the
+    /// same composition `build` used (areas/leakage × macros × scales;
+    /// energies per logical access). This is how the coordinator patches
+    /// PJRT-evaluated macro costs into a design without knowing which
+    /// organization produced it.
+    pub fn restack(&mut self, one: MacroCost) {
+        let m = self.macros.max(1) as f32;
+        self.sram.area_um2 = one.area_um2 * m * self.area_scale;
+        self.sram.leak_uw = one.leak_uw * m * self.leak_scale;
+        self.sram.e_read_pj = one.e_read_pj;
+        self.sram.e_write_pj = one.e_write_pj * self.write_energy_scale;
+        self.sram.t_access_ns = one.t_access_ns;
     }
 }
 
@@ -482,6 +283,8 @@ mod tests {
             MemKind::BankedBlock { banks: 8 },
         ] {
             assert_eq!(MemKind::parse(&k.id()), Some(k), "{}", k.id());
+            // and the registry agrees with the shim
+            assert_eq!(parse_model(&k.id()).unwrap().id(), k.id());
         }
         assert_eq!(MemKind::parse("bogus"), None);
     }
@@ -549,7 +352,8 @@ mod tests {
     #[test]
     fn non_pow2_ports_round_up_in_xor() {
         let d = MemKind::XorAmm { read_ports: 3, write_ports: 1 }.build(1024, 32);
-        assert_eq!(d.kind, MemKind::XorAmm { read_ports: 4, write_ports: 1 });
+        assert_eq!(d.id, "xor4r1w");
+        assert_eq!(d.ports, PortModel::TruePorts { reads: 4, writes: 1 });
     }
 
     #[test]
@@ -583,5 +387,24 @@ mod tests {
         let d = MemKind::Banked { banks: 16 }.build(8, 32);
         assert!(d.area_um2() > 0.0);
         assert!(d.t_access_ns() > 0.0);
+    }
+
+    #[test]
+    fn restack_with_own_macro_cost_is_identity() {
+        for id in ["banked8", "banked2p4", "pump2", "lvt4r2w", "xor4r2w", "xorflat4r2w", "cmp4r2w"] {
+            let mut d = parse_model(id).unwrap().build(4096, 32);
+            let orig = d.sram;
+            let one = crate::sram::macro_cost(crate::sram::MacroCfg {
+                depth: d.macro_depth,
+                width: d.width,
+                read_ports: d.macro_ports.0,
+                write_ports: d.macro_ports.1,
+            });
+            d.restack(one);
+            let rel = |a: f32, b: f32| (a - b).abs() / b.abs().max(1e-9);
+            assert!(rel(d.sram.area_um2, orig.area_um2) < 1e-5, "{id} area");
+            assert!(rel(d.sram.e_write_pj, orig.e_write_pj) < 1e-5, "{id} e_write");
+            assert!(rel(d.sram.leak_uw, orig.leak_uw) < 1e-5, "{id} leak");
+        }
     }
 }

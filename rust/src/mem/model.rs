@@ -1,0 +1,171 @@
+//! The memory-model trait and registry — the crate's extension seam.
+//!
+//! A memory organization is anything that can (a) describe itself with a
+//! stable id, (b) build a fully-costed [`MemDesign`] for a logical
+//! depth × width, and (c) tell the scheduler its per-cycle port
+//! semantics. The eight organizations of the paper live in
+//! [`super::models`]; new schemes (e.g. the coding-based designs of
+//! arXiv:2001.09599) implement [`MemModel`], register a [`ModelEntry`],
+//! and immediately work everywhere — config files, sweeps, the
+//! `Explorer` facade, CSV reports — without touching `sched`, `dse` or
+//! `config`.
+
+use super::{MemDesign, PortModel};
+use std::sync::{OnceLock, RwLock};
+
+/// An explorable memory organization.
+///
+/// Object-safe: the DSE layers hold `Box<dyn MemModel>` and never match
+/// on concrete types. All cost/arbitration knowledge a downstream layer
+/// needs must be baked into the returned [`MemDesign`] / [`PortModel`].
+pub trait MemModel: std::fmt::Debug + Send + Sync {
+    /// Stable short id used in CSV output, configs and CLI flags
+    /// (e.g. `xor4r2w`). Must round-trip through the registry's parser.
+    fn id(&self) -> String;
+
+    /// One-line human description (CLI `repro models`, reports).
+    fn describe(&self) -> String;
+
+    /// Is this one of the algorithmic multi-port organizations (the blue
+    /// points of the paper's Fig 4)?
+    fn is_amm(&self) -> bool {
+        false
+    }
+
+    /// Per-cycle port semantics the scheduler enforces.
+    fn port_model(&self) -> PortModel;
+
+    /// Build the fully-costed physical design for a logical memory of
+    /// `depth` words × `width` bits.
+    fn build(&self, depth: u32, width: u32) -> MemDesign;
+
+    /// The built-in [`MemKind`](super::MemKind) this model corresponds
+    /// to, if any — the compat-shim hook that lets `MemKind::parse`
+    /// reuse the registry's single id grammar. Registry extensions keep
+    /// the default `None`.
+    fn compat_kind(&self) -> Option<super::MemKind> {
+        None
+    }
+
+    /// Object-safe clone.
+    fn boxed_clone(&self) -> Box<dyn MemModel>;
+}
+
+impl Clone for Box<dyn MemModel> {
+    fn clone(&self) -> Self {
+        self.boxed_clone()
+    }
+}
+
+/// Registry entry: how to recognize and construct one family of models
+/// from its id string.
+#[derive(Clone, Copy)]
+pub struct ModelEntry {
+    /// Id prefix this family owns (diagnostics; parsing is exact, so
+    /// overlapping prefixes like `banked`/`banked2p` are fine).
+    pub prefix: &'static str,
+    /// One-line description of the family.
+    pub synopsis: &'static str,
+    /// An example id that must parse (doubles as registry self-test).
+    pub example: &'static str,
+    /// Parse a *full* id into a model; `None` if the id is not this
+    /// family's (wrong prefix or malformed parameters).
+    pub parse: fn(&str) -> Option<Box<dyn MemModel>>,
+}
+
+impl std::fmt::Debug for ModelEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelEntry")
+            .field("prefix", &self.prefix)
+            .field("example", &self.example)
+            .finish()
+    }
+}
+
+/// Extension entries registered at run time (tests, downstream crates).
+fn extensions() -> &'static RwLock<Vec<ModelEntry>> {
+    static EXT: OnceLock<RwLock<Vec<ModelEntry>>> = OnceLock::new();
+    EXT.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+/// Register an additional memory-model family. Extensions take priority
+/// over built-ins with the same prefix, and the registration is
+/// process-global (intended for tests and downstream crates adding new
+/// AMM schemes).
+pub fn register_model(entry: ModelEntry) {
+    extensions().write().expect("model registry poisoned").push(entry);
+}
+
+/// All registered model families: extensions first (newest first), then
+/// the eight built-ins.
+pub fn registry() -> Vec<ModelEntry> {
+    let mut all: Vec<ModelEntry> =
+        extensions().read().expect("model registry poisoned").iter().rev().copied().collect();
+    all.extend_from_slice(super::models::BUILTIN_MODELS);
+    all
+}
+
+/// Resolve an id (e.g. `"xor4r2w"`) to a model through the registry.
+pub fn parse_model(id: &str) -> Option<Box<dyn MemModel>> {
+    registry().iter().find_map(|e| (e.parse)(id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_example_round_trips() {
+        for e in registry() {
+            let m = (e.parse)(e.example)
+                .unwrap_or_else(|| panic!("example {:?} does not parse", e.example));
+            assert_eq!(m.id(), e.example, "prefix {}", e.prefix);
+            assert!(m.id().starts_with(e.prefix), "{} !~ {}", m.id(), e.prefix);
+        }
+    }
+
+    #[test]
+    fn parse_model_rejects_garbage() {
+        assert!(parse_model("bogus").is_none());
+        assert!(parse_model("banked").is_none(), "missing bank count");
+        assert!(parse_model("xor2r").is_none(), "missing write ports");
+        assert!(parse_model("").is_none());
+    }
+
+    #[test]
+    fn registered_extension_is_found_and_prioritized() {
+        // A toy single-entry family; prefix deliberately exotic so this
+        // test cannot interfere with others sharing the process.
+        #[derive(Debug, Clone)]
+        struct Toy;
+        impl MemModel for Toy {
+            fn id(&self) -> String {
+                "toy0".into()
+            }
+            fn describe(&self) -> String {
+                "toy model".into()
+            }
+            fn port_model(&self) -> PortModel {
+                PortModel::TruePorts { reads: 1, writes: 1 }
+            }
+            fn build(&self, depth: u32, width: u32) -> MemDesign {
+                crate::mem::MemKind::Banked { banks: 1 }.build(depth, width)
+            }
+            fn boxed_clone(&self) -> Box<dyn MemModel> {
+                Box::new(self.clone())
+            }
+        }
+        fn parse_toy(s: &str) -> Option<Box<dyn MemModel>> {
+            (s == "toy0").then(|| Box::new(Toy) as Box<dyn MemModel>)
+        }
+        register_model(ModelEntry {
+            prefix: "toy",
+            synopsis: "test-only toy model",
+            example: "toy0",
+            parse: parse_toy,
+        });
+        let m = parse_model("toy0").expect("extension must resolve");
+        assert_eq!(m.id(), "toy0");
+        assert!(registry().iter().any(|e| e.prefix == "toy"));
+    }
+}

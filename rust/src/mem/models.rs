@@ -1,0 +1,683 @@
+//! The paper's eight memory organizations as concrete [`MemModel`]s.
+//!
+//! Each model owns its cost composition end to end: how many SRAM macros
+//! of which shape, the glue logic, the port semantics, and the
+//! *re-stacking scales* ([`MemDesign::area_scale`] and friends) the
+//! coordinator uses when it swaps the per-macro cost for a
+//! PJRT-evaluated one. Nothing outside this module knows how any
+//! organization composes its cost — that is the whole point of the
+//! trait seam.
+
+use super::model::{MemModel, ModelEntry};
+use super::{MemDesign, MemKind, PortModel};
+use crate::sram::{macro_cost, MacroCfg, MacroCost};
+use crate::synth::{self, LogicCost};
+
+/// Split `depth` into `banks` equal partitions (cyclic), minimum 4 words.
+fn bank_depth(depth: u32, banks: u32) -> u32 {
+    depth.div_ceil(banks.max(1)).max(4)
+}
+
+/// Stack `n` copies of one macro: areas and leakage add, the *logical*
+/// access energies stay per-macro (a logical access touches one macro
+/// unless the model's `reads_per_*` say otherwise).
+fn stack_n(one: MacroCost, n: u32) -> MacroCost {
+    let mut sram = MacroCost::default();
+    for _ in 0..n {
+        sram = sram.stack(one);
+    }
+    sram.e_read_pj = one.e_read_pj;
+    sram.e_write_pj = one.e_write_pj;
+    sram
+}
+
+/// Parse `"<R>r<W>w"` (e.g. `"4r2w"`).
+fn rw(s: &str) -> Option<(u32, u32)> {
+    let (r, rest) = s.split_once('r')?;
+    let w = rest.strip_suffix('w')?;
+    Some((r.parse().ok()?, w.parse().ok()?))
+}
+
+// ---------------------------------------------------------------------
+// Banked scratchpads (the paper's red baseline)
+// ---------------------------------------------------------------------
+
+/// Array-partitioned banked scratchpad of single-port (1RW) macros —
+/// cyclic partitioning, same-bank conflicts serialize (paper baseline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Banked {
+    /// Number of cyclic partitions.
+    pub banks: u32,
+}
+
+/// Banked scratchpad of dual-port (1R1W) macros.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BankedDualPort {
+    /// Number of cyclic partitions.
+    pub banks: u32,
+}
+
+/// Block-partitioned banked scratchpad (contiguous ranges): the paper's
+/// §IV-A cyclic-vs-block axis — stride-1 bursts all hit one bank.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BankedBlock {
+    /// Number of block partitions.
+    pub banks: u32,
+}
+
+/// Shared banked-build: the physical composition is identical for all
+/// three banked flavors modulo dual-port scaling and the block flag.
+fn build_banked(id: String, depth: u32, width: u32, banks: u32, dual_port: bool, block: bool) -> MemDesign {
+    let depth = depth.max(4);
+    let banks = banks.max(1);
+    let bd = bank_depth(depth, banks);
+    let one = macro_cost(MacroCfg { depth: bd, width, read_ports: 1, write_ports: 1 });
+    let mut sram = stack_n(one, banks);
+    let (area_scale, leak_scale, write_energy_scale) =
+        if dual_port { (1.3, 1.25, 1.1) } else { (1.0, 1.0, 1.0) };
+    // 1R1W macro: ~1.3× the 1RW area/leakage (second port on the cell).
+    sram.area_um2 *= area_scale;
+    sram.leak_uw *= leak_scale;
+    sram.e_write_pj *= write_energy_scale;
+    // Crossbar + arbitration: every one of the (up to `banks`) concurrent
+    // requesters needs a banks-to-1 return mux, every bank an input mux,
+    // and the arbiter compares all pairs of in-flight bank addresses.
+    // This quadratic-ish glue is precisely why array partitioning stops
+    // scaling (paper §I: banking "provides memory ports with conflicts" —
+    // and resolving them dynamically costs interconnect).
+    let lanes = banks * if dual_port { 2 } else { 1 };
+    let xbar = synth::mux_tree(banks, width).times(lanes as f32);
+    let addr_bits = 32 - depth.leading_zeros().min(31);
+    let conflict = synth::conflict_comparators(lanes, addr_bits);
+    let logic = xbar.beside(conflict).cost();
+    MemDesign {
+        id,
+        is_amm: false,
+        depth,
+        width,
+        sram,
+        logic,
+        ports: PortModel::PerBank { banks, reads: 1, writes: 1, shared: !dual_port, block },
+        freq_factor: 1.0,
+        macros: banks,
+        macro_depth: bd,
+        macro_ports: (1, 1),
+        reads_per_write: 0.0,
+        reads_per_read: 1.0,
+        area_scale,
+        leak_scale,
+        write_energy_scale,
+    }
+}
+
+impl MemModel for Banked {
+    fn id(&self) -> String {
+        format!("banked{}", self.banks)
+    }
+    fn describe(&self) -> String {
+        format!("cyclic array partitioning, {} single-port (1RW) banks", self.banks)
+    }
+    fn port_model(&self) -> PortModel {
+        PortModel::PerBank { banks: self.banks.max(1), reads: 1, writes: 1, shared: true, block: false }
+    }
+    fn build(&self, depth: u32, width: u32) -> MemDesign {
+        build_banked(self.id(), depth, width, self.banks, false, false)
+    }
+    fn compat_kind(&self) -> Option<MemKind> {
+        Some(MemKind::Banked { banks: self.banks })
+    }
+    fn boxed_clone(&self) -> Box<dyn MemModel> {
+        Box::new(*self)
+    }
+}
+
+impl MemModel for BankedDualPort {
+    fn id(&self) -> String {
+        format!("banked2p{}", self.banks)
+    }
+    fn describe(&self) -> String {
+        format!("cyclic array partitioning, {} dual-port (1R1W) banks", self.banks)
+    }
+    fn port_model(&self) -> PortModel {
+        PortModel::PerBank { banks: self.banks.max(1), reads: 1, writes: 1, shared: false, block: false }
+    }
+    fn build(&self, depth: u32, width: u32) -> MemDesign {
+        build_banked(self.id(), depth, width, self.banks, true, false)
+    }
+    fn compat_kind(&self) -> Option<MemKind> {
+        Some(MemKind::BankedDualPort { banks: self.banks })
+    }
+    fn boxed_clone(&self) -> Box<dyn MemModel> {
+        Box::new(*self)
+    }
+}
+
+impl MemModel for BankedBlock {
+    fn id(&self) -> String {
+        format!("bankedblk{}", self.banks)
+    }
+    fn describe(&self) -> String {
+        format!("block (contiguous-range) partitioning, {} 1RW banks", self.banks)
+    }
+    fn port_model(&self) -> PortModel {
+        PortModel::PerBank { banks: self.banks.max(1), reads: 1, writes: 1, shared: true, block: true }
+    }
+    fn build(&self, depth: u32, width: u32) -> MemDesign {
+        build_banked(self.id(), depth, width, self.banks, false, true)
+    }
+    fn compat_kind(&self) -> Option<MemKind> {
+        Some(MemKind::BankedBlock { banks: self.banks })
+    }
+    fn boxed_clone(&self) -> Box<dyn MemModel> {
+        Box::new(*self)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Multipumping
+// ---------------------------------------------------------------------
+
+/// Multipumping: a single macro internally clocked `factor`× faster,
+/// exposing `factor` pseudo-ports while degrading the accelerator's
+/// external operating frequency by the same factor (paper §I).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MultiPump {
+    /// Internal clock multiple (2 or 4 in practice).
+    pub factor: u32,
+}
+
+impl MemModel for MultiPump {
+    fn id(&self) -> String {
+        format!("pump{}", self.factor)
+    }
+    fn describe(&self) -> String {
+        format!("multipumping, {}x internal clock ({} pseudo-ports)", self.factor, self.factor)
+    }
+    fn port_model(&self) -> PortModel {
+        let f = self.factor.max(2);
+        PortModel::TruePorts { reads: f, writes: f }
+    }
+    fn build(&self, depth: u32, width: u32) -> MemDesign {
+        let depth = depth.max(4);
+        let factor = self.factor.max(2);
+        let one = macro_cost(MacroCfg { depth, width, read_ports: 1, write_ports: 1 });
+        // fast-clock retiming registers on the port interface
+        let iface = synth::register_table(1, width * factor, 1, 1);
+        MemDesign {
+            id: self.id(),
+            is_amm: false,
+            depth,
+            width,
+            sram: one,
+            logic: iface.cost(),
+            ports: PortModel::TruePorts { reads: factor, writes: factor },
+            freq_factor: factor as f32,
+            macros: 1,
+            macro_depth: depth,
+            macro_ports: (1, 1),
+            reads_per_write: 0.0,
+            reads_per_read: 1.0,
+            area_scale: 1.0,
+            leak_scale: 1.0,
+            write_energy_scale: 1.0,
+        }
+    }
+    fn compat_kind(&self) -> Option<MemKind> {
+        Some(MemKind::MultiPump { factor: self.factor })
+    }
+    fn boxed_clone(&self) -> Box<dyn MemModel> {
+        Box::new(*self)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Algorithmic multi-port memories (the blue points)
+// ---------------------------------------------------------------------
+
+/// Table-based AMM: Live-Value-Table design (LaForest & Steffan).
+/// `read_ports × write_ports` replicated 1R1W banks plus an LVT in flops
+/// selecting the most-recently-written replica.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LvtAmm {
+    /// True read ports.
+    pub read_ports: u32,
+    /// True write ports.
+    pub write_ports: u32,
+}
+
+impl MemModel for LvtAmm {
+    fn id(&self) -> String {
+        format!("lvt{}r{}w", self.read_ports, self.write_ports)
+    }
+    fn describe(&self) -> String {
+        format!("LVT table-based AMM, {}R{}W (r*w full replicas)", self.read_ports, self.write_ports)
+    }
+    fn is_amm(&self) -> bool {
+        true
+    }
+    fn port_model(&self) -> PortModel {
+        PortModel::TruePorts { reads: self.read_ports.max(1), writes: self.write_ports.max(1) }
+    }
+    fn build(&self, depth: u32, width: u32) -> MemDesign {
+        let depth = depth.max(4);
+        let r = self.read_ports.max(1);
+        let w = self.write_ports.max(1);
+        // LaForest LVT: w×r banks of 1R1W, full depth each; LVT tracks
+        // the most-recent writer (log2 w bits per word) in flops.
+        let replicas = r * w;
+        let one = macro_cost(MacroCfg { depth, width, read_ports: 1, write_ports: 1 });
+        let mut sram = stack_n(one, replicas);
+        sram.e_write_pj = one.e_write_pj * r as f32; // a write updates its row of r replicas
+        let lvt_bits = (32 - (w - 1).leading_zeros()).max(1);
+        let table = synth::register_table(depth, lvt_bits, r, w);
+        let outmux = synth::mux_tree(w, width).times(r as f32);
+        let logic = table.beside(outmux).cost();
+        MemDesign {
+            id: self.id(),
+            is_amm: true,
+            depth,
+            width,
+            sram,
+            logic,
+            ports: PortModel::TruePorts { reads: r, writes: w },
+            freq_factor: 1.0,
+            macros: replicas,
+            macro_depth: depth,
+            macro_ports: (1, 1),
+            reads_per_write: 0.0,
+            reads_per_read: 1.0,
+            area_scale: 1.0,
+            leak_scale: 1.0,
+            write_energy_scale: r as f32,
+        }
+    }
+    fn compat_kind(&self) -> Option<MemKind> {
+        Some(MemKind::LvtAmm { read_ports: self.read_ports, write_ports: self.write_ports })
+    }
+    fn boxed_clone(&self) -> Box<dyn MemModel> {
+        Box::new(*self)
+    }
+}
+
+/// Non-table XOR-based AMM (HB-NTX-RdWr flow, paper Fig 2): read ports
+/// doubled via H-NTX-Rd parity banks, write ports added via B-NTX-Wr
+/// read-modify-write parity updates. Ports round up to powers of two.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct XorAmm {
+    /// True read ports (power of two in the HB-NTX flow).
+    pub read_ports: u32,
+    /// True write ports (power of two).
+    pub write_ports: u32,
+}
+
+impl MemModel for XorAmm {
+    fn id(&self) -> String {
+        let r = self.read_ports.max(1).next_power_of_two();
+        let w = self.write_ports.max(1).next_power_of_two();
+        format!("xor{r}r{w}w")
+    }
+    fn describe(&self) -> String {
+        format!(
+            "HB-NTX-RdWr hierarchical XOR AMM, {}R{}W (binary parity tree)",
+            self.read_ports.max(1).next_power_of_two(),
+            self.write_ports.max(1).next_power_of_two()
+        )
+    }
+    fn is_amm(&self) -> bool {
+        true
+    }
+    fn port_model(&self) -> PortModel {
+        PortModel::TruePorts {
+            reads: self.read_ports.max(1).next_power_of_two(),
+            writes: self.write_ports.max(1).next_power_of_two(),
+        }
+    }
+    fn build(&self, depth: u32, width: u32) -> MemDesign {
+        let depth = depth.max(4);
+        let r = self.read_ports.max(1).next_power_of_two();
+        let w = self.write_ports.max(1).next_power_of_two();
+        // HB-NTX-RdWr hierarchical composition (paper Fig 2): each port
+        // doubling splits the data banks in two and adds *one* reference
+        // (parity) layer over the split — a binary tree of parity banks.
+        //  · level k adds 2^(k-1) parity banks of depth/2^k ⇒ +0.5×
+        //    capacity per level (linear, the scheme's selling point over
+        //    the flat LaForest XOR design's W·(R+W−1) full copies);
+        //  · data banks: 2^L of depth/2^L; parity banks: 2^L − 1.
+        let rd_levels = r.trailing_zeros();
+        let wr_levels = w.trailing_zeros();
+        let levels = rd_levels + wr_levels;
+        let group = 2u32.pow(levels);
+        let n_banks = 2 * group - 1; // data + parity tree
+        let capacity = depth as f32 * (1.0 + 0.5 * levels as f32);
+        let bd = ((capacity / n_banks as f32).ceil() as u32).max(4);
+        let one = macro_cost(MacroCfg { depth: bd, width, read_ports: 1, write_ports: 1 });
+        let mut sram = stack_n(one, n_banks);
+        // A write updates its data bank and one parity bank per level
+        // (each via read-modify-write).
+        sram.e_write_pj = one.e_write_pj * (1.0 + levels as f32);
+        let xor_rd = synth::xor_tree(levels + 1, width).times(r as f32);
+        let xor_wr = synth::xor_tree(3, width).times(w as f32 * levels.max(1) as f32);
+        let addr_bits = 32 - depth.leading_zeros().min(31);
+        let conflict = synth::conflict_comparators(r + w, addr_bits);
+        let logic = xor_rd.beside(xor_wr).beside(conflict).cost();
+        MemDesign {
+            id: self.id(),
+            is_amm: true,
+            depth,
+            width,
+            sram,
+            logic,
+            ports: PortModel::TruePorts { reads: r, writes: w },
+            freq_factor: 1.0,
+            macros: n_banks,
+            macro_depth: bd,
+            macro_ports: (1, 1),
+            reads_per_write: levels as f32, // parity-chain RMW reads
+            // A conflicted read XORs one word per level of its parity
+            // chain; average between direct hit (1) and full chain.
+            reads_per_read: (1.0 + (levels + 1) as f32) * 0.5,
+            area_scale: 1.0,
+            leak_scale: 1.0,
+            write_energy_scale: 1.0 + levels as f32,
+        }
+    }
+    fn compat_kind(&self) -> Option<MemKind> {
+        Some(MemKind::XorAmm { read_ports: self.read_ports, write_ports: self.write_ports })
+    }
+    fn boxed_clone(&self) -> Box<dyn MemModel> {
+        Box::new(*self)
+    }
+}
+
+/// LaForest flat XOR: `W·(R+W−1)` full-depth 1R1W banks — each write
+/// port owns `R + W − 1` banks (R read copies + W−1 parity partners);
+/// reads XOR one word from each write lane. The design the hierarchical
+/// HB-NTX flow improves on (ablation comparator).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct XorFlat {
+    /// True read ports.
+    pub read_ports: u32,
+    /// True write ports.
+    pub write_ports: u32,
+}
+
+impl MemModel for XorFlat {
+    fn id(&self) -> String {
+        format!("xorflat{}r{}w", self.read_ports, self.write_ports)
+    }
+    fn describe(&self) -> String {
+        format!("LaForest flat XOR AMM, {}R{}W (w*(r+w-1) full banks)", self.read_ports, self.write_ports)
+    }
+    fn is_amm(&self) -> bool {
+        true
+    }
+    fn port_model(&self) -> PortModel {
+        PortModel::TruePorts { reads: self.read_ports.max(1), writes: self.write_ports.max(1) }
+    }
+    fn build(&self, depth: u32, width: u32) -> MemDesign {
+        let depth = depth.max(4);
+        let r = self.read_ports.max(1);
+        let w = self.write_ports.max(1);
+        let n_banks = w * (r + w - 1);
+        let one = macro_cost(MacroCfg { depth, width, read_ports: 1, write_ports: 1 });
+        let mut sram = stack_n(one, n_banks);
+        sram.e_write_pj = one.e_write_pj * (r + w - 1) as f32; // update own lane
+        let xor_rd = synth::xor_tree(w, width).times(r as f32);
+        let addr_bits = 32 - depth.leading_zeros().min(31);
+        let conflict = synth::conflict_comparators(r + w, addr_bits);
+        let logic = xor_rd.beside(conflict).cost();
+        MemDesign {
+            id: self.id(),
+            is_amm: true,
+            depth,
+            width,
+            sram,
+            logic,
+            ports: PortModel::TruePorts { reads: r, writes: w },
+            freq_factor: 1.0,
+            macros: n_banks,
+            macro_depth: depth,
+            macro_ports: (1, 1),
+            reads_per_write: (w - 1) as f32,
+            reads_per_read: w as f32,
+            area_scale: 1.0,
+            leak_scale: 1.0,
+            write_energy_scale: (r + w - 1) as f32,
+        }
+    }
+    fn compat_kind(&self) -> Option<MemKind> {
+        Some(MemKind::XorFlat { read_ports: self.read_ports, write_ports: self.write_ports })
+    }
+    fn boxed_clone(&self) -> Box<dyn MemModel> {
+        Box::new(*self)
+    }
+}
+
+/// Circuit-level true multiport macro — the design the paper says has
+/// "no inherent EDA support"; costed with the quadratic cell-pitch
+/// penalty as the upper-bound comparator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CircuitMp {
+    /// True read ports.
+    pub read_ports: u32,
+    /// True write ports.
+    pub write_ports: u32,
+}
+
+impl MemModel for CircuitMp {
+    fn id(&self) -> String {
+        format!("cmp{}r{}w", self.read_ports, self.write_ports)
+    }
+    fn describe(&self) -> String {
+        format!("circuit-level true multiport macro, {}R{}W", self.read_ports, self.write_ports)
+    }
+    fn port_model(&self) -> PortModel {
+        PortModel::TruePorts { reads: self.read_ports, writes: self.write_ports }
+    }
+    fn build(&self, depth: u32, width: u32) -> MemDesign {
+        let depth = depth.max(4);
+        let cfg = MacroCfg {
+            depth,
+            width,
+            read_ports: self.read_ports,
+            write_ports: self.write_ports,
+        };
+        let one = macro_cost(cfg);
+        MemDesign {
+            id: self.id(),
+            is_amm: false,
+            depth,
+            width,
+            sram: one,
+            logic: LogicCost::default(),
+            ports: PortModel::TruePorts { reads: self.read_ports, writes: self.write_ports },
+            freq_factor: 1.0,
+            macros: 1,
+            macro_depth: depth,
+            macro_ports: (self.read_ports, self.write_ports),
+            reads_per_write: 0.0,
+            reads_per_read: 1.0,
+            area_scale: 1.0,
+            leak_scale: 1.0,
+            write_energy_scale: 1.0,
+        }
+    }
+    fn compat_kind(&self) -> Option<MemKind> {
+        Some(MemKind::CircuitMp { read_ports: self.read_ports, write_ports: self.write_ports })
+    }
+    fn boxed_clone(&self) -> Box<dyn MemModel> {
+        Box::new(*self)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Built-in registry
+// ---------------------------------------------------------------------
+
+fn parse_banked(s: &str) -> Option<Box<dyn MemModel>> {
+    let banks = s.strip_prefix("banked")?.parse().ok()?;
+    Some(Box::new(Banked { banks }))
+}
+
+fn parse_banked_dual(s: &str) -> Option<Box<dyn MemModel>> {
+    let banks = s.strip_prefix("banked2p")?.parse().ok()?;
+    Some(Box::new(BankedDualPort { banks }))
+}
+
+fn parse_banked_block(s: &str) -> Option<Box<dyn MemModel>> {
+    let banks = s.strip_prefix("bankedblk")?.parse().ok()?;
+    Some(Box::new(BankedBlock { banks }))
+}
+
+fn parse_pump(s: &str) -> Option<Box<dyn MemModel>> {
+    let factor = s.strip_prefix("pump")?.parse().ok()?;
+    Some(Box::new(MultiPump { factor }))
+}
+
+fn parse_lvt(s: &str) -> Option<Box<dyn MemModel>> {
+    let (read_ports, write_ports) = rw(s.strip_prefix("lvt")?)?;
+    Some(Box::new(LvtAmm { read_ports, write_ports }))
+}
+
+fn parse_xor(s: &str) -> Option<Box<dyn MemModel>> {
+    // "xorflat…" is owned by parse_xor_flat; reject it here so the
+    // registry stays order-independent.
+    let rest = s.strip_prefix("xor")?;
+    if rest.starts_with("flat") {
+        return None;
+    }
+    let (read_ports, write_ports) = rw(rest)?;
+    Some(Box::new(XorAmm { read_ports, write_ports }))
+}
+
+fn parse_xor_flat(s: &str) -> Option<Box<dyn MemModel>> {
+    let (read_ports, write_ports) = rw(s.strip_prefix("xorflat")?)?;
+    Some(Box::new(XorFlat { read_ports, write_ports }))
+}
+
+fn parse_cmp(s: &str) -> Option<Box<dyn MemModel>> {
+    let (read_ports, write_ports) = rw(s.strip_prefix("cmp")?)?;
+    Some(Box::new(CircuitMp { read_ports, write_ports }))
+}
+
+/// The eight built-in model families.
+pub const BUILTIN_MODELS: &[ModelEntry] = &[
+    ModelEntry {
+        prefix: "banked",
+        synopsis: "cyclic array partitioning, single-port (1RW) banks (paper baseline)",
+        example: "banked8",
+        parse: parse_banked,
+    },
+    ModelEntry {
+        prefix: "banked2p",
+        synopsis: "cyclic array partitioning, dual-port (1R1W) banks",
+        example: "banked2p4",
+        parse: parse_banked_dual,
+    },
+    ModelEntry {
+        prefix: "bankedblk",
+        synopsis: "block (contiguous-range) partitioning, 1RW banks (paper SIV-A)",
+        example: "bankedblk8",
+        parse: parse_banked_block,
+    },
+    ModelEntry {
+        prefix: "pump",
+        synopsis: "multipumping: K pseudo-ports at 1/K external clock",
+        example: "pump2",
+        parse: parse_pump,
+    },
+    ModelEntry {
+        prefix: "lvt",
+        synopsis: "LVT table-based AMM (LaForest & Steffan)",
+        example: "lvt4r2w",
+        parse: parse_lvt,
+    },
+    ModelEntry {
+        prefix: "xor",
+        synopsis: "HB-NTX-RdWr hierarchical XOR AMM (paper Fig 2)",
+        example: "xor4r2w",
+        parse: parse_xor,
+    },
+    ModelEntry {
+        prefix: "xorflat",
+        synopsis: "LaForest flat XOR AMM (ablation comparator)",
+        example: "xorflat4r2w",
+        parse: parse_xor_flat,
+    },
+    ModelEntry {
+        prefix: "cmp",
+        synopsis: "circuit-level true multiport macro (quadratic pitch penalty)",
+        example: "cmp4r2w",
+        parse: parse_cmp,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::parse_model;
+
+    #[test]
+    fn ids_round_trip_through_the_registry() {
+        let models: Vec<Box<dyn MemModel>> = vec![
+            Box::new(Banked { banks: 8 }),
+            Box::new(BankedDualPort { banks: 4 }),
+            Box::new(BankedBlock { banks: 8 }),
+            Box::new(MultiPump { factor: 2 }),
+            Box::new(LvtAmm { read_ports: 2, write_ports: 2 }),
+            Box::new(XorAmm { read_ports: 4, write_ports: 2 }),
+            Box::new(XorFlat { read_ports: 4, write_ports: 2 }),
+            Box::new(CircuitMp { read_ports: 4, write_ports: 4 }),
+        ];
+        for m in &models {
+            let parsed = parse_model(&m.id()).unwrap_or_else(|| panic!("{} unparsed", m.id()));
+            assert_eq!(parsed.id(), m.id());
+            assert_eq!(parsed.is_amm(), m.is_amm(), "{}", m.id());
+            assert_eq!(parsed.port_model(), m.port_model(), "{}", m.id());
+        }
+    }
+
+    #[test]
+    fn build_port_model_matches_trait_port_model() {
+        // The design a model builds must enforce exactly the semantics
+        // the model advertises.
+        for id in ["banked8", "banked2p4", "bankedblk8", "pump2", "lvt4r2w", "xor4r2w", "xorflat4r2w", "cmp2r2w"] {
+            let m = parse_model(id).unwrap();
+            let d = m.build(4096, 32);
+            assert_eq!(d.ports, m.port_model(), "{id}");
+            assert_eq!(d.id, m.id(), "{id}");
+            assert_eq!(d.is_amm, m.is_amm(), "{id}");
+        }
+    }
+
+    #[test]
+    fn restacking_scales_reproduce_build_energies() {
+        // For every model: rebuilding sram cost from (per-macro cost ×
+        // macros × scales) must equal what build() composed. This is the
+        // contract the coordinator relies on when it patches in
+        // PJRT-evaluated macro costs.
+        for id in ["banked8", "banked2p4", "bankedblk8", "pump2", "lvt4r2w", "xor4r2w", "xorflat4r2w", "cmp4r2w"] {
+            let d = parse_model(id).unwrap().build(4096, 32);
+            let one = macro_cost(MacroCfg {
+                depth: d.macro_depth,
+                width: d.width,
+                read_ports: d.macro_ports.0,
+                write_ports: d.macro_ports.1,
+            });
+            let m = d.macros as f32;
+            assert!((d.sram.area_um2 - one.area_um2 * m * d.area_scale).abs() / d.sram.area_um2 < 1e-5, "{id} area");
+            assert!((d.sram.leak_uw - one.leak_uw * m * d.leak_scale).abs() / d.sram.leak_uw < 1e-5, "{id} leak");
+            assert!((d.sram.e_read_pj - one.e_read_pj).abs() / d.sram.e_read_pj < 1e-5, "{id} e_read");
+            assert!(
+                (d.sram.e_write_pj - one.e_write_pj * d.write_energy_scale).abs() / d.sram.e_write_pj < 1e-5,
+                "{id} e_write"
+            );
+        }
+    }
+
+    #[test]
+    fn xor_parser_does_not_swallow_xorflat() {
+        assert_eq!(parse_model("xorflat4r2w").unwrap().id(), "xorflat4r2w");
+        assert_eq!(parse_model("xor4r2w").unwrap().id(), "xor4r2w");
+    }
+}

@@ -1,0 +1,127 @@
+//! Real PJRT runtime over the vendored `xla` crate. Compiled only with
+//! the `pjrt` cargo feature (see `rust/Cargo.toml` for how to vendor
+//! the dependency); the default build uses [`super::stub`] instead.
+
+use crate::error::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+fn xerr(what: &str, e: impl std::fmt::Display) -> Error {
+    Error::runtime(format!("{what}: {e}"))
+}
+
+/// A loaded, compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name.
+    pub name: String,
+}
+
+impl Executable {
+    /// Run with f32 input buffers of the given shapes; returns the
+    /// flattened f32 outputs of the (tuple) result.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| xerr(&format!("reshape input to {dims:?}"), e))?;
+            literals.push(lit);
+        }
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| xerr("execute", e))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| xerr("to_literal_sync", e))?;
+        let parts = result.decompose_tuple().map_err(|e| xerr("decompose_tuple", e))?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| xerr("to_vec<f32>", e)))
+            .collect()
+    }
+
+    /// Run with i32 inputs, i32 outputs (for the XOR kernel).
+    pub fn run_i32(&self, inputs: &[(&[i32], &[usize])]) -> Result<Vec<Vec<i32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| xerr(&format!("reshape input to {dims:?}"), e))?;
+            literals.push(lit);
+        }
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| xerr("execute", e))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| xerr("to_literal_sync", e))?;
+        let tuple = result.decompose_tuple().map_err(|e| xerr("decompose_tuple", e))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<i32>().map_err(|e| xerr("to_vec<i32>", e)))
+            .collect()
+    }
+}
+
+/// PJRT client + executable cache. `PjRtClient` is `Rc`-based (not
+/// `Send`), so a `Runtime` lives on one thread; the coordinator runs a
+/// dedicated PJRT service thread and ships batches to it over channels
+/// (see [`crate::coordinator`]).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the default artifacts dir.
+    pub fn cpu() -> Result<Self> {
+        Self::with_dir(super::artifacts_dir())
+    }
+
+    /// Create a CPU PJRT client rooted at `dir`.
+    pub fn with_dir<P: Into<PathBuf>>(dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| xerr("create PJRT CPU client", e))?;
+        Ok(Runtime { client, dir: dir.into(), cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Artifacts directory this runtime reads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Does the artifact file exist?
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.path_of(name).exists()
+    }
+
+    fn path_of(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.path_of(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| xerr(&format!("load HLO text {}", path.display()), e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).map_err(|e| xerr(&format!("compile {name}"), e))?;
+        let rc = Rc::new(Executable { exe, name: name.to_string() });
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,71 @@
+//! Stub runtime used when the `pjrt` feature (and its vendored `xla`
+//! dependency) is not available. Mirrors the real API so callers
+//! compile identically; every constructor fails with
+//! [`Error::Runtime`], which the coordinator treats as "fall back to
+//! the pure-Rust cost mirror".
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+const UNAVAILABLE: &str =
+    "pjrt support not compiled in (enable the `pjrt` feature and vendor the `xla` crate)";
+
+/// A loaded, compiled executable (stub: cannot be constructed).
+pub struct Executable {
+    /// Artifact name.
+    pub name: String,
+    _private: (),
+}
+
+impl Executable {
+    /// Run with f32 input buffers of the given shapes; returns the
+    /// flattened f32 outputs of the (tuple) result.
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        Err(Error::runtime(UNAVAILABLE))
+    }
+
+    /// Run with i32 inputs, i32 outputs (for the XOR kernel).
+    pub fn run_i32(&self, _inputs: &[(&[i32], &[usize])]) -> Result<Vec<Vec<i32>>> {
+        Err(Error::runtime(UNAVAILABLE))
+    }
+}
+
+/// PJRT client + executable cache (stub: construction always fails, so
+/// callers take their documented fallback path).
+pub struct Runtime {
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the default artifacts dir.
+    pub fn cpu() -> Result<Self> {
+        Self::with_dir(super::artifacts_dir())
+    }
+
+    /// Create a CPU PJRT client rooted at `dir`.
+    pub fn with_dir<P: Into<PathBuf>>(dir: P) -> Result<Self> {
+        let _ = Runtime { dir: dir.into() };
+        Err(Error::runtime(UNAVAILABLE))
+    }
+
+    /// Artifacts directory this runtime reads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Does the artifact file exist?
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, _name: &str) -> Result<Rc<Executable>> {
+        Err(Error::runtime(UNAVAILABLE))
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+}

@@ -17,11 +17,16 @@
 //! (area, power, clock period) exactly as Aladdin's backend does
 //! (paper §III-B/§III-C).
 
-use crate::mem::{MemDesign, MemKind, PortModel};
+use crate::mem::{MemDesign, MemKind, MemModel, PortModel};
 use crate::trace::{OpKind, Trace};
 use std::collections::BinaryHeap;
 
 /// One point in the design space (the paper's sweep axes, §IV-A).
+///
+/// Compat value type for the built-in [`MemKind`] organizations. The
+/// scheduler itself is memory-model-agnostic: it consumes a pre-built
+/// [`MemDesign`] plus [`Knobs`], so registry-extension models run
+/// through [`simulate_design`] without ever constructing a `MemKind`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DesignConfig {
     /// Memory organization.
@@ -38,6 +43,29 @@ impl DesignConfig {
     /// A minimal single-port baseline.
     pub fn baseline() -> Self {
         DesignConfig { mem: MemKind::Banked { banks: 1 }, unroll: 1, word_bytes: 8, alus: 2 }
+    }
+
+    /// The memory-agnostic scheduling knobs of this configuration.
+    pub fn knobs(&self) -> Knobs {
+        Knobs { unroll: self.unroll, word_bytes: self.word_bytes, alus: self.alus }
+    }
+}
+
+/// The non-memory sweep axes: everything the scheduler needs besides the
+/// built [`MemDesign`] itself.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Knobs {
+    /// Loop unrolling factor (≥1).
+    pub unroll: u32,
+    /// Scratchpad word size in bytes.
+    pub word_bytes: u32,
+    /// ALU issue slots per cycle.
+    pub alus: u32,
+}
+
+impl Default for Knobs {
+    fn default() -> Self {
+        Knobs { unroll: 1, word_bytes: 8, alus: 2 }
     }
 }
 
@@ -92,13 +120,13 @@ const FU_LEAK_UW_PER_UM2: f32 = 0.012;
 /// Schedule `trace` under `cfg`, returning cycles + physical cost.
 pub fn simulate(trace: &Trace, cfg: &DesignConfig) -> SimOutput {
     let design = build_memory(trace, cfg);
-    simulate_with_design(trace, cfg, &design)
+    simulate_design(trace, &cfg.knobs(), &design)
 }
 
-/// Build the memory design implied by `cfg` for this trace: the
-/// scratchpad must hold every traced array at the configured word size.
-pub fn build_memory(trace: &Trace, cfg: &DesignConfig) -> MemDesign {
-    let word_bytes = cfg.word_bytes.max(1);
+/// Scratchpad depth (words) needed to hold every non-promoted traced
+/// array at the given word size.
+pub fn footprint_depth(trace: &Trace, word_bytes: u32) -> u32 {
+    let word_bytes = word_bytes.max(1);
     let promoted = promoted_arrays(trace);
     let total_bytes: u64 = trace
         .arrays
@@ -107,8 +135,21 @@ pub fn build_memory(trace: &Trace, cfg: &DesignConfig) -> MemDesign {
         .filter(|(_, &p)| !p)
         .map(|(a, _)| a.bytes())
         .sum();
-    let depth = (total_bytes.div_ceil(word_bytes as u64)).max(4) as u32;
-    cfg.mem.build(depth, word_bytes * 8)
+    (total_bytes.div_ceil(word_bytes as u64)).max(4) as u32
+}
+
+/// Build the memory design implied by `cfg` for this trace: the
+/// scratchpad must hold every traced array at the configured word size.
+pub fn build_memory(trace: &Trace, cfg: &DesignConfig) -> MemDesign {
+    let word_bytes = cfg.word_bytes.max(1);
+    cfg.mem.build(footprint_depth(trace, word_bytes), word_bytes * 8)
+}
+
+/// Trait-object flavor of [`build_memory`]: size the scratchpad for
+/// `trace` and build it with any registered memory model.
+pub fn build_memory_model(trace: &Trace, model: &dyn MemModel, word_bytes: u32) -> MemDesign {
+    let word_bytes = word_bytes.max(1);
+    model.build(footprint_depth(trace, word_bytes), word_bytes * 8)
 }
 
 /// Area of the register file holding the promoted arrays, µm².
@@ -130,13 +171,20 @@ fn word_index(trace: &Trace, array: u16, index: u32, word_bytes: u32) -> u32 {
     (a.byte_addr(index) / word_bytes as u64) as u32
 }
 
-/// Schedule with an explicit, pre-built memory design (lets the
-/// coordinator inject PJRT-evaluated costs).
+/// Schedule with an explicit, pre-built memory design (compat wrapper;
+/// `cfg.mem` is ignored — the design rules).
 pub fn simulate_with_design(trace: &Trace, cfg: &DesignConfig, design: &MemDesign) -> SimOutput {
+    simulate_design(trace, &cfg.knobs(), design)
+}
+
+/// Schedule with an explicit, pre-built memory design and the non-memory
+/// knobs (lets the coordinator inject PJRT-evaluated costs, and lets
+/// registry-extension models run without a [`MemKind`]).
+pub fn simulate_design(trace: &Trace, knobs: &Knobs, design: &MemDesign) -> SimOutput {
     let n = trace.len();
-    let unroll = cfg.unroll.max(1);
-    let alus = cfg.alus.max(1);
-    let word_bytes = cfg.word_bytes.max(1);
+    let unroll = knobs.unroll.max(1);
+    let alus = knobs.alus.max(1);
+    let word_bytes = knobs.word_bytes.max(1);
     let promoted = promoted_arrays(trace);
     // Sub-word splitting: an element wider than the scratchpad word takes
     // ceil(elem/word) port acquisitions (consecutive words ⇒ consecutive

@@ -1,0 +1,24 @@
+//! Minimal stderr logging shim (replacement for the `log` crate facade).
+//!
+//! Warnings always print; info lines only when `AMM_DSE_VERBOSE` is set.
+//! Deliberately tiny — the crate's long-running paths report progress
+//! through their own return values, not logs.
+
+use std::fmt::Display;
+
+/// Is verbose (info-level) logging enabled?
+pub fn verbose() -> bool {
+    std::env::var_os("AMM_DSE_VERBOSE").is_some()
+}
+
+/// Print a warning to stderr.
+pub fn warn(msg: impl Display) {
+    eprintln!("[amm-dse warn] {msg}");
+}
+
+/// Print an info line to stderr when `AMM_DSE_VERBOSE` is set.
+pub fn info(msg: impl Display) {
+    if verbose() {
+        eprintln!("[amm-dse] {msg}");
+    }
+}

@@ -5,6 +5,7 @@
 //! and a criterion-style benchmark harness (`benchkit`).
 
 pub mod benchkit;
+pub mod log;
 pub mod pool;
 pub mod propkit;
 pub mod rng;

@@ -14,13 +14,10 @@ fn test_sweep() -> Sweep {
         word_bytes: vec![1, 4, 8],
         alus: vec![8],
         bank_counts: vec![1, 2, 4, 8, 16, 32],
-        include_dual_port: false,
-        include_block: false,
-        include_flat_xor: false,
         amm_ports: vec![(2, 1), (2, 2), (4, 2), (8, 4)],
         include_multipump: true,
         include_lvt: true,
-        threads: 0,
+        ..Sweep::default()
     }
 }
 
@@ -116,6 +113,27 @@ fn config_file_drives_a_sweep() {
     // mem kinds: banked1, banked4, xor2r1w = 3; ×2 unrolls
     assert_eq!(points.len(), 6);
     assert!(points.iter().any(|p| p.is_amm));
+}
+
+#[test]
+fn explorer_facade_runs_the_full_pipeline() {
+    // The facade path: workload → coordinator-batched sweep → Pareto →
+    // ratio → CSV, in one chain.
+    let ex = amm_dse::Explorer::new()
+        .workload("gemm", Scale::Tiny)
+        .sweep(test_sweep())
+        .threads(2)
+        .run()
+        .unwrap();
+    assert_eq!(ex.points().len(), test_sweep().points().len());
+    assert!(ex.locality > 0.0);
+    assert!(!ex.pareto_area().is_empty());
+    assert!(ex.best_amm_ns() < ex.best_banking_ns(), "gemm AMM must extend the frontier");
+    let dir = std::env::temp_dir().join("amm_dse_e2e_explorer");
+    let path = dir.join("gemm.csv");
+    ex.write_csv(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), ex.points().len() + 1);
 }
 
 #[test]

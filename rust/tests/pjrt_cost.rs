@@ -11,6 +11,10 @@ use amm_dse::suite::{self, Scale};
 use amm_dse::util::rng::Rng;
 
 fn artifacts_ready() -> bool {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: pjrt feature not enabled (stub runtime)");
+        return false;
+    }
     let dir = amm_dse::runtime::artifacts_dir();
     let missing = amm_dse::runtime::missing_artifacts(&dir);
     if !missing.is_empty() {
