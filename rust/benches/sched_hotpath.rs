@@ -5,7 +5,7 @@
 //! `cargo bench --bench sched_hotpath [-- --quick]`
 
 use amm_dse::mem::MemKind;
-use amm_dse::sched::{simulate, DesignConfig};
+use amm_dse::sched::{self, simulate, CompiledTrace, DesignConfig, SimArena};
 use amm_dse::suite::{self, Scale};
 use amm_dse::util::benchkit::Bench;
 
@@ -25,6 +25,28 @@ fn main() {
                 || simulate(&wl.trace, &cfg).cycles,
             );
         }
+    }
+
+    // engine vs compat: the same design point through a pre-compiled
+    // trace + reused arena (the sweep path) vs compile-per-call
+    for (name, scale) in [("gemm", Scale::Paper), ("fft", Scale::Paper)] {
+        let wl = suite::generate(name, scale);
+        let nodes = wl.trace.len() as u64;
+        let cfg = DesignConfig {
+            mem: MemKind::XorAmm { read_ports: 4, write_ports: 2 },
+            unroll: 8,
+            word_bytes: 8,
+            alus: 8,
+        };
+        let design = sched::build_memory(&wl.trace, &cfg);
+        let compiled = CompiledTrace::new(&wl.trace, cfg.word_bytes);
+        let mut arena = SimArena::new();
+        bench.run(&format!("sched-engine/{name}-{scale:?}/xor4r2w"), Some(nodes), || {
+            compiled.simulate(&mut arena, &cfg.knobs(), &design).cycles
+        });
+        bench.run(&format!("sched-compat/{name}-{scale:?}/xor4r2w"), Some(nodes), || {
+            sched::simulate_design(&wl.trace, &cfg.knobs(), &design).cycles
+        });
     }
 
     // trace generation itself (the Aladdin front end)

@@ -231,10 +231,12 @@ impl Coordinator {
         let points = sweep.points();
 
         // 1. Build every design's macro plan in Rust (combinatorial),
-        //    collecting the distinct SRAM macro queries.
+        //    collecting the distinct SRAM macro queries. The builder
+        //    memoizes the footprint depth per word size.
+        let mut builder = sched::DesignBuilder::new(trace);
         let designs: Vec<MemDesign> = points
             .iter()
-            .map(|p| sched::build_memory_model(trace, &*p.model, p.knobs.word_bytes))
+            .map(|p| builder.build(&*p.model, p.knobs.word_bytes))
             .collect();
         let mut unique: Vec<MacroQuery> = Vec::new();
         let mut index: HashMap<[u32; 4], usize> = HashMap::new();
@@ -271,12 +273,11 @@ impl Coordinator {
         // The sweep's explicit thread request wins over the
         // coordinator's default (lets Explorer::threads / config
         // `threads = N` work through a shared coordinator too).
+        // Scheduling runs on the compiled-trace engine: one
+        // `CompiledTrace` per word-size group, one reusable `SimArena`
+        // per worker thread.
         let threads = if sweep.threads != 0 { sweep.threads } else { self.threads };
-        let points = pool::parallel_map(&patched, threads, |(p, design)| {
-            let out = sched::simulate_design(trace, &p.knobs, design);
-            dse::point_from(&design.id, design.is_amm, &p.knobs, out)
-        });
-        Ok(points)
+        Ok(dse::evaluate_designs(trace, &patched, threads))
     }
 }
 

@@ -10,10 +10,11 @@
 //! * the locality-vs-ratio correlation behind the paper's
 //!   "AMMs win below L_spatial ≈ 0.3" claim.
 
-use crate::mem::{self, MemKind, MemModel};
-use crate::sched::{self, DesignConfig, Knobs, SimOutput};
+use crate::mem::{self, MemDesign, MemKind, MemModel};
+use crate::sched::{self, CompiledTrace, DesignConfig, Knobs, SimArena, SimOutput};
 use crate::trace::Trace;
 use crate::util::{pool, stats};
+use std::sync::Arc;
 
 /// One evaluated design point.
 #[derive(Clone, Debug, Default)]
@@ -110,10 +111,15 @@ impl Default for Sweep {
 }
 
 /// One enumerated sweep point: a memory model plus the non-memory knobs.
+///
+/// The model is `Arc`-shared across every knob combination it appears
+/// in, so enumerating a Cartesian sweep costs O(models) allocations,
+/// not O(points).
 #[derive(Clone, Debug)]
 pub struct SweepPoint {
-    /// The memory organization (trait object — built-in or registered).
-    pub model: Box<dyn MemModel>,
+    /// The memory organization (trait object — built-in or registered),
+    /// shared across all knob variants of this model.
+    pub model: Arc<dyn MemModel>,
     /// Unroll / word size / ALU knobs.
     pub knobs: Knobs,
 }
@@ -172,15 +178,29 @@ impl Sweep {
         models
     }
 
-    /// Enumerate every sweep point (models × unroll × word × alus).
+    /// Enumerate every sweep point (word × models × unroll × alus).
+    ///
+    /// `word_bytes` is the **outermost** axis: points sharing a word
+    /// size are contiguous, so the engine runners ([`run_points`],
+    /// [`evaluate_designs`]) compile the trace once per group and serve
+    /// every (model, unroll, alus) variant in it from that one
+    /// [`CompiledTrace`]. Each model trait object is boxed once and
+    /// `Arc`-shared across all its knob combinations.
     pub fn points(&self) -> Vec<SweepPoint> {
-        let mut out = Vec::new();
-        for model in self.models() {
-            for &unroll in &self.unrolls {
-                for &word_bytes in &self.word_bytes {
+        let models: Vec<Arc<dyn MemModel>> = self
+            .models()
+            .into_iter()
+            .map(|m| -> Arc<dyn MemModel> { Arc::from(m) })
+            .collect();
+        let mut out = Vec::with_capacity(
+            models.len() * self.unrolls.len() * self.word_bytes.len() * self.alus.len(),
+        );
+        for &word_bytes in &self.word_bytes {
+            for model in &models {
+                for &unroll in &self.unrolls {
                     for &alus in &self.alus {
                         out.push(SweepPoint {
-                            model: model.clone(),
+                            model: Arc::clone(model),
                             knobs: Knobs { unroll, word_bytes, alus },
                         });
                     }
@@ -206,12 +226,79 @@ impl Sweep {
             .collect()
     }
 
-    /// Run the sweep over a trace (parallel over design points).
+    /// Run the sweep over a trace: word-size groups share one
+    /// [`CompiledTrace`], workers reuse one [`SimArena`] each, design
+    /// points are evaluated in parallel, results in enumeration order.
     pub fn run(&self, trace: &Trace) -> Vec<DesignPoint> {
-        let points = self.points();
         let threads = if self.threads == 0 { pool::default_threads() } else { self.threads };
-        pool::parallel_map(&points, threads, |p| evaluate_model(trace, &*p.model, &p.knobs))
+        run_points(trace, &self.points(), threads)
     }
+}
+
+/// Evaluate enumerated sweep points with the compiled-trace engine.
+///
+/// A memory design depends only on `(model, word_bytes)`, so each is
+/// built **once per contiguous (model, word-size) run** — for
+/// [`Sweep::points`] enumeration that is once per model per word group —
+/// and cloned across the (unroll, alus) knob variants; the clone skips
+/// the macro-sizing math `build` redoes. Scheduling then goes through
+/// [`evaluate_designs`]. Output order matches `points`.
+pub fn run_points(trace: &Trace, points: &[SweepPoint], threads: usize) -> Vec<DesignPoint> {
+    let mut builder = sched::DesignBuilder::new(trace);
+    let mut work: Vec<(SweepPoint, MemDesign)> = Vec::with_capacity(points.len());
+    for p in points {
+        let fresh = match work.last() {
+            Some((prev, _)) => {
+                prev.knobs.word_bytes != p.knobs.word_bytes
+                    || !Arc::ptr_eq(&prev.model, &p.model)
+            }
+            None => true,
+        };
+        let design = if fresh {
+            builder.build(&*p.model, p.knobs.word_bytes)
+        } else {
+            work.last().unwrap().1.clone()
+        };
+        work.push((p.clone(), design));
+    }
+    evaluate_designs(trace, &work, threads)
+}
+
+/// Evaluate pre-built `(point, design)` pairs with the compiled-trace
+/// engine: consecutive pairs sharing a `word_bytes` form one group, the
+/// trace compiles once per group (word size is [`Sweep::points`]'
+/// outermost axis, so each size compiles exactly once), and every
+/// [`crate::util::pool::parallel_map_with`] worker reuses one
+/// [`SimArena`] across its whole slice of the group (arenas and worker
+/// threads are per group, so a sweep allocates `threads` arenas per
+/// word size — not per point). This is the single grouped
+/// dispatcher — [`run_points`] feeds it freshly built designs, the
+/// [`crate::coordinator`] feeds it cost-patched ones. Output order
+/// matches the input.
+pub fn evaluate_designs(
+    trace: &Trace,
+    work: &[(SweepPoint, MemDesign)],
+    threads: usize,
+) -> Vec<DesignPoint> {
+    let mut out = Vec::with_capacity(work.len());
+    let mut start = 0;
+    while start < work.len() {
+        let wb = work[start].0.knobs.word_bytes;
+        let end = start
+            + work[start..].iter().take_while(|(p, _)| p.knobs.word_bytes == wb).count();
+        let compiled = CompiledTrace::new(trace, wb);
+        out.extend(pool::parallel_map_with(
+            &work[start..end],
+            threads,
+            SimArena::new,
+            |arena, (p, design)| {
+                let sim = compiled.simulate(arena, &p.knobs, design);
+                point_from(&design.id, design.is_amm, &p.knobs, sim)
+            },
+        ));
+        start = end;
+    }
+    out
 }
 
 /// Evaluate a single design point (compat wrapper over the model path).
@@ -240,30 +327,38 @@ pub fn point_from(mem_id: &str, is_amm: bool, knobs: &Knobs, out: SimOutput) -> 
     }
 }
 
+/// Indices of the Pareto-optimal entries of pre-extracted `(x, y)`
+/// pairs, minimizing both. The generic frontier kernel: callers extract
+/// their keys once, so the sweep runs over plain floats — no cloning or
+/// repeated accessor calls per comparison.
+pub fn pareto_front_xy(xy: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xy.len()).collect();
+    // sort by x asc, then y asc; sweep keeping strictly-improving y
+    idx.sort_by(|&a, &b| {
+        xy[a].0
+            .partial_cmp(&xy[b].0)
+            .unwrap()
+            .then(xy[a].1.partial_cmp(&xy[b].1).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_y = f64::INFINITY;
+    for i in idx {
+        if xy[i].1 < best_y {
+            best_y = xy[i].1;
+            front.push(i);
+        }
+    }
+    front
+}
+
 /// Indices of the Pareto-optimal points minimizing `(x, y)`.
 pub fn pareto_front<F, G>(points: &[DesignPoint], x: F, y: G) -> Vec<usize>
 where
     F: Fn(&DesignPoint) -> f64,
     G: Fn(&DesignPoint) -> f64,
 {
-    let mut idx: Vec<usize> = (0..points.len()).collect();
-    // sort by x asc, then y asc; sweep keeping strictly-improving y
-    idx.sort_by(|&a, &b| {
-        x(&points[a])
-            .partial_cmp(&x(&points[b]))
-            .unwrap()
-            .then(y(&points[a]).partial_cmp(&y(&points[b])).unwrap())
-    });
-    let mut front = Vec::new();
-    let mut best_y = f64::INFINITY;
-    for i in idx {
-        let yi = y(&points[i]);
-        if yi < best_y {
-            best_y = yi;
-            front.push(i);
-        }
-    }
-    front
+    let xy: Vec<(f64, f64)> = points.iter().map(|p| (x(p), y(p))).collect();
+    pareto_front_xy(&xy)
 }
 
 /// The paper's §IV-C metric: geometric mean over matched-time pairs of
@@ -305,9 +400,11 @@ pub fn performance_ratio(points: &[DesignPoint], tol: f64) -> Option<f64> {
     }
 }
 
+/// (time, area) frontier over borrowed points — key extraction only, no
+/// `DesignPoint` clones (`performance_ratio` calls this per family).
 fn pareto_front_ref(points: &[&DesignPoint]) -> Vec<usize> {
-    let owned: Vec<DesignPoint> = points.iter().map(|p| (*p).clone()).collect();
-    pareto_front(&owned, |p| p.time_ns(), |p| p.area())
+    let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.time_ns(), p.area())).collect();
+    pareto_front_xy(&xy)
 }
 
 /// Fastest achievable time among a filtered subset (∞ if none).
@@ -362,6 +459,51 @@ mod tests {
         let mut dual = Sweep::quick();
         dual.include_dual_port = true;
         assert_eq!(dual.configs().len(), 5 * 2);
+    }
+
+    #[test]
+    fn points_group_by_word_bytes_and_share_models() {
+        let mut s = Sweep::quick();
+        s.word_bytes = vec![4, 8];
+        let pts = s.points();
+        // word size is the outermost axis: one contiguous run per size
+        let runs = 1 + pts
+            .windows(2)
+            .filter(|w| w[0].knobs.word_bytes != w[1].knobs.word_bytes)
+            .count();
+        assert_eq!(runs, s.word_bytes.len());
+        // models are Arc-shared: O(models) distinct allocations, not
+        // O(points)
+        let distinct: std::collections::HashSet<*const ()> =
+            pts.iter().map(|p| Arc::as_ptr(&p.model) as *const ()).collect();
+        assert_eq!(distinct.len(), s.models().len());
+    }
+
+    #[test]
+    fn grouped_run_matches_per_point_compat_path() {
+        let wl = suite::generate("stencil2d", Scale::Tiny);
+        let mut s = Sweep::quick();
+        s.word_bytes = vec![4, 8];
+        let run = s.run(&wl.trace);
+        let per_point: Vec<DesignPoint> = s
+            .points()
+            .iter()
+            .map(|p| evaluate_model(&wl.trace, &*p.model, &p.knobs))
+            .collect();
+        assert_eq!(run.len(), per_point.len());
+        for (a, b) in run.iter().zip(&per_point) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.out, b.out, "{}", a.id);
+        }
+    }
+
+    #[test]
+    fn pareto_front_xy_matches_closure_front() {
+        let wl = suite::generate("gemm", Scale::Tiny);
+        let points = Sweep::quick().run(&wl.trace);
+        let via_closures = pareto_front(&points, |p| p.time_ns(), |p| p.area());
+        let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.time_ns(), p.area())).collect();
+        assert_eq!(via_closures, pareto_front_xy(&xy));
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //! accessors. Cost scoring goes through the [`Coordinator`]'s batched
 //! cost service (PJRT when artifacts + the `pjrt` feature are present,
 //! the pure-Rust mirror otherwise) unless [`Explorer::offline`]
-//! disables it.
+//! disables it. Scheduling always runs on the sweep-aware engine: one
+//! [`crate::sched::CompiledTrace`] per word-size group, one reusable
+//! [`crate::sched::SimArena`] per worker thread (see [`crate::dse`]).
 
 use crate::coordinator::{Coordinator, CostBackend};
 use crate::dse::{self, BenchSummary, DesignPoint, Sweep};

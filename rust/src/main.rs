@@ -51,6 +51,7 @@ fn run(args: &[String]) -> Result<()> {
         "figure" => cmd_figure(&args[1..]),
         "synth-table" => cmd_synth_table(),
         "port-scaling" => cmd_port_scaling(),
+        "perf-smoke" => cmd_perf_smoke(&args[1..]),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -72,6 +73,7 @@ USAGE:
   repro figure fig5 [--scale s] [--out-dir results]
   repro synth-table
   repro port-scaling
+  repro perf-smoke [--out BENCH_sweep.json] [--iters N] [--min-speedup X]
 
 MEMORY IDS: any id resolvable by the model registry (`repro models`),
 e.g. banked<N>, banked2p<N>, bankedblk<N>, pump<K>, lvt<R>r<W>w,
@@ -346,6 +348,86 @@ fn cmd_synth_table() -> Result<()> {
             );
         }
         println!();
+    }
+    Ok(())
+}
+
+/// CI perf smoke (no `cargo bench` needed): time the quick sweep on
+/// gemm/fft twice — once through the per-point compat path (fresh
+/// `CompiledTrace` + `SimArena` per design point) and once through the
+/// grouped engine — and write points/sec + wall ms to a JSON file so the
+/// sweep-throughput trajectory is tracked across PRs. Single-threaded on
+/// both sides so the ratio measures the engine, not the pool.
+fn cmd_perf_smoke(args: &[String]) -> Result<()> {
+    use amm_dse::util::benchkit::Bench;
+    let out_path = flag(args, "--out").unwrap_or_else(|| "BENCH_sweep.json".into());
+    let iters = parse_u32(args, "--iters", 7)? as usize;
+    // Regression gate: fail if any benchmark's engine speedup drops
+    // below this (0 = report only). CI gates with a noise margin below
+    // 1.0 (Tiny-scale iterations are microseconds, shared runners are
+    // jittery) so only a real engine regression goes red; the >= 1.5x
+    // target stays visible in the JSON trajectory.
+    let min_speedup: f64 = match flag(args, "--min-speedup") {
+        None => 0.0,
+        Some(s) => s.parse().map_err(|_| Error::config(format!("bad --min-speedup {s:?}")))?,
+    };
+    let sweep = Sweep::quick();
+    let mut rows = Vec::new();
+    let mut worst = f64::INFINITY;
+    for name in ["gemm", "fft"] {
+        let wl = suite::generate(name, Scale::Tiny);
+        let points = sweep.points();
+        let n_points = points.len() as u64;
+        let mut bench = Bench::new(iters, 2);
+        bench.run(&format!("sweep/{name}/per-point"), Some(n_points), || {
+            points
+                .iter()
+                .map(|p| dse::evaluate_model(&wl.trace, &*p.model, &p.knobs).out.cycles)
+                .fold(0u64, u64::wrapping_add)
+        });
+        bench.run(&format!("sweep/{name}/engine"), Some(n_points), || {
+            dse::run_points(&wl.trace, &points, 1)
+                .iter()
+                .map(|p| p.out.cycles)
+                .fold(0u64, u64::wrapping_add)
+        });
+        let rs = bench.results();
+        let (base, eng) = (&rs[0], &rs[1]);
+        let speedup = base.median_ns() / eng.median_ns();
+        rows.push(format!(
+            concat!(
+                "    {{\"benchmark\": \"{}\", \"points\": {}, ",
+                "\"baseline_wall_ms\": {:.4}, \"engine_wall_ms\": {:.4}, ",
+                "\"baseline_points_per_s\": {:.1}, \"engine_points_per_s\": {:.1}, ",
+                "\"speedup\": {:.3}}}"
+            ),
+            name,
+            n_points,
+            base.median_ns() / 1e6,
+            eng.median_ns() / 1e6,
+            base.items_per_s().unwrap_or(0.0),
+            eng.items_per_s().unwrap_or(0.0),
+            speedup,
+        ));
+        println!("perf-smoke {name}: engine {speedup:.2}x points/sec vs per-point baseline");
+        worst = worst.min(speedup);
+    }
+    let json = format!(
+        concat!(
+            "{{\n  \"schema\": \"bench_sweep/v1\",\n  \"sweep\": \"quick\",\n",
+            "  \"scale\": \"tiny\",\n  \"threads\": 1,\n  \"iters\": {},\n",
+            "  \"results\": [\n{}\n  ]\n}}\n"
+        ),
+        iters,
+        rows.join(",\n")
+    );
+    report::write_file(std::path::Path::new(&out_path), &json)
+        .map_err(|e| Error::io(format!("write {out_path}"), e))?;
+    println!("wrote {out_path}");
+    if min_speedup > 0.0 && worst < min_speedup {
+        return Err(Error::msg(format!(
+            "perf-smoke: worst engine speedup {worst:.3}x is below the required {min_speedup}x"
+        )));
     }
     Ok(())
 }

@@ -1,0 +1,100 @@
+//! Reusable simulation arena — the scheduler's mutable working state.
+//!
+//! One cycle-accurate run needs ~6 trace-sized buffers (dependence
+//! counters, sub-access counters, per-class ready heaps, the completion
+//! ring). Allocating them per design point dominated sweep wall-clock,
+//! so the engine keeps them in a [`SimArena`] that is [`reset`] between
+//! runs instead of reallocated: each
+//! [`crate::util::pool::parallel_map_with`] worker owns one arena for
+//! every point it evaluates within a word-size group (the sweep layers
+//! dispatch one worker pool per group).
+//!
+//! [`reset`]: SimArena::reset
+
+use super::compile::CompiledTrace;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Completion events live in a ring of buckets instead of a heap: every
+/// op latency is ≤ 16 cycles, so a 32-slot ring indexed by `cycle % 32`
+/// gives O(1) push/retire (§Perf iteration 2).
+pub(super) const RING: usize = 32;
+
+/// Ready min-heap keyed by `(ready_cycle, node id)`.
+pub(super) type Heap = BinaryHeap<Reverse<(u64, u32)>>;
+
+/// Reusable mutable state for one scheduler run.
+///
+/// Create once per worker thread, pass to
+/// [`CompiledTrace::simulate`] for any number of runs — including runs
+/// over *different* traces; the engine resets it (preserving the
+/// allocations) at the start of every run.
+pub struct SimArena {
+    /// Unsatisfied-predecessor count per node.
+    pub(super) remaining: Vec<u32>,
+    /// Sub-word accesses still outstanding per node.
+    pub(super) subs_left: Vec<u32>,
+    /// Register-promoted accesses (free, always drained).
+    pub(super) ready_reg: Heap,
+    /// FU ops.
+    pub(super) ready_alu: Heap,
+    /// Banked designs (single queue: program-order issue).
+    pub(super) ready_mem: Heap,
+    /// True-port designs: independent read port queue.
+    pub(super) ready_rd: Heap,
+    /// True-port designs: independent write port queue.
+    pub(super) ready_wr: Heap,
+    /// Completion ring (`RING` slots of node ids).
+    pub(super) ring: Vec<Vec<u32>>,
+    /// Per-cycle read-port counters (per bank, or one global slot).
+    pub(super) used_rd: Vec<u32>,
+    /// Per-cycle write-port counters.
+    pub(super) used_wr: Vec<u32>,
+    /// Scratch buffer for the retire step.
+    pub(super) retire_buf: Vec<u32>,
+}
+
+impl SimArena {
+    /// Empty arena; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        SimArena {
+            remaining: Vec::new(),
+            subs_left: Vec::new(),
+            ready_reg: BinaryHeap::new(),
+            ready_alu: BinaryHeap::new(),
+            ready_mem: BinaryHeap::new(),
+            ready_rd: BinaryHeap::new(),
+            ready_wr: BinaryHeap::new(),
+            ring: vec![Vec::new(); RING],
+            used_rd: Vec::new(),
+            used_wr: Vec::new(),
+            retire_buf: Vec::new(),
+        }
+    }
+
+    /// Re-initialize for a run of `ct`, keeping every allocation. Safe to
+    /// call on an arena dirtied by a run over a different trace (heaps
+    /// and ring slots are drained defensively, counters re-seeded from
+    /// the compiled trace).
+    pub(super) fn reset(&mut self, ct: &CompiledTrace<'_>) {
+        self.remaining.clear();
+        self.remaining.extend_from_slice(&ct.trace.pred_count);
+        self.subs_left.clear();
+        self.subs_left.extend_from_slice(&ct.subs_init);
+        self.ready_reg.clear();
+        self.ready_alu.clear();
+        self.ready_mem.clear();
+        self.ready_rd.clear();
+        self.ready_wr.clear();
+        for slot in &mut self.ring {
+            slot.clear();
+        }
+        self.retire_buf.clear();
+    }
+}
+
+impl Default for SimArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -1,0 +1,506 @@
+//! Trace compilation — the once-per-`(trace, word_bytes)` layer.
+//!
+//! The monolithic `simulate_design` used to re-derive the same
+//! trace-invariant state for *every* design point of a sweep: the
+//! register-promotion mask, per-array sub-word counts, scratchpad word
+//! indices, per-node resource classes, the FU-mix area blend and the
+//! footprint depth. Across a Cartesian sweep those hundreds of
+//! re-derivations (plus ~6 trace-sized allocations per run) were pure
+//! waste. [`CompiledTrace`] hoists all of it: compile once per word
+//! size, then run any number of `(design, unroll, alus)` points through
+//! [`CompiledTrace::simulate`] with a reusable
+//! [`SimArena`](super::SimArena).
+//!
+//! The compat wrappers [`super::simulate`] / [`super::simulate_design`]
+//! are thin shims over this engine and produce byte-identical
+//! [`SimOutput`]s (asserted by `tests/engine_golden.rs`).
+
+use super::arena::{SimArena, RING};
+use super::{footprint_depth, fu_area, promoted_arrays, promoted_reg_area, Knobs, SimOutput};
+use super::{BASE_PERIOD_NS, FU_LEAK_UW_PER_UM2, REG_ACCESS_PJ};
+use crate::mem::{MemDesign, PortModel};
+use crate::trace::{OpKind, Trace};
+use std::cmp::Reverse;
+
+/// Which issue resource a node consumes (register promotion folded in;
+/// the banked-vs-true-port split stays design-dependent and is resolved
+/// at push time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(super) enum NodeClass {
+    /// Functional-unit op.
+    Alu,
+    /// Register-promoted memory access (free port-wise).
+    Reg,
+    /// Scratchpad load.
+    Load,
+    /// Scratchpad store.
+    Store,
+}
+
+/// Map a memory op to its scratchpad *word* index (arrays are packed
+/// back-to-back; narrower elements share words).
+#[inline]
+fn word_index(trace: &Trace, array: u16, index: u32, word_bytes: u32) -> u32 {
+    let a = &trace.arrays[array as usize];
+    (a.byte_addr(index) / word_bytes as u64) as u32
+}
+
+/// Everything the scheduler's inner loop needs that depends only on
+/// `(trace, word_bytes)` — compiled once, shared (it is `Sync`) by every
+/// worker evaluating design points at that word size.
+pub struct CompiledTrace<'t> {
+    /// The underlying trace.
+    pub(super) trace: &'t Trace,
+    /// Clamped scratchpad word size, bytes.
+    pub(super) word_bytes: u32,
+    /// Register-promotion mask per array.
+    pub(super) promoted: Vec<bool>,
+    /// Port acquisitions per access, per array (sub-word splitting).
+    pub(super) subwords: Vec<u32>,
+    /// Initial outstanding sub-accesses per node (0 for non-mem /
+    /// promoted nodes) — the seed for `SimArena::subs_left`.
+    pub(super) subs_init: Vec<u32>,
+    /// Scratchpad word index per mem node.
+    pub(super) base_words: Vec<u32>,
+    /// Issue resource class per node.
+    pub(super) class: Vec<NodeClass>,
+    /// Scratchpad depth (words) holding every non-promoted array.
+    pub(super) depth: u32,
+    /// Area of the promoted-array register file, µm².
+    pub(super) reg_area_um2: f32,
+    /// Op-mix-blended FU area per ALU issue slot, µm².
+    pub(super) fu_blend: f32,
+}
+
+impl<'t> CompiledTrace<'t> {
+    /// Compile `trace` for one scratchpad word size (clamped to ≥ 1 B).
+    pub fn new(trace: &'t Trace, word_bytes: u32) -> Self {
+        let word_bytes = word_bytes.max(1);
+        let promoted = promoted_arrays(trace);
+        // Sub-word splitting: an element wider than the scratchpad word
+        // takes ceil(elem/word) port acquisitions (consecutive words ⇒
+        // consecutive cyclic banks) — the paper's word-size axis.
+        let subwords: Vec<u32> = trace
+            .arrays
+            .iter()
+            .map(|a| a.elem_bytes.div_ceil(word_bytes).max(1))
+            .collect();
+        let subs_init: Vec<u32> = trace
+            .nodes
+            .iter()
+            .map(|nd| match nd.kind.mem_ref() {
+                Some((a, _)) if !promoted[a as usize] => subwords[a as usize],
+                _ => 0,
+            })
+            .collect();
+        let base_words: Vec<u32> = trace
+            .nodes
+            .iter()
+            .map(|nd| match nd.kind.mem_ref() {
+                Some((a, i)) => word_index(trace, a, i, word_bytes),
+                None => 0,
+            })
+            .collect();
+        let class: Vec<NodeClass> = trace
+            .nodes
+            .iter()
+            .map(|nd| match nd.kind {
+                OpKind::Alu(_) => NodeClass::Alu,
+                OpKind::Load { array, .. } if promoted[array as usize] => NodeClass::Reg,
+                OpKind::Store { array, .. } if promoted[array as usize] => NodeClass::Reg,
+                OpKind::Load { .. } => NodeClass::Load,
+                OpKind::Store { .. } => NodeClass::Store,
+            })
+            .collect();
+        CompiledTrace {
+            trace,
+            word_bytes,
+            promoted,
+            subwords,
+            subs_init,
+            base_words,
+            class,
+            depth: footprint_depth(trace, word_bytes),
+            reg_area_um2: promoted_reg_area(trace),
+            fu_blend: fu_area(trace, 1),
+        }
+    }
+
+    /// The compiled trace's underlying DDG.
+    pub fn trace(&self) -> &'t Trace {
+        self.trace
+    }
+
+    /// The (clamped) word size this compilation is specialized for.
+    pub fn word_bytes(&self) -> u32 {
+        self.word_bytes
+    }
+
+    /// Scratchpad depth (words) for every non-promoted traced array.
+    pub fn depth(&self) -> u32 {
+        self.depth
+    }
+
+    /// Register-promotion mask per array.
+    pub fn promoted(&self) -> &[bool] {
+        &self.promoted
+    }
+
+    /// FU area for `alus` issue slots, µm² (op-mix blend precomputed).
+    pub fn fu_area(&self, alus: u32) -> f32 {
+        self.fu_blend * alus as f32
+    }
+
+    /// Schedule one design point: cycles + physical cost, exactly as the
+    /// compat [`super::simulate_design`] computes them.
+    ///
+    /// `knobs.word_bytes` must match the word size this trace was
+    /// compiled for (debug-asserted); `arena` may be dirty from any
+    /// previous run — it is reset (allocation-preserving) here.
+    pub fn simulate(&self, arena: &mut SimArena, knobs: &Knobs, design: &MemDesign) -> SimOutput {
+        debug_assert_eq!(
+            knobs.word_bytes.max(1),
+            self.word_bytes,
+            "CompiledTrace built for word_bytes={}, knobs ask {}",
+            self.word_bytes,
+            knobs.word_bytes
+        );
+        let trace = self.trace;
+        let n = trace.len();
+        let unroll = knobs.unroll.max(1);
+        let alus = knobs.alus.max(1);
+
+        arena.reset(self);
+        let SimArena {
+            remaining,
+            subs_left,
+            ready_reg,
+            ready_alu,
+            ready_mem,
+            ready_rd,
+            ready_wr,
+            ring,
+            used_rd,
+            used_wr,
+            retire_buf,
+        } = arena;
+
+        let (bank_count, rd_ports, wr_ports, shared, block) = match design.ports {
+            PortModel::PerBank { banks, reads, writes, shared, block } => {
+                (banks, reads, writes, shared, block)
+            }
+            PortModel::TruePorts { reads, writes } => (0, reads, writes, false, false),
+        };
+        let per_bank = bank_count > 0;
+        // Block partitioning: contiguous address ranges per bank.
+        let block_size = if block { design.depth.div_ceil(bank_count.max(1)).max(1) } else { 0 };
+
+        macro_rules! push_ready {
+            ($nid:expr, $at:expr) => {{
+                let nid: u32 = $nid;
+                let at: u64 = $at;
+                match self.class[nid as usize] {
+                    NodeClass::Alu => ready_alu.push(Reverse((at, nid))),
+                    NodeClass::Reg => ready_reg.push(Reverse((at, nid))),
+                    NodeClass::Load => {
+                        if per_bank {
+                            ready_mem.push(Reverse((at, nid)));
+                        } else {
+                            ready_rd.push(Reverse((at, nid)));
+                        }
+                    }
+                    NodeClass::Store => {
+                        if per_bank {
+                            ready_mem.push(Reverse((at, nid)));
+                        } else {
+                            ready_wr.push(Reverse((at, nid)));
+                        }
+                    }
+                }
+            }};
+        }
+
+        for i in 0..n {
+            if remaining[i] == 0 {
+                let gate = (trace.nodes[i].iter / unroll) as u64;
+                push_ready!(i as u32, gate);
+            }
+        }
+
+        let mut ring_pending: usize = 0;
+        macro_rules! complete_at {
+            ($cycle:expr, $nid:expr) => {{
+                ring[($cycle % RING as u64) as usize].push($nid);
+                ring_pending += 1;
+            }};
+        }
+
+        // Per-cycle port counters: per bank for banked designs, a single
+        // global pair for true-port designs.
+        let counters = if per_bank { bank_count as usize } else { 1 };
+        used_rd.clear();
+        used_rd.resize(counters, 0);
+        used_wr.clear();
+        used_wr.resize(counters, 0);
+
+        let mut cycle: u64 = 0;
+        let mut done = 0usize;
+        let mut issued_mem: u64 = 0;
+        let mut port_stalls: u64 = 0;
+        let mut stall_cycles: u64 = 0;
+        let mut n_reads: u64 = 0;
+        let mut n_writes: u64 = 0;
+        let mut n_reg: u64 = 0;
+        let mut n_alu_energy: f64 = 0.0;
+
+        while done < n {
+            // retire completions for this cycle (ring slot owns exactly
+            // the events for `cycle`: pushes always target < RING cycles
+            // ahead, and the advance step visits slots in order)
+            let slot = (cycle % RING as u64) as usize;
+            if !ring[slot].is_empty() {
+                retire_buf.clear();
+                retire_buf.append(&mut ring[slot]);
+                ring_pending -= retire_buf.len();
+                done += retire_buf.len();
+                for &node in retire_buf.iter() {
+                    for &s in trace.successors(node) {
+                        remaining[s as usize] -= 1;
+                        if remaining[s as usize] == 0 {
+                            // The producer completes at the start of this
+                            // cycle, so the consumer may issue this cycle.
+                            let gate = (trace.nodes[s as usize].iter / unroll) as u64;
+                            push_ready!(s, gate.max(cycle));
+                        }
+                    }
+                }
+            }
+
+            // reset per-cycle port + FU counters
+            for c in used_rd.iter_mut() {
+                *c = 0;
+            }
+            for c in used_wr.iter_mut() {
+                *c = 0;
+            }
+            let mut alu_slots = alus;
+            let mut had_mem_stall = false;
+
+            // register-promoted accesses are free: drain them all
+            while let Some(&Reverse((rc, _))) = ready_reg.peek() {
+                if rc > cycle {
+                    break;
+                }
+                let Reverse((_, nid)) = ready_reg.pop().unwrap();
+                issued_mem += 1;
+                n_reg += 1;
+                complete_at!(cycle + 1, nid);
+            }
+
+            // FU issue: stop the moment slots run out (no wasted pops)
+            while alu_slots > 0 {
+                match ready_alu.peek() {
+                    Some(&Reverse((rc, _))) if rc <= cycle => {}
+                    _ => break,
+                }
+                let Reverse((_, nid)) = ready_alu.pop().unwrap();
+                let OpKind::Alu(kind) = trace.nodes[nid as usize].kind else { unreachable!() };
+                alu_slots -= 1;
+                n_alu_energy += kind.energy_pj() as f64;
+                complete_at!(cycle + kind.latency() as u64, nid);
+            }
+
+            // Try to issue the sub-word accesses of one memory op;
+            // returns the number still outstanding after this cycle.
+            let try_mem = |nid: u32,
+                               used_rd: &mut Vec<u32>,
+                               used_wr: &mut Vec<u32>,
+                               n_reads: &mut u64,
+                               n_writes: &mut u64,
+                               subs_left: &mut Vec<u32>,
+                               port_stalls: &mut u64,
+                               issued_mem: &mut u64|
+             -> u32 {
+                let node = &trace.nodes[nid as usize];
+                let (array, _index) = node.kind.mem_ref().unwrap();
+                let is_write = matches!(node.kind, OpKind::Store { .. });
+                let total_subs = self.subwords[array as usize];
+                let base_word = self.base_words[nid as usize];
+                let mut left = subs_left[nid as usize];
+                let mut progressed = false;
+                while left > 0 {
+                    let sub = total_subs - left;
+                    let slot = if !per_bank {
+                        0
+                    } else if block {
+                        (((base_word + sub) / block_size).min(bank_count - 1)) as usize
+                    } else {
+                        ((base_word + sub) % bank_count) as usize
+                    };
+                    let ok = if shared {
+                        // 1RW: reads and writes share one port per bank
+                        if used_rd[slot] + used_wr[slot] < rd_ports.max(wr_ports) {
+                            if is_write {
+                                used_wr[slot] += 1;
+                            } else {
+                                used_rd[slot] += 1;
+                            }
+                            true
+                        } else {
+                            false
+                        }
+                    } else if is_write {
+                        if used_wr[slot] < wr_ports {
+                            used_wr[slot] += 1;
+                            true
+                        } else {
+                            false
+                        }
+                    } else if used_rd[slot] < rd_ports {
+                        used_rd[slot] += 1;
+                        true
+                    } else {
+                        false
+                    };
+                    if !ok {
+                        break;
+                    }
+                    left -= 1;
+                    progressed = true;
+                    if is_write {
+                        *n_writes += 1;
+                    } else {
+                        *n_reads += 1;
+                    }
+                }
+                subs_left[nid as usize] = left;
+                if left == 0 {
+                    *issued_mem += 1;
+                } else if !progressed {
+                    *port_stalls += 1;
+                }
+                left
+            };
+
+            if per_bank {
+                // Banked designs model Aladdin's *static* schedule:
+                // memory issues in program order; the first bank conflict
+                // stalls all later memory ops this cycle (the compiler
+                // cannot reorder around a dynamic conflict).
+                while let Some(&Reverse((rc, _))) = ready_mem.peek() {
+                    if rc > cycle {
+                        break;
+                    }
+                    let Reverse((rc0, nid)) = ready_mem.pop().unwrap();
+                    let left = try_mem(
+                        nid, &mut *used_rd, &mut *used_wr, &mut n_reads, &mut n_writes,
+                        &mut *subs_left, &mut port_stalls, &mut issued_mem,
+                    );
+                    if left > 0 {
+                        had_mem_stall = true;
+                        // Re-queue under the ORIGINAL key so program order
+                        // among ready ops is preserved across the stall.
+                        ready_mem.push(Reverse((rc0, nid)));
+                        break; // in-order: nothing younger may issue
+                    }
+                    complete_at!(cycle + 1, nid);
+                }
+            } else {
+                // True multi-port (AMM / multipump / circuit MP): reads
+                // and writes issue independently until their port class
+                // is full.
+                while used_rd[0] < rd_ports {
+                    match ready_rd.peek() {
+                        Some(&Reverse((rc, _))) if rc <= cycle => {}
+                        _ => break,
+                    }
+                    let Reverse((rc0, nid)) = ready_rd.pop().unwrap();
+                    let left = try_mem(
+                        nid, &mut *used_rd, &mut *used_wr, &mut n_reads, &mut n_writes,
+                        &mut *subs_left, &mut port_stalls, &mut issued_mem,
+                    );
+                    if left > 0 {
+                        had_mem_stall = true;
+                        // Re-queue under the ORIGINAL key so program order
+                        // among ready ops is preserved across the stall.
+                        ready_rd.push(Reverse((rc0, nid)));
+                        break;
+                    }
+                    complete_at!(cycle + 1, nid);
+                }
+                while used_wr[0] < wr_ports {
+                    match ready_wr.peek() {
+                        Some(&Reverse((rc, _))) if rc <= cycle => {}
+                        _ => break,
+                    }
+                    let Reverse((rc0, nid)) = ready_wr.pop().unwrap();
+                    let left = try_mem(
+                        nid, &mut *used_rd, &mut *used_wr, &mut n_reads, &mut n_writes,
+                        &mut *subs_left, &mut port_stalls, &mut issued_mem,
+                    );
+                    if left > 0 {
+                        had_mem_stall = true;
+                        // Re-queue under the ORIGINAL key so program order
+                        // among ready ops is preserved across the stall.
+                        ready_wr.push(Reverse((rc0, nid)));
+                        break;
+                    }
+                    complete_at!(cycle + 1, nid);
+                }
+            }
+            if had_mem_stall {
+                stall_cycles += 1;
+            }
+
+            // advance to the next event (earliest ready or completion)
+            let mut next = u64::MAX;
+            for h in [&*ready_reg, &*ready_alu, &*ready_mem, &*ready_rd, &*ready_wr] {
+                if let Some(&Reverse((c, _))) = h.peek() {
+                    next = next.min(c);
+                }
+            }
+            if ring_pending > 0 {
+                // nearest non-empty ring slot within the next RING cycles
+                for d in 1..=RING as u64 {
+                    if !ring[((cycle + d) % RING as u64) as usize].is_empty() {
+                        next = next.min(cycle + d);
+                        break;
+                    }
+                }
+            }
+            if next == u64::MAX {
+                break;
+            }
+            cycle = next.max(cycle + 1);
+        }
+
+        // --- physical composition (the Aladdin backend step) ----------
+        let period_ns = BASE_PERIOD_NS.max(design.t_access_ns()) * design.freq_factor;
+        let cycles = cycle.max(1);
+        let time_ns = cycles as f64 * period_ns as f64;
+
+        let mem_area = design.area_um2() + self.reg_area_um2;
+        let fu_area_um2 = self.fu_area(alus);
+        let dyn_energy = n_reads as f64 * design.e_read_pj() as f64
+            + n_writes as f64 * design.e_write_pj() as f64
+            + n_reg as f64 * REG_ACCESS_PJ
+            + n_alu_energy;
+        let leak_uw = design.leak_uw() + fu_area_um2 * FU_LEAK_UW_PER_UM2;
+        // pJ / ns = mW; leakage µW → mW.
+        let power_mw = (dyn_energy / time_ns) as f32 + leak_uw / 1000.0;
+
+        SimOutput {
+            cycles,
+            period_ns,
+            time_ns,
+            mem_area_um2: mem_area,
+            fu_area_um2,
+            area_um2: mem_area + fu_area_um2,
+            power_mw,
+            dyn_energy_pj: dyn_energy,
+            mem_accesses: issued_mem,
+            port_stalls,
+            stall_cycles,
+        }
+    }
+}

@@ -16,10 +16,35 @@
 //! The output combines the cycle count with the design's physical cost
 //! (area, power, clock period) exactly as Aladdin's backend does
 //! (paper §III-B/§III-C).
+//!
+//! ## Layering (sweep-aware engine)
+//!
+//! The scheduler is split into three layers so Cartesian sweeps never
+//! repeat `(trace, word_bytes)`-invariant work:
+//!
+//! 1. [`compile`] — [`CompiledTrace`] precomputes, once per word size,
+//!    everything the inner loop consumes: promotion mask, sub-word
+//!    counts, word indices, per-node resource class, FU-mix blend,
+//!    footprint depth.
+//! 2. [`arena`] — [`SimArena`] owns the mutable run state (ready heaps,
+//!    completion ring, dependence/sub-access counters) and is `reset()`
+//!    between runs instead of reallocated; one arena per worker thread.
+//! 3. the engine — [`CompiledTrace::simulate`] schedules one design
+//!    point against an arena.
+//!
+//! [`simulate`] and [`simulate_design`] remain as compat wrappers
+//! (compile + fresh arena per call) with byte-identical [`SimOutput`];
+//! sweep layers ([`crate::dse`], [`crate::coordinator`]) drive the
+//! engine directly.
 
-use crate::mem::{MemDesign, MemKind, MemModel, PortModel};
-use crate::trace::{OpKind, Trace};
-use std::collections::BinaryHeap;
+pub mod arena;
+pub mod compile;
+
+pub use arena::SimArena;
+pub use compile::CompiledTrace;
+
+use crate::mem::{MemDesign, MemKind, MemModel};
+use crate::trace::Trace;
 
 /// One point in the design space (the paper's sweep axes, §IV-A).
 ///
@@ -70,7 +95,10 @@ impl Default for Knobs {
 }
 
 /// Scheduling + costing result for one design point.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq` is bit-exact — the engine-vs-compat golden tests compare
+/// whole outputs with `==`.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SimOutput {
     /// Total cycles to drain the DDG.
     pub cycles: u64,
@@ -148,8 +176,34 @@ pub fn build_memory(trace: &Trace, cfg: &DesignConfig) -> MemDesign {
 /// Trait-object flavor of [`build_memory`]: size the scratchpad for
 /// `trace` and build it with any registered memory model.
 pub fn build_memory_model(trace: &Trace, model: &dyn MemModel, word_bytes: u32) -> MemDesign {
-    let word_bytes = word_bytes.max(1);
-    model.build(footprint_depth(trace, word_bytes), word_bytes * 8)
+    DesignBuilder::new(trace).build(model, word_bytes)
+}
+
+/// Builds sized memory designs for one trace, memoizing the footprint
+/// depth per word size — the single home of the "clamp word, depth from
+/// footprint, width = word × 8" sizing rule. Sweep loops
+/// ([`crate::dse::run_points`], the coordinator) hold one of these so
+/// the depth is computed once per word size, not once per design point;
+/// [`build_memory_model`] is the one-shot flavor.
+pub struct DesignBuilder<'t> {
+    trace: &'t Trace,
+    depth_for: std::collections::HashMap<u32, u32>,
+}
+
+impl<'t> DesignBuilder<'t> {
+    /// A builder with an empty depth cache.
+    pub fn new(trace: &'t Trace) -> Self {
+        DesignBuilder { trace, depth_for: std::collections::HashMap::new() }
+    }
+
+    /// Build `model`'s fully-costed design at `word_bytes` (clamped to
+    /// ≥ 1 B), sized to hold every non-promoted traced array.
+    pub fn build(&mut self, model: &dyn MemModel, word_bytes: u32) -> MemDesign {
+        let wb = word_bytes.max(1);
+        let depth =
+            *self.depth_for.entry(wb).or_insert_with(|| footprint_depth(self.trace, wb));
+        model.build(depth, wb * 8)
+    }
 }
 
 /// Area of the register file holding the promoted arrays, µm².
@@ -163,14 +217,6 @@ pub fn promoted_reg_area(trace: &Trace) -> f32 {
     bits as f32 * crate::synth::cal::FF_GE * crate::synth::cal::GATE_UM2
 }
 
-/// Map a memory op to its scratchpad *word* index (arrays are packed
-/// back-to-back; narrower elements share words).
-#[inline]
-fn word_index(trace: &Trace, array: u16, index: u32, word_bytes: u32) -> u32 {
-    let a = &trace.arrays[array as usize];
-    (a.byte_addr(index) / word_bytes as u64) as u32
-}
-
 /// Schedule with an explicit, pre-built memory design (compat wrapper;
 /// `cfg.mem` is ignored — the design rules).
 pub fn simulate_with_design(trace: &Trace, cfg: &DesignConfig, design: &MemDesign) -> SimOutput {
@@ -180,390 +226,22 @@ pub fn simulate_with_design(trace: &Trace, cfg: &DesignConfig, design: &MemDesig
 /// Schedule with an explicit, pre-built memory design and the non-memory
 /// knobs (lets the coordinator inject PJRT-evaluated costs, and lets
 /// registry-extension models run without a [`MemKind`]).
+///
+/// Compat wrapper: compiles the trace and allocates a fresh arena per
+/// call. Sweeps should compile once per word size and reuse one
+/// [`SimArena`] per worker via [`CompiledTrace::simulate`] — this
+/// wrapper's output is byte-identical, just slower across many points.
 pub fn simulate_design(trace: &Trace, knobs: &Knobs, design: &MemDesign) -> SimOutput {
-    let n = trace.len();
-    let unroll = knobs.unroll.max(1);
-    let alus = knobs.alus.max(1);
-    let word_bytes = knobs.word_bytes.max(1);
-    let promoted = promoted_arrays(trace);
-    // Sub-word splitting: an element wider than the scratchpad word takes
-    // ceil(elem/word) port acquisitions (consecutive words ⇒ consecutive
-    // cyclic banks) — the paper's word-size axis.
-    let subwords: Vec<u32> = trace
-        .arrays
-        .iter()
-        .map(|a| a.elem_bytes.div_ceil(word_bytes).max(1))
-        .collect();
-    // Per-node sub-accesses still outstanding (only mem ops use this).
-    let mut subs_left: Vec<u32> = trace
-        .nodes
-        .iter()
-        .map(|nd| match nd.kind.mem_ref() {
-            Some((a, _)) if !promoted[a as usize] => subwords[a as usize],
-            _ => 0,
-        })
-        .collect();
-    // Precomputed scratchpad word index per mem node (recomputing it on
-    // every stall retry showed up in the §Perf profile).
-    let base_words: Vec<u32> = trace
-        .nodes
-        .iter()
-        .map(|nd| match nd.kind.mem_ref() {
-            Some((a, i)) => word_index(trace, a, i, word_bytes),
-            None => 0,
-        })
-        .collect();
-
-    // --- dependence state --------------------------------------------
-    let mut remaining = trace.pred_count.clone();
-
-    // Ready min-heaps keyed by (ready_cycle, node id), one per resource
-    // class so the issue loop never pops an op it cannot issue (that
-    // would be O(backlog) per cycle):
-    //   · reg  — register-promoted accesses (free, always drained)
-    //   · alu  — FU ops
-    //   · mem  — banked designs (single queue: program-order issue)
-    //   · rd/wr — true-port designs (independent read/write ports)
-    use std::cmp::Reverse;
-    type Heap = BinaryHeap<Reverse<(u64, u32)>>;
-    let mut ready_reg: Heap = BinaryHeap::new();
-    let mut ready_alu: Heap = BinaryHeap::new();
-    let mut ready_mem: Heap = BinaryHeap::new();
-    let mut ready_rd: Heap = BinaryHeap::new();
-    let mut ready_wr: Heap = BinaryHeap::new();
-
-    let (bank_count, rd_ports, wr_ports, shared, block) = match design.ports {
-        PortModel::PerBank { banks, reads, writes, shared, block } => {
-            (banks, reads, writes, shared, block)
-        }
-        PortModel::TruePorts { reads, writes } => (0, reads, writes, false, false),
-    };
-    let per_bank = bank_count > 0;
-    // Block partitioning: contiguous address ranges per bank.
-    let block_size = if block { design.depth.div_ceil(bank_count.max(1)).max(1) } else { 0 };
-
-    macro_rules! push_ready {
-        ($nid:expr, $at:expr) => {{
-            let nid: u32 = $nid;
-            let at: u64 = $at;
-            match trace.nodes[nid as usize].kind {
-                OpKind::Alu(_) => ready_alu.push(Reverse((at, nid))),
-                OpKind::Load { array, .. } | OpKind::Store { array, .. } => {
-                    if promoted[array as usize] {
-                        ready_reg.push(Reverse((at, nid)));
-                    } else if per_bank {
-                        ready_mem.push(Reverse((at, nid)));
-                    } else if matches!(trace.nodes[nid as usize].kind, OpKind::Store { .. }) {
-                        ready_wr.push(Reverse((at, nid)));
-                    } else {
-                        ready_rd.push(Reverse((at, nid)));
-                    }
-                }
-            }
-        }};
-    }
-
-    for i in 0..n {
-        if remaining[i] == 0 {
-            let gate = (trace.nodes[i].iter / unroll) as u64;
-            push_ready!(i as u32, gate);
-        }
-    }
-
-    // Completion events live in a ring of buckets instead of a heap:
-    // every op latency is <= 16 cycles, so a 32-slot ring indexed by
-    // cycle % 32 gives O(1) push/retire (§Perf iteration 2).
-    const RING: usize = 32;
-    let mut ring: Vec<Vec<u32>> = vec![Vec::new(); RING];
-    let mut ring_pending: usize = 0;
-    macro_rules! complete_at {
-        ($cycle:expr, $nid:expr) => {{
-            ring[($cycle % RING as u64) as usize].push($nid);
-            ring_pending += 1;
-        }};
-    }
-
-    // Per-cycle port counters: per bank for banked designs, a single
-    // global pair for true-port designs.
-    let counters = if per_bank { bank_count as usize } else { 1 };
-    let mut used_rd = vec![0u32; counters];
-    let mut used_wr = vec![0u32; counters];
-
-    let mut cycle: u64 = 0;
-    let mut done = 0usize;
-    let mut issued_mem: u64 = 0;
-    let mut port_stalls: u64 = 0;
-    let mut stall_cycles: u64 = 0;
-    let mut n_reads: u64 = 0;
-    let mut n_writes: u64 = 0;
-    let mut n_reg: u64 = 0;
-    let mut n_alu_energy: f64 = 0.0;
-
-    let mut retire_buf: Vec<u32> = Vec::new();
-    while done < n {
-        // retire completions for this cycle (ring slot owns exactly the
-        // events for `cycle`: pushes always target < RING cycles ahead,
-        // and the advance step visits slots in order)
-        let slot = (cycle % RING as u64) as usize;
-        if !ring[slot].is_empty() {
-            retire_buf.clear();
-            retire_buf.append(&mut ring[slot]);
-            ring_pending -= retire_buf.len();
-            done += retire_buf.len();
-            for &node in &retire_buf {
-                for &s in trace.successors(node) {
-                    remaining[s as usize] -= 1;
-                    if remaining[s as usize] == 0 {
-                        // The producer completes at the start of this
-                        // cycle, so the consumer may issue this cycle.
-                        let gate = (trace.nodes[s as usize].iter / unroll) as u64;
-                        push_ready!(s, gate.max(cycle));
-                    }
-                }
-            }
-        }
-
-        // reset per-cycle port + FU counters
-        for c in used_rd.iter_mut() {
-            *c = 0;
-        }
-        for c in used_wr.iter_mut() {
-            *c = 0;
-        }
-        let mut alu_slots = alus;
-        let mut had_mem_stall = false;
-
-        // register-promoted accesses are free: drain them all
-        while let Some(&Reverse((rc, _))) = ready_reg.peek() {
-            if rc > cycle {
-                break;
-            }
-            let Reverse((_, nid)) = ready_reg.pop().unwrap();
-            issued_mem += 1;
-            n_reg += 1;
-            complete_at!(cycle + 1, nid);
-        }
-
-        // FU issue: stop the moment slots run out (no wasted pops)
-        while alu_slots > 0 {
-            match ready_alu.peek() {
-                Some(&Reverse((rc, _))) if rc <= cycle => {}
-                _ => break,
-            }
-            let Reverse((_, nid)) = ready_alu.pop().unwrap();
-            let OpKind::Alu(kind) = trace.nodes[nid as usize].kind else { unreachable!() };
-            alu_slots -= 1;
-            n_alu_energy += kind.energy_pj() as f64;
-            complete_at!(cycle + kind.latency() as u64, nid);
-        }
-
-        // Try to issue the sub-word accesses of one memory op; returns
-        // the number still outstanding after this cycle.
-        let try_mem = |nid: u32,
-                           used_rd: &mut Vec<u32>,
-                           used_wr: &mut Vec<u32>,
-                           n_reads: &mut u64,
-                           n_writes: &mut u64,
-                           subs_left: &mut Vec<u32>,
-                           port_stalls: &mut u64,
-                           issued_mem: &mut u64|
-         -> u32 {
-            let node = &trace.nodes[nid as usize];
-            let (array, _index) = node.kind.mem_ref().unwrap();
-            let is_write = matches!(node.kind, OpKind::Store { .. });
-            let total_subs = subwords[array as usize];
-            let base_word = base_words[nid as usize];
-            let mut left = subs_left[nid as usize];
-            let mut progressed = false;
-            while left > 0 {
-                let sub = total_subs - left;
-                let slot = if !per_bank {
-                    0
-                } else if block {
-                    (((base_word + sub) / block_size).min(bank_count - 1)) as usize
-                } else {
-                    ((base_word + sub) % bank_count) as usize
-                };
-                let ok = if shared {
-                    // 1RW: reads and writes share one port per bank
-                    if used_rd[slot] + used_wr[slot] < rd_ports.max(wr_ports) {
-                        if is_write {
-                            used_wr[slot] += 1;
-                        } else {
-                            used_rd[slot] += 1;
-                        }
-                        true
-                    } else {
-                        false
-                    }
-                } else if is_write {
-                    if used_wr[slot] < wr_ports {
-                        used_wr[slot] += 1;
-                        true
-                    } else {
-                        false
-                    }
-                } else if used_rd[slot] < rd_ports {
-                    used_rd[slot] += 1;
-                    true
-                } else {
-                    false
-                };
-                if !ok {
-                    break;
-                }
-                left -= 1;
-                progressed = true;
-                if is_write {
-                    *n_writes += 1;
-                } else {
-                    *n_reads += 1;
-                }
-            }
-            subs_left[nid as usize] = left;
-            if left == 0 {
-                *issued_mem += 1;
-            } else if !progressed {
-                *port_stalls += 1;
-            }
-            left
-        };
-
-        if per_bank {
-            // Banked designs model Aladdin's *static* schedule: memory
-            // issues in program order; the first bank conflict stalls all
-            // later memory ops this cycle (the compiler cannot reorder
-            // around a dynamic conflict).
-            while let Some(&Reverse((rc, _))) = ready_mem.peek() {
-                if rc > cycle {
-                    break;
-                }
-                let Reverse((rc0, nid)) = ready_mem.pop().unwrap();
-                let left = try_mem(
-                    nid, &mut used_rd, &mut used_wr, &mut n_reads, &mut n_writes,
-                    &mut subs_left, &mut port_stalls, &mut issued_mem,
-                );
-                if left > 0 {
-                    had_mem_stall = true;
-                    // Re-queue under the ORIGINAL key so program order
-                    // among ready ops is preserved across the stall.
-                    ready_mem.push(Reverse((rc0, nid)));
-                    break; // in-order: nothing younger may issue
-                }
-                complete_at!(cycle + 1, nid);
-            }
-        } else {
-            // True multi-port (AMM / multipump / circuit MP): reads and
-            // writes issue independently until their port class is full.
-            while used_rd[0] < rd_ports {
-                match ready_rd.peek() {
-                    Some(&Reverse((rc, _))) if rc <= cycle => {}
-                    _ => break,
-                }
-                let Reverse((rc0, nid)) = ready_rd.pop().unwrap();
-                let left = try_mem(
-                    nid, &mut used_rd, &mut used_wr, &mut n_reads, &mut n_writes,
-                    &mut subs_left, &mut port_stalls, &mut issued_mem,
-                );
-                if left > 0 {
-                    had_mem_stall = true;
-                    // Re-queue under the ORIGINAL key so program order
-                    // among ready ops is preserved across the stall.
-                    ready_rd.push(Reverse((rc0, nid)));
-                    break;
-                }
-                complete_at!(cycle + 1, nid);
-            }
-            while used_wr[0] < wr_ports {
-                match ready_wr.peek() {
-                    Some(&Reverse((rc, _))) if rc <= cycle => {}
-                    _ => break,
-                }
-                let Reverse((rc0, nid)) = ready_wr.pop().unwrap();
-                let left = try_mem(
-                    nid, &mut used_rd, &mut used_wr, &mut n_reads, &mut n_writes,
-                    &mut subs_left, &mut port_stalls, &mut issued_mem,
-                );
-                if left > 0 {
-                    had_mem_stall = true;
-                    // Re-queue under the ORIGINAL key so program order
-                    // among ready ops is preserved across the stall.
-                    ready_wr.push(Reverse((rc0, nid)));
-                    break;
-                }
-                complete_at!(cycle + 1, nid);
-            }
-        }
-        if had_mem_stall {
-            stall_cycles += 1;
-        }
-
-        // advance to the next event (earliest ready or completion)
-        let mut next = u64::MAX;
-        for h in [&ready_reg, &ready_alu, &ready_mem, &ready_rd, &ready_wr] {
-            if let Some(&Reverse((c, _))) = h.peek() {
-                next = next.min(c);
-            }
-        }
-        if ring_pending > 0 {
-            // nearest non-empty ring slot within the next RING cycles
-            for d in 1..=RING as u64 {
-                if !ring[((cycle + d) % RING as u64) as usize].is_empty() {
-                    next = next.min(cycle + d);
-                    break;
-                }
-            }
-        }
-        if next == u64::MAX {
-            break;
-        }
-        cycle = next.max(cycle + 1);
-    }
-
-    // --- physical composition (the Aladdin backend step) --------------
-    let period_ns =
-        BASE_PERIOD_NS.max(design.t_access_ns()) * design.freq_factor;
-    let cycles = cycle.max(1);
-    let time_ns = cycles as f64 * period_ns as f64;
-
-    let mem_area = design.area_um2() + promoted_reg_area(trace);
-    let fu_area = fu_area(trace, alus);
-    let dyn_energy = n_reads as f64 * design.e_read_pj() as f64
-        + n_writes as f64 * design.e_write_pj() as f64
-        + n_reg as f64 * REG_ACCESS_PJ
-        + n_alu_energy;
-    let leak_uw = design.leak_uw() + fu_area * FU_LEAK_UW_PER_UM2;
-    // pJ / ns = mW; leakage µW → mW.
-    let power_mw = (dyn_energy / time_ns) as f32 + leak_uw / 1000.0;
-
-    SimOutput {
-        cycles,
-        period_ns,
-        time_ns,
-        mem_area_um2: mem_area,
-        fu_area_um2: fu_area,
-        area_um2: mem_area + fu_area,
-        power_mw,
-        dyn_energy_pj: dyn_energy,
-        mem_accesses: issued_mem,
-        port_stalls,
-        stall_cycles,
-    }
+    CompiledTrace::new(trace, knobs.word_bytes).simulate(&mut SimArena::new(), knobs, design)
 }
 
 /// FU area for `alus` issue slots: blended over the trace's op mix (an
 /// `alus`-wide datapath provisioned proportionally to what the kernel
-/// actually executes).
+/// actually executes). Reads the op-mix counts cached on the trace at
+/// build time — O(8), not O(nodes × 8).
 pub fn fu_area(trace: &Trace, alus: u32) -> f32 {
-    let mut counts = [0u64; 8];
-    let mut total = 0u64;
-    for node in &trace.nodes {
-        if let OpKind::Alu(k) = node.kind {
-            let i = crate::trace::AluKind::ALL.iter().position(|&x| x == k).unwrap();
-            counts[i] += 1;
-            total += 1;
-        }
-    }
+    let counts = &trace.alu_kind_counts;
+    let total: u64 = counts.iter().sum();
     if total == 0 {
         return 0.0;
     }
@@ -698,6 +376,22 @@ mod tests {
         let single = simulate(&t, &DesignConfig::baseline());
         // but the external clock runs 2× slower → no net time win
         assert!(out.time_ns >= single.time_ns * 0.95);
+    }
+
+    #[test]
+    fn engine_with_reused_arena_matches_compat() {
+        let wl = suite::generate("gemm", Scale::Tiny);
+        let cfg = DesignConfig { unroll: 8, alus: 8, ..DesignConfig::baseline() };
+        let design = build_memory(&wl.trace, &cfg);
+        let compat = simulate(&wl.trace, &cfg);
+        let ct = CompiledTrace::new(&wl.trace, cfg.word_bytes);
+        let mut arena = SimArena::new();
+        for round in 0..3 {
+            let out = ct.simulate(&mut arena, &cfg.knobs(), &design);
+            assert_eq!(out, compat, "round {round}");
+        }
+        assert_eq!(ct.depth(), footprint_depth(&wl.trace, cfg.word_bytes));
+        assert_eq!(ct.fu_area(8), fu_area(&wl.trace, 8));
     }
 
     #[test]

@@ -158,7 +158,23 @@ impl TraceBuilder {
             cursor[from as usize] += 1;
             pred_count[to as usize] += 1;
         }
-        let t = Trace { arrays: self.arrays, nodes: self.nodes, succ_off, succ, pred_count };
+        let mut mem_op_count = 0u32;
+        let mut alu_kind_counts = [0u64; 8];
+        for nd in &self.nodes {
+            match nd.kind {
+                OpKind::Alu(k) => alu_kind_counts[k.index()] += 1,
+                _ => mem_op_count += 1,
+            }
+        }
+        let t = Trace {
+            arrays: self.arrays,
+            nodes: self.nodes,
+            succ_off,
+            succ,
+            pred_count,
+            mem_op_count,
+            alu_kind_counts,
+        };
         debug_assert!(t.validate().is_ok(), "{:?}", t.validate());
         t
     }

@@ -78,6 +78,21 @@ impl AluKind {
         }
     }
 
+    /// Index of this kind in [`AluKind::ALL`] — O(1), so hot paths can
+    /// bucket per-kind counts without a linear `position()` scan.
+    pub const fn index(self) -> usize {
+        match self {
+            AluKind::IntAdd => 0,
+            AluKind::IntMul => 1,
+            AluKind::Cmp => 2,
+            AluKind::Logic => 3,
+            AluKind::Shift => 4,
+            AluKind::FAdd => 5,
+            AluKind::FMul => 6,
+            AluKind::FDiv => 7,
+        }
+    }
+
     /// All kinds (for FU-mix sizing).
     pub const ALL: [AluKind; 8] = [
         AluKind::IntAdd,
@@ -178,6 +193,13 @@ pub struct Trace {
     pub succ: Vec<NodeId>,
     /// In-degree (number of predecessors) per node.
     pub pred_count: Vec<u32>,
+    /// Cached number of memory (load/store) nodes, filled by
+    /// [`TraceBuilder::finish`] so per-design-point consumers never
+    /// re-scan the node list.
+    pub mem_op_count: u32,
+    /// Cached node count per [`AluKind`], indexed by [`AluKind::index`]
+    /// (the FU-mix table), filled by [`TraceBuilder::finish`].
+    pub alu_kind_counts: [u64; 8],
 }
 
 impl Trace {
@@ -195,9 +217,9 @@ impl Trace {
         let b = self.succ_off[n as usize + 1] as usize;
         &self.succ[a..b]
     }
-    /// Count of memory nodes.
+    /// Count of memory nodes (cached at build time).
     pub fn mem_ops(&self) -> usize {
-        self.nodes.iter().filter(|n| n.kind.is_mem()).count()
+        self.mem_op_count as usize
     }
     /// Count of ALU nodes.
     pub fn alu_ops(&self) -> usize {
@@ -234,7 +256,13 @@ impl Trace {
         if preds != self.pred_count {
             return Err("pred_count inconsistent with successor lists".into());
         }
+        let mut mem_count = 0u32;
+        let mut alu_counts = [0u64; 8];
         for n in &self.nodes {
+            match n.kind {
+                OpKind::Alu(k) => alu_counts[k.index()] += 1,
+                _ => mem_count += 1,
+            }
             if let Some((a, idx)) = n.kind.mem_ref() {
                 let arr =
                     self.arrays.get(a as usize).ok_or_else(|| format!("bad array id {a}"))?;
@@ -242,6 +270,15 @@ impl Trace {
                     return Err(format!("index {idx} out of bounds for array {}", arr.name));
                 }
             }
+        }
+        if mem_count != self.mem_op_count {
+            return Err(format!(
+                "cached mem_op_count {} != actual {}",
+                self.mem_op_count, mem_count
+            ));
+        }
+        if alu_counts != self.alu_kind_counts {
+            return Err("cached alu_kind_counts inconsistent with nodes".into());
         }
         Ok(())
     }
@@ -292,6 +329,21 @@ mod tests {
         let a = ArrayInfo { name: "x".into(), elem_bytes: 8, length: 10, base: 0x100 };
         assert_eq!(a.byte_addr(3), 0x100 + 24);
         assert_eq!(a.bytes(), 80);
+    }
+
+    #[test]
+    fn alu_index_matches_all_order() {
+        for (i, k) in AluKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn op_mix_counts_cached_at_build() {
+        let t = tiny();
+        assert_eq!(t.mem_op_count, 2);
+        assert_eq!(t.alu_kind_counts[AluKind::FAdd.index()], 1);
+        assert_eq!(t.alu_kind_counts.iter().sum::<u64>() as usize, t.alu_ops());
     }
 
     #[test]

@@ -24,6 +24,11 @@ impl Measurement {
     pub fn median_ns(&self) -> f64 {
         stats::median(&self.iters_ns)
     }
+
+    /// Items per second at the median iteration time, if `items` is set.
+    pub fn items_per_s(&self) -> Option<f64> {
+        self.items.map(|i| i as f64 / (self.median_ns() / 1e9))
+    }
 }
 
 /// Harness: collects measurements, prints a criterion-style report.
@@ -37,6 +42,18 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Harness with explicit iteration counts and no CLI filter — for
+    /// programmatic callers like the `repro perf-smoke` CI probe that
+    /// need the measurements back, not just the printed report.
+    pub fn new(iters: usize, warmup: usize) -> Self {
+        Bench { iters: iters.max(1), warmup, results: Vec::new(), filter: None }
+    }
+
+    /// Measurements recorded so far, in run order.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
     /// Construct from CLI args (supports `cargo bench -- <filter>` and
     /// `--quick` for 3 iterations).
     pub fn from_args() -> Self {
@@ -85,9 +102,8 @@ impl Bench {
         let sd = stats::stddev(&m.iters_ns);
         let (val, unit) = humanize_ns(med);
         print!("bench {:<44} median {val:>9.3} {unit:<2} (mean {:>9.3e} ns ± {:.1e})", m.name, mean, sd);
-        if let Some(items) = m.items {
-            let per_sec = items as f64 / (med / 1e9);
-            print!("  thrpt {:>10.3e} items/s", per_sec);
+        if let Some(per_sec) = m.items_per_s() {
+            print!("  thrpt {per_sec:>10.3e} items/s");
         }
         println!();
     }

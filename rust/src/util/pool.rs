@@ -24,13 +24,29 @@ where
     R: Send + Default + Clone,
     F: Fn(&T) -> R + Sync,
 {
+    parallel_map_with(items, threads, || (), |_, t| f(t))
+}
+
+/// [`parallel_map`] with per-worker owned state: each worker thread
+/// builds one `S` via `init` and hands it mutably to `f` for every item
+/// it processes. This is how sweep workers own one reusable
+/// `sched::SimArena` for their whole slice instead of allocating
+/// scheduler state per design point.
+pub fn parallel_map_with<T, S, R, FI, F>(items: &[T], threads: usize, init: FI, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Default + Clone,
+    FI: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.max(1).min(n);
     if threads == 1 {
-        return items.iter().map(|t| f(t)).collect();
+        let mut state = init();
+        return items.iter().map(|t| f(&mut state, t)).collect();
     }
     let mut results: Vec<R> = vec![R::default(); n];
     let next = AtomicUsize::new(0);
@@ -44,20 +60,25 @@ where
     // the raw `*mut R` (not `Sync`) into the closure — capture the whole
     // wrapper by reference instead.
     let cells = &cells;
-    let (f, next) = (&f, &next);
+    let (f, init, next) = (&f, &init, &next);
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                // SAFETY: each index i is claimed exactly once via the
-                // atomic counter, so writes to cells are disjoint; the
-                // scope guarantees `results` outlives all workers.
-                unsafe {
-                    *cells.0.add(i) = r;
+            s.spawn(move || {
+                // Worker-owned state: created on this thread, never
+                // shared, dropped when the worker's slice drains.
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&mut state, &items[i]);
+                    // SAFETY: each index i is claimed exactly once via the
+                    // atomic counter, so writes to cells are disjoint; the
+                    // scope guarantees `results` outlives all workers.
+                    unsafe {
+                        *cells.0.add(i) = r;
+                    }
                 }
             });
         }
@@ -140,5 +161,43 @@ mod tests {
     fn single_thread_path() {
         let items: Vec<u32> = (0..10).collect();
         assert_eq!(parallel_map(&items, 1, |&x| x * x)[9], 81);
+    }
+
+    #[test]
+    fn with_state_matches_plain_and_reuses_state() {
+        let items: Vec<u64> = (0..500).collect();
+        let plain = parallel_map(&items, 4, |&x| x + 7);
+        // State is a scratch Vec each worker keeps across its items; the
+        // result must not depend on how dirty it is.
+        let with = parallel_map_with(
+            &items,
+            4,
+            Vec::<u64>::new,
+            |scratch, &x| {
+                scratch.push(x); // deliberately dirty the state
+                x + 7
+            },
+        );
+        assert_eq!(plain, with);
+    }
+
+    #[test]
+    fn with_state_single_thread_uses_one_state() {
+        let inits = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..10).collect();
+        let out = parallel_map_with(
+            &items,
+            1,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0u32
+            },
+            |acc, &x| {
+                *acc += x;
+                *acc
+            },
+        );
+        assert_eq!(inits.load(Ordering::Relaxed), 1, "one worker, one init");
+        assert_eq!(out[9], (0..10).sum::<u32>(), "state accumulates across items");
     }
 }

@@ -1,0 +1,106 @@
+//! Engine-vs-compat golden equivalence.
+//!
+//! The sweep paths of the engine (`CompiledTrace` shared across a word
+//! group, `SimArena` reused dirty across runs, grouped parallel
+//! dispatch) must reproduce the compat `simulate_design` wrapper's
+//! `SimOutput` **bit-for-bit** — cycles, stalls, energies, areas — on
+//! every suite benchmark across the paper's design families.
+//!
+//! Scope note: `simulate_design` is itself a thin wrapper over the same
+//! engine (compile + fresh arena per call), so what these tests pin is
+//! that *state reuse and grouping* never change a result — not that the
+//! engine matches the pre-refactor scheduler. Fidelity to the seed
+//! scheduler's behavior is pinned separately by the fixture unit tests
+//! in `sched` (exact cycle counts for serial chains, port
+//! serialization, banking conflicts, unroll gating, multipumping) and
+//! the `sched_props`/`end_to_end` invariants, all of which now execute
+//! through this engine.
+
+use amm_dse::dse::{self, Sweep};
+use amm_dse::mem::MemKind;
+use amm_dse::sched::{self, CompiledTrace, Knobs, SimArena};
+use amm_dse::suite::{self, Scale};
+
+/// One design per port-model family the scheduler distinguishes:
+/// banked (per-bank, shared 1RW), XOR AMM + LVT AMM (true ports),
+/// multipump (true ports + frequency penalty).
+fn design_families() -> Vec<MemKind> {
+    vec![
+        MemKind::Banked { banks: 4 },
+        MemKind::XorAmm { read_ports: 4, write_ports: 2 },
+        MemKind::LvtAmm { read_ports: 2, write_ports: 2 },
+        MemKind::MultiPump { factor: 2 },
+    ]
+}
+
+#[test]
+fn engine_matches_compat_on_all_suite_benchmarks() {
+    let knob_sets = [
+        Knobs { unroll: 4, word_bytes: 8, alus: 4 },
+        Knobs { unroll: 8, word_bytes: 1, alus: 8 },
+    ];
+    // One arena shared (and dirtied) across every benchmark × design ×
+    // knob combination — the harshest reuse pattern.
+    let mut arena = SimArena::new();
+    for name in suite::ALL_BENCHMARKS {
+        let wl = suite::generate(name, Scale::Tiny);
+        for kind in design_families() {
+            for knobs in &knob_sets {
+                let design =
+                    sched::build_memory_model(&wl.trace, &*kind.model(), knobs.word_bytes);
+                let compat = sched::simulate_design(&wl.trace, knobs, &design);
+                let engine =
+                    CompiledTrace::new(&wl.trace, knobs.word_bytes).simulate(&mut arena, knobs, &design);
+                assert_eq!(engine, compat, "{name}/{} {knobs:?}", design.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn dirty_arena_resets_cleanly_between_different_traces() {
+    // gemm and kmp differ in node count, array count and op mix; ping-
+    // ponging one arena between them must reproduce fresh-arena outputs
+    // exactly, every round.
+    let gemm = suite::generate("gemm", Scale::Tiny);
+    let kmp = suite::generate("kmp", Scale::Tiny);
+    let knobs = Knobs::default();
+    let kind = MemKind::XorAmm { read_ports: 2, write_ports: 2 };
+    let d_gemm = sched::build_memory_model(&gemm.trace, &*kind.model(), knobs.word_bytes);
+    let d_kmp = sched::build_memory_model(&kmp.trace, &*kind.model(), knobs.word_bytes);
+    let fresh_gemm = CompiledTrace::new(&gemm.trace, knobs.word_bytes)
+        .simulate(&mut SimArena::new(), &knobs, &d_gemm);
+    let fresh_kmp = CompiledTrace::new(&kmp.trace, knobs.word_bytes)
+        .simulate(&mut SimArena::new(), &knobs, &d_kmp);
+    let mut arena = SimArena::new();
+    for round in 0..3 {
+        let g = CompiledTrace::new(&gemm.trace, knobs.word_bytes)
+            .simulate(&mut arena, &knobs, &d_gemm);
+        assert_eq!(g, fresh_gemm, "gemm round {round}");
+        let k = CompiledTrace::new(&kmp.trace, knobs.word_bytes)
+            .simulate(&mut arena, &knobs, &d_kmp);
+        assert_eq!(k, fresh_kmp, "kmp round {round}");
+    }
+}
+
+#[test]
+fn grouped_sweep_engine_matches_compat_per_point() {
+    // The full stack: Sweep::run (word-grouped CompiledTrace + per-
+    // worker arenas) vs the per-point compat path, multi word size so
+    // grouping actually kicks in, multi-threaded so arena reuse crosses
+    // work-stealing boundaries.
+    for name in ["gemm", "stencil2d"] {
+        let wl = suite::generate(name, Scale::Tiny);
+        let mut sweep = Sweep::quick();
+        sweep.word_bytes = vec![1, 4, 8];
+        sweep.threads = 4;
+        let run = sweep.run(&wl.trace);
+        let points = sweep.points();
+        assert_eq!(run.len(), points.len(), "{name}");
+        for (a, p) in run.iter().zip(&points) {
+            let b = dse::evaluate_model(&wl.trace, &*p.model, &p.knobs);
+            assert_eq!(a.id, b.id, "{name}: enumeration order must be preserved");
+            assert_eq!(a.out, b.out, "{name}/{}", a.id);
+        }
+    }
+}
