@@ -1,0 +1,562 @@
+//! Suite-scale campaign engine: one work-stream across all benchmarks.
+//!
+//! The paper's headline artifact (Fig 5, §IV) is a *cross-benchmark*
+//! analysis, but running it as N sequential [`crate::Explorer`]s leaves
+//! three kinds of waste on the table:
+//!
+//! * **barriers** — each benchmark's sweep drains completely before the
+//!   next starts, so the worker pool idles on every straggler tail;
+//! * **fragmented cost batches** — each sweep issues its own macro-cost
+//!   batch even though benchmarks share most macro shapes;
+//! * **all-or-nothing results** — nothing lands on disk until the whole
+//!   run finishes, so a killed run is a lost run.
+//!
+//! A [`Campaign`] plans the entire {benchmarks} × {sweep points}
+//! cross-product as **one flat stream of work units** and executes it
+//! with one shared worker pool:
+//!
+//! 1. **plan** — workloads come from the memoized
+//!    [`crate::suite::generate_cached`] (each benchmark traced exactly
+//!    once per process), designs from [`crate::dse::build_designs`]
+//!    (one build per distinct (model, word-size) run);
+//! 2. **resume** — if a [`sink`] file exists, points already recorded
+//!    there are restored verbatim and never re-simulated;
+//! 3. **score** — the macro-cost queries of every pending design, across
+//!    *all* benchmarks, go through
+//!    [`crate::coordinator::Coordinator::score_designs`] as **one**
+//!    deduplicated batch (one PJRT execute scores the whole campaign);
+//! 4. **compile** — one [`CompiledTrace`] per `(benchmark, word_bytes)`
+//!    group, shared by every model/knob variant in the group;
+//! 5. **simulate** — a single [`crate::util::pool::parallel_map_with`]
+//!    dispatch over the whole flat unit stream: workers steal across
+//!    benchmark boundaries (no per-benchmark barrier) and own one
+//!    [`SimArena`] each for the entire campaign;
+//! 6. **stream** — completed points flow through a reorder buffer to the
+//!    append-only JSONL [`sink`] in enumeration order, so the file grows
+//!    as the in-order prefix completes, is byte-stable for identical
+//!    runs, and a kill leaves a clean resumable prefix.
+//!
+//! [`crate::Explorer`] is a thin single-benchmark campaign, so the
+//! facade, the `repro figure` commands and `perf-smoke` all ride this
+//! engine; the campaign-vs-sequential equivalence is pinned bit-for-bit
+//! by `tests/campaign_golden.rs`.
+
+pub mod sink;
+
+use crate::coordinator::{Coordinator, CostBackend};
+use crate::dse::{self, BenchSummary, DesignPoint, Sweep};
+use crate::error::{Error, Result};
+use crate::explore::Exploration;
+use crate::locality;
+use crate::mem::MemDesign;
+use crate::report;
+use crate::sched::{CompiledTrace, SimArena};
+use crate::suite::{self, Scale};
+use crate::util::{log, pool};
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Builder for one exploration campaign over many benchmarks.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    /// `(benchmark, swept)` in display order; `swept == false` rows only
+    /// contribute locality (the non-DSE rows of Fig 5).
+    plan: Vec<(String, bool)>,
+    scale: Scale,
+    sweep: Sweep,
+    threads: usize,
+    sink: Option<PathBuf>,
+    artifacts: Option<PathBuf>,
+    offline: bool,
+}
+
+impl Default for Campaign {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Campaign {
+    /// An empty campaign (paper scale, default sweep, auto threads, no
+    /// sink, batched cost service on).
+    pub fn new() -> Self {
+        Campaign {
+            plan: Vec::new(),
+            scale: Scale::Paper,
+            sweep: Sweep::default(),
+            threads: 0,
+            sink: None,
+            artifacts: None,
+            offline: false,
+        }
+    }
+
+    /// Add one benchmark to the swept set.
+    pub fn benchmark(mut self, name: impl Into<String>) -> Self {
+        self.plan.push((name.into(), true));
+        self
+    }
+
+    /// Add several benchmarks to the swept set.
+    pub fn benchmarks<I>(mut self, names: I) -> Self
+    where
+        I: IntoIterator,
+        I::Item: Into<String>,
+    {
+        for n in names {
+            self.plan.push((n.into(), true));
+        }
+        self
+    }
+
+    /// Add a locality-only benchmark: traced and analyzed, not swept
+    /// (the grey rows of Fig 5).
+    pub fn locality_only(mut self, name: impl Into<String>) -> Self {
+        self.plan.push((name.into(), false));
+        self
+    }
+
+    /// Workload scale for every benchmark in the campaign.
+    pub fn scale(mut self, scale: Scale) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// The sweep applied to every swept benchmark.
+    pub fn sweep(mut self, sweep: Sweep) -> Self {
+        self.sweep = sweep;
+        self
+    }
+
+    /// Worker threads for the shared pool (0 = auto).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Stream results to (and resume from) an append-only JSONL file:
+    /// points already recorded there are restored instead of
+    /// re-simulated, fresh points are appended as they complete.
+    pub fn sink(mut self, path: impl Into<PathBuf>) -> Self {
+        self.sink = Some(path.into());
+        self
+    }
+
+    /// Artifacts directory for the PJRT cost model (default:
+    /// [`crate::runtime::artifacts_dir`]).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Skip the coordinator/cost service and evaluate in-process with
+    /// the pure-Rust cost model (tests, doctests).
+    pub fn offline(mut self) -> Self {
+        self.offline = true;
+        self
+    }
+
+    /// Validate and run, bringing up a private [`Coordinator`] (unless
+    /// [`Campaign::offline`]). To share one cost service across several
+    /// campaigns, use [`Campaign::run_with`].
+    pub fn run(self) -> Result<CampaignOutcome> {
+        if self.offline {
+            return self.execute(None);
+        }
+        let dir = self.artifacts.clone().unwrap_or_else(crate::runtime::artifacts_dir);
+        let threads = if self.threads != 0 { self.threads } else { self.sweep.threads };
+        let coord = Coordinator::with_artifacts(dir).threads(threads);
+        self.execute(Some(&coord))
+    }
+
+    /// Validate and run through a caller-provided coordinator.
+    pub fn run_with(self, coord: &Coordinator) -> Result<CampaignOutcome> {
+        self.execute(Some(coord))
+    }
+
+    /// The engine: plan → resume → score → compile → simulate → stream.
+    fn execute(self, coord: Option<&Coordinator>) -> Result<CampaignOutcome> {
+        // ---- validate up front (benchmark names, registry model ids) --
+        if self.plan.is_empty() {
+            return Err(Error::config(
+                "empty campaign: call .benchmark()/.benchmarks()/.locality_only()",
+            ));
+        }
+        for (name, _) in &self.plan {
+            if !suite::ALL_BENCHMARKS.contains(&name.as_str()) {
+                return Err(Error::UnknownBenchmark { name: name.clone() });
+            }
+        }
+        for id in &self.sweep.extra_models {
+            if crate::mem::parse_model(id).is_none() {
+                return Err(Error::UnknownModel { id: id.clone() });
+            }
+        }
+        // Thread precedence mirrors the pre-campaign run_sweep path:
+        // explicit campaign setting > sweep setting > the coordinator's
+        // configured worker count > auto.
+        let threads = if self.threads != 0 {
+            self.threads
+        } else if self.sweep.threads != 0 {
+            self.sweep.threads
+        } else if let Some(c) = coord {
+            c.worker_threads()
+        } else {
+            pool::default_threads()
+        };
+        let scale = self.scale;
+
+        // ---- plan: memoized workloads + locality + sweep points -------
+        struct Bench {
+            name: String,
+            swept: bool,
+            wl: Arc<suite::Workload>,
+            locality: f64,
+        }
+        let points = self.sweep.points();
+        let benches: Vec<Bench> = self
+            .plan
+            .iter()
+            .map(|(name, swept)| {
+                let wl = suite::generate_cached(name, scale);
+                let locality = locality::analyze(&wl.trace).spatial_locality();
+                Bench { name: name.clone(), swept: *swept, wl, locality }
+            })
+            .collect();
+
+        // ---- resume: restore already-scored points from the sink ------
+        let mut done: HashMap<(String, String), DesignPoint> = HashMap::new();
+        let mut torn_tail = false;
+        if let Some(path) = &self.sink {
+            if path.exists() {
+                let (records, torn) = sink::load(path)?;
+                torn_tail = torn;
+                for (bench, rec_scale, p) in records {
+                    if rec_scale == scale {
+                        done.insert((bench, p.id.clone()), p);
+                    }
+                }
+            }
+        }
+
+        // ---- flatten: one stream of units across all benchmarks -------
+        struct Unit {
+            bench: usize,
+            point: usize,
+            group: usize,
+            seq: usize,
+            design: MemDesign,
+        }
+        let mut results: Vec<Vec<Option<DesignPoint>>> = benches
+            .iter()
+            .map(|b| if b.swept { vec![None; points.len()] } else { Vec::new() })
+            .collect();
+        let mut units: Vec<Unit> = Vec::new();
+        let mut group_keys: Vec<(usize, u32)> = Vec::new();
+        let mut resumed = 0usize;
+        for (bi, b) in benches.iter().enumerate() {
+            if !b.swept {
+                continue;
+            }
+            let designs = dse::build_designs(&b.wl.trace, &points);
+            for (pi, (p, design)) in points.iter().zip(designs).enumerate() {
+                let id = dse::point_id(&design.id, &p.knobs);
+                if let Some(prev) = done.remove(&(b.name.clone(), id)) {
+                    results[bi][pi] = Some(prev);
+                    resumed += 1;
+                    continue;
+                }
+                // word_bytes is the sweep's outermost axis, so each
+                // (benchmark, word size) is one contiguous run — gaps
+                // from resumed points never split a group.
+                if group_keys.last() != Some(&(bi, p.knobs.word_bytes)) {
+                    group_keys.push((bi, p.knobs.word_bytes));
+                }
+                let seq = units.len();
+                units.push(Unit {
+                    bench: bi,
+                    point: pi,
+                    group: group_keys.len() - 1,
+                    seq,
+                    design,
+                });
+            }
+        }
+        if !done.is_empty() {
+            log::warn(format!(
+                "campaign sink: {} record(s) match no planned point (different sweep or benchmark set?)",
+                done.len()
+            ));
+        }
+        let simulated = units.len();
+
+        // ---- score: ONE deduplicated cost batch for the whole campaign
+        let mut cost_batches = 0usize;
+        if let Some(coord) = coord {
+            if !units.is_empty() {
+                coord.score_designs(units.iter_mut().map(|u| &mut u.design))?;
+                cost_batches = 1;
+            }
+        }
+
+        // ---- compile: one CompiledTrace per (benchmark, word) group ---
+        // (Option<Arc<..>> only to satisfy the pool's Default bound.)
+        let groups: Vec<Arc<CompiledTrace<'_>>> =
+            pool::parallel_map(&group_keys, threads, |&(bi, wb)| {
+                Some(Arc::new(CompiledTrace::new(&benches[bi].wl.trace, wb)))
+            })
+            .into_iter()
+            .map(|g| g.expect("group compilation cannot fail"))
+            .collect();
+
+        // ---- simulate + stream ----------------------------------------
+        // One flat dispatch: workers steal units across benchmark
+        // boundaries and keep one arena each for the whole campaign.
+        // Completed points are sent to a writer thread that holds a
+        // reorder buffer and appends to the sink in enumeration order,
+        // so the file grows as the in-order prefix completes and two
+        // identical runs produce byte-identical sinks.
+        let mut tx: Option<Mutex<mpsc::Sender<(usize, String)>>> = None;
+        let mut writer: Option<std::thread::JoinHandle<std::io::Result<u64>>> = None;
+        if let Some(path) = &self.sink {
+            if let Some(dir) = path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)
+                        .map_err(|e| Error::io(format!("create {}", dir.display()), e))?;
+                }
+            }
+            let mut file = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .map_err(|e| Error::io(format!("open campaign sink {}", path.display()), e))?;
+            if torn_tail {
+                // Terminate the torn line a killed writer left behind so
+                // it can never merge with the first fresh record.
+                file.write_all(b"\n")
+                    .map_err(|e| Error::io(format!("repair {}", path.display()), e))?;
+            }
+            let (s, r) = mpsc::channel::<(usize, String)>();
+            tx = Some(Mutex::new(s));
+            writer = Some(
+                std::thread::Builder::new()
+                    .name("campaign-sink".into())
+                    .spawn(move || sink_writer(file, r))
+                    .expect("spawn campaign sink writer"),
+            );
+        }
+        let fresh: Vec<DesignPoint> =
+            pool::parallel_map_with(&units, threads, SimArena::new, |arena, u| {
+                let knobs = &points[u.point].knobs;
+                let sim = groups[u.group].simulate(arena, knobs, &u.design);
+                let p = dse::point_from(&u.design.id, u.design.is_amm, knobs, sim);
+                if let Some(tx) = &tx {
+                    let line = sink::record_line(&benches[u.bench].name, scale, &p);
+                    let _ = tx.lock().expect("sink sender poisoned").send((u.seq, line));
+                }
+                p
+            });
+        drop(tx); // hang up so the writer drains and exits
+        if let Some(j) = writer {
+            j.join()
+                .expect("campaign sink writer panicked")
+                .map_err(|e| Error::io("write campaign sink", e))?;
+        }
+        for (u, p) in units.iter().zip(fresh) {
+            results[u.bench][u.point] = Some(p);
+        }
+
+        // ---- assemble per-benchmark explorations, in plan order -------
+        let backend = coord.map(|c| c.backend);
+        let explorations: Vec<Exploration> = benches
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| Exploration {
+                benchmark: b.name.clone(),
+                scale,
+                locality: b.locality,
+                backend,
+                trace_nodes: b.wl.trace.len(),
+                checksum: b.wl.checksum,
+                points: if b.swept {
+                    results[bi]
+                        .iter_mut()
+                        .map(|slot| slot.take().expect("campaign point unaccounted for"))
+                        .collect()
+                } else {
+                    Vec::new()
+                },
+            })
+            .collect();
+        Ok(CampaignOutcome { scale, backend, explorations, simulated, resumed, cost_batches })
+    }
+}
+
+/// Drain `(seq, line)` completions into the sink file, writing lines in
+/// `seq` order: a reorder buffer holds out-of-order completions from the
+/// work-stealing pool so the file always grows as the in-order prefix
+/// completes (and is flushed there, for `tail -f` observability).
+fn sink_writer(
+    file: std::fs::File,
+    rx: mpsc::Receiver<(usize, String)>,
+) -> std::io::Result<u64> {
+    use std::collections::BTreeMap;
+    let mut out = std::io::BufWriter::new(file);
+    let mut pending: BTreeMap<usize, String> = BTreeMap::new();
+    let mut next = 0usize;
+    let mut written = 0u64;
+    for (seq, line) in rx {
+        pending.insert(seq, line);
+        let mut flushed = false;
+        while let Some(line) = pending.remove(&next) {
+            out.write_all(line.as_bytes())?;
+            out.write_all(b"\n")?;
+            next += 1;
+            written += 1;
+            flushed = true;
+        }
+        if flushed {
+            out.flush()?;
+        }
+    }
+    // Anything still pending means a gap (a worker died); persist what
+    // completed anyway — the resume path tolerates out-of-order lines.
+    for (_, line) in pending {
+        out.write_all(line.as_bytes())?;
+        out.write_all(b"\n")?;
+        written += 1;
+    }
+    out.flush()?;
+    Ok(written)
+}
+
+/// Results of one campaign: per-benchmark [`Exploration`]s (in plan
+/// order) plus campaign-level accounting.
+#[derive(Clone, Debug)]
+pub struct CampaignOutcome {
+    /// Workload scale the campaign ran at.
+    pub scale: Scale,
+    /// Cost backend (`None` for [`Campaign::offline`] runs).
+    pub backend: Option<CostBackend>,
+    /// One exploration per planned benchmark (locality-only rows carry
+    /// an empty point set).
+    pub explorations: Vec<Exploration>,
+    /// Design points simulated by this run.
+    pub simulated: usize,
+    /// Design points restored from the sink instead of re-simulated.
+    pub resumed: usize,
+    /// Macro-cost batches issued (1 for any non-empty scored campaign,
+    /// 0 when offline or fully resumed).
+    pub cost_batches: usize,
+}
+
+impl CampaignOutcome {
+    /// The per-benchmark explorations, in plan order.
+    pub fn explorations(&self) -> &[Exploration] {
+        &self.explorations
+    }
+
+    /// Exploration for one benchmark, if it was in the plan.
+    pub fn get(&self, benchmark: &str) -> Option<&Exploration> {
+        self.explorations.iter().find(|e| e.benchmark == benchmark)
+    }
+
+    /// Total design points across the campaign (simulated + resumed).
+    pub fn total_points(&self) -> usize {
+        self.explorations.iter().map(|e| e.points().len()).sum()
+    }
+
+    /// Fig-5 rows, one per planned benchmark, in plan order.
+    pub fn summaries(&self) -> Vec<BenchSummary> {
+        self.explorations.iter().map(Exploration::summary).collect()
+    }
+
+    /// Fig-5 CSV straight from the campaign result set.
+    pub fn fig5_csv(&self) -> String {
+        report::fig5_csv(&self.summaries())
+    }
+
+    /// Fig-5 ASCII chart straight from the campaign result set.
+    pub fn fig5_ascii(&self) -> String {
+        report::fig5_ascii(&self.summaries())
+    }
+
+    /// Human label for the cost backend.
+    pub fn backend_label(&self) -> &'static str {
+        match self.backend {
+            Some(CostBackend::Pjrt) => "Pjrt",
+            Some(CostBackend::RustFallback) => "RustFallback",
+            None => "Offline",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_campaign_is_a_config_error() {
+        let err = Campaign::new().offline().run().unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn unknown_benchmark_is_rejected() {
+        let err = Campaign::new().benchmark("nope").offline().run().unwrap_err();
+        assert!(matches!(err, Error::UnknownBenchmark { .. }), "{err}");
+    }
+
+    #[test]
+    fn unknown_model_id_is_rejected() {
+        let mut sweep = Sweep::quick();
+        sweep.extra_models = vec!["warp9".into()];
+        let err =
+            Campaign::new().benchmark("gemm").sweep(sweep).offline().run().unwrap_err();
+        assert!(matches!(err, Error::UnknownModel { .. }), "{err}");
+    }
+
+    #[test]
+    fn locality_only_rows_carry_no_points_but_real_locality() {
+        let outcome = Campaign::new()
+            .benchmark("stencil2d")
+            .locality_only("kmp")
+            .scale(Scale::Tiny)
+            .sweep(Sweep::quick())
+            .offline()
+            .run()
+            .unwrap();
+        assert_eq!(outcome.explorations().len(), 2);
+        let swept = outcome.get("stencil2d").unwrap();
+        let loc_only = outcome.get("kmp").unwrap();
+        assert!(!swept.points().is_empty());
+        assert!(loc_only.points().is_empty());
+        assert!(loc_only.locality > 0.5, "kmp is the high-locality benchmark");
+        assert_eq!(outcome.total_points(), swept.points().len());
+        // summaries render through the campaign: the locality-only row
+        // must not leak NaN into the CSV
+        let csv = outcome.fig5_csv();
+        assert!(!csv.contains("NaN"), "{csv}");
+        assert_eq!(csv.lines().count(), 3);
+        assert_eq!(outcome.backend_label(), "Offline");
+        assert_eq!(outcome.cost_batches, 0);
+    }
+
+    #[test]
+    fn campaign_order_follows_the_plan() {
+        let outcome = Campaign::new()
+            .locality_only("viterbi")
+            .benchmark("gemm")
+            .locality_only("aes")
+            .scale(Scale::Tiny)
+            .sweep(Sweep::quick())
+            .offline()
+            .run()
+            .unwrap();
+        let names: Vec<&str> =
+            outcome.explorations().iter().map(|e| e.benchmark.as_str()).collect();
+        assert_eq!(names, ["viterbi", "gemm", "aes"]);
+    }
+}

@@ -1,0 +1,223 @@
+//! The campaign's append-only JSONL result sink.
+//!
+//! One flat JSON object per line, one line per completed design point.
+//! The format is deliberately self-contained — every line carries the
+//! benchmark, scale, point id and the full [`SimOutput`] — so a sink is
+//! (a) observable mid-run with `tail -f`/`jq`, (b) mergeable across
+//! shards by concatenation, and (c) a resume journal: a restarted
+//! campaign keys lines by `(benchmark, point id)` and skips what's
+//! already scored.
+//!
+//! Numbers are emitted with Rust's shortest round-trip float formatting,
+//! so `parse_line(record_line(p)) == p` **bit-for-bit** — resumed
+//! campaigns reproduce fresh-run results exactly (pinned by
+//! `tests/campaign_golden.rs`).
+//!
+//! A campaign killed mid-write leaves at most one torn (newline-less)
+//! final line; [`load`] reports it so the writer can terminate it before
+//! appending, and parsing skips it as malformed.
+
+use crate::dse::DesignPoint;
+use crate::error::{Error, Result};
+use crate::sched::SimOutput;
+use crate::suite::Scale;
+use crate::util::log;
+use std::path::Path;
+
+/// Schema tag carried by every record.
+pub const SCHEMA: &str = "campaign/v1";
+
+/// Emit one design point as a single JSONL record.
+pub fn record_line(benchmark: &str, scale: Scale, p: &DesignPoint) -> String {
+    let o = &p.out;
+    format!(
+        concat!(
+            "{{\"schema\":\"{}\",\"benchmark\":\"{}\",\"scale\":\"{}\",",
+            "\"id\":\"{}\",\"mem\":\"{}\",\"is_amm\":{},",
+            "\"unroll\":{},\"word_bytes\":{},\"alus\":{},",
+            "\"cycles\":{},\"period_ns\":{},\"time_ns\":{},",
+            "\"mem_area_um2\":{},\"fu_area_um2\":{},\"area_um2\":{},",
+            "\"power_mw\":{},\"dyn_energy_pj\":{},",
+            "\"mem_accesses\":{},\"port_stalls\":{},\"stall_cycles\":{}}}"
+        ),
+        SCHEMA,
+        benchmark,
+        scale.as_str(),
+        p.id,
+        p.mem_id,
+        p.is_amm,
+        p.unroll,
+        p.word_bytes,
+        p.alus,
+        o.cycles,
+        o.period_ns,
+        o.time_ns,
+        o.mem_area_um2,
+        o.fu_area_um2,
+        o.area_um2,
+        o.power_mw,
+        o.dyn_energy_pj,
+        o.mem_accesses,
+        o.port_stalls,
+        o.stall_cycles,
+    )
+}
+
+/// Extract one scalar field from a flat single-line JSON object emitted
+/// by [`record_line`]. Not a general JSON parser: it relies on the
+/// emitter never nesting objects or putting `"`/`,`/`}` inside string
+/// values (benchmark names and point ids are `[a-z0-9/-]`).
+fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    if let Some(s) = rest.strip_prefix('"') {
+        s.split('"').next()
+    } else {
+        let end = rest.find([',', '}'])?;
+        Some(rest[..end].trim())
+    }
+}
+
+/// Parse one record back into `(benchmark, scale, point)`. `None` for
+/// malformed lines (torn tails, foreign schemas) — resume treats those
+/// as absent rather than failing the whole campaign.
+pub fn parse_line(line: &str) -> Option<(String, Scale, DesignPoint)> {
+    if field(line, "schema")? != SCHEMA {
+        return None;
+    }
+    let benchmark = field(line, "benchmark")?.to_string();
+    let scale = Scale::parse(field(line, "scale")?)?;
+    let out = SimOutput {
+        cycles: field(line, "cycles")?.parse().ok()?,
+        period_ns: field(line, "period_ns")?.parse().ok()?,
+        time_ns: field(line, "time_ns")?.parse().ok()?,
+        mem_area_um2: field(line, "mem_area_um2")?.parse().ok()?,
+        fu_area_um2: field(line, "fu_area_um2")?.parse().ok()?,
+        area_um2: field(line, "area_um2")?.parse().ok()?,
+        power_mw: field(line, "power_mw")?.parse().ok()?,
+        dyn_energy_pj: field(line, "dyn_energy_pj")?.parse().ok()?,
+        mem_accesses: field(line, "mem_accesses")?.parse().ok()?,
+        port_stalls: field(line, "port_stalls")?.parse().ok()?,
+        stall_cycles: field(line, "stall_cycles")?.parse().ok()?,
+    };
+    let point = DesignPoint {
+        id: field(line, "id")?.to_string(),
+        mem_id: field(line, "mem")?.to_string(),
+        is_amm: field(line, "is_amm")? == "true",
+        unroll: field(line, "unroll")?.parse().ok()?,
+        word_bytes: field(line, "word_bytes")?.parse().ok()?,
+        alus: field(line, "alus")?.parse().ok()?,
+        out,
+    };
+    Some((benchmark, scale, point))
+}
+
+/// Load every parseable record from a sink file. Returns the records
+/// plus whether the file ends in a torn (newline-less) tail — the
+/// signature a campaign killed mid-write leaves behind; the campaign
+/// terminates such a tail with a newline before appending so the torn
+/// fragment can never merge with a fresh record.
+pub fn load(path: &Path) -> Result<(Vec<(String, Scale, DesignPoint)>, bool)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::io(format!("read campaign sink {}", path.display()), e))?;
+    let torn_tail = !text.is_empty() && !text.ends_with('\n');
+    let mut records = Vec::new();
+    let mut malformed = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_line(line) {
+            Some(rec) => records.push(rec),
+            None => malformed += 1,
+        }
+    }
+    if malformed > 0 {
+        log::warn(format!(
+            "campaign sink {}: skipped {malformed} malformed line(s) (torn tail from a kill, or foreign records)",
+            path.display()
+        ));
+    }
+    Ok((records, torn_tail))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_point() -> DesignPoint {
+        DesignPoint {
+            id: "xor4r2w/u8/w8/a4".into(),
+            mem_id: "xor4r2w".into(),
+            is_amm: true,
+            unroll: 8,
+            word_bytes: 8,
+            alus: 4,
+            out: SimOutput {
+                cycles: 12345,
+                period_ns: 1.0625,
+                time_ns: 13116.5625,
+                mem_area_um2: 98765.4,
+                fu_area_um2: 1234.5,
+                area_um2: 99999.9,
+                power_mw: 3.14159,
+                dyn_energy_pj: 2.718281828459045,
+                mem_accesses: 4096,
+                port_stalls: 17,
+                stall_cycles: 9,
+            },
+        }
+    }
+
+    #[test]
+    fn record_round_trips_bit_for_bit() {
+        let p = sample_point();
+        let line = record_line("gemm", Scale::Tiny, &p);
+        let (bench, scale, q) = parse_line(&line).expect("must parse");
+        assert_eq!(bench, "gemm");
+        assert_eq!(scale, Scale::Tiny);
+        assert_eq!(q.id, p.id);
+        assert_eq!(q.mem_id, p.mem_id);
+        assert_eq!(q.is_amm, p.is_amm);
+        assert_eq!((q.unroll, q.word_bytes, q.alus), (p.unroll, p.word_bytes, p.alus));
+        // shortest float reprs parse back to the identical bits
+        assert_eq!(q.out, p.out);
+    }
+
+    #[test]
+    fn field_extraction_is_not_fooled_by_prefixed_keys() {
+        let line = record_line("fft", Scale::Paper, &sample_point());
+        // "id" vs "mem_id"-style overlaps: the quote in the pattern
+        // anchors the match to the real key.
+        assert_eq!(field(&line, "id"), Some("xor4r2w/u8/w8/a4"));
+        assert_eq!(field(&line, "mem"), Some("xor4r2w"));
+        assert_eq!(field(&line, "cycles"), Some("12345"));
+        assert_eq!(field(&line, "area_um2"), Some("99999.9"));
+        assert_eq!(field(&line, "mem_area_um2"), Some("98765.4"));
+    }
+
+    #[test]
+    fn malformed_lines_parse_to_none() {
+        assert!(parse_line("").is_none());
+        assert!(parse_line("{\"schema\":\"other/v9\"}").is_none());
+        let line = record_line("gemm", Scale::Tiny, &sample_point());
+        assert!(parse_line(&line[..line.len() / 2]).is_none(), "torn tail must not parse");
+    }
+
+    #[test]
+    fn load_reports_torn_tails_and_skips_them() {
+        let dir = std::env::temp_dir().join("amm_dse_sink_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("torn.jsonl");
+        let full = record_line("gemm", Scale::Tiny, &sample_point());
+        std::fs::write(&path, format!("{full}\n{}", &full[..20])).unwrap();
+        let (records, torn) = load(&path).unwrap();
+        assert_eq!(records.len(), 1);
+        assert!(torn, "newline-less tail must be reported");
+        std::fs::write(&path, format!("{full}\n")).unwrap();
+        let (records, torn) = load(&path).unwrap();
+        assert_eq!(records.len(), 1);
+        assert!(!torn);
+    }
+}

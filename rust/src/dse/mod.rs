@@ -235,32 +235,42 @@ impl Sweep {
     }
 }
 
-/// Evaluate enumerated sweep points with the compiled-trace engine.
+/// Build one sized [`MemDesign`] per enumerated point.
 ///
 /// A memory design depends only on `(model, word_bytes)`, so each is
 /// built **once per contiguous (model, word-size) run** — for
 /// [`Sweep::points`] enumeration that is once per model per word group —
 /// and cloned across the (unroll, alus) knob variants; the clone skips
-/// the macro-sizing math `build` redoes. Scheduling then goes through
-/// [`evaluate_designs`]. Output order matches `points`.
-pub fn run_points(trace: &Trace, points: &[SweepPoint], threads: usize) -> Vec<DesignPoint> {
+/// the macro-sizing math `build` redoes. The single home of this
+/// build-or-clone rule: [`run_points`], the [`crate::coordinator`] and
+/// the campaign planner all feed from it. Output order matches `points`.
+pub fn build_designs(trace: &Trace, points: &[SweepPoint]) -> Vec<MemDesign> {
     let mut builder = sched::DesignBuilder::new(trace);
-    let mut work: Vec<(SweepPoint, MemDesign)> = Vec::with_capacity(points.len());
-    for p in points {
-        let fresh = match work.last() {
-            Some((prev, _)) => {
-                prev.knobs.word_bytes != p.knobs.word_bytes
-                    || !Arc::ptr_eq(&prev.model, &p.model)
+    let mut out: Vec<MemDesign> = Vec::with_capacity(points.len());
+    for (i, p) in points.iter().enumerate() {
+        let fresh = match i.checked_sub(1) {
+            Some(j) => {
+                points[j].knobs.word_bytes != p.knobs.word_bytes
+                    || !Arc::ptr_eq(&points[j].model, &p.model)
             }
             None => true,
         };
-        let design = if fresh {
-            builder.build(&*p.model, p.knobs.word_bytes)
+        if fresh {
+            out.push(builder.build(&*p.model, p.knobs.word_bytes));
         } else {
-            work.last().unwrap().1.clone()
-        };
-        work.push((p.clone(), design));
+            let prev = out.last().unwrap().clone();
+            out.push(prev);
+        }
     }
+    out
+}
+
+/// Evaluate enumerated sweep points with the compiled-trace engine:
+/// designs from [`build_designs`], scheduling through
+/// [`evaluate_designs`]. Output order matches `points`.
+pub fn run_points(trace: &Trace, points: &[SweepPoint], threads: usize) -> Vec<DesignPoint> {
+    let designs = build_designs(trace, points);
+    let work: Vec<(SweepPoint, MemDesign)> = points.iter().cloned().zip(designs).collect();
     evaluate_designs(trace, &work, threads)
 }
 
@@ -314,10 +324,18 @@ pub fn evaluate_model(trace: &Trace, model: &dyn MemModel, knobs: &Knobs) -> Des
     point_from(&design.id, design.is_amm, knobs, out)
 }
 
+/// Canonical design-point id: `<mem>/u<unroll>/w<word>/a<alus>`. The
+/// campaign resume path keys its JSONL sink on `(benchmark, point_id)`,
+/// so this format is part of the sink schema — change it and old sinks
+/// stop resuming.
+pub fn point_id(mem_id: &str, knobs: &Knobs) -> String {
+    format!("{}/u{}/w{}/a{}", mem_id, knobs.unroll, knobs.word_bytes, knobs.alus)
+}
+
 /// Assemble a [`DesignPoint`] from its labels + scheduling result.
 pub fn point_from(mem_id: &str, is_amm: bool, knobs: &Knobs, out: SimOutput) -> DesignPoint {
     DesignPoint {
-        id: format!("{}/u{}/w{}/a{}", mem_id, knobs.unroll, knobs.word_bytes, knobs.alus),
+        id: point_id(mem_id, knobs),
         mem_id: mem_id.to_string(),
         is_amm,
         unroll: knobs.unroll,
@@ -477,6 +495,23 @@ mod tests {
         let distinct: std::collections::HashSet<*const ()> =
             pts.iter().map(|p| Arc::as_ptr(&p.model) as *const ()).collect();
         assert_eq!(distinct.len(), s.models().len());
+    }
+
+    #[test]
+    fn build_designs_matches_per_point_builds() {
+        let wl = suite::generate("stencil2d", Scale::Tiny);
+        let mut s = Sweep::quick();
+        s.word_bytes = vec![4, 8];
+        let pts = s.points();
+        let designs = build_designs(&wl.trace, &pts);
+        assert_eq!(designs.len(), pts.len());
+        for (p, d) in pts.iter().zip(&designs) {
+            let fresh = sched::build_memory_model(&wl.trace, &*p.model, p.knobs.word_bytes);
+            assert_eq!(d.id, fresh.id);
+            assert_eq!(d.depth, fresh.depth);
+            assert_eq!(d.macro_depth, fresh.macro_depth);
+            assert_eq!(d.sram.area_um2, fresh.sram.area_um2, "{}", d.id);
+        }
     }
 
     #[test]

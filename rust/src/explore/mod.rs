@@ -22,16 +22,23 @@
 //! accessors. Cost scoring goes through the [`Coordinator`]'s batched
 //! cost service (PJRT when artifacts + the `pjrt` feature are present,
 //! the pure-Rust mirror otherwise) unless [`Explorer::offline`]
-//! disables it. Scheduling always runs on the sweep-aware engine: one
+//! disables it.
+//!
+//! Since the campaign refactor, `Explorer` is a thin veneer over
+//! [`crate::campaign::Campaign`]: `run`/`run_with` build a
+//! single-benchmark campaign and unwrap its one exploration, so the
+//! facade rides the same engine as suite-scale runs — memoized workload
+//! generation, [`Coordinator::score_designs`] cost batching, one
 //! [`crate::sched::CompiledTrace`] per word-size group, one reusable
-//! [`crate::sched::SimArena`] per worker thread (see [`crate::dse`]).
+//! [`crate::sched::SimArena`] per worker thread (see [`crate::dse`] and
+//! [`crate::campaign`]).
 
+use crate::campaign::{Campaign, CampaignOutcome};
 use crate::coordinator::{Coordinator, CostBackend};
 use crate::dse::{self, BenchSummary, DesignPoint, Sweep};
 use crate::error::{Error, Result};
-use crate::locality;
 use crate::report;
-use crate::suite::{self, Scale};
+use crate::suite::Scale;
 use std::path::{Path, PathBuf};
 
 /// Builder for one design-space exploration run.
@@ -116,18 +123,7 @@ impl Explorer {
     /// [`Explorer::run_with`].
     pub fn run(self) -> Result<Exploration> {
         if self.offline {
-            let (benchmark, scale, sweep, wl) = self.prepare()?;
-            let locality = locality::analyze(&wl.trace).spatial_locality();
-            let points = sweep.run(&wl.trace);
-            return Ok(Exploration {
-                benchmark,
-                scale,
-                locality,
-                backend: None,
-                trace_nodes: wl.trace.len(),
-                checksum: wl.checksum,
-                points,
-            });
+            return single(self.campaign()?.offline().run()?);
         }
         let dir = self.artifacts.clone().unwrap_or_else(crate::runtime::artifacts_dir);
         let threads = if self.threads != 0 { self.threads } else { self.sweep.threads };
@@ -139,41 +135,33 @@ impl Explorer {
     /// so several explorations share one cost service (and one compiled
     /// PJRT cost artifact).
     pub fn run_with(self, coord: &Coordinator) -> Result<Exploration> {
-        let (benchmark, scale, sweep, wl) = self.prepare()?;
-        let locality = locality::analyze(&wl.trace).spatial_locality();
-        let points = coord.run_sweep(&wl.trace, &sweep)?;
-        Ok(Exploration {
-            benchmark,
-            scale,
-            locality,
-            backend: Some(coord.backend),
-            trace_nodes: wl.trace.len(),
-            checksum: wl.checksum,
-            points,
-        })
+        single(self.campaign()?.run_with(coord)?)
     }
 
-    /// Shared validation + trace generation for the run paths.
-    fn prepare(self) -> Result<(String, Scale, Sweep, suite::Workload)> {
+    /// Lower this explorer to the single-benchmark [`Campaign`] it
+    /// describes — `Explorer` is a veneer; the campaign engine does the
+    /// work, including benchmark-name and model-id validation (only the
+    /// "no workload selected" check is facade-specific).
+    fn campaign(self) -> Result<Campaign> {
         let benchmark = self
             .benchmark
             .ok_or_else(|| Error::config("no workload selected: call .workload(name, scale)"))?;
-        if !suite::ALL_BENCHMARKS.contains(&benchmark.as_str()) {
-            return Err(Error::UnknownBenchmark { name: benchmark });
-        }
-        for id in self.sweep.extra_models.iter().chain(&self.models) {
-            if crate::mem::parse_model(id).is_none() {
-                return Err(Error::UnknownModel { id: id.clone() });
-            }
-        }
         let mut sweep = self.sweep;
         sweep.extra_models.extend(self.models);
         if self.threads != 0 {
             sweep.threads = self.threads;
         }
-        let wl = suite::generate(&benchmark, self.scale);
-        Ok((benchmark, self.scale, sweep, wl))
+        Ok(Campaign::new().benchmark(benchmark).scale(self.scale).sweep(sweep))
     }
+}
+
+/// Unwrap a single-benchmark campaign's one exploration.
+fn single(outcome: CampaignOutcome) -> Result<Exploration> {
+    outcome
+        .explorations
+        .into_iter()
+        .next()
+        .ok_or_else(|| Error::msg("single-benchmark campaign produced no exploration"))
 }
 
 /// Results of one exploration run: evaluated design points plus the
@@ -300,6 +288,7 @@ impl Exploration {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::suite;
 
     #[test]
     fn run_requires_a_workload() {

@@ -38,6 +38,27 @@
 //! ex.write_csv("results/gemm.csv").expect("write csv");
 //! ```
 //!
+//! ## Suite-scale campaigns
+//!
+//! The whole suite × sweep cross-product runs as **one** work stream —
+//! one shared worker pool, one globally-deduplicated cost batch, and an
+//! append-only JSONL sink that makes the run observable mid-flight and
+//! resumable after a kill:
+//!
+//! ```no_run
+//! use amm_dse::{Campaign, dse::Sweep, suite::Scale};
+//!
+//! let outcome = Campaign::new()
+//!     .benchmarks(amm_dse::suite::DSE_BENCHMARKS)
+//!     .scale(Scale::Paper)
+//!     .sweep(Sweep::default())
+//!     .sink("results/campaign.jsonl") // streaming + resumable
+//!     .run()
+//!     .expect("campaign failed");
+//! println!("{} points ({} resumed)", outcome.total_points(), outcome.resumed);
+//! println!("{}", outcome.fig5_ascii());
+//! ```
+//!
 //! Single design points are still available through the value-level
 //! compat API:
 //!
@@ -71,7 +92,12 @@
 //! * [`locality`] — Weinberg spatial-locality metric.
 //! * [`dse`] — sweep enumeration, Pareto frontiers, and the paper's
 //!   geometric-mean performance ratio.
-//! * [`explore`] — the [`Explorer`]/[`Exploration`] facade.
+//! * [`explore`] — the [`Explorer`]/[`Exploration`] facade (a thin
+//!   single-benchmark campaign).
+//! * [`campaign`] — the suite-scale campaign engine: the whole
+//!   {benchmarks} × {sweep points} cross-product as one flat work
+//!   stream with one shared worker pool, one globally-deduplicated
+//!   cost batch, and a streaming + resumable JSONL result sink.
 //! * [`runtime`] — PJRT client wrapper for the AOT-compiled JAX/Pallas
 //!   cost-model artifacts (stubbed without the `pjrt` feature).
 //! * [`coordinator`] — the parallel DSE orchestrator which batches
@@ -99,9 +125,11 @@ pub mod dse;
 pub mod explore;
 pub mod runtime;
 pub mod coordinator;
+pub mod campaign;
 pub mod report;
 pub mod config;
 
+pub use campaign::{Campaign, CampaignOutcome};
 pub use error::{Error, Result};
 pub use explore::{Exploration, Explorer};
 

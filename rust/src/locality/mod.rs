@@ -9,16 +9,21 @@
 //! have a minimum stride of 8 bytes and score ≤ 1/8 (§IV-B).
 
 use crate::trace::{OpKind, Trace};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Stride histogram for one static instruction site.
+///
+/// Maps are `BTreeMap`, not `HashMap`, on purpose: locality is a sum of
+/// floats over these maps, and summation order changes the low bits of
+/// the result. Ordered maps make every locality figure — and therefore
+/// campaign JSONL sinks and fig-5 CSV goldens — byte-stable run to run.
 #[derive(Clone, Debug, Default)]
 pub struct SiteStats {
     /// Dynamic accesses observed.
     pub accesses: u64,
     /// stride(bytes) → count; only positive strides accumulate locality
     /// (Weinberg's definition ignores non-forward reuse).
-    pub strides: HashMap<u64, u64>,
+    pub strides: BTreeMap<u64, u64>,
     /// Transitions with zero or negative stride (counted in the
     /// probability denominator, contributing 0 locality).
     pub non_forward: u64,
@@ -41,8 +46,9 @@ impl SiteStats {
 /// Whole-trace locality report.
 #[derive(Clone, Debug, Default)]
 pub struct LocalityReport {
-    /// Per-site statistics (site id → stats).
-    pub sites: HashMap<u32, SiteStats>,
+    /// Per-site statistics (site id → stats), ordered by site id so
+    /// iteration (and the float sums built from it) is deterministic.
+    pub sites: BTreeMap<u32, SiteStats>,
     /// Total dynamic memory accesses.
     pub total_accesses: u64,
 }
@@ -81,7 +87,7 @@ impl LocalityReport {
 /// Analyze a trace: group dynamic accesses by static site (in program
 /// order) and histogram consecutive byte strides.
 pub fn analyze(trace: &Trace) -> LocalityReport {
-    let mut sites: HashMap<u32, SiteStats> = HashMap::new();
+    let mut sites: BTreeMap<u32, SiteStats> = BTreeMap::new();
     let mut last_addr: HashMap<u32, u64> = HashMap::new();
     let mut total = 0u64;
     for node in &trace.nodes {
@@ -186,6 +192,21 @@ mod tests {
         assert!(gemm < 0.3, "gemm={gemm}");
         assert!(md < 0.3, "md={md}");
         assert!(kmp > fft && kmp > gemm && kmp > md);
+    }
+
+    #[test]
+    fn locality_is_bit_deterministic_across_analyses() {
+        // Ordered maps make the float summation order fixed, so two
+        // independent analyses of the same trace agree to the last bit
+        // (campaign sinks and fig-5 goldens rely on this).
+        let wl = suite::generate("spmv", Scale::Tiny);
+        let a = analyze(&wl.trace);
+        let b = analyze(&wl.trace);
+        assert_eq!(a.spatial_locality().to_bits(), b.spatial_locality().to_bits());
+        assert_eq!(a.stride1_fraction().to_bits(), b.stride1_fraction().to_bits());
+        let sites_a: Vec<u32> = a.sites.keys().copied().collect();
+        let sites_b: Vec<u32> = b.sites.keys().copied().collect();
+        assert_eq!(sites_a, sites_b, "site order must be stable");
     }
 
     #[test]

@@ -24,7 +24,7 @@ use amm_dse::dse::{self, Sweep};
 use amm_dse::mem;
 use amm_dse::sched::Knobs;
 use amm_dse::suite::{self, Scale};
-use amm_dse::{config, locality, report, Error, Explorer, Result};
+use amm_dse::{config, locality, report, Campaign, Error, Explorer, Result};
 use std::path::PathBuf;
 use std::process::ExitCode;
 
@@ -69,11 +69,18 @@ USAGE:
   repro locality [--scale tiny|paper|large]
   repro simulate <benchmark> --mem <id> [--unroll N] [--word N] [--alus N] [--scale s]
   repro sweep --config configs/<file>.toml [--out results/out.csv]
-  repro figure fig4 [--bench <name>|all] [--scale s] [--out-dir results]
-  repro figure fig5 [--scale s] [--out-dir results]
+  repro figure fig4 [--bench <name>|all] [--scale s] [--out-dir results] [--sink f.jsonl]
+  repro figure fig5 [--scale s] [--out-dir results] [--sink f.jsonl]
   repro synth-table
   repro port-scaling
-  repro perf-smoke [--out BENCH_sweep.json] [--iters N] [--min-speedup X]
+  repro perf-smoke [--out BENCH_sweep.json] [--campaign-out BENCH_campaign.json]
+                   [--iters N] [--min-speedup X] [--min-campaign-speedup X]
+
+The figure commands run as one CAMPAIGN: the whole benchmark x sweep
+cross-product is a single work stream over one worker pool, scored by
+one deduplicated cost batch. With --sink, results stream to an
+append-only JSONL file as points complete; re-running with the same
+--sink resumes, skipping every already-scored point.
 
 MEMORY IDS: any id resolvable by the model registry (`repro models`),
 e.g. banked<N>, banked2p<N>, bankedblk<N>, pump<K>, lvt<R>r<W>w,
@@ -131,6 +138,8 @@ fn cmd_trace(args: &[String]) -> Result<()> {
         return Err(Error::UnknownBenchmark { name });
     }
     let scale = parse_scale(args)?;
+    // one-shot path: plain generate, so the trace drops on exit instead
+    // of pinning in the workload cache
     let wl = suite::generate(&name, scale);
     let t = &wl.trace;
     println!("benchmark {name} ({scale:?})");
@@ -154,6 +163,8 @@ fn cmd_locality(args: &[String]) -> Result<()> {
     let scale = parse_scale(args)?;
     println!("{:<12} {:>10} {:>12}", "benchmark", "L_spatial", "stride1");
     for name in suite::ALL_BENCHMARKS {
+        // each benchmark is generated exactly once here: plain generate
+        // keeps peak memory at one trace, not thirteen
         let wl = suite::generate(name, scale);
         let rep = locality::analyze(&wl.trace);
         println!("{:<12} {:>10.4} {:>12.4}", name, rep.spatial_locality(), rep.stride1_fraction());
@@ -244,51 +255,61 @@ fn cmd_figure(args: &[String]) -> Result<()> {
                     .copied()
                     .ok_or(Error::UnknownBenchmark { name: bench })?]
             };
-            // one coordinator for the whole figure: the PJRT cost model
-            // compiles once and every benchmark batches through it
-            let coord = amm_dse::coordinator::Coordinator::new();
-            for name in benches {
-                let t0 = std::time::Instant::now();
-                let ex =
-                    Explorer::new().workload(name, scale).sweep(Sweep::default()).run_with(&coord)?;
-                eprintln!(
-                    "fig4 {name}: {} points in {:.2?} (cost backend {})",
-                    ex.points().len(),
-                    t0.elapsed(),
-                    ex.backend_label()
-                );
-                ex.write_csv(out_dir.join(format!("fig4_{name}.csv")))?;
+            // one campaign for the whole figure: all benchmarks' sweep
+            // points form one work stream, scored by one cost batch
+            let mut campaign =
+                Campaign::new().benchmarks(benches).scale(scale).sweep(Sweep::default());
+            if let Some(sink) = flag(args, "--sink") {
+                campaign = campaign.sink(sink);
+            }
+            let t0 = std::time::Instant::now();
+            let outcome = campaign.run()?;
+            eprintln!(
+                "fig4 campaign: {} benchmark(s), {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es))",
+                outcome.explorations().len(),
+                outcome.total_points(),
+                outcome.simulated,
+                outcome.resumed,
+                t0.elapsed(),
+                outcome.backend_label(),
+                outcome.cost_batches
+            );
+            for ex in outcome.explorations() {
+                ex.write_csv(out_dir.join(format!("fig4_{}.csv", ex.benchmark)))?;
                 println!("{}", ex.scatter_area(72, 18));
                 println!("{}", ex.scatter_power(72, 18));
             }
             println!("wrote {}/fig4_*.csv", out_dir.display());
         }
         "fig5" => {
-            let coord = amm_dse::coordinator::Coordinator::new();
-            let mut summaries = Vec::new();
-            // locality for all benchmarks; ratio for the DSE set
+            // one campaign over the whole suite: the DSE set is swept,
+            // the rest contribute locality only
+            let mut campaign = Campaign::new().scale(scale).sweep(Sweep::default());
             for name in suite::ALL_BENCHMARKS {
-                if suite::DSE_BENCHMARKS.contains(&name) {
-                    let ex = Explorer::new()
-                        .workload(name, scale)
-                        .sweep(Sweep::default())
-                        .run_with(&coord)?;
-                    summaries.push(ex.summary());
+                campaign = if suite::DSE_BENCHMARKS.contains(&name) {
+                    campaign.benchmark(name)
                 } else {
-                    let wl = suite::generate(name, scale);
-                    summaries.push(dse::BenchSummary {
-                        name: name.to_string(),
-                        locality: locality::analyze(&wl.trace).spatial_locality(),
-                        perf_ratio: None,
-                        best_banking_ns: f64::NAN,
-                        best_amm_ns: f64::NAN,
-                        n_points: 0,
-                    });
-                }
+                    campaign.locality_only(name)
+                };
             }
-            report::write_file(&out_dir.join("fig5.csv"), &report::fig5_csv(&summaries))
+            if let Some(sink) = flag(args, "--sink") {
+                campaign = campaign.sink(sink);
+            }
+            let t0 = std::time::Instant::now();
+            let outcome = campaign.run()?;
+            eprintln!(
+                "fig5 campaign: {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es))",
+                outcome.total_points(),
+                outcome.simulated,
+                outcome.resumed,
+                t0.elapsed(),
+                outcome.backend_label(),
+                outcome.cost_batches
+            );
+            let summaries = outcome.summaries();
+            report::write_file(&out_dir.join("fig5.csv"), &outcome.fig5_csv())
                 .map_err(|e| Error::io("write fig5.csv", e))?;
-            println!("{}", report::fig5_ascii(&summaries));
+            println!("{}", outcome.fig5_ascii());
             // the paper's claim: ratio correlates negatively with locality
             let with_ratio: Vec<&dse::BenchSummary> =
                 summaries.iter().filter(|s| s.perf_ratio.is_some()).collect();
@@ -352,15 +373,21 @@ fn cmd_synth_table() -> Result<()> {
     Ok(())
 }
 
-/// CI perf smoke (no `cargo bench` needed): time the quick sweep on
-/// gemm/fft twice — once through the per-point compat path (fresh
-/// `CompiledTrace` + `SimArena` per design point) and once through the
-/// grouped engine — and write points/sec + wall ms to a JSON file so the
-/// sweep-throughput trajectory is tracked across PRs. Single-threaded on
-/// both sides so the ratio measures the engine, not the pool.
+/// CI perf smoke (no `cargo bench` needed), two sections:
+///
+/// 1. **sweep engine** — time the quick sweep on gemm/fft through the
+///    per-point compat path (fresh `CompiledTrace` + `SimArena` per
+///    design point) and through the grouped engine; write points/sec +
+///    wall ms to `BENCH_sweep.json`. Single-threaded on both sides so
+///    the ratio measures the engine, not the pool.
+/// 2. **campaign** — run the whole 13-benchmark suite × quick sweep as
+///    sequential per-benchmark `Explorer` runs and as one `Campaign`
+///    (shared coordinator on both sides), and write suite points/sec +
+///    campaign-vs-sequential speedup to `BENCH_campaign.json`.
 fn cmd_perf_smoke(args: &[String]) -> Result<()> {
     use amm_dse::util::benchkit::Bench;
     let out_path = flag(args, "--out").unwrap_or_else(|| "BENCH_sweep.json".into());
+    let campaign_out = flag(args, "--campaign-out").unwrap_or_else(|| "BENCH_campaign.json".into());
     let iters = parse_u32(args, "--iters", 7)? as usize;
     // Regression gate: fail if any benchmark's engine speedup drops
     // below this (0 = report only). CI gates with a noise margin below
@@ -371,11 +398,20 @@ fn cmd_perf_smoke(args: &[String]) -> Result<()> {
         None => 0.0,
         Some(s) => s.parse().map_err(|_| Error::config(format!("bad --min-speedup {s:?}")))?,
     };
+    // Same shape for the campaign section (0 = report only): campaign
+    // wall time includes workload/locality planning, so the gate exists
+    // for local use while CI keeps it advisory.
+    let min_campaign_speedup: f64 = match flag(args, "--min-campaign-speedup") {
+        None => 0.0,
+        Some(s) => {
+            s.parse().map_err(|_| Error::config(format!("bad --min-campaign-speedup {s:?}")))?
+        }
+    };
     let sweep = Sweep::quick();
     let mut rows = Vec::new();
     let mut worst = f64::INFINITY;
     for name in ["gemm", "fft"] {
-        let wl = suite::generate(name, Scale::Tiny);
+        let wl = suite::generate_cached(name, Scale::Tiny);
         let points = sweep.points();
         let n_points = points.len() as u64;
         let mut bench = Bench::new(iters, 2);
@@ -424,9 +460,85 @@ fn cmd_perf_smoke(args: &[String]) -> Result<()> {
     report::write_file(std::path::Path::new(&out_path), &json)
         .map_err(|e| Error::io(format!("write {out_path}"), e))?;
     println!("wrote {out_path}");
+
+    // --- campaign throughput: suite × quick sweep, one work stream ----
+    // Sequential baseline = per-benchmark Explorer runs; campaign = one
+    // flat unit stream. Both share one coordinator (and its cost
+    // service) and the same thread count, so the ratio measures barrier
+    // removal + global cost batching, not pool sizing. Workloads are
+    // memoized in `suite`, so generation costs neither side after the
+    // warmup iteration.
+    let threads = amm_dse::util::pool::default_threads();
+    let coord = amm_dse::coordinator::Coordinator::new();
+    let n_benchmarks = suite::ALL_BENCHMARKS.len();
+    let suite_points = (sweep.points().len() * n_benchmarks) as u64;
+    let citers = iters.clamp(1, 5);
+    let mut cbench = Bench::new(citers, 1);
+    cbench.run("campaign/suite/sequential", Some(suite_points), || {
+        let mut cycles = 0u64;
+        for name in suite::ALL_BENCHMARKS {
+            let ex = Explorer::new()
+                .workload(name, Scale::Tiny)
+                .sweep(sweep.clone())
+                .threads(threads)
+                .run_with(&coord)
+                .expect("sequential explorer run");
+            cycles =
+                ex.points().iter().map(|p| p.out.cycles).fold(cycles, u64::wrapping_add);
+        }
+        cycles
+    });
+    cbench.run("campaign/suite/campaign", Some(suite_points), || {
+        let outcome = Campaign::new()
+            .benchmarks(suite::ALL_BENCHMARKS)
+            .scale(Scale::Tiny)
+            .sweep(sweep.clone())
+            .threads(threads)
+            .run_with(&coord)
+            .expect("campaign run");
+        outcome
+            .explorations()
+            .iter()
+            .flat_map(|e| e.points().iter().map(|p| p.out.cycles))
+            .fold(0u64, u64::wrapping_add)
+    });
+    let rs = cbench.results();
+    let (seq, camp) = (&rs[0], &rs[1]);
+    let campaign_speedup = seq.median_ns() / camp.median_ns();
+    println!(
+        "perf-smoke campaign: {campaign_speedup:.2}x suite points/sec vs sequential explorer runs"
+    );
+    let cjson = format!(
+        concat!(
+            "{{\n  \"schema\": \"bench_campaign/v1\",\n  \"sweep\": \"quick\",\n",
+            "  \"scale\": \"tiny\",\n  \"benchmarks\": {},\n  \"threads\": {},\n",
+            "  \"iters\": {},\n  \"suite_points\": {},\n",
+            "  \"sequential_wall_ms\": {:.4},\n  \"campaign_wall_ms\": {:.4},\n",
+            "  \"sequential_points_per_s\": {:.1},\n  \"campaign_points_per_s\": {:.1},\n",
+            "  \"speedup\": {:.3}\n}}\n"
+        ),
+        n_benchmarks,
+        threads,
+        citers,
+        suite_points,
+        seq.median_ns() / 1e6,
+        camp.median_ns() / 1e6,
+        seq.items_per_s().unwrap_or(0.0),
+        camp.items_per_s().unwrap_or(0.0),
+        campaign_speedup,
+    );
+    report::write_file(std::path::Path::new(&campaign_out), &cjson)
+        .map_err(|e| Error::io(format!("write {campaign_out}"), e))?;
+    println!("wrote {campaign_out}");
+
     if min_speedup > 0.0 && worst < min_speedup {
         return Err(Error::msg(format!(
             "perf-smoke: worst engine speedup {worst:.3}x is below the required {min_speedup}x"
+        )));
+    }
+    if min_campaign_speedup > 0.0 && campaign_speedup < min_campaign_speedup {
+        return Err(Error::msg(format!(
+            "perf-smoke: campaign speedup {campaign_speedup:.3}x is below the required {min_campaign_speedup}x"
         )));
     }
     Ok(())

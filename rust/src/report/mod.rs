@@ -35,6 +35,11 @@ pub fn fig4_csv(points: &[DesignPoint]) -> String {
 }
 
 /// Write the Fig-5 CSV: locality + performance ratio per benchmark.
+///
+/// Benchmarks outside the DSE set carry no sweep results: their best
+/// times are `NaN` (or `±inf` from an empty family) and their ratio is
+/// `None`. Those render as *empty* CSV fields — not the literal `NaN`
+/// that used to leak into the file and choke downstream plotters.
 pub fn fig5_csv(summaries: &[BenchSummary]) -> String {
     let mut s = String::from(
         "benchmark,spatial_locality,perf_ratio,best_banking_ns,best_amm_ns,n_points\n",
@@ -42,16 +47,25 @@ pub fn fig5_csv(summaries: &[BenchSummary]) -> String {
     for b in summaries {
         let _ = writeln!(
             s,
-            "{},{:.4},{},{:.1},{:.1},{}",
+            "{},{:.4},{},{},{},{}",
             b.name,
             b.locality,
-            b.perf_ratio.map(|r| format!("{r:.4}")).unwrap_or_else(|| "NA".into()),
-            b.best_banking_ns,
-            b.best_amm_ns,
+            b.perf_ratio.map(|r| format!("{r:.4}")).unwrap_or_default(),
+            ns_field(b.best_banking_ns),
+            ns_field(b.best_amm_ns),
             b.n_points
         );
     }
     s
+}
+
+/// A best-time CSV field: fixed-point when finite, empty otherwise.
+fn ns_field(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        String::new()
+    }
 }
 
 /// ASCII scatter of (x=time, y=area or power), AMM points `o`, banking
@@ -105,18 +119,39 @@ fn scale(x: f64, lo: f64, hi: f64, max: usize) -> usize {
     (((x - lo) / (hi - lo)) * max as f64).round().clamp(0.0, max as f64) as usize
 }
 
-/// ASCII bar chart for Fig 5 (locality and ratio side by side).
+/// ASCII bar chart for Fig 5 (locality and ratio side by side, best
+/// banking/AMM times on the right). Values a benchmark doesn't have —
+/// no ratio, non-finite best times for the locality-only rows — render
+/// as `-`.
 pub fn fig5_ascii(summaries: &[BenchSummary]) -> String {
-    let mut s = String::from("benchmark     L_spatial                      perf-ratio (banking area / AMM area)\n");
+    let mut s = String::from(
+        "benchmark     L_spatial                            perf-ratio (banking area / AMM area)  best_bank_ns  best_amm_ns\n",
+    );
     for b in summaries {
         let lbar = bar(b.locality, 1.0, 28);
         let (rtxt, rbar) = match b.perf_ratio {
             Some(r) => (format!("{r:5.2}"), bar(r, 2.0, 28)),
-            None => ("   NA".into(), String::new()),
+            None => ("    -".into(), String::new()),
         };
-        let _ = writeln!(s, "{:<12} {:5.3} {lbar} {rtxt} {rbar}", b.name, b.locality);
+        let _ = writeln!(
+            s,
+            "{:<12} {:5.3} {lbar:<28} {rtxt} {rbar:<28} {:>12} {:>12}",
+            b.name,
+            b.locality,
+            ns_col(b.best_banking_ns),
+            ns_col(b.best_amm_ns)
+        );
     }
     s
+}
+
+/// A best-time ASCII column: fixed-point when finite, `-` otherwise.
+fn ns_col(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "-".into()
+    }
 }
 
 fn bar(v: f64, full: f64, width: usize) -> String {
@@ -181,6 +216,39 @@ mod tests {
     fn empty_scatter_ok() {
         let s = ascii_scatter(&[], |p| p.area(), "empty", 40, 10);
         assert!(s.contains("no points"));
+    }
+
+    #[test]
+    fn fig5_renders_missing_values_as_empty_or_dash() {
+        // A locality-only row (no sweep): NaN bests, no ratio.
+        let rows = vec![
+            BenchSummary {
+                name: "aes".into(),
+                locality: 0.9,
+                perf_ratio: None,
+                best_banking_ns: f64::NAN,
+                best_amm_ns: f64::INFINITY,
+                n_points: 0,
+            },
+            BenchSummary {
+                name: "gemm".into(),
+                locality: 0.1,
+                perf_ratio: Some(1.25),
+                best_banking_ns: 120.0,
+                best_amm_ns: 80.0,
+                n_points: 8,
+            },
+        ];
+        let csv = fig5_csv(&rows);
+        let aes = csv.lines().nth(1).unwrap();
+        assert_eq!(aes, "aes,0.9000,,,,0", "NaN/inf must become empty fields, not NaN text");
+        assert!(!csv.contains("NaN"), "{csv}");
+        let gemm = csv.lines().nth(2).unwrap();
+        assert!(gemm.starts_with("gemm,0.1000,1.2500,120.0,80.0,8"), "{gemm}");
+        let ascii = fig5_ascii(&rows);
+        let aes_line = ascii.lines().find(|l| l.starts_with("aes")).unwrap();
+        assert!(aes_line.trim_end().ends_with('-'), "{aes_line:?}");
+        assert!(!ascii.contains("NaN"), "{ascii}");
     }
 
     #[test]

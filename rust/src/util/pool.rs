@@ -3,6 +3,13 @@
 //! `parallel_map` splits a work list over `n` OS threads using an atomic
 //! work-stealing index — no allocation per item, results land in-place, and
 //! panics in workers propagate to the caller.
+//!
+//! One dispatch = one pool: workers (named `dse-worker-<n>` for
+//! debuggers and thread profilers) live exactly as long as their work
+//! list. The campaign layer exploits this by submitting the *entire*
+//! suite × sweep cross-product as a single `parallel_map_with` call, so
+//! spawn cost and per-worker state (one `SimArena` each) are amortized
+//! across the whole campaign instead of per benchmark.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -62,25 +69,28 @@ where
     let cells = &cells;
     let (f, init, next) = (&f, &init, &next);
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(move || {
-                // Worker-owned state: created on this thread, never
-                // shared, dropped when the worker's slice drains.
-                let mut state = init();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+        for w in 0..threads {
+            std::thread::Builder::new()
+                .name(format!("dse-worker-{w}"))
+                .spawn_scoped(s, move || {
+                    // Worker-owned state: created on this thread, never
+                    // shared, dropped when the worker's slice drains.
+                    let mut state = init();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = f(&mut state, &items[i]);
+                        // SAFETY: each index i is claimed exactly once via the
+                        // atomic counter, so writes to cells are disjoint; the
+                        // scope guarantees `results` outlives all workers.
+                        unsafe {
+                            *cells.0.add(i) = r;
+                        }
                     }
-                    let r = f(&mut state, &items[i]);
-                    // SAFETY: each index i is claimed exactly once via the
-                    // atomic counter, so writes to cells are disjoint; the
-                    // scope guarantees `results` outlives all workers.
-                    unsafe {
-                        *cells.0.add(i) = r;
-                    }
-                }
-            });
+                })
+                .expect("spawn pool worker");
         }
     });
     results
@@ -111,21 +121,24 @@ where
     let cells = &cells; // see parallel_map: avoid disjoint field capture
     let (f, next) = (&f, &next);
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(move || loop {
-                let start = next.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk).min(n);
-                for i in start..end {
-                    let r = f(&items[i]);
-                    // SAFETY: chunks [start, end) are disjoint across claims.
-                    unsafe {
-                        *cells.0.add(i) = r;
+        for w in 0..threads {
+            std::thread::Builder::new()
+                .name(format!("dse-worker-{w}"))
+                .spawn_scoped(s, move || loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
                     }
-                }
-            });
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        let r = f(&items[i]);
+                        // SAFETY: chunks [start, end) are disjoint across claims.
+                        unsafe {
+                            *cells.0.add(i) = r;
+                        }
+                    }
+                })
+                .expect("spawn pool worker");
         }
     });
     results

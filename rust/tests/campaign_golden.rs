@@ -1,0 +1,210 @@
+//! Campaign-vs-sequential golden equivalence, global cost batching, and
+//! the streaming + resume contract.
+//!
+//! The campaign engine restructures *how* the suite × sweep
+//! cross-product executes (one flat unit stream, one pool, one cost
+//! batch, streaming sink) but must not change a single result bit:
+//! every exploration must equal the sequential per-benchmark
+//! [`Explorer`] run point-for-point, a fresh campaign's JSONL sink must
+//! be byte-stable, and a killed campaign must resume to identical
+//! results without re-simulating any already-scored point.
+
+use amm_dse::campaign::{sink, Campaign};
+use amm_dse::coordinator::Coordinator;
+use amm_dse::dse::Sweep;
+use amm_dse::suite::{self, Scale};
+use amm_dse::Explorer;
+
+#[test]
+fn campaign_matches_sequential_explorer_runs_point_for_point() {
+    // All 13 benchmarks × the quick sweep, offline on both sides.
+    let outcome = Campaign::new()
+        .benchmarks(suite::ALL_BENCHMARKS)
+        .scale(Scale::Tiny)
+        .sweep(Sweep::quick())
+        .offline()
+        .run()
+        .unwrap();
+    assert_eq!(outcome.explorations().len(), suite::ALL_BENCHMARKS.len());
+    assert_eq!(outcome.resumed, 0);
+    assert_eq!(outcome.simulated, outcome.total_points());
+    for (name, ex) in suite::ALL_BENCHMARKS.iter().zip(outcome.explorations()) {
+        let seq = Explorer::new()
+            .workload(*name, Scale::Tiny)
+            .sweep(Sweep::quick())
+            .offline()
+            .run()
+            .unwrap();
+        assert_eq!(ex.benchmark, *name);
+        assert_eq!(ex.locality.to_bits(), seq.locality.to_bits(), "{name}: locality");
+        assert_eq!(ex.trace_nodes, seq.trace_nodes, "{name}");
+        assert_eq!(ex.points().len(), seq.points().len(), "{name}");
+        for (a, b) in ex.points().iter().zip(seq.points()) {
+            assert_eq!(a.id, b.id, "{name}: enumeration order");
+            assert_eq!(a.out, b.out, "{name}/{}", a.id);
+        }
+        // summaries (the fig-5 rows) agree too
+        let (cs, ss) = (ex.summary(), seq.summary());
+        assert_eq!(cs.perf_ratio, ss.perf_ratio, "{name}");
+        assert_eq!(cs.best_banking_ns, ss.best_banking_ns, "{name}");
+        assert_eq!(cs.best_amm_ns, ss.best_amm_ns, "{name}");
+    }
+}
+
+#[test]
+fn campaign_issues_one_deduplicated_cost_batch_for_the_whole_suite() {
+    let tmp = std::env::temp_dir().join("amm_dse_campaign_batch");
+    let _ = std::fs::create_dir_all(&tmp);
+    let coord = Coordinator::with_artifacts(tmp);
+    let benches = ["gemm", "fft", "stencil2d", "kmp"];
+    let outcome = Campaign::new()
+        .benchmarks(benches)
+        .scale(Scale::Tiny)
+        .sweep(Sweep::quick())
+        .run_with(&coord)
+        .unwrap();
+    assert_eq!(coord.batches_issued(), 1, "whole campaign must score in ONE batch");
+    assert_eq!(outcome.cost_batches, 1);
+    assert!(outcome.backend.is_some());
+    // and the globally-batched costs reproduce the per-benchmark
+    // coordinator path exactly (same queries, same service)
+    for (name, ex) in benches.iter().zip(outcome.explorations()) {
+        let seq = Explorer::new()
+            .workload(*name, Scale::Tiny)
+            .sweep(Sweep::quick())
+            .run_with(&coord)
+            .unwrap();
+        assert_eq!(ex.points().len(), seq.points().len(), "{name}");
+        for (a, b) in ex.points().iter().zip(seq.points()) {
+            assert_eq!(a.id, b.id, "{name}");
+            assert_eq!(a.out, b.out, "{name}/{}", a.id);
+        }
+    }
+    // the sequential comparison runs added one batch per benchmark
+    assert_eq!(coord.batches_issued(), 1 + benches.len());
+}
+
+#[test]
+fn campaign_sink_streams_byte_stable_and_resumes_without_resimulating() {
+    let dir = std::env::temp_dir().join("amm_dse_campaign_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let benches = ["gemm", "stencil2d", "fft"];
+    let campaign = |sink_path: &std::path::Path| {
+        Campaign::new()
+            .benchmarks(benches)
+            .scale(Scale::Tiny)
+            .sweep(Sweep::quick())
+            .threads(4)
+            .offline()
+            .sink(sink_path)
+    };
+
+    // ---- fresh run: every point lands in the sink, in enumeration
+    // order, despite the multi-threaded work-stealing pool ------------
+    let sink_a = dir.join("a.jsonl");
+    let full = campaign(&sink_a).run().unwrap();
+    assert_eq!(full.resumed, 0);
+    assert_eq!(full.simulated, full.total_points());
+    let text = std::fs::read_to_string(&sink_a).unwrap();
+    assert_eq!(text.lines().count(), full.total_points());
+    let (records, torn) = sink::load(&sink_a).unwrap();
+    assert_eq!(records.len(), full.total_points());
+    assert!(!torn);
+    let flat: Vec<&amm_dse::dse::DesignPoint> =
+        full.explorations().iter().flat_map(|e| e.points()).collect();
+    for ((rec_bench, rec_scale, rec), p) in records.iter().zip(&flat) {
+        assert_eq!(*rec_scale, Scale::Tiny);
+        assert_eq!(rec.id, p.id, "sink order must be enumeration order");
+        assert_eq!(rec.out, p.out, "{rec_bench}/{}", rec.id);
+    }
+
+    // ---- byte stability: an identical fresh run writes the identical
+    // file (ordered maps + reorder-buffer writer) ---------------------
+    let sink_b = dir.join("b.jsonl");
+    let _ = campaign(&sink_b).run().unwrap();
+    assert_eq!(
+        std::fs::read_to_string(&sink_b).unwrap(),
+        text,
+        "fresh campaign JSONL must be byte-stable"
+    );
+
+    // ---- kill + resume: keep the first k lines plus a torn fragment,
+    // as a mid-write kill would leave them ----------------------------
+    let k = full.total_points() / 2;
+    let prefix: String = text.lines().take(k).map(|l| format!("{l}\n")).collect();
+    let torn_line = &text.lines().nth(k).unwrap()[..24];
+    let sink_c = dir.join("c.jsonl");
+    std::fs::write(&sink_c, format!("{prefix}{torn_line}")).unwrap();
+    let resumed = campaign(&sink_c).run().unwrap();
+    assert_eq!(resumed.resumed, k, "every intact line must be restored");
+    assert_eq!(
+        resumed.simulated,
+        full.total_points() - k,
+        "a resumed campaign re-simulates only the missing points"
+    );
+    assert_eq!(resumed.cost_batches, 0, "offline campaigns never batch");
+    // results identical to the uninterrupted run, bit for bit
+    for (a, b) in full.explorations().iter().zip(resumed.explorations()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.points().len(), b.points().len());
+        for (x, y) in a.points().iter().zip(b.points()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.out, y.out, "{}/{}", a.benchmark, x.id);
+        }
+    }
+    // the repaired sink now parses to exactly one record per point
+    // (the torn fragment was newline-terminated and is skipped)
+    let (records, torn) = sink::load(&sink_c).unwrap();
+    assert!(!torn);
+    assert_eq!(records.len(), full.total_points());
+
+    // ---- a fully-scored sink resumes everything and simulates nothing
+    let complete = campaign(&sink_a).run().unwrap();
+    assert_eq!(complete.simulated, 0, "complete sink ⇒ zero re-simulation");
+    assert_eq!(complete.resumed, full.total_points());
+    for (a, b) in full.explorations().iter().zip(complete.explorations()) {
+        for (x, y) in a.points().iter().zip(b.points()) {
+            assert_eq!(x.out, y.out, "{}/{}", a.benchmark, x.id);
+        }
+    }
+}
+
+#[test]
+fn coordinator_backed_campaign_resumes_identically() {
+    // Resume is backend-agnostic at the record level: a sink written by
+    // one run is trusted verbatim by the next. Here both runs use the
+    // RustFallback-scored coordinator path, interrupted after 5 points.
+    let dir = std::env::temp_dir().join("amm_dse_campaign_resume_coord");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let tmp = dir.join("artifacts");
+    let _ = std::fs::create_dir_all(&tmp);
+    let coord = Coordinator::with_artifacts(tmp);
+    let sink_path = dir.join("coord.jsonl");
+    let full = Campaign::new()
+        .benchmarks(["gemm", "kmp"])
+        .scale(Scale::Tiny)
+        .sweep(Sweep::quick())
+        .sink(&sink_path)
+        .run_with(&coord)
+        .unwrap();
+    let text = std::fs::read_to_string(&sink_path).unwrap();
+    let keep: String = text.lines().take(5).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&sink_path, keep).unwrap();
+    let resumed = Campaign::new()
+        .benchmarks(["gemm", "kmp"])
+        .scale(Scale::Tiny)
+        .sweep(Sweep::quick())
+        .sink(&sink_path)
+        .run_with(&coord)
+        .unwrap();
+    assert_eq!(resumed.resumed, 5);
+    assert_eq!(resumed.simulated, full.total_points() - 5);
+    assert_eq!(resumed.cost_batches, 1, "pending points still score in one batch");
+    for (a, b) in full.explorations().iter().zip(resumed.explorations()) {
+        for (x, y) in a.points().iter().zip(b.points()) {
+            assert_eq!(x.out, y.out, "{}/{}", a.benchmark, x.id);
+        }
+    }
+}
