@@ -14,10 +14,12 @@ fn main() {
     for (name, scale) in [("gemm", Scale::Paper), ("fft", Scale::Paper), ("gemm", Scale::Large)] {
         let wl = suite::generate(name, scale);
         let nodes = wl.trace.len() as u64;
+        let banked8 = MemKind::Banked { banks: 8 };
+        let xor4r2w = MemKind::XorAmm { read_ports: 4, write_ports: 2 };
         for (label, cfg) in [
-            ("banked8", DesignConfig { mem: MemKind::Banked { banks: 8 }, unroll: 8, word_bytes: 8, alus: 8 }),
-            ("xor4r2w", DesignConfig { mem: MemKind::XorAmm { read_ports: 4, write_ports: 2 }, unroll: 8, word_bytes: 8, alus: 8 }),
-            ("banked8/w1", DesignConfig { mem: MemKind::Banked { banks: 8 }, unroll: 8, word_bytes: 1, alus: 8 }),
+            ("banked8", DesignConfig { mem: banked8, unroll: 8, word_bytes: 8, alus: 8 }),
+            ("xor4r2w", DesignConfig { mem: xor4r2w, unroll: 8, word_bytes: 8, alus: 8 }),
+            ("banked8/w1", DesignConfig { mem: banked8, unroll: 8, word_bytes: 1, alus: 8 }),
         ] {
             bench.run(
                 &format!("sched/{name}-{scale:?}/{label}"),

@@ -1,0 +1,312 @@
+//! Merge sharded campaign sinks back into one result set.
+//!
+//! A sharded campaign (see [`crate::spec::Shard`]) leaves one JSONL
+//! sink per shard. [`merge`] reconciles them against the plan: every
+//! sink is loaded into one `(benchmark, scale, point id)`-keyed map
+//! (cross-sink duplicates collapse, conflicts keep the first record and
+//! warn), then the spec's full cross-product is walked in enumeration
+//! order, pulling each expected record into a per-benchmark
+//! [`Exploration`]. The result is a [`CampaignOutcome`]
+//! indistinguishable from an unsharded run — same plan order, same
+//! point order, bit-identical payloads — so its fig5 CSV matches the
+//! unsharded campaign's byte for byte (pinned by
+//! `tests/spec_shard.rs`). Locality is recomputed from the (memoized)
+//! workload traces; it is deterministic and never recorded in sinks.
+//!
+//! [`merge_loose`] is the plan-free variant behind bare
+//! `repro merge <sinks...>`: with no spec to enumerate from, it trusts
+//! the records — benchmarks appear in first-seen order and coverage
+//! cannot be checked, so prefer passing `--config` when the plan file
+//! is at hand.
+
+use super::sink;
+use super::CampaignOutcome;
+use crate::dse::{self, DesignPoint};
+use crate::error::{Error, Result};
+use crate::explore::Exploration;
+use crate::locality;
+use crate::spec::CampaignSpec;
+use crate::suite::{self, Scale};
+use crate::util::log;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A merged result set plus reconciliation accounting.
+#[derive(Clone, Debug)]
+pub struct Merged {
+    /// The reassembled campaign result (backend `None`: nothing was
+    /// simulated here, every point came from a sink).
+    pub outcome: CampaignOutcome,
+    /// Parseable records read across all sinks.
+    pub records: usize,
+    /// Cross-sink identical repeats, collapsed.
+    pub duplicates: usize,
+    /// Cross-sink same-key records with differing payloads (first wins).
+    pub conflicts: usize,
+    /// Sinks ending in a torn (newline-less) tail.
+    pub torn_tails: usize,
+    /// Records matching no planned unit (wrong scale, sweep, or
+    /// benchmark set). Always 0 for [`merge_loose`].
+    pub foreign: usize,
+    /// Planned `(benchmark, point id)` units no sink supplied (a shard
+    /// is missing or died mid-run). Always empty for [`merge_loose`].
+    pub missing: Vec<(String, String)>,
+}
+
+/// Merge shard sinks against a plan: load + dedupe every sink, then
+/// reassemble the spec's cross-product in enumeration order. The
+/// spec's own `shard` field is ignored — a merge spans all shards.
+pub fn merge<P: AsRef<Path>>(spec: &CampaignSpec, sinks: &[P]) -> Result<Merged> {
+    spec.validate()?;
+    if sinks.is_empty() {
+        return Err(Error::config("merge: no sink files given"));
+    }
+    let mut map: HashMap<sink::Key, DesignPoint> = HashMap::new();
+    let mut merged = empty_accounting();
+    for path in sinks {
+        absorb(path.as_ref(), &mut map, &mut merged)?;
+    }
+
+    let points = spec.sweep.points();
+    let mut explorations = Vec::with_capacity(spec.plan.len());
+    let mut used = 0usize;
+    for e in &spec.plan {
+        let wl = suite::generate_cached(&e.name, spec.scale);
+        let mut pts: Vec<DesignPoint> = Vec::new();
+        if e.swept {
+            let designs = dse::build_designs(&wl.trace, &points);
+            pts.reserve(points.len());
+            for (p, design) in points.iter().zip(designs) {
+                let id = dse::point_id(&design.id, &p.knobs);
+                match map.remove(&sink::key(&e.name, spec.scale, &id)) {
+                    Some(rec) => {
+                        pts.push(rec);
+                        used += 1;
+                    }
+                    None => merged.missing.push((e.name.clone(), id)),
+                }
+            }
+        }
+        explorations.push(exploration(&e.name, spec.scale, &wl, pts));
+    }
+    merged.foreign = map.len();
+    if merged.foreign > 0 {
+        log::warn(format!(
+            "merge: {} record(s) match no planned unit (different scale, sweep or benchmark set?)",
+            merged.foreign
+        ));
+    }
+    merged.outcome = outcome(spec.scale, explorations, used);
+    Ok(merged)
+}
+
+/// Plan-free merge: reassemble purely from the records. Benchmarks
+/// appear in first-seen order across the sinks (every one swept, no
+/// locality-only rows), points in first-seen order within a benchmark.
+/// All records must share one scale. Coverage cannot be verified —
+/// prefer [`merge`] with the campaign's config when available.
+pub fn merge_loose<P: AsRef<Path>>(sinks: &[P]) -> Result<Merged> {
+    if sinks.is_empty() {
+        return Err(Error::config("merge: no sink files given"));
+    }
+    let mut map: HashMap<sink::Key, DesignPoint> = HashMap::new();
+    let mut merged = empty_accounting();
+    // load() preserves file order; replay it to recover first-seen order
+    let mut order: Vec<(String, Vec<String>)> = Vec::new();
+    let mut scale: Option<Scale> = None;
+    for path in sinks {
+        let (records, _) = sink::load(path.as_ref())?;
+        for (bench, rec_scale, p) in &records {
+            match scale {
+                None => scale = Some(*rec_scale),
+                Some(s) if s != *rec_scale => {
+                    return Err(Error::config(format!(
+                        "merge: sinks mix scales ({} vs {}); merge one scale at a time",
+                        s.as_str(),
+                        rec_scale.as_str()
+                    )));
+                }
+                Some(_) => {}
+            }
+            if !suite::ALL_BENCHMARKS.contains(&bench.as_str()) {
+                return Err(Error::UnknownBenchmark { name: bench.clone() });
+            }
+            let at = match order.iter().position(|(b, _)| b == bench) {
+                Some(at) => at,
+                None => {
+                    order.push((bench.clone(), Vec::new()));
+                    order.len() - 1
+                }
+            };
+            if !map.contains_key(&sink::key(bench, *rec_scale, &p.id)) {
+                order[at].1.push(p.id.clone());
+            }
+        }
+        absorb(path.as_ref(), &mut map, &mut merged)?;
+    }
+    let scale = scale.ok_or_else(|| Error::config("merge: sinks contain no records"))?;
+    let mut explorations = Vec::with_capacity(order.len());
+    let mut used = 0usize;
+    for (bench, ids) in &order {
+        let wl = suite::generate_cached(bench, scale);
+        let pts: Vec<DesignPoint> = ids
+            .iter()
+            .filter_map(|id| map.remove(&sink::key(bench, scale, id)))
+            .collect();
+        used += pts.len();
+        explorations.push(exploration(bench, scale, &wl, pts));
+    }
+    merged.outcome = outcome(scale, explorations, used);
+    Ok(merged)
+}
+
+fn empty_accounting() -> Merged {
+    Merged {
+        outcome: outcome(Scale::Tiny, Vec::new(), 0),
+        records: 0,
+        duplicates: 0,
+        conflicts: 0,
+        torn_tails: 0,
+        foreign: 0,
+        missing: Vec::new(),
+    }
+}
+
+fn absorb(
+    path: &Path,
+    map: &mut HashMap<sink::Key, DesignPoint>,
+    merged: &mut Merged,
+) -> Result<()> {
+    let info = sink::load_keyed_into(path, map)?;
+    merged.records += info.records;
+    merged.duplicates += info.duplicates;
+    merged.conflicts += info.conflicts;
+    if info.torn_tail {
+        merged.torn_tails += 1;
+        log::warn(format!(
+            "merge: sink {} ends in a torn line (campaign killed mid-write?)",
+            path.display()
+        ));
+    }
+    Ok(())
+}
+
+fn exploration(
+    name: &str,
+    scale: Scale,
+    wl: &suite::Workload,
+    points: Vec<DesignPoint>,
+) -> Exploration {
+    Exploration {
+        benchmark: name.to_string(),
+        scale,
+        locality: locality::analyze(&wl.trace).spatial_locality(),
+        backend: None,
+        trace_nodes: wl.trace.len(),
+        checksum: wl.checksum,
+        points,
+    }
+}
+
+fn outcome(scale: Scale, explorations: Vec<Exploration>, resumed: usize) -> CampaignOutcome {
+    CampaignOutcome {
+        scale,
+        backend: None,
+        shard: None,
+        explorations,
+        simulated: 0,
+        resumed,
+        cost_batches: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::Campaign;
+    use crate::dse::Sweep;
+
+    fn write_sink(dir: &Path, name: &str, lines: &[String]) -> std::path::PathBuf {
+        let path = dir.join(name);
+        std::fs::write(&path, lines.iter().map(|l| format!("{l}\n")).collect::<String>())
+            .unwrap();
+        path
+    }
+
+    #[test]
+    fn merge_requires_sinks_and_a_valid_spec() {
+        let spec = CampaignSpec::new().benchmark("gemm");
+        let none: [&Path; 0] = [];
+        assert!(merge(&spec, &none).is_err());
+        assert!(merge_loose(&none).is_err());
+        let bad = CampaignSpec::new();
+        assert!(merge(&bad, &[Path::new("x.jsonl")]).is_err(), "empty plan");
+    }
+
+    #[test]
+    fn merge_reconstructs_an_unsharded_outcome_and_reports_missing() {
+        let dir = std::env::temp_dir().join("amm_dse_merge_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut spec = CampaignSpec::new().benchmark("gemm").locality_only("kmp");
+        spec.scale = Scale::Tiny;
+        spec.sweep = Sweep::quick();
+        let full = Campaign::from_spec(spec.clone()).offline().run().unwrap();
+        let lines: Vec<String> = full.get("gemm").unwrap().points()
+            .iter()
+            .map(|p| sink::record_line("gemm", Scale::Tiny, p))
+            .collect();
+        // split the records over two "shard" sinks, out of order
+        let (a, b) = lines.split_at(lines.len() / 2);
+        let s0 = write_sink(&dir, "s0.jsonl", b);
+        let s1 = write_sink(&dir, "s1.jsonl", a);
+        let m = merge(&spec, &[&s0, &s1]).unwrap();
+        assert!(m.missing.is_empty(), "{:?}", m.missing);
+        assert_eq!((m.duplicates, m.conflicts, m.foreign, m.torn_tails), (0, 0, 0, 0));
+        assert_eq!(m.outcome.fig5_csv(), full.fig5_csv(), "byte-for-byte fig5");
+        for (x, y) in full.get("gemm").unwrap().points().iter()
+            .zip(m.outcome.get("gemm").unwrap().points())
+        {
+            assert_eq!(x, y, "enumeration order and payload survive the merge");
+        }
+        // drop one record: merge reports exactly that key as missing
+        let short = merge(&spec, &[&s0]).unwrap();
+        assert_eq!(short.missing.len(), a.len());
+        // duplicates across sinks collapse
+        let dup = merge(&spec, &[&s0, &s1, &s0]).unwrap();
+        assert_eq!(dup.duplicates, b.len());
+        assert_eq!(dup.outcome.fig5_csv(), full.fig5_csv());
+    }
+
+    #[test]
+    fn loose_merge_trusts_the_records() {
+        let dir = std::env::temp_dir().join("amm_dse_merge_loose_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let full = Campaign::new()
+            .benchmark("gemm")
+            .scale(Scale::Tiny)
+            .sweep(Sweep::quick())
+            .offline()
+            .run()
+            .unwrap();
+        let lines: Vec<String> = full.get("gemm").unwrap().points()
+            .iter()
+            .map(|p| sink::record_line("gemm", Scale::Tiny, p))
+            .collect();
+        let s0 = write_sink(&dir, "loose.jsonl", &lines);
+        let m = merge_loose(&[&s0]).unwrap();
+        assert_eq!(m.outcome.scale, Scale::Tiny);
+        assert_eq!(m.outcome.total_points(), lines.len());
+        assert_eq!(m.outcome.fig5_csv(), full.fig5_csv());
+        // mixed scales are rejected
+        let mut mixed = lines.clone();
+        mixed.push(sink::record_line(
+            "gemm",
+            Scale::Paper,
+            &full.get("gemm").unwrap().points()[0],
+        ));
+        let s1 = write_sink(&dir, "mixed.jsonl", &mixed);
+        assert!(merge_loose(&[&s1]).is_err());
+    }
+}

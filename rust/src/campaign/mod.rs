@@ -11,36 +11,48 @@
 //! * **all-or-nothing results** — nothing lands on disk until the whole
 //!   run finishes, so a killed run is a lost run.
 //!
-//! A [`Campaign`] plans the entire {benchmarks} × {sweep points}
-//! cross-product as **one flat stream of work units** and executes it
-//! with one shared worker pool:
+//! Since the spec redesign, the engine's only input is a
+//! [`CampaignSpec`] — the serializable plan every front-end lowers to
+//! (see [`crate::spec`]). [`run`] plans the entire {benchmarks} ×
+//! {sweep points} cross-product as **one flat stream of work units**
+//! and executes it with one shared worker pool:
 //!
 //! 1. **plan** — workloads come from the memoized
 //!    [`crate::suite::generate_cached`] (each benchmark traced exactly
 //!    once per process), designs from [`crate::dse::build_designs`]
 //!    (one build per distinct (model, word-size) run);
-//! 2. **resume** — if a [`sink`] file exists, points already recorded
-//!    there are restored verbatim and never re-simulated;
-//! 3. **score** — the macro-cost queries of every pending design, across
+//! 2. **shard** — with [`CampaignSpec::shard`] set, units whose stable
+//!    `(benchmark, point id)` hash lands outside this bucket are
+//!    skipped — and benchmarks owning no unit here are never traced on
+//!    this host at all — so `n` shard runs partition the plan exactly
+//!    (merge the sinks back with [`merge`] / `repro merge`);
+//! 3. **resume** — if a [`sink`] file exists, points already recorded
+//!    there (keyed by `(benchmark, scale, point id)`, so a sink written
+//!    at another scale can never satisfy a resume) are restored
+//!    verbatim and never re-simulated;
+//! 4. **score** — the macro-cost queries of every pending design, across
 //!    *all* benchmarks, go through
 //!    [`crate::coordinator::Coordinator::score_designs`] as **one**
 //!    deduplicated batch (one PJRT execute scores the whole campaign);
-//! 4. **compile** — one [`CompiledTrace`] per `(benchmark, word_bytes)`
+//! 5. **compile** — one [`CompiledTrace`] per `(benchmark, word_bytes)`
 //!    group, shared by every model/knob variant in the group;
-//! 5. **simulate** — a single [`crate::util::pool::parallel_map_with`]
+//! 6. **simulate** — a single [`crate::util::pool::parallel_map_with`]
 //!    dispatch over the whole flat unit stream: workers steal across
 //!    benchmark boundaries (no per-benchmark barrier) and own one
 //!    [`SimArena`] each for the entire campaign;
-//! 6. **stream** — completed points flow through a reorder buffer to the
-//!    append-only JSONL [`sink`] in enumeration order, so the file grows
-//!    as the in-order prefix completes, is byte-stable for identical
-//!    runs, and a kill leaves a clean resumable prefix.
+//! 7. **stream** — completed points flow through a reorder buffer to the
+//!    append-only JSONL [`sink`] in enumeration order (with optional
+//!    stderr progress/ETA lines, [`ExecOptions::progress`]), so the
+//!    file grows as the in-order prefix completes, is byte-stable for
+//!    identical runs, and a kill leaves a clean resumable prefix.
 //!
-//! [`crate::Explorer`] is a thin single-benchmark campaign, so the
-//! facade, the `repro figure` commands and `perf-smoke` all ride this
-//! engine; the campaign-vs-sequential equivalence is pinned bit-for-bit
-//! by `tests/campaign_golden.rs`.
+//! The [`Campaign`] builder (and [`crate::Explorer`], a thin
+//! single-benchmark campaign) are compat front-ends that assemble a
+//! spec and call [`run`]; the campaign-vs-sequential equivalence is
+//! pinned bit-for-bit by `tests/campaign_golden.rs`, the shard/merge
+//! partition by `tests/spec_shard.rs`.
 
+pub mod merge;
 pub mod sink;
 
 use crate::coordinator::{Coordinator, CostBackend};
@@ -51,6 +63,7 @@ use crate::locality;
 use crate::mem::MemDesign;
 use crate::report;
 use crate::sched::{CompiledTrace, SimArena};
+use crate::spec::{CampaignSpec, Shard};
 use crate::suite::{self, Scale};
 use crate::util::{log, pool};
 use std::collections::HashMap;
@@ -58,44 +71,56 @@ use std::io::Write as _;
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex};
 
-/// Builder for one exploration campaign over many benchmarks.
-#[derive(Clone, Debug)]
-pub struct Campaign {
-    /// `(benchmark, swept)` in display order; `swept == false` rows only
-    /// contribute locality (the non-DSE rows of Fig 5).
-    plan: Vec<(String, bool)>,
-    scale: Scale,
-    sweep: Sweep,
-    threads: usize,
-    sink: Option<PathBuf>,
-    artifacts: Option<PathBuf>,
-    offline: bool,
+/// Execution-context knobs that ride *alongside* a [`CampaignSpec`]:
+/// they select how the plan runs here (cost service, progress
+/// reporting), not what the plan is, so they are never serialized.
+#[derive(Clone, Debug, Default)]
+pub struct ExecOptions {
+    /// Artifacts directory for the PJRT cost model (default:
+    /// [`crate::runtime::artifacts_dir`]).
+    pub artifacts: Option<PathBuf>,
+    /// Skip the coordinator/cost service and evaluate in-process with
+    /// the pure-Rust cost model (tests, doctests).
+    pub offline: bool,
+    /// Emit stderr progress/ETA lines as completions stream in.
+    pub progress: bool,
 }
 
-impl Default for Campaign {
-    fn default() -> Self {
-        Self::new()
-    }
+/// Builder for one exploration campaign over many benchmarks — a thin
+/// front-end that assembles a [`CampaignSpec`] (+ [`ExecOptions`]) and
+/// hands it to [`run`]. Use [`Campaign::spec`]/[`Campaign::into_spec`]
+/// to extract the plan as data (serialize it, ship it, shard it).
+#[derive(Clone, Debug, Default)]
+pub struct Campaign {
+    spec: CampaignSpec,
+    opts: ExecOptions,
 }
 
 impl Campaign {
     /// An empty campaign (paper scale, default sweep, auto threads, no
     /// sink, batched cost service on).
     pub fn new() -> Self {
-        Campaign {
-            plan: Vec::new(),
-            scale: Scale::Paper,
-            sweep: Sweep::default(),
-            threads: 0,
-            sink: None,
-            artifacts: None,
-            offline: false,
-        }
+        Campaign::default()
+    }
+
+    /// A campaign executing an existing spec with default options.
+    pub fn from_spec(spec: CampaignSpec) -> Self {
+        Campaign { spec, opts: ExecOptions::default() }
+    }
+
+    /// The spec this builder has assembled so far.
+    pub fn spec(&self) -> &CampaignSpec {
+        &self.spec
+    }
+
+    /// Lower the builder to its spec — the serializable plan artifact.
+    pub fn into_spec(self) -> CampaignSpec {
+        self.spec
     }
 
     /// Add one benchmark to the swept set.
     pub fn benchmark(mut self, name: impl Into<String>) -> Self {
-        self.plan.push((name.into(), true));
+        self.spec = self.spec.benchmark(name);
         self
     }
 
@@ -106,7 +131,7 @@ impl Campaign {
         I::Item: Into<String>,
     {
         for n in names {
-            self.plan.push((n.into(), true));
+            self.spec = self.spec.benchmark(n);
         }
         self
     }
@@ -114,25 +139,25 @@ impl Campaign {
     /// Add a locality-only benchmark: traced and analyzed, not swept
     /// (the grey rows of Fig 5).
     pub fn locality_only(mut self, name: impl Into<String>) -> Self {
-        self.plan.push((name.into(), false));
+        self.spec = self.spec.locality_only(name);
         self
     }
 
     /// Workload scale for every benchmark in the campaign.
     pub fn scale(mut self, scale: Scale) -> Self {
-        self.scale = scale;
+        self.spec.scale = scale;
         self
     }
 
     /// The sweep applied to every swept benchmark.
     pub fn sweep(mut self, sweep: Sweep) -> Self {
-        self.sweep = sweep;
+        self.spec.sweep = sweep;
         self
     }
 
     /// Worker threads for the shared pool (0 = auto).
     pub fn threads(mut self, n: usize) -> Self {
-        self.threads = n;
+        self.spec.threads = n;
         self
     }
 
@@ -140,21 +165,34 @@ impl Campaign {
     /// points already recorded there are restored instead of
     /// re-simulated, fresh points are appended as they complete.
     pub fn sink(mut self, path: impl Into<PathBuf>) -> Self {
-        self.sink = Some(path.into());
+        self.spec.sink = Some(path.into());
+        self
+    }
+
+    /// Run only shard `index` of `count`: the planned units whose
+    /// stable `(benchmark, point id)` hash lands in this bucket.
+    pub fn shard(mut self, index: u32, count: u32) -> Self {
+        self.spec.shard = Some(Shard { index, count });
         self
     }
 
     /// Artifacts directory for the PJRT cost model (default:
     /// [`crate::runtime::artifacts_dir`]).
     pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
-        self.artifacts = Some(dir.into());
+        self.opts.artifacts = Some(dir.into());
         self
     }
 
     /// Skip the coordinator/cost service and evaluate in-process with
     /// the pure-Rust cost model (tests, doctests).
     pub fn offline(mut self) -> Self {
-        self.offline = true;
+        self.opts.offline = true;
+        self
+    }
+
+    /// Emit stderr progress/ETA lines as completions stream in.
+    pub fn progress(mut self, on: bool) -> Self {
+        self.opts.progress = on;
         self
     }
 
@@ -162,172 +200,212 @@ impl Campaign {
     /// [`Campaign::offline`]). To share one cost service across several
     /// campaigns, use [`Campaign::run_with`].
     pub fn run(self) -> Result<CampaignOutcome> {
-        if self.offline {
-            return self.execute(None);
-        }
-        let dir = self.artifacts.clone().unwrap_or_else(crate::runtime::artifacts_dir);
-        let threads = if self.threads != 0 { self.threads } else { self.sweep.threads };
-        let coord = Coordinator::with_artifacts(dir).threads(threads);
-        self.execute(Some(&coord))
+        run(&self.spec, &self.opts)
     }
 
     /// Validate and run through a caller-provided coordinator.
     pub fn run_with(self, coord: &Coordinator) -> Result<CampaignOutcome> {
-        self.execute(Some(coord))
+        run_with(&self.spec, coord, &self.opts)
+    }
+}
+
+/// Run a spec, bringing up a private [`Coordinator`] (unless
+/// [`ExecOptions::offline`]). The only execution entry points of the
+/// engine are this and [`run_with`] — every front-end (builders, config
+/// files, the CLI) lowers to a [`CampaignSpec`] first.
+pub fn run(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignOutcome> {
+    if opts.offline {
+        return execute(spec, None, opts);
+    }
+    let dir = opts.artifacts.clone().unwrap_or_else(crate::runtime::artifacts_dir);
+    let threads = if spec.threads != 0 { spec.threads } else { spec.sweep.threads };
+    let coord = Coordinator::with_artifacts(dir).threads(threads);
+    execute(spec, Some(&coord), opts)
+}
+
+/// Run a spec through a caller-provided coordinator, so several
+/// campaigns share one cost service (and one compiled PJRT artifact).
+pub fn run_with(
+    spec: &CampaignSpec,
+    coord: &Coordinator,
+    opts: &ExecOptions,
+) -> Result<CampaignOutcome> {
+    execute(spec, Some(coord), opts)
+}
+
+/// The engine: plan → shard → resume → score → compile → simulate →
+/// stream.
+fn execute(
+    spec: &CampaignSpec,
+    coord: Option<&Coordinator>,
+    opts: &ExecOptions,
+) -> Result<CampaignOutcome> {
+    spec.validate()?;
+    // Thread precedence mirrors the pre-campaign run_sweep path:
+    // explicit spec setting > sweep setting > the coordinator's
+    // configured worker count > auto.
+    let threads = if spec.threads != 0 {
+        spec.threads
+    } else if spec.sweep.threads != 0 {
+        spec.sweep.threads
+    } else if let Some(c) = coord {
+        c.worker_threads()
+    } else {
+        pool::default_threads()
+    };
+    let scale = spec.scale;
+    let shard = spec.shard;
+
+    // ---- plan: memoized workloads + locality + sweep points -----------
+    // A sharded run materializes only what it owns: point ids depend on
+    // (model id, knobs) alone, so ownership is decidable before any
+    // workload is generated, and a benchmark whose every unit hashes to
+    // another shard (locality-only rows included) is never traced on
+    // this host — its exploration row carries NaN locality and no
+    // workload stats; `merge` recomputes locality from the full plan.
+    struct Bench {
+        name: String,
+        swept: bool,
+        wl: Option<Arc<suite::Workload>>,
+        locality: f64,
+    }
+    let points = spec.sweep.points();
+    let owns_units = |name: &str| match &shard {
+        None => true,
+        Some(sh) => {
+            points.iter().any(|p| sh.contains(name, &dse::point_id(&p.model.id(), &p.knobs)))
+        }
+    };
+    let benches: Vec<Bench> = spec
+        .plan
+        .iter()
+        .map(|e| {
+            if shard.is_some() && !(e.swept && owns_units(&e.name)) {
+                return Bench {
+                    name: e.name.clone(),
+                    swept: e.swept,
+                    wl: None,
+                    locality: f64::NAN,
+                };
+            }
+            let wl = suite::generate_cached(&e.name, scale);
+            let locality = locality::analyze(&wl.trace).spatial_locality();
+            Bench { name: e.name.clone(), swept: e.swept, wl: Some(wl), locality }
+        })
+        .collect();
+
+    // ---- resume: restore already-scored points from the sink ----------
+    // The key includes the scale, so e.g. a sink written at `tiny` can
+    // never satisfy a `paper` resume.
+    let mut done: HashMap<sink::Key, DesignPoint> = HashMap::new();
+    let mut torn_tail = false;
+    if let Some(path) = &spec.sink {
+        if path.exists() {
+            torn_tail = sink::load_keyed_into(path, &mut done)?.torn_tail;
+        }
     }
 
-    /// The engine: plan → resume → score → compile → simulate → stream.
-    fn execute(self, coord: Option<&Coordinator>) -> Result<CampaignOutcome> {
-        // ---- validate up front (benchmark names, registry model ids) --
-        if self.plan.is_empty() {
-            return Err(Error::config(
-                "empty campaign: call .benchmark()/.benchmarks()/.locality_only()",
-            ));
+    // ---- flatten: one stream of units across all benchmarks -----------
+    struct Unit {
+        bench: usize,
+        point: usize,
+        group: usize,
+        seq: usize,
+        design: MemDesign,
+    }
+    let mut results: Vec<Vec<Option<DesignPoint>>> = benches
+        .iter()
+        .map(|b| if b.swept { vec![None; points.len()] } else { Vec::new() })
+        .collect();
+    let mut units: Vec<Unit> = Vec::new();
+    let mut group_keys: Vec<(usize, u32)> = Vec::new();
+    let mut resumed = 0usize;
+    for (bi, b) in benches.iter().enumerate() {
+        if !b.swept {
+            continue;
         }
-        for (name, _) in &self.plan {
-            if !suite::ALL_BENCHMARKS.contains(&name.as_str()) {
-                return Err(Error::UnknownBenchmark { name: name.clone() });
-            }
-        }
-        for id in &self.sweep.extra_models {
-            if crate::mem::parse_model(id).is_none() {
-                return Err(Error::UnknownModel { id: id.clone() });
-            }
-        }
-        // Thread precedence mirrors the pre-campaign run_sweep path:
-        // explicit campaign setting > sweep setting > the coordinator's
-        // configured worker count > auto.
-        let threads = if self.threads != 0 {
-            self.threads
-        } else if self.sweep.threads != 0 {
-            self.sweep.threads
-        } else if let Some(c) = coord {
-            c.worker_threads()
-        } else {
-            pool::default_threads()
-        };
-        let scale = self.scale;
-
-        // ---- plan: memoized workloads + locality + sweep points -------
-        struct Bench {
-            name: String,
-            swept: bool,
-            wl: Arc<suite::Workload>,
-            locality: f64,
-        }
-        let points = self.sweep.points();
-        let benches: Vec<Bench> = self
-            .plan
-            .iter()
-            .map(|(name, swept)| {
-                let wl = suite::generate_cached(name, scale);
-                let locality = locality::analyze(&wl.trace).spatial_locality();
-                Bench { name: name.clone(), swept: *swept, wl, locality }
-            })
-            .collect();
-
-        // ---- resume: restore already-scored points from the sink ------
-        let mut done: HashMap<(String, String), DesignPoint> = HashMap::new();
-        let mut torn_tail = false;
-        if let Some(path) = &self.sink {
-            if path.exists() {
-                let (records, torn) = sink::load(path)?;
-                torn_tail = torn;
-                for (bench, rec_scale, p) in records {
-                    if rec_scale == scale {
-                        done.insert((bench, p.id.clone()), p);
-                    }
-                }
-            }
-        }
-
-        // ---- flatten: one stream of units across all benchmarks -------
-        struct Unit {
-            bench: usize,
-            point: usize,
-            group: usize,
-            seq: usize,
-            design: MemDesign,
-        }
-        let mut results: Vec<Vec<Option<DesignPoint>>> = benches
-            .iter()
-            .map(|b| if b.swept { vec![None; points.len()] } else { Vec::new() })
-            .collect();
-        let mut units: Vec<Unit> = Vec::new();
-        let mut group_keys: Vec<(usize, u32)> = Vec::new();
-        let mut resumed = 0usize;
-        for (bi, b) in benches.iter().enumerate() {
-            if !b.swept {
-                continue;
-            }
-            let designs = dse::build_designs(&b.wl.trace, &points);
-            for (pi, (p, design)) in points.iter().zip(designs).enumerate() {
-                let id = dse::point_id(&design.id, &p.knobs);
-                if let Some(prev) = done.remove(&(b.name.clone(), id)) {
-                    results[bi][pi] = Some(prev);
-                    resumed += 1;
+        let Some(wl) = &b.wl else { continue };
+        let designs = dse::build_designs(&wl.trace, &points);
+        for (pi, (p, design)) in points.iter().zip(designs).enumerate() {
+            // the pre-generation ownership check above keyed on the
+            // model id — the built design must carry the same id
+            debug_assert_eq!(design.id, p.model.id(), "MemModel::build must preserve the id");
+            let id = dse::point_id(&design.id, &p.knobs);
+            if let Some(sh) = &shard {
+                if !sh.contains(&b.name, &id) {
                     continue;
                 }
-                // word_bytes is the sweep's outermost axis, so each
-                // (benchmark, word size) is one contiguous run — gaps
-                // from resumed points never split a group.
-                if group_keys.last() != Some(&(bi, p.knobs.word_bytes)) {
-                    group_keys.push((bi, p.knobs.word_bytes));
-                }
-                let seq = units.len();
-                units.push(Unit {
-                    bench: bi,
-                    point: pi,
-                    group: group_keys.len() - 1,
-                    seq,
-                    design,
-                });
             }
-        }
-        if !done.is_empty() {
-            log::warn(format!(
-                "campaign sink: {} record(s) match no planned point (different sweep or benchmark set?)",
-                done.len()
-            ));
-        }
-        let simulated = units.len();
-
-        // ---- score: ONE deduplicated cost batch for the whole campaign
-        let mut cost_batches = 0usize;
-        if let Some(coord) = coord {
-            if !units.is_empty() {
-                coord.score_designs(units.iter_mut().map(|u| &mut u.design))?;
-                cost_batches = 1;
+            if let Some(prev) = done.remove(&sink::key(&b.name, scale, &id)) {
+                results[bi][pi] = Some(prev);
+                resumed += 1;
+                continue;
             }
+            // word_bytes is the sweep's outermost axis, so each
+            // (benchmark, word size) is one contiguous run — gaps from
+            // resumed or out-of-shard points never split a group.
+            if group_keys.last() != Some(&(bi, p.knobs.word_bytes)) {
+                group_keys.push((bi, p.knobs.word_bytes));
+            }
+            let seq = units.len();
+            units.push(Unit { bench: bi, point: pi, group: group_keys.len() - 1, seq, design });
         }
+    }
+    if let Some(sh) = &shard {
+        // records owned by other shards are expected when sinks are
+        // shared or pre-merged — only genuinely foreign records (wrong
+        // scale, sweep or benchmark set) warrant noise below
+        done.retain(|(b, s, id), _| *s != scale || sh.contains(b, id));
+    }
+    if !done.is_empty() {
+        log::warn(format!(
+            "campaign sink: {} record(s) match no planned point (different scale, sweep or benchmark set?)",
+            done.len()
+        ));
+    }
+    let simulated = units.len();
 
-        // ---- compile: one CompiledTrace per (benchmark, word) group ---
-        // (Option<Arc<..>> only to satisfy the pool's Default bound.)
-        let groups: Vec<Arc<CompiledTrace<'_>>> =
-            pool::parallel_map(&group_keys, threads, |&(bi, wb)| {
-                Some(Arc::new(CompiledTrace::new(&benches[bi].wl.trace, wb)))
-            })
-            .into_iter()
-            .map(|g| g.expect("group compilation cannot fail"))
-            .collect();
+    // ---- score: ONE deduplicated cost batch for the whole campaign ----
+    let mut cost_batches = 0usize;
+    if let Some(coord) = coord {
+        if !units.is_empty() {
+            coord.score_designs(units.iter_mut().map(|u| &mut u.design))?;
+            cost_batches = 1;
+        }
+    }
 
-        // ---- simulate + stream ----------------------------------------
-        // One flat dispatch: workers steal units across benchmark
-        // boundaries and keep one arena each for the whole campaign.
-        // Completed points are sent to a writer thread that holds a
-        // reorder buffer and appends to the sink in enumeration order,
-        // so the file grows as the in-order prefix completes and two
-        // identical runs produce byte-identical sinks.
-        let mut tx: Option<Mutex<mpsc::Sender<(usize, String)>>> = None;
-        let mut writer: Option<std::thread::JoinHandle<std::io::Result<u64>>> = None;
-        if let Some(path) = &self.sink {
+    // ---- compile: one CompiledTrace per (benchmark, word) group -------
+    // (Option<Arc<..>> only to satisfy the pool's Default bound.)
+    let groups: Vec<Arc<CompiledTrace<'_>>> =
+        pool::parallel_map(&group_keys, threads, |&(bi, wb)| {
+            let wl = benches[bi].wl.as_ref().expect("groups only form for owned benchmarks");
+            Some(Arc::new(CompiledTrace::new(&wl.trace, wb)))
+        })
+        .into_iter()
+        .map(|g| g.expect("group compilation cannot fail"))
+        .collect();
+
+    // ---- simulate + stream --------------------------------------------
+    // One flat dispatch: workers steal units across benchmark
+    // boundaries and keep one arena each for the whole campaign.
+    // Completed points are sent to a writer thread that holds a reorder
+    // buffer and appends to the sink in enumeration order, so the file
+    // grows as the in-order prefix completes and two identical runs
+    // produce byte-identical sinks. The same thread counts completions
+    // for the progress/ETA line, so it is spawned for progress-only
+    // runs too (with no file).
+    let mut tx: Option<Mutex<mpsc::Sender<(usize, String)>>> = None;
+    let mut writer: Option<std::thread::JoinHandle<std::io::Result<u64>>> = None;
+    if spec.sink.is_some() || opts.progress {
+        let mut file = None;
+        if let Some(path) = &spec.sink {
             if let Some(dir) = path.parent() {
                 if !dir.as_os_str().is_empty() {
                     std::fs::create_dir_all(dir)
                         .map_err(|e| Error::io(format!("create {}", dir.display()), e))?;
                 }
             }
-            let mut file = std::fs::OpenOptions::new()
+            let mut f = std::fs::OpenOptions::new()
                 .create(true)
                 .append(true)
                 .open(path)
@@ -335,100 +413,166 @@ impl Campaign {
             if torn_tail {
                 // Terminate the torn line a killed writer left behind so
                 // it can never merge with the first fresh record.
-                file.write_all(b"\n")
+                f.write_all(b"\n")
                     .map_err(|e| Error::io(format!("repair {}", path.display()), e))?;
             }
-            let (s, r) = mpsc::channel::<(usize, String)>();
-            tx = Some(Mutex::new(s));
-            writer = Some(
-                std::thread::Builder::new()
-                    .name("campaign-sink".into())
-                    .spawn(move || sink_writer(file, r))
-                    .expect("spawn campaign sink writer"),
+            file = Some(f);
+        }
+        let progress = opts.progress.then(|| Progress::new(resumed, units.len()));
+        let (s, r) = mpsc::channel::<(usize, String)>();
+        tx = Some(Mutex::new(s));
+        writer = Some(
+            std::thread::Builder::new()
+                .name("campaign-sink".into())
+                .spawn(move || sink_writer(file, r, progress))
+                .expect("spawn campaign sink writer"),
+        );
+    }
+    let fresh: Vec<DesignPoint> =
+        pool::parallel_map_with(&units, threads, SimArena::new, |arena, u| {
+            let knobs = &points[u.point].knobs;
+            let sim = groups[u.group].simulate(arena, knobs, &u.design);
+            let p = dse::point_from(&u.design.id, u.design.is_amm, knobs, sim);
+            if let Some(tx) = &tx {
+                let line = sink::record_line(&benches[u.bench].name, scale, &p);
+                let _ = tx.lock().expect("sink sender poisoned").send((u.seq, line));
+            }
+            p
+        });
+    drop(tx); // hang up so the writer drains and exits
+    if let Some(j) = writer {
+        j.join()
+            .expect("campaign sink writer panicked")
+            .map_err(|e| Error::io("write campaign sink", e))?;
+    }
+    for (u, p) in units.iter().zip(fresh) {
+        results[u.bench][u.point] = Some(p);
+    }
+
+    // ---- assemble per-benchmark explorations, in plan order -----------
+    let backend = coord.map(|c| c.backend);
+    let explorations: Vec<Exploration> = benches
+        .iter()
+        .enumerate()
+        .map(|(bi, b)| Exploration {
+            benchmark: b.name.clone(),
+            scale,
+            locality: b.locality,
+            backend,
+            trace_nodes: b.wl.as_ref().map_or(0, |w| w.trace.len()),
+            checksum: b.wl.as_ref().map_or(f64::NAN, |w| w.checksum),
+            points: if b.swept {
+                let got: Vec<DesignPoint> =
+                    results[bi].iter_mut().filter_map(Option::take).collect();
+                // a sharded run owns only its bucket; anything else must
+                // account for every enumerated point
+                assert!(
+                    shard.is_some() || got.len() == points.len(),
+                    "campaign point unaccounted for"
+                );
+                got
+            } else {
+                Vec::new()
+            },
+        })
+        .collect();
+    Ok(CampaignOutcome {
+        scale,
+        backend,
+        shard,
+        explorations,
+        simulated,
+        resumed,
+        cost_batches,
+    })
+}
+
+/// Stderr progress/ETA reporting for long campaigns: the sink-writer
+/// thread already sees every completion, so it emits a line every
+/// [`Progress::every`] completions (~20 lines per run) plus a final
+/// one. Silenced by `repro run --quiet` (which simply clears
+/// [`ExecOptions::progress`]).
+struct Progress {
+    resumed: usize,
+    planned: usize,
+    every: usize,
+    start: std::time::Instant,
+}
+
+impl Progress {
+    fn new(resumed: usize, planned: usize) -> Progress {
+        Progress { resumed, planned, every: (planned / 20).max(1), start: std::time::Instant::now() }
+    }
+
+    fn line(&self, received: usize) {
+        let done = self.resumed + received;
+        let total = self.resumed + self.planned;
+        if total == 0 {
+            return;
+        }
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let pct = 100.0 * done as f64 / total as f64;
+        if received == 0 || received >= self.planned {
+            eprintln!("campaign: {done}/{total} points ({pct:.0}%), {elapsed:.1}s elapsed");
+        } else {
+            let eta = elapsed / received as f64 * (self.planned - received) as f64;
+            eprintln!(
+                "campaign: {done}/{total} points ({pct:.0}%), {elapsed:.1}s elapsed, eta {eta:.0}s"
             );
         }
-        let fresh: Vec<DesignPoint> =
-            pool::parallel_map_with(&units, threads, SimArena::new, |arena, u| {
-                let knobs = &points[u.point].knobs;
-                let sim = groups[u.group].simulate(arena, knobs, &u.design);
-                let p = dse::point_from(&u.design.id, u.design.is_amm, knobs, sim);
-                if let Some(tx) = &tx {
-                    let line = sink::record_line(&benches[u.bench].name, scale, &p);
-                    let _ = tx.lock().expect("sink sender poisoned").send((u.seq, line));
-                }
-                p
-            });
-        drop(tx); // hang up so the writer drains and exits
-        if let Some(j) = writer {
-            j.join()
-                .expect("campaign sink writer panicked")
-                .map_err(|e| Error::io("write campaign sink", e))?;
-        }
-        for (u, p) in units.iter().zip(fresh) {
-            results[u.bench][u.point] = Some(p);
-        }
-
-        // ---- assemble per-benchmark explorations, in plan order -------
-        let backend = coord.map(|c| c.backend);
-        let explorations: Vec<Exploration> = benches
-            .iter()
-            .enumerate()
-            .map(|(bi, b)| Exploration {
-                benchmark: b.name.clone(),
-                scale,
-                locality: b.locality,
-                backend,
-                trace_nodes: b.wl.trace.len(),
-                checksum: b.wl.checksum,
-                points: if b.swept {
-                    results[bi]
-                        .iter_mut()
-                        .map(|slot| slot.take().expect("campaign point unaccounted for"))
-                        .collect()
-                } else {
-                    Vec::new()
-                },
-            })
-            .collect();
-        Ok(CampaignOutcome { scale, backend, explorations, simulated, resumed, cost_batches })
     }
 }
 
-/// Drain `(seq, line)` completions into the sink file, writing lines in
-/// `seq` order: a reorder buffer holds out-of-order completions from the
-/// work-stealing pool so the file always grows as the in-order prefix
+/// Drain `(seq, line)` completions: count them for [`Progress`], and —
+/// when a sink file is attached — write lines in `seq` order through a
+/// reorder buffer, so the file always grows as the in-order prefix
 /// completes (and is flushed there, for `tail -f` observability).
 fn sink_writer(
-    file: std::fs::File,
+    file: Option<std::fs::File>,
     rx: mpsc::Receiver<(usize, String)>,
+    progress: Option<Progress>,
 ) -> std::io::Result<u64> {
     use std::collections::BTreeMap;
-    let mut out = std::io::BufWriter::new(file);
+    let mut out = file.map(std::io::BufWriter::new);
     let mut pending: BTreeMap<usize, String> = BTreeMap::new();
     let mut next = 0usize;
     let mut written = 0u64;
+    let mut received = 0usize;
     for (seq, line) in rx {
+        received += 1;
+        if let Some(p) = &progress {
+            if received % p.every == 0 && received < p.planned {
+                p.line(received);
+            }
+        }
+        let Some(w) = out.as_mut() else { continue };
         pending.insert(seq, line);
         let mut flushed = false;
         while let Some(line) = pending.remove(&next) {
-            out.write_all(line.as_bytes())?;
-            out.write_all(b"\n")?;
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
             next += 1;
             written += 1;
             flushed = true;
         }
         if flushed {
-            out.flush()?;
+            w.flush()?;
         }
     }
-    // Anything still pending means a gap (a worker died); persist what
-    // completed anyway — the resume path tolerates out-of-order lines.
-    for (_, line) in pending {
-        out.write_all(line.as_bytes())?;
-        out.write_all(b"\n")?;
-        written += 1;
+    if let Some(w) = out.as_mut() {
+        // Anything still pending means a gap (a worker died); persist
+        // what completed anyway — the resume path tolerates
+        // out-of-order lines.
+        for (_, line) in pending {
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+            written += 1;
+        }
+        w.flush()?;
     }
-    out.flush()?;
+    if let Some(p) = &progress {
+        p.line(received);
+    }
     Ok(written)
 }
 
@@ -438,10 +582,12 @@ fn sink_writer(
 pub struct CampaignOutcome {
     /// Workload scale the campaign ran at.
     pub scale: Scale,
-    /// Cost backend (`None` for [`Campaign::offline`] runs).
+    /// Cost backend (`None` for offline runs).
     pub backend: Option<CostBackend>,
+    /// The shard this run executed, if the spec was sharded.
+    pub shard: Option<Shard>,
     /// One exploration per planned benchmark (locality-only rows carry
-    /// an empty point set).
+    /// an empty point set; sharded runs carry only their bucket).
     pub explorations: Vec<Exploration>,
     /// Design points simulated by this run.
     pub simulated: usize,
@@ -542,6 +688,7 @@ mod tests {
         assert_eq!(csv.lines().count(), 3);
         assert_eq!(outcome.backend_label(), "Offline");
         assert_eq!(outcome.cost_batches, 0);
+        assert_eq!(outcome.shard, None);
     }
 
     #[test]
@@ -558,5 +705,25 @@ mod tests {
         let names: Vec<&str> =
             outcome.explorations().iter().map(|e| e.benchmark.as_str()).collect();
         assert_eq!(names, ["viterbi", "gemm", "aes"]);
+    }
+
+    #[test]
+    fn builder_lowers_to_the_spec_it_describes() {
+        let c = Campaign::new()
+            .benchmark("gemm")
+            .locality_only("kmp")
+            .scale(Scale::Tiny)
+            .sweep(Sweep::quick())
+            .threads(3)
+            .sink("results/x.jsonl")
+            .shard(1, 2);
+        let spec = c.spec();
+        assert_eq!(spec.swept(), ["gemm"]);
+        assert_eq!(spec.locality_names(), ["kmp"]);
+        assert_eq!(spec.scale, Scale::Tiny);
+        assert_eq!(spec.sweep, Sweep::quick());
+        assert_eq!(spec.threads, 3);
+        assert_eq!(spec.sink.as_deref(), Some(std::path::Path::new("results/x.jsonl")));
+        assert_eq!(spec.shard, Some(Shard { index: 1, count: 2 }));
     }
 }

@@ -22,7 +22,34 @@ use crate::error::{Error, Result};
 use crate::sched::SimOutput;
 use crate::suite::Scale;
 use crate::util::log;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 use std::path::Path;
+
+/// The resume/dedupe key: `(benchmark, scale, point id)`. The scale is
+/// part of the key, so a sink written at `--scale tiny` can never
+/// satisfy a `paper` resume (and merge never conflates scales).
+pub type Key = (String, Scale, String);
+
+/// Build a [`Key`].
+pub fn key(benchmark: &str, scale: Scale, id: &str) -> Key {
+    (benchmark.to_string(), scale, id.to_string())
+}
+
+/// Accounting from one [`load_keyed_into`] call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadInfo {
+    /// Parseable records read from this file.
+    pub records: usize,
+    /// Records whose key was already present with an identical payload
+    /// (harmless repeats, collapsed).
+    pub duplicates: usize,
+    /// Records whose key was already present with a *different*
+    /// payload — the first record wins, and a warning is logged.
+    pub conflicts: usize,
+    /// Whether the file ends in a torn (newline-less) tail.
+    pub torn_tail: bool,
+}
 
 /// Schema tag carried by every record.
 pub const SCHEMA: &str = "campaign/v1";
@@ -142,6 +169,38 @@ pub fn load(path: &Path) -> Result<(Vec<(String, Scale, DesignPoint)>, bool)> {
     Ok((records, torn_tail))
 }
 
+/// Load a sink into a [`Key`]-indexed map (the shape the campaign
+/// resume path and `repro merge` both consume), deduplicating against
+/// whatever `map` already holds — so merging n shard sinks is n calls
+/// over one map. First record wins on conflicting payloads.
+pub fn load_keyed_into(path: &Path, map: &mut HashMap<Key, DesignPoint>) -> Result<LoadInfo> {
+    let (records, torn_tail) = load(path)?;
+    let mut info = LoadInfo { torn_tail, ..LoadInfo::default() };
+    for (bench, scale, p) in records {
+        info.records += 1;
+        match map.entry((bench, scale, p.id.clone())) {
+            Entry::Occupied(prev) => {
+                if *prev.get() == p {
+                    info.duplicates += 1;
+                } else {
+                    info.conflicts += 1;
+                }
+            }
+            Entry::Vacant(slot) => {
+                slot.insert(p);
+            }
+        }
+    }
+    if info.conflicts > 0 {
+        log::warn(format!(
+            "campaign sink {}: {} record(s) conflict with an earlier record for the same (benchmark, scale, point id) — keeping the first",
+            path.display(),
+            info.conflicts
+        ));
+    }
+    Ok(info)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +262,35 @@ mod tests {
         assert!(parse_line("{\"schema\":\"other/v9\"}").is_none());
         let line = record_line("gemm", Scale::Tiny, &sample_point());
         assert!(parse_line(&line[..line.len() / 2]).is_none(), "torn tail must not parse");
+    }
+
+    #[test]
+    fn keyed_load_separates_scales_and_collapses_duplicates() {
+        let dir = std::env::temp_dir().join("amm_dse_sink_keyed_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("keyed.jsonl");
+        let p = sample_point();
+        let tiny = record_line("gemm", Scale::Tiny, &p);
+        let paper = record_line("gemm", Scale::Paper, &p);
+        let mut conflicted = parse_line(&tiny).unwrap().2;
+        conflicted.out.cycles += 1;
+        let conflict = record_line("gemm", Scale::Tiny, &conflicted);
+        std::fs::write(&path, format!("{tiny}\n{paper}\n{tiny}\n{conflict}\n")).unwrap();
+        let mut map = HashMap::new();
+        let info = load_keyed_into(&path, &mut map).unwrap();
+        assert_eq!(info.records, 4);
+        assert_eq!(info.duplicates, 1, "identical repeat collapses");
+        assert_eq!(info.conflicts, 1, "differing payload is a conflict");
+        assert!(!info.torn_tail);
+        // scale is part of the key: the tiny and paper records coexist,
+        // and the tiny slot kept the FIRST (unconflicted) payload
+        assert_eq!(map.len(), 2);
+        assert_eq!(map[&key("gemm", Scale::Tiny, &p.id)].out, p.out);
+        assert_eq!(map[&key("gemm", Scale::Paper, &p.id)].out, p.out);
+        // a second load over the same map only adds duplicates
+        let again = load_keyed_into(&path, &mut map).unwrap();
+        assert_eq!(map.len(), 2);
+        assert_eq!(again.duplicates + again.conflicts, 4);
     }
 
     #[test]

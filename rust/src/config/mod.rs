@@ -1,6 +1,9 @@
 //! Sweep/config files: TOML-subset documents under `configs/` describing
-//! a benchmark run — the framework's equivalent of Aladdin's per-kernel
-//! config files.
+//! a run — the framework's equivalent of Aladdin's per-kernel config
+//! files. Every parse lowers to a [`CampaignSpec`], the crate's single
+//! plan artifact (see [`crate::spec`]).
+//!
+//! Single-benchmark form (the original `repro sweep` shape):
 //!
 //! ```toml
 //! benchmark = "gemm"
@@ -20,17 +23,36 @@
 //! read_ports = 2
 //! write_ports = 1
 //! ```
+//!
+//! Suite form: replace the top-level `benchmark` with a `[campaign]`
+//! table (see `configs/suite.toml`) and the file describes a whole
+//! multi-benchmark campaign — shardable across hosts and runnable with
+//! `repro run`:
+//!
+//! ```toml
+//! scale = "paper"
+//!
+//! [campaign]
+//! benchmarks = ["fft", "gemm", "kmp", "md-knn"]
+//! locality_only = ["aes", "bfs"]
+//! sink = "results/suite.jsonl"
+//! threads = 8
+//! shard = "0/2"   # usually set per host via `repro run --shard i/n`
+//! ```
 
 use crate::dse::Sweep;
 use crate::error::{Error, Result};
+use crate::spec::{CampaignSpec, PlanEntry, Shard};
 use crate::suite::Scale;
-use crate::util::tomlmini::{self, Value};
+use crate::util::tomlmini::{self, Table, Value};
 use std::path::Path;
 
 /// A parsed run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
-    /// Benchmark name (must be in [`crate::suite::ALL_BENCHMARKS`]).
+    /// Primary benchmark: the top-level `benchmark` key, or the first
+    /// plan entry of a `[campaign]` config (compat accessor — the full
+    /// plan lives in [`RunConfig::campaign`]).
     pub benchmark: String,
     /// Workload scale.
     pub scale: Scale,
@@ -38,10 +60,15 @@ pub struct RunConfig {
     pub sweep: Sweep,
     /// Output CSV path (default `results/<benchmark>.csv`).
     pub out_csv: Option<String>,
+    /// The lowered campaign spec — what this file *means*. For a
+    /// single-benchmark config this is a one-entry plan.
+    pub campaign: CampaignSpec,
 }
 
 impl RunConfig {
-    /// Build the [`crate::Explorer`] this configuration describes.
+    /// Build the [`crate::Explorer`] this configuration describes
+    /// (single-benchmark compat path; campaigns use
+    /// [`RunConfig::campaign`]).
     pub fn explorer(&self) -> crate::Explorer {
         crate::Explorer::new()
             .workload(self.benchmark.clone(), self.scale)
@@ -59,15 +86,6 @@ pub fn load(path: &Path) -> Result<RunConfig> {
 /// Parse config text.
 pub fn parse(text: &str) -> Result<RunConfig> {
     let doc = tomlmini::parse(text).map_err(|e| Error::config(e.to_string()))?;
-    let benchmark = doc
-        .root
-        .get("benchmark")
-        .and_then(Value::as_str)
-        .ok_or_else(|| Error::config("missing `benchmark`"))?
-        .to_string();
-    if !crate::suite::ALL_BENCHMARKS.contains(&benchmark.as_str()) {
-        return Err(Error::UnknownBenchmark { name: benchmark });
-    }
     let scale = match doc.root.get("scale").and_then(Value::as_str).unwrap_or("paper") {
         "tiny" => Scale::Tiny,
         "paper" => Scale::Paper,
@@ -94,6 +112,10 @@ pub fn parse(text: &str) -> Result<RunConfig> {
         }
         if let Some(v) = t.get("lvt") {
             sweep.include_lvt = v.as_bool().ok_or_else(|| Error::config("lvt must be bool"))?;
+        }
+        if let Some(v) = t.get("dual_port") {
+            sweep.include_dual_port =
+                v.as_bool().ok_or_else(|| Error::config("dual_port must be bool"))?;
         }
         if let Some(v) = t.get("block_partitioning") {
             sweep.include_block =
@@ -140,7 +162,64 @@ pub fn parse(text: &str) -> Result<RunConfig> {
             .collect::<Result<Vec<_>>>()?;
     }
     let out_csv = doc.root.get("out_csv").and_then(Value::as_str).map(|s| s.to_string());
-    Ok(RunConfig { benchmark, scale, sweep, out_csv })
+
+    // ---- plan: [campaign] table, or the single top-level benchmark ----
+    let mut spec = CampaignSpec { scale, sweep, ..CampaignSpec::default() };
+    if let Some(t) = doc.table("campaign") {
+        if doc.root.contains_key("benchmark") {
+            return Err(Error::config(
+                "give either a top-level `benchmark` or a `[campaign]` table, not both",
+            ));
+        }
+        for name in names(t, "benchmarks")? {
+            spec.plan.push(PlanEntry { name, swept: true });
+        }
+        for name in names(t, "locality_only")? {
+            spec.plan.push(PlanEntry { name, swept: false });
+        }
+        if let Some(v) = t.get("sink") {
+            let s = v.as_str().ok_or_else(|| Error::config("campaign.sink must be a string"))?;
+            spec.sink = Some(s.into());
+        }
+        if let Some(v) = t.get("threads") {
+            spec.threads =
+                v.as_int().ok_or_else(|| Error::config("campaign.threads must be int"))? as usize;
+        }
+        if let Some(v) = t.get("shard") {
+            let s =
+                v.as_str().ok_or_else(|| Error::config("campaign.shard must be a string"))?;
+            spec.shard = Some(Shard::parse(s)?);
+        }
+    } else {
+        let name = doc
+            .root
+            .get("benchmark")
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::config("missing `benchmark` (or a `[campaign]` table)"))?
+            .to_string();
+        spec.plan.push(PlanEntry { name, swept: true });
+    }
+    spec.validate()?;
+    Ok(RunConfig {
+        benchmark: spec.plan[0].name.clone(),
+        scale,
+        sweep: spec.sweep.clone(),
+        out_csv,
+        campaign: spec,
+    })
+}
+
+fn names(t: &Table, key: &str) -> Result<Vec<String>> {
+    let Some(v) = t.get(key) else { return Ok(Vec::new()) };
+    v.as_array()
+        .ok_or_else(|| Error::config(format!("campaign.{key} must be an array")))?
+        .iter()
+        .map(|x| {
+            x.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| Error::config(format!("campaign.{key} entries must be strings")))
+        })
+        .collect()
 }
 
 fn ints(v: &Value, what: &str) -> Result<Vec<u32>> {
@@ -187,6 +266,53 @@ mod tests {
         assert!(!cfg.sweep.include_multipump);
         assert_eq!(cfg.sweep.extra_models, vec!["cmp4r2w".to_string()]);
         assert_eq!(cfg.out_csv.as_deref(), Some("results/custom.csv"));
+        // the single-benchmark form lowers to a one-entry plan
+        assert_eq!(cfg.campaign.plan, vec![PlanEntry { name: "gemm".into(), swept: true }]);
+        assert_eq!(cfg.campaign.sweep, cfg.sweep);
+        assert!(cfg.campaign.sink.is_none());
+        assert!(cfg.campaign.shard.is_none());
+    }
+
+    #[test]
+    fn parses_campaign_table() {
+        let cfg = parse(
+            r#"
+            scale = "tiny"
+            [campaign]
+            benchmarks = ["gemm", "fft"]
+            locality_only = ["kmp"]
+            sink = "results/suite.jsonl"
+            threads = 6
+            shard = "1/3"
+            "#,
+        )
+        .unwrap();
+        let spec = &cfg.campaign;
+        assert_eq!(cfg.benchmark, "gemm", "compat accessor = first plan entry");
+        assert_eq!(spec.swept(), ["gemm", "fft"]);
+        assert_eq!(spec.locality_names(), ["kmp"]);
+        assert_eq!(spec.sink.as_deref(), Some(Path::new("results/suite.jsonl")));
+        assert_eq!(spec.threads, 6);
+        assert_eq!(spec.shard, Some(Shard { index: 1, count: 3 }));
+        assert_eq!(spec.scale, Scale::Tiny);
+    }
+
+    #[test]
+    fn campaign_table_excludes_top_level_benchmark() {
+        let err = parse(
+            "benchmark = \"gemm\"\n[campaign]\nbenchmarks = [\"fft\"]\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn campaign_table_rejects_bad_entries() {
+        assert!(parse("[campaign]\nbenchmarks = [\"nope\"]\n").is_err());
+        assert!(parse("[campaign]\nbenchmarks = [1]\n").is_err());
+        assert!(parse("[campaign]\nbenchmarks = [\"gemm\"]\nshard = \"9/2\"\n").is_err());
+        // an empty plan is a config error, not a silent no-op campaign
+        assert!(parse("[campaign]\nbenchmarks = []\n").is_err());
     }
 
     #[test]

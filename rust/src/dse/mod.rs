@@ -17,7 +17,7 @@ use crate::util::{pool, stats};
 use std::sync::Arc;
 
 /// One evaluated design point.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct DesignPoint {
     /// Sweep configuration id (e.g. `xor2r2w/u8/w8/a8`).
     pub id: String,
@@ -57,7 +57,11 @@ impl DesignPoint {
 }
 
 /// The sweep definition (defaults reproduce Fig 4's axes).
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` covers every axis: two sweeps compare equal iff they
+/// enumerate the identical point stream, which is what the
+/// [`crate::spec::CampaignSpec`] TOML round-trip golden relies on.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Sweep {
     /// Unroll factors.
     pub unrolls: Vec<u32>,
@@ -448,7 +452,11 @@ pub struct BenchSummary {
 }
 
 /// Run the full per-benchmark analysis (sweep + locality + ratio).
-pub fn analyze_benchmark(name: &str, scale: crate::suite::Scale, sweep: &Sweep) -> (BenchSummary, Vec<DesignPoint>) {
+pub fn analyze_benchmark(
+    name: &str,
+    scale: crate::suite::Scale,
+    sweep: &Sweep,
+) -> (BenchSummary, Vec<DesignPoint>) {
     let wl = crate::suite::generate(name, scale);
     let points = sweep.run(&wl.trace);
     let locality = crate::locality::analyze(&wl.trace).spatial_locality();

@@ -38,6 +38,7 @@ use crate::coordinator::{Coordinator, CostBackend};
 use crate::dse::{self, BenchSummary, DesignPoint, Sweep};
 use crate::error::{Error, Result};
 use crate::report;
+use crate::spec::CampaignSpec;
 use crate::suite::Scale;
 use std::path::{Path, PathBuf};
 
@@ -136,6 +137,14 @@ impl Explorer {
     /// PJRT cost artifact).
     pub fn run_with(self, coord: &Coordinator) -> Result<Exploration> {
         single(self.campaign()?.run_with(coord)?)
+    }
+
+    /// Lower this explorer to the serializable [`CampaignSpec`] it
+    /// describes — the one-benchmark plan that [`Explorer::run`] hands
+    /// to the campaign engine. Useful for shipping the run elsewhere
+    /// (`spec.to_toml()`), sharding it, or diffing two builders.
+    pub fn spec(self) -> Result<CampaignSpec> {
+        self.campaign().map(Campaign::into_spec)
     }
 
     /// Lower this explorer to the single-benchmark [`Campaign`] it

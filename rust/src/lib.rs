@@ -59,6 +59,23 @@
 //! println!("{}", outcome.fig5_ascii());
 //! ```
 //!
+//! Every run is also describable **as data**: builders lower to a
+//! serializable [`CampaignSpec`] (TOML round-trip), which shards
+//! deterministically across processes/hosts and merges back:
+//!
+//! ```no_run
+//! use amm_dse::{campaign, CampaignSpec};
+//!
+//! let spec = CampaignSpec::load("configs/suite.toml".as_ref()).expect("parse spec");
+//! // host i of n runs: spec.clone().with_shard(i, n).run()
+//! let shard0 = spec.clone().with_shard(0, 2);
+//! let shard1 = spec.clone().with_shard(1, 2);
+//! // ... later, reconcile the shard sinks against the plan:
+//! let merged = campaign::merge::merge(&spec, &["s0.jsonl", "s1.jsonl"]).expect("merge");
+//! println!("{}", merged.outcome.fig5_ascii());
+//! # let _ = (shard0, shard1);
+//! ```
+//!
 //! Single design points are still available through the value-level
 //! compat API:
 //!
@@ -94,10 +111,14 @@
 //!   geometric-mean performance ratio.
 //! * [`explore`] — the [`Explorer`]/[`Exploration`] facade (a thin
 //!   single-benchmark campaign).
+//! * [`spec`] — the declarative [`CampaignSpec`]: one serializable,
+//!   validated plan (TOML round-trip) that every front-end lowers to
+//!   and the campaign engine consumes, with deterministic sharding.
 //! * [`campaign`] — the suite-scale campaign engine: the whole
 //!   {benchmarks} × {sweep points} cross-product as one flat work
 //!   stream with one shared worker pool, one globally-deduplicated
-//!   cost batch, and a streaming + resumable JSONL result sink.
+//!   cost batch, a streaming + resumable JSONL result sink, and
+//!   shard-sink merging ([`campaign::merge`]).
 //! * [`runtime`] — PJRT client wrapper for the AOT-compiled JAX/Pallas
 //!   cost-model artifacts (stubbed without the `pjrt` feature).
 //! * [`coordinator`] — the parallel DSE orchestrator which batches
@@ -125,6 +146,7 @@ pub mod dse;
 pub mod explore;
 pub mod runtime;
 pub mod coordinator;
+pub mod spec;
 pub mod campaign;
 pub mod report;
 pub mod config;
@@ -132,6 +154,7 @@ pub mod config;
 pub use campaign::{Campaign, CampaignOutcome};
 pub use error::{Error, Result};
 pub use explore::{Exploration, Explorer};
+pub use spec::CampaignSpec;
 
 /// Library version (mirrors `Cargo.toml`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -9,6 +9,8 @@
 //! repro trace <bench> [--scale s]         trace stats for one benchmark
 //! repro locality [--scale s]              Fig-5 locality table
 //! repro simulate <bench> --mem <id> [...] one design point
+//! repro run <config.toml> [...]           spec-driven campaign (the canonical verb)
+//! repro merge <sinks...> [--config c]     merge shard sinks -> reports
 //! repro sweep --config <file.toml>        config-driven sweep -> CSV
 //! repro figure fig4 [--bench b] [...]     regenerate Fig 4 CSV + plots
 //! repro figure fig5 [--scale s]           regenerate Fig 5 + correlation
@@ -16,16 +18,19 @@
 //! repro port-scaling                      Fig-2 HB-NTX port-scaling table
 //! ```
 //!
-//! `simulate`, `sweep` and `figure` resolve memory organizations through
-//! the model registry and run through the [`Explorer`] facade — they
-//! work unchanged for any registered [`amm_dse::mem::MemModel`].
+//! Flags accept both `--name value` and `--name=value`; unknown flags
+//! are a config error (a typo like `--sclae` fails loudly instead of
+//! being silently ignored). `simulate`, `sweep`, `run` and `figure`
+//! resolve memory organizations through the model registry — they work
+//! unchanged for any registered [`amm_dse::mem::MemModel`].
 
 use amm_dse::dse::{self, Sweep};
 use amm_dse::mem;
 use amm_dse::sched::Knobs;
+use amm_dse::spec::Shard;
 use amm_dse::suite::{self, Scale};
-use amm_dse::{config, locality, report, Campaign, Error, Explorer, Result};
-use std::path::PathBuf;
+use amm_dse::{campaign, config, locality, report, Campaign, Error, Explorer, Result};
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
@@ -47,6 +52,8 @@ fn run(args: &[String]) -> Result<()> {
         "trace" => cmd_trace(&args[1..]),
         "locality" => cmd_locality(&args[1..]),
         "simulate" => cmd_simulate(&args[1..]),
+        "run" => cmd_run(&args[1..]),
+        "merge" => cmd_merge(&args[1..]),
         "sweep" => cmd_sweep(&args[1..]),
         "figure" => cmd_figure(&args[1..]),
         "synth-table" => cmd_synth_table(),
@@ -68,6 +75,10 @@ USAGE:
   repro trace <benchmark> [--scale tiny|paper|large]
   repro locality [--scale tiny|paper|large]
   repro simulate <benchmark> --mem <id> [--unroll N] [--word N] [--alus N] [--scale s]
+  repro run <config.toml> [--shard i/n] [--sink f.jsonl] [--scale s]
+            [--threads N] [--out-dir results] [--quiet]
+  repro merge <sink.jsonl>... [--config <config.toml>] [--scale s]
+            [--out-dir results] [--partial]
   repro sweep --config configs/<file>.toml [--out results/out.csv]
   repro figure fig4 [--bench <name>|all] [--scale s] [--out-dir results] [--sink f.jsonl]
   repro figure fig5 [--scale s] [--out-dir results] [--sink f.jsonl]
@@ -76,34 +87,115 @@ USAGE:
   repro perf-smoke [--out BENCH_sweep.json] [--campaign-out BENCH_campaign.json]
                    [--iters N] [--min-speedup X] [--min-campaign-speedup X]
 
-The figure commands run as one CAMPAIGN: the whole benchmark x sweep
-cross-product is a single work stream over one worker pool, scored by
-one deduplicated cost batch. With --sink, results stream to an
-append-only JSONL file as points complete; re-running with the same
---sink resumes, skipping every already-scored point.
+`run` is the canonical campaign verb: the config file (single-benchmark
+or `[campaign]`-table form, see configs/suite.toml) lowers to one
+declarative CampaignSpec, and the whole benchmark x sweep cross-product
+executes as one work stream over one worker pool, scored by one
+deduplicated cost batch, with stderr progress/ETA (silence: --quiet).
+With --sink, results stream to an append-only JSONL file as points
+complete; re-running with the same --sink resumes, skipping every
+already-scored point. With --shard i/n, this process runs only its
+deterministic 1/n bucket of the plan — run the other shards anywhere
+(any host: a spec is data), then reconcile with `repro merge`.
+
+Flags take `--name value` or `--name=value`; unknown flags are errors.
 
 MEMORY IDS: any id resolvable by the model registry (`repro models`),
 e.g. banked<N>, banked2p<N>, bankedblk<N>, pump<K>, lvt<R>r<W>w,
 xor<R>r<W>w (HB-NTX), xorflat<R>r<W>w (LaForest), cmp<R>r<W>w
 "#;
 
-fn flag(args: &[String], name: &str) -> Option<String> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+/// Parsed command-line tail: positionals plus validated flags.
+///
+/// `--name value` and `--name=value` are both accepted; a flag not in
+/// the command's allow-list is a config error (so `--sclae tiny` fails
+/// loudly instead of silently running at the default scale).
+struct Args {
+    positional: Vec<String>,
+    values: Vec<(String, String)>,
+    bools: Vec<String>,
 }
 
-fn parse_scale(args: &[String]) -> Result<Scale> {
-    Ok(match flag(args, "--scale").as_deref() {
-        None | Some("paper") => Scale::Paper,
-        Some("tiny") => Scale::Tiny,
-        Some("large") => Scale::Large,
-        Some(other) => return Err(Error::config(format!("bad --scale {other:?}"))),
-    })
+fn parse_args(raw: &[String], value_flags: &[&str], bool_flags: &[&str]) -> Result<Args> {
+    let mut args = Args { positional: Vec::new(), values: Vec::new(), bools: Vec::new() };
+    let mut i = 0;
+    while i < raw.len() {
+        let tok = &raw[i];
+        if let Some(body) = tok.strip_prefix("--") {
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let dashed = format!("--{name}");
+            if bool_flags.contains(&dashed.as_str()) {
+                if inline.is_some() {
+                    return Err(Error::config(format!("{dashed} takes no value")));
+                }
+                args.bools.push(dashed);
+            } else if value_flags.contains(&dashed.as_str()) {
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        let next = raw
+                            .get(i)
+                            .ok_or_else(|| Error::config(format!("{dashed} needs a value")))?;
+                        // don't let a flag swallow the next flag as its
+                        // value (`--sink --quiet`); the `--name=value`
+                        // form exists for values that really start with
+                        // dashes
+                        if next.starts_with("--") {
+                            return Err(Error::config(format!(
+                                "{dashed} needs a value, found flag {next} (use {dashed}=... for dashed values)"
+                            )));
+                        }
+                        next.clone()
+                    }
+                };
+                args.values.push((dashed, value));
+            } else {
+                return Err(Error::config(format!(
+                    "unknown flag {dashed} (see `repro help`)"
+                )));
+            }
+        } else {
+            args.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
 }
 
-fn parse_u32(args: &[String], name: &str, default: u32) -> Result<u32> {
-    match flag(args, name) {
-        None => Ok(default),
-        Some(s) => s.parse().map_err(|_| Error::config(format!("bad {name} {s:?}"))),
+impl Args {
+    fn get(&self, name: &str) -> Option<&str> {
+        self.values.iter().rev().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|n| n == name)
+    }
+
+    fn scale_or(&self, default: Scale) -> Result<Scale> {
+        match self.get("--scale") {
+            None => Ok(default),
+            Some(s) => {
+                Scale::parse(s).ok_or_else(|| Error::config(format!("bad --scale {s:?}")))
+            }
+        }
+    }
+
+    fn u32_or(&self, name: &str, default: u32) -> Result<u32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| Error::config(format!("bad {name} {s:?}"))),
+        }
+    }
+
+    fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| Error::config(format!("bad {name} {s:?}"))),
+        }
     }
 }
 
@@ -131,13 +223,17 @@ fn cmd_models() -> Result<()> {
     Ok(())
 }
 
-fn cmd_trace(args: &[String]) -> Result<()> {
-    let name = args.first().filter(|a| !a.starts_with("--")).cloned()
+fn cmd_trace(rest: &[String]) -> Result<()> {
+    let args = parse_args(rest, &["--scale"], &[])?;
+    let name = args
+        .positional
+        .first()
+        .cloned()
         .ok_or_else(|| Error::config("usage: repro trace <benchmark>"))?;
     if !suite::ALL_BENCHMARKS.contains(&name.as_str()) {
         return Err(Error::UnknownBenchmark { name });
     }
-    let scale = parse_scale(args)?;
+    let scale = args.scale_or(Scale::Paper)?;
     // one-shot path: plain generate, so the trace drops on exit instead
     // of pinning in the workload cache
     let wl = suite::generate(&name, scale);
@@ -159,8 +255,9 @@ fn cmd_trace(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_locality(args: &[String]) -> Result<()> {
-    let scale = parse_scale(args)?;
+fn cmd_locality(rest: &[String]) -> Result<()> {
+    let args = parse_args(rest, &["--scale"], &[])?;
+    let scale = args.scale_or(Scale::Paper)?;
     println!("{:<12} {:>10} {:>12}", "benchmark", "L_spatial", "stride1");
     for name in suite::ALL_BENCHMARKS {
         // each benchmark is generated exactly once here: plain generate
@@ -172,21 +269,25 @@ fn cmd_locality(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &[String]) -> Result<()> {
-    let name = args.first().filter(|a| !a.starts_with("--")).cloned()
+fn cmd_simulate(rest: &[String]) -> Result<()> {
+    let args = parse_args(rest, &["--mem", "--unroll", "--word", "--alus", "--scale"], &[])?;
+    let name = args
+        .positional
+        .first()
+        .cloned()
         .ok_or_else(|| Error::config("usage: repro simulate <benchmark> --mem <id>"))?;
     if !suite::ALL_BENCHMARKS.contains(&name.as_str()) {
         return Err(Error::UnknownBenchmark { name });
     }
-    let scale = parse_scale(args)?;
-    let mem_id = flag(args, "--mem").unwrap_or_else(|| "banked1".into());
+    let scale = args.scale_or(Scale::Paper)?;
+    let mem_id = args.get("--mem").unwrap_or("banked1").to_string();
     // Registry resolution: any registered model id works, not just the
     // built-in MemKind variants.
     let model = mem::parse_model(&mem_id).ok_or(Error::UnknownModel { id: mem_id.clone() })?;
     let knobs = Knobs {
-        unroll: parse_u32(args, "--unroll", 1)?,
-        word_bytes: parse_u32(args, "--word", 8)?,
-        alus: parse_u32(args, "--alus", 4)?,
+        unroll: args.u32_or("--unroll", 1)?,
+        word_bytes: args.u32_or("--word", 8)?,
+        alus: args.u32_or("--alus", 4)?,
     };
     let wl = suite::generate(&name, scale);
     let p = dse::evaluate_model(&wl.trace, &*model, &knobs);
@@ -202,18 +303,206 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     println!("  cycles      {}", out.cycles);
     println!("  period      {:.3} ns", out.period_ns);
     println!("  time        {:.1} ns", out.time_ns);
-    println!("  area        {:.1} um^2 (mem {:.1} + fu {:.1})", out.area_um2, out.mem_area_um2, out.fu_area_um2);
+    println!(
+        "  area        {:.1} um^2 (mem {:.1} + fu {:.1})",
+        out.area_um2, out.mem_area_um2, out.fu_area_um2
+    );
     println!("  power       {:.3} mW", out.power_mw);
     println!("  mem access  {}", out.mem_accesses);
     println!("  port stalls {}", out.port_stalls);
     Ok(())
 }
 
-fn cmd_sweep(args: &[String]) -> Result<()> {
-    let cfg_path = flag(args, "--config")
+/// The canonical campaign verb: `<config.toml>` lowers to a
+/// [`amm_dse::CampaignSpec`], CLI flags override the spec's sink /
+/// shard / scale / threads, and the campaign engine does the rest.
+fn cmd_run(rest: &[String]) -> Result<()> {
+    let args = parse_args(
+        rest,
+        &["--shard", "--sink", "--scale", "--threads", "--out-dir"],
+        &["--quiet"],
+    )?;
+    let cfg_path = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| Error::config("usage: repro run <config.toml> [--shard i/n] [--sink f.jsonl]"))?;
+    let rc = config::load(Path::new(&cfg_path))?;
+    let mut spec = rc.campaign.clone();
+    spec.scale = args.scale_or(spec.scale)?;
+    if let Some(s) = args.get("--sink") {
+        spec.sink = Some(s.into());
+    }
+    if let Some(s) = args.get("--shard") {
+        spec.shard = Some(Shard::parse(s)?);
+    }
+    if let Some(s) = args.get("--threads") {
+        spec.threads = s
+            .parse()
+            .map_err(|_| Error::config(format!("bad --threads {s:?}")))?;
+    }
+    let quiet = args.has("--quiet");
+    let out_dir = PathBuf::from(args.get("--out-dir").unwrap_or("results"));
+    if !quiet {
+        let shard_note = spec
+            .shard
+            .map(|sh| format!(", shard {sh}"))
+            .unwrap_or_default();
+        eprintln!(
+            "run {}: {} swept + {} locality-only benchmark(s), {} planned unit(s){shard_note}",
+            cfg_path,
+            spec.swept().len(),
+            spec.locality_names().len(),
+            spec.plan_keys().len(),
+        );
+    }
+    let opts = campaign::ExecOptions { progress: !quiet, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let outcome = campaign::run(&spec, &opts)?;
+    if !quiet {
+        eprintln!(
+            "campaign: {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es))",
+            outcome.total_points(),
+            outcome.simulated,
+            outcome.resumed,
+            t0.elapsed(),
+            outcome.backend_label(),
+            outcome.cost_batches
+        );
+    }
+    if let Some(sh) = spec.shard {
+        // a shard owns a partial result set: reports come from `merge`
+        println!(
+            "shard {sh}: {} point(s) ({} simulated, {} resumed){}",
+            outcome.total_points(),
+            outcome.simulated,
+            outcome.resumed,
+            spec.sink
+                .as_ref()
+                .map(|s| format!(" -> {}", s.display()))
+                .unwrap_or_else(|| " (no --sink: results discarded!)".into()),
+        );
+        println!("reconcile with: repro merge <all shard sinks> --config {cfg_path}");
+        return Ok(());
+    }
+    let multi = outcome.explorations().len() > 1;
+    for ex in outcome.explorations() {
+        if ex.points().is_empty() {
+            continue;
+        }
+        let csv = if multi {
+            out_dir.join(format!("fig4_{}.csv", ex.benchmark))
+        } else {
+            rc.out_csv
+                .clone()
+                .map(PathBuf::from)
+                .unwrap_or_else(|| out_dir.join(format!("{}.csv", ex.benchmark)))
+        };
+        ex.write_csv(&csv)?;
+        println!("wrote {}", csv.display());
+        if !multi {
+            println!("{}", ex.scatter_area(72, 18));
+            if let Some(r) = ex.performance_ratio() {
+                println!("performance ratio (banking area / AMM area, geomean): {r:.3}");
+            }
+        }
+    }
+    if multi {
+        report::write_file(&out_dir.join("fig5.csv"), &outcome.fig5_csv())
+            .map_err(|e| Error::io("write fig5.csv", e))?;
+        println!("{}", outcome.fig5_ascii());
+        println!("wrote {}/fig5.csv", out_dir.display());
+    }
+    Ok(())
+}
+
+/// Reconcile shard sinks: with `--config` the merge is checked against
+/// the plan (missing/duplicate/foreign accounting, enumeration-order
+/// output); without it the records speak for themselves.
+fn cmd_merge(rest: &[String]) -> Result<()> {
+    let args = parse_args(rest, &["--config", "--scale", "--out-dir"], &["--partial"])?;
+    if args.positional.is_empty() {
+        return Err(Error::config(
+            "usage: repro merge <sink.jsonl>... [--config <config.toml>]",
+        ));
+    }
+    let sinks: Vec<&Path> = args.positional.iter().map(Path::new).collect();
+    let out_dir = PathBuf::from(args.get("--out-dir").unwrap_or("results"));
+    let merged = match args.get("--config") {
+        Some(cfg) => {
+            let mut spec = config::load(Path::new(cfg))?.campaign;
+            spec.shard = None; // a merge spans all shards
+            spec.scale = args.scale_or(spec.scale)?;
+            campaign::merge::merge(&spec, &sinks)?
+        }
+        None => {
+            if args.get("--scale").is_some() {
+                return Err(Error::config(
+                    "--scale needs --config (loose merges take the scale from the records)",
+                ));
+            }
+            campaign::merge::merge_loose(&sinks)?
+        }
+    };
+    eprintln!(
+        "merge: {} record(s) from {} sink(s) -> {} point(s) ({} duplicate(s), {} conflict(s), {} foreign, {} torn tail(s))",
+        merged.records,
+        sinks.len(),
+        merged.outcome.total_points(),
+        merged.duplicates,
+        merged.conflicts,
+        merged.foreign,
+        merged.torn_tails,
+    );
+    if !merged.missing.is_empty() {
+        let (b, id) = &merged.missing[0];
+        let msg = format!(
+            "merge: {} planned point(s) missing from the sinks (e.g. {b}/{id}) — a shard is absent or died mid-run",
+            merged.missing.len()
+        );
+        if args.has("--partial") {
+            eprintln!("warning: {msg}; rendering the partial set (--partial)");
+        } else {
+            return Err(Error::msg(format!("{msg}; pass --partial to render anyway")));
+        }
+    }
+    let outcome = &merged.outcome;
+    for ex in outcome.explorations() {
+        if ex.points().is_empty() {
+            continue;
+        }
+        let csv = out_dir.join(format!("fig4_{}.csv", ex.benchmark));
+        ex.write_csv(&csv)?;
+        let pareto = out_dir.join(format!("fig4_{}_pareto.csv", ex.benchmark));
+        report::write_file(&pareto, &report::pareto_csv(ex.points()))
+            .map_err(|e| Error::io(format!("write {}", pareto.display()), e))?;
+    }
+    report::write_file(&out_dir.join("fig5.csv"), &outcome.fig5_csv())
+        .map_err(|e| Error::io("write fig5.csv", e))?;
+    println!("{}", outcome.fig5_ascii());
+    println!(
+        "wrote {dir}/fig5.csv, {dir}/fig4_*.csv, {dir}/fig4_*_pareto.csv",
+        dir = out_dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_sweep(rest: &[String]) -> Result<()> {
+    let args = parse_args(rest, &["--config", "--out"], &[])?;
+    let cfg_path = args
+        .get("--config")
+        .map(str::to_string)
         .ok_or_else(|| Error::config("usage: repro sweep --config <file.toml>"))?;
-    let rc = config::load(std::path::Path::new(&cfg_path))?;
-    let out_csv = flag(args, "--out")
+    let rc = config::load(Path::new(&cfg_path))?;
+    if rc.campaign.plan.len() > 1 {
+        return Err(Error::config(format!(
+            "{cfg_path} describes a {}-benchmark campaign; `sweep` runs exactly one — use `repro run {cfg_path}`",
+            rc.campaign.plan.len()
+        )));
+    }
+    let out_csv = args
+        .get("--out")
+        .map(str::to_string)
         .or(rc.out_csv.clone())
         .unwrap_or_else(|| format!("results/{}.csv", rc.benchmark));
     eprintln!(
@@ -239,13 +528,14 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_figure(args: &[String]) -> Result<()> {
-    let which = args.first().map(String::as_str).unwrap_or("");
-    let scale = parse_scale(args)?;
-    let out_dir = PathBuf::from(flag(args, "--out-dir").unwrap_or_else(|| "results".into()));
+fn cmd_figure(rest: &[String]) -> Result<()> {
+    let args = parse_args(rest, &["--bench", "--scale", "--out-dir", "--sink"], &[])?;
+    let which = args.positional.first().map(String::as_str).unwrap_or("");
+    let scale = args.scale_or(Scale::Paper)?;
+    let out_dir = PathBuf::from(args.get("--out-dir").unwrap_or("results"));
     match which {
         "fig4" => {
-            let bench = flag(args, "--bench").unwrap_or_else(|| "all".into());
+            let bench = args.get("--bench").unwrap_or("all").to_string();
             let benches: Vec<&str> = if bench == "all" {
                 suite::DSE_BENCHMARKS.to_vec()
             } else {
@@ -259,7 +549,7 @@ fn cmd_figure(args: &[String]) -> Result<()> {
             // points form one work stream, scored by one cost batch
             let mut campaign =
                 Campaign::new().benchmarks(benches).scale(scale).sweep(Sweep::default());
-            if let Some(sink) = flag(args, "--sink") {
+            if let Some(sink) = args.get("--sink") {
                 campaign = campaign.sink(sink);
             }
             let t0 = std::time::Instant::now();
@@ -292,7 +582,7 @@ fn cmd_figure(args: &[String]) -> Result<()> {
                     campaign.locality_only(name)
                 };
             }
-            if let Some(sink) = flag(args, "--sink") {
+            if let Some(sink) = args.get("--sink") {
                 campaign = campaign.sink(sink);
             }
             let t0 = std::time::Instant::now();
@@ -384,29 +674,26 @@ fn cmd_synth_table() -> Result<()> {
 ///    sequential per-benchmark `Explorer` runs and as one `Campaign`
 ///    (shared coordinator on both sides), and write suite points/sec +
 ///    campaign-vs-sequential speedup to `BENCH_campaign.json`.
-fn cmd_perf_smoke(args: &[String]) -> Result<()> {
+fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     use amm_dse::util::benchkit::Bench;
-    let out_path = flag(args, "--out").unwrap_or_else(|| "BENCH_sweep.json".into());
-    let campaign_out = flag(args, "--campaign-out").unwrap_or_else(|| "BENCH_campaign.json".into());
-    let iters = parse_u32(args, "--iters", 7)? as usize;
+    let args = parse_args(
+        rest,
+        &["--out", "--campaign-out", "--iters", "--min-speedup", "--min-campaign-speedup"],
+        &[],
+    )?;
+    let out_path = args.get("--out").unwrap_or("BENCH_sweep.json").to_string();
+    let campaign_out = args.get("--campaign-out").unwrap_or("BENCH_campaign.json").to_string();
+    let iters = args.u32_or("--iters", 7)? as usize;
     // Regression gate: fail if any benchmark's engine speedup drops
     // below this (0 = report only). CI gates with a noise margin below
     // 1.0 (Tiny-scale iterations are microseconds, shared runners are
     // jittery) so only a real engine regression goes red; the >= 1.5x
     // target stays visible in the JSON trajectory.
-    let min_speedup: f64 = match flag(args, "--min-speedup") {
-        None => 0.0,
-        Some(s) => s.parse().map_err(|_| Error::config(format!("bad --min-speedup {s:?}")))?,
-    };
+    let min_speedup = args.f64_or("--min-speedup", 0.0)?;
     // Same shape for the campaign section (0 = report only): campaign
     // wall time includes workload/locality planning, so the gate exists
     // for local use while CI keeps it advisory.
-    let min_campaign_speedup: f64 = match flag(args, "--min-campaign-speedup") {
-        None => 0.0,
-        Some(s) => {
-            s.parse().map_err(|_| Error::config(format!("bad --min-campaign-speedup {s:?}")))?
-        }
-    };
+    let min_campaign_speedup = args.f64_or("--min-campaign-speedup", 0.0)?;
     let sweep = Sweep::quick();
     let mut rows = Vec::new();
     let mut worst = f64::INFINITY;
@@ -457,7 +744,7 @@ fn cmd_perf_smoke(args: &[String]) -> Result<()> {
         iters,
         rows.join(",\n")
     );
-    report::write_file(std::path::Path::new(&out_path), &json)
+    report::write_file(Path::new(&out_path), &json)
         .map_err(|e| Error::io(format!("write {out_path}"), e))?;
     println!("wrote {out_path}");
 
@@ -527,7 +814,7 @@ fn cmd_perf_smoke(args: &[String]) -> Result<()> {
         camp.items_per_s().unwrap_or(0.0),
         campaign_speedup,
     );
-    report::write_file(std::path::Path::new(&campaign_out), &cjson)
+    report::write_file(Path::new(&campaign_out), &cjson)
         .map_err(|e| Error::io(format!("write {campaign_out}"), e))?;
     println!("wrote {campaign_out}");
 

@@ -641,7 +641,10 @@ mod tests {
     fn build_port_model_matches_trait_port_model() {
         // The design a model builds must enforce exactly the semantics
         // the model advertises.
-        for id in ["banked8", "banked2p4", "bankedblk8", "pump2", "lvt4r2w", "xor4r2w", "xorflat4r2w", "cmp2r2w"] {
+        for id in [
+            "banked8", "banked2p4", "bankedblk8", "pump2", "lvt4r2w", "xor4r2w",
+            "xorflat4r2w", "cmp2r2w",
+        ] {
             let m = parse_model(id).unwrap();
             let d = m.build(4096, 32);
             assert_eq!(d.ports, m.port_model(), "{id}");
@@ -656,7 +659,10 @@ mod tests {
         // macros × scales) must equal what build() composed. This is the
         // contract the coordinator relies on when it patches in
         // PJRT-evaluated macro costs.
-        for id in ["banked8", "banked2p4", "bankedblk8", "pump2", "lvt4r2w", "xor4r2w", "xorflat4r2w", "cmp4r2w"] {
+        for id in [
+            "banked8", "banked2p4", "bankedblk8", "pump2", "lvt4r2w", "xor4r2w",
+            "xorflat4r2w", "cmp4r2w",
+        ] {
             let d = parse_model(id).unwrap().build(4096, 32);
             let one = macro_cost(MacroCfg {
                 depth: d.macro_depth,
@@ -665,8 +671,10 @@ mod tests {
                 write_ports: d.macro_ports.1,
             });
             let m = d.macros as f32;
-            assert!((d.sram.area_um2 - one.area_um2 * m * d.area_scale).abs() / d.sram.area_um2 < 1e-5, "{id} area");
-            assert!((d.sram.leak_uw - one.leak_uw * m * d.leak_scale).abs() / d.sram.leak_uw < 1e-5, "{id} leak");
+            let area_err = (d.sram.area_um2 - one.area_um2 * m * d.area_scale).abs();
+            assert!(area_err / d.sram.area_um2 < 1e-5, "{id} area");
+            let leak_err = (d.sram.leak_uw - one.leak_uw * m * d.leak_scale).abs();
+            assert!(leak_err / d.sram.leak_uw < 1e-5, "{id} leak");
             assert!((d.sram.e_read_pj - one.e_read_pj).abs() / d.sram.e_read_pj < 1e-5, "{id} e_read");
             assert!(
                 (d.sram.e_write_pj - one.e_write_pj * d.write_energy_scale).abs() / d.sram.e_write_pj < 1e-5,

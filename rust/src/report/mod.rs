@@ -59,6 +59,16 @@ pub fn fig5_csv(summaries: &[BenchSummary]) -> String {
     s
 }
 
+/// Frontier-only Fig-4 CSV: the (time, area) Pareto-optimal subset of
+/// `points`, in frontier (time-ascending) order, same columns as
+/// [`fig4_csv`]. `repro merge` emits this next to the full per-benchmark
+/// CSV so a merged campaign's headline designs are one file.
+pub fn pareto_csv(points: &[DesignPoint]) -> String {
+    let front = crate::dse::pareto_front(points, |p| p.time_ns(), |p| p.area());
+    let selected: Vec<DesignPoint> = front.into_iter().map(|i| points[i].clone()).collect();
+    fig4_csv(&selected)
+}
+
 /// A best-time CSV field: fixed-point when finite, empty otherwise.
 fn ns_field(v: f64) -> String {
     if v.is_finite() {
@@ -94,7 +104,9 @@ pub fn ascii_scatter(
             grid[cy][cx] = ch;
         }
     }
-    let mut s = format!("{title}  [x: log10(time ns) {:.2}..{:.2}] [y: {:.2}..{:.2}]  o=AMM x=banking\n", x0, x1, y0, y1);
+    let mut s = format!(
+        "{title}  [x: log10(time ns) {x0:.2}..{x1:.2}] [y: {y0:.2}..{y1:.2}]  o=AMM x=banking\n"
+    );
     for row in grid {
         s.push_str(std::str::from_utf8(&row).unwrap());
         s.push('\n');
@@ -192,7 +204,13 @@ mod tests {
             unroll: 1,
             word_bytes: 8,
             alus: 2,
-            out: SimOutput { time_ns: time, area_um2: area, cycles: time as u64, power_mw: 1.0, ..Default::default() },
+            out: SimOutput {
+                time_ns: time,
+                area_um2: area,
+                cycles: time as u64,
+                power_mw: 1.0,
+                ..Default::default()
+            },
         }
     }
 

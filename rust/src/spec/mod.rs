@@ -1,0 +1,392 @@
+//! Declarative campaign plans: one serializable artifact for every run.
+//!
+//! A [`CampaignSpec`] is the crate's single description of "a run" —
+//! the benchmark plan (swept + locality-only rows), workload scale,
+//! sweep axes, result sink, thread count, and an optional shard
+//! assignment. Every other way of describing a run lowers to it:
+//!
+//! * [`crate::config::RunConfig`] parses `*.toml` files (including the
+//!   `[campaign]` table) into a spec;
+//! * the [`crate::Campaign`] and [`crate::Explorer`] builders are thin
+//!   front-ends that assemble a spec;
+//! * the campaign engine ([`crate::campaign::run`]) consumes **only**
+//!   specs.
+//!
+//! Because a spec is a plain serializable value ([`CampaignSpec::to_toml`]
+//! / [`CampaignSpec::parse`] round-trip), a run can be shipped to another
+//! process or host as data. Combined with deterministic **sharding** —
+//! [`Shard`] filters the planned `(benchmark, point id)` unit stream by a
+//! stable FNV-1a hash, so `n` shards partition the cross-product exactly
+//! — the same spec file drives a whole multi-host campaign:
+//!
+//! ```text
+//! host0$ repro run suite.toml --shard 0/2 --sink s0.jsonl
+//! host1$ repro run suite.toml --shard 1/2 --sink s1.jsonl
+//! any $ repro merge s0.jsonl s1.jsonl --config suite.toml
+//! ```
+
+use crate::coordinator::Coordinator;
+use crate::dse::{self, Sweep};
+use crate::error::{Error, Result};
+use crate::suite::{self, Scale};
+use std::fmt;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// One row of the campaign plan, in display (Fig-5) order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanEntry {
+    /// Benchmark name (validated against [`suite::ALL_BENCHMARKS`]).
+    pub name: String,
+    /// Swept benchmarks run the full sweep; non-swept rows contribute
+    /// locality only (the grey rows of Fig 5).
+    pub swept: bool,
+}
+
+/// A deterministic shard assignment: this run executes the planned
+/// units whose stable hash lands in bucket `index` of `count`.
+///
+/// The hash is a function of `(benchmark, point id)` only — not of the
+/// plan order, thread count, or host — so for any `count`, the `count`
+/// shards are pairwise disjoint and their union is exactly the full
+/// cross-product (pinned by `tests/spec_shard.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Zero-based bucket this run owns.
+    pub index: u32,
+    /// Total bucket count (≥ 1).
+    pub count: u32,
+}
+
+impl Shard {
+    /// Parse the CLI/TOML form `i/n` (e.g. `0/4`).
+    pub fn parse(s: &str) -> Result<Shard> {
+        let err = || Error::config(format!("bad shard {s:?} (expected i/n, e.g. 0/4)"));
+        let (i, n) = s.split_once('/').ok_or_else(err)?;
+        let shard = Shard {
+            index: i.trim().parse().map_err(|_| err())?,
+            count: n.trim().parse().map_err(|_| err())?,
+        };
+        shard.validate()?;
+        Ok(shard)
+    }
+
+    /// Reject empty or out-of-range assignments.
+    pub fn validate(&self) -> Result<()> {
+        if self.count == 0 {
+            return Err(Error::config("shard count must be >= 1"));
+        }
+        if self.index >= self.count {
+            return Err(Error::config(format!(
+                "shard index {} out of range for {} shard(s)",
+                self.index, self.count
+            )));
+        }
+        Ok(())
+    }
+
+    /// Does this shard own the planned unit `(benchmark, point_id)`?
+    pub fn contains(&self, benchmark: &str, point_id: &str) -> bool {
+        shard_of(benchmark, point_id, self.count) == self.index
+    }
+}
+
+impl fmt::Display for Shard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// The stable shard bucket of one planned unit: FNV-1a (64-bit) over
+/// `benchmark \0 point_id`, reduced mod `count`. This function is part
+/// of the sink/spec contract — change it and mixed-version shard fleets
+/// stop partitioning.
+pub fn shard_of(benchmark: &str, point_id: &str, count: u32) -> u32 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for b in benchmark.bytes().chain(std::iter::once(0u8)).chain(point_id.bytes()) {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(PRIME);
+    }
+    (h % u64::from(count.max(1))) as u32
+}
+
+/// A validated, serializable campaign plan — the single lowering target
+/// for every way a run is described (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignSpec {
+    /// Benchmarks in display order (swept and locality-only rows).
+    pub plan: Vec<PlanEntry>,
+    /// Workload scale for every benchmark.
+    pub scale: Scale,
+    /// The sweep applied to every swept benchmark.
+    pub sweep: Sweep,
+    /// Streaming/resume JSONL sink path, if any.
+    pub sink: Option<PathBuf>,
+    /// Campaign-level worker threads (0 = fall through to
+    /// `sweep.threads`, then the coordinator's count, then auto).
+    pub threads: usize,
+    /// Optional shard assignment: run only this bucket of the plan.
+    pub shard: Option<Shard>,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        CampaignSpec {
+            plan: Vec::new(),
+            scale: Scale::Paper,
+            sweep: Sweep::default(),
+            sink: None,
+            threads: 0,
+            shard: None,
+        }
+    }
+}
+
+impl CampaignSpec {
+    /// An empty spec (paper scale, default sweep, no sink, no shard).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one swept benchmark.
+    pub fn benchmark(mut self, name: impl Into<String>) -> Self {
+        self.plan.push(PlanEntry { name: name.into(), swept: true });
+        self
+    }
+
+    /// Add one locality-only benchmark.
+    pub fn locality_only(mut self, name: impl Into<String>) -> Self {
+        self.plan.push(PlanEntry { name: name.into(), swept: false });
+        self
+    }
+
+    /// Set the shard assignment (validated by [`CampaignSpec::validate`]).
+    pub fn with_shard(mut self, index: u32, count: u32) -> Self {
+        self.shard = Some(Shard { index, count });
+        self
+    }
+
+    /// Everything the engine assumes, checked up front: non-empty plan,
+    /// known benchmark names, no duplicate plan entries (a benchmark
+    /// planned twice would make the `(benchmark, scale, point id)` sink
+    /// keys ambiguous — resume would never converge and merge would
+    /// report false missing points), known extra-model ids, sane shard.
+    pub fn validate(&self) -> Result<()> {
+        if self.plan.is_empty() {
+            return Err(Error::config(
+                "empty campaign spec: add benchmarks / locality_only entries",
+            ));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for e in &self.plan {
+            if !suite::ALL_BENCHMARKS.contains(&e.name.as_str()) {
+                return Err(Error::UnknownBenchmark { name: e.name.clone() });
+            }
+            if !seen.insert(e.name.as_str()) {
+                return Err(Error::config(format!(
+                    "benchmark {:?} appears twice in the campaign plan",
+                    e.name
+                )));
+            }
+        }
+        for id in &self.sweep.extra_models {
+            if crate::mem::parse_model(id).is_none() {
+                return Err(Error::UnknownModel { id: id.clone() });
+            }
+        }
+        if let Some(sh) = &self.shard {
+            sh.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Swept benchmark names, in plan order.
+    pub fn swept(&self) -> Vec<&str> {
+        self.plan.iter().filter(|e| e.swept).map(|e| e.name.as_str()).collect()
+    }
+
+    /// Locality-only benchmark names, in plan order.
+    pub fn locality_names(&self) -> Vec<&str> {
+        self.plan.iter().filter(|e| !e.swept).map(|e| e.name.as_str()).collect()
+    }
+
+    /// Every planned swept unit as `(benchmark, point id)`, in
+    /// enumeration order, **before** shard filtering — the key stream
+    /// that [`Shard::contains`] partitions and `repro merge` reconciles.
+    pub fn plan_keys(&self) -> Vec<(String, String)> {
+        let points = self.sweep.points();
+        let mut keys = Vec::with_capacity(points.len() * self.plan.len());
+        for e in &self.plan {
+            if !e.swept {
+                continue;
+            }
+            for p in &points {
+                keys.push((e.name.clone(), dse::point_id(&p.model.id(), &p.knobs)));
+            }
+        }
+        keys
+    }
+
+    /// Serialize to the canonical TOML form. Canonicalization notes:
+    /// swept benchmarks are listed before locality-only rows (relative
+    /// order within each group is preserved), defaults that parsing
+    /// restores (`threads = 0`, absent sink/shard, empty model list) are
+    /// omitted. `parse(to_toml(spec)) == spec` for specs already in
+    /// canonical plan order, and `to_toml(parse(text)) == text` for
+    /// canonical documents (pinned by `tests/spec_shard.rs`).
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "# amm-dse campaign spec");
+        let _ = writeln!(s, "scale = \"{}\"", self.scale.as_str());
+        let _ = writeln!(s);
+        let _ = writeln!(s, "[campaign]");
+        let _ = writeln!(s, "benchmarks = {}", str_array(&self.swept()));
+        let loc = self.locality_names();
+        if !loc.is_empty() {
+            let _ = writeln!(s, "locality_only = {}", str_array(&loc));
+        }
+        if let Some(sink) = &self.sink {
+            let _ = writeln!(s, "sink = \"{}\"", sink.display());
+        }
+        if self.threads != 0 {
+            let _ = writeln!(s, "threads = {}", self.threads);
+        }
+        if let Some(sh) = &self.shard {
+            let _ = writeln!(s, "shard = \"{sh}\"");
+        }
+        let _ = writeln!(s);
+        let _ = writeln!(s, "[sweep]");
+        let sw = &self.sweep;
+        let _ = writeln!(s, "unrolls = {}", int_array(&sw.unrolls));
+        let _ = writeln!(s, "word_bytes = {}", int_array(&sw.word_bytes));
+        let _ = writeln!(s, "alus = {}", int_array(&sw.alus));
+        let _ = writeln!(s, "bank_counts = {}", int_array(&sw.bank_counts));
+        let _ = writeln!(s, "multipump = {}", sw.include_multipump);
+        let _ = writeln!(s, "lvt = {}", sw.include_lvt);
+        let _ = writeln!(s, "dual_port = {}", sw.include_dual_port);
+        let _ = writeln!(s, "block_partitioning = {}", sw.include_block);
+        let _ = writeln!(s, "flat_xor = {}", sw.include_flat_xor);
+        if !sw.extra_models.is_empty() {
+            let ids: Vec<&str> = sw.extra_models.iter().map(String::as_str).collect();
+            let _ = writeln!(s, "models = {}", str_array(&ids));
+        }
+        if sw.threads != 0 {
+            let _ = writeln!(s, "threads = {}", sw.threads);
+        }
+        for (r, w) in &sw.amm_ports {
+            let _ = writeln!(s);
+            let _ = writeln!(s, "[[amm]]");
+            let _ = writeln!(s, "read_ports = {r}");
+            let _ = writeln!(s, "write_ports = {w}");
+        }
+        s
+    }
+
+    /// Parse a spec from TOML text (the same grammar as
+    /// [`crate::config::parse`]; the `[campaign]` table is optional when
+    /// a top-level `benchmark` key names a single-benchmark run).
+    pub fn parse(text: &str) -> Result<CampaignSpec> {
+        crate::config::parse(text).map(|rc| rc.campaign)
+    }
+
+    /// Load a spec from a TOML file.
+    pub fn load(path: &Path) -> Result<CampaignSpec> {
+        crate::config::load(path).map(|rc| rc.campaign)
+    }
+
+    /// Run this spec with a private coordinator (see
+    /// [`crate::campaign::run`]).
+    pub fn run(&self) -> Result<crate::campaign::CampaignOutcome> {
+        crate::campaign::run(self, &crate::campaign::ExecOptions::default())
+    }
+
+    /// Run this spec offline (pure-Rust cost model, no coordinator).
+    pub fn run_offline(&self) -> Result<crate::campaign::CampaignOutcome> {
+        let opts = crate::campaign::ExecOptions { offline: true, ..Default::default() };
+        crate::campaign::run(self, &opts)
+    }
+
+    /// Run this spec through a caller-provided coordinator.
+    pub fn run_with(&self, coord: &Coordinator) -> Result<crate::campaign::CampaignOutcome> {
+        crate::campaign::run_with(self, coord, &crate::campaign::ExecOptions::default())
+    }
+}
+
+fn str_array(items: &[&str]) -> String {
+    let quoted: Vec<String> = items.iter().map(|s| format!("\"{s}\"")).collect();
+    format!("[{}]", quoted.join(", "))
+}
+
+fn int_array(items: &[u32]) -> String {
+    let nums: Vec<String> = items.iter().map(u32::to_string).collect();
+    format!("[{}]", nums.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_parse_accepts_i_slash_n_and_rejects_nonsense() {
+        assert_eq!(Shard::parse("0/4").unwrap(), Shard { index: 0, count: 4 });
+        assert_eq!(Shard::parse("3/4").unwrap().to_string(), "3/4");
+        assert!(Shard::parse("4/4").is_err(), "index must be < count");
+        assert!(Shard::parse("0/0").is_err(), "count must be >= 1");
+        assert!(Shard::parse("1").is_err());
+        assert!(Shard::parse("a/b").is_err());
+    }
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        // Pinned values: the hash is part of the cross-host contract.
+        let h1 = shard_of("gemm", "banked1/u1/w8/a4", 7);
+        let h2 = shard_of("gemm", "banked1/u1/w8/a4", 7);
+        assert_eq!(h1, h2);
+        for n in [1u32, 2, 3, 7, 64] {
+            for b in ["gemm", "fft", "kmp"] {
+                for id in ["banked1/u1/w8/a4", "xor2r2w/u4/w8/a4"] {
+                    assert!(shard_of(b, id, n) < n);
+                }
+            }
+        }
+        // the benchmark is part of the key: same point id, different
+        // benchmark must be free to land in different buckets
+        let spread: std::collections::HashSet<u32> = (0..64)
+            .map(|i| shard_of(&format!("b{i}"), "banked1/u1/w8/a4", 8))
+            .collect();
+        assert!(spread.len() > 1, "hash must depend on the benchmark");
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        assert!(CampaignSpec::new().validate().is_err(), "empty plan");
+        assert!(CampaignSpec::new().benchmark("nope").validate().is_err());
+        let mut s = CampaignSpec::new().benchmark("gemm");
+        s.sweep.extra_models = vec!["warp9".into()];
+        assert!(matches!(s.validate().unwrap_err(), Error::UnknownModel { .. }));
+        let s = CampaignSpec::new().benchmark("gemm").with_shard(2, 2);
+        assert!(s.validate().is_err(), "shard index out of range");
+        assert!(CampaignSpec::new().benchmark("gemm").with_shard(1, 2).validate().is_ok());
+        // duplicates corrupt the (benchmark, scale, point id) key space
+        let dup = CampaignSpec::new().benchmark("gemm").benchmark("gemm");
+        assert!(dup.validate().is_err(), "swept twice");
+        let dup = CampaignSpec::new().benchmark("gemm").locality_only("gemm");
+        assert!(dup.validate().is_err(), "swept + locality-only");
+    }
+
+    #[test]
+    fn plan_keys_cover_the_swept_cross_product() {
+        let mut spec = CampaignSpec::new()
+            .benchmark("gemm")
+            .locality_only("kmp")
+            .benchmark("fft");
+        spec.sweep = Sweep::quick();
+        let keys = spec.plan_keys();
+        let per_bench = spec.sweep.points().len();
+        assert_eq!(keys.len(), 2 * per_bench, "locality-only rows carry no units");
+        assert!(keys.iter().all(|(b, _)| b == "gemm" || b == "fft"));
+        assert!(keys[0].1.contains("/u"), "{:?}", keys[0]);
+    }
+}

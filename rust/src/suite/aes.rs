@@ -62,7 +62,8 @@ pub fn generate(blocks: usize) -> Workload {
                 let lk = b.load(a_key, ((round * 16 + i) % 32) as u32);
                 let x = b.alu(AluKind::Logic, &[ls, lk]);
                 b.site(SITE_SBOX);
-                let lsb = b.load_dep(a_sbox, SBOX[(st[i] ^ key[(round * 16 + i) % 32]) as usize] as u32, &[x]);
+                let sub = SBOX[(st[i] ^ key[(round * 16 + i) % 32]) as usize] as u32;
+                let lsb = b.load_dep(a_sbox, sub, &[x]);
                 b.site(SITE_STATE_WR);
                 b.store(a_state, (base + i) as u32, &[lsb]);
                 st[i] = SBOX[(st[i] ^ key[(round * 16 + i) % 32]) as usize];

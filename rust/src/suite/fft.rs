@@ -24,8 +24,9 @@ pub fn generate(n: usize) -> Workload {
     // Input: a deterministic tone mix.
     let mut re: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin() + 0.5 * (i as f64 * 1.7).cos()).collect();
     let mut im: Vec<f64> = vec![0.0; n];
-    let tw_re: Vec<f64> = (0..n / 2).map(|i| (-2.0 * std::f64::consts::PI * i as f64 / n as f64).cos()).collect();
-    let tw_im: Vec<f64> = (0..n / 2).map(|i| (-2.0 * std::f64::consts::PI * i as f64 / n as f64).sin()).collect();
+    let phase = |i: usize| -2.0 * std::f64::consts::PI * i as f64 / n as f64;
+    let tw_re: Vec<f64> = (0..n / 2).map(|i| phase(i).cos()).collect();
+    let tw_im: Vec<f64> = (0..n / 2).map(|i| phase(i).sin()).collect();
 
     let mut b = TraceBuilder::new();
     let a_re = b.array("real", 8, n as u32);

@@ -25,8 +25,15 @@ pub fn generate(dim: usize) -> Workload {
     for i in 1..dim - 1 {
         for j in 1..dim - 1 {
             for k in 1..dim - 1 {
-                let offs =
-                    [idx(i, j, k), idx(i - 1, j, k), idx(i + 1, j, k), idx(i, j - 1, k), idx(i, j + 1, k), idx(i, j, k - 1), idx(i, j, k + 1)];
+                let offs = [
+                    idx(i, j, k),
+                    idx(i - 1, j, k),
+                    idx(i + 1, j, k),
+                    idx(i, j - 1, k),
+                    idx(i, j + 1, k),
+                    idx(i, j, k - 1),
+                    idx(i, j, k + 1),
+                ];
                 let mut loads = Vec::with_capacity(7);
                 for &o in &offs {
                     b.site(SITE_IN);

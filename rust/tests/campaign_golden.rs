@@ -13,7 +13,7 @@ use amm_dse::campaign::{sink, Campaign};
 use amm_dse::coordinator::Coordinator;
 use amm_dse::dse::Sweep;
 use amm_dse::suite::{self, Scale};
-use amm_dse::Explorer;
+use amm_dse::{CampaignSpec, Explorer};
 
 #[test]
 fn campaign_matches_sequential_explorer_runs_point_for_point() {
@@ -48,6 +48,33 @@ fn campaign_matches_sequential_explorer_runs_point_for_point() {
         assert_eq!(cs.perf_ratio, ss.perf_ratio, "{name}");
         assert_eq!(cs.best_banking_ns, ss.best_banking_ns, "{name}");
         assert_eq!(cs.best_amm_ns, ss.best_amm_ns, "{name}");
+    }
+}
+
+#[test]
+fn builder_and_serialized_spec_paths_produce_identical_results() {
+    // The builders are thin front-ends over the spec: running the spec
+    // they lower to — even after a TOML round trip — must reproduce the
+    // builder path bit for bit.
+    let builder = || {
+        Campaign::new()
+            .benchmarks(["gemm", "stencil2d"])
+            .locality_only("kmp")
+            .scale(Scale::Tiny)
+            .sweep(Sweep::quick())
+    };
+    let via_builder = builder().offline().run().unwrap();
+    let spec = builder().into_spec();
+    let reparsed = CampaignSpec::parse(&spec.to_toml()).unwrap();
+    assert_eq!(reparsed, spec);
+    let via_spec = reparsed.run_offline().unwrap();
+    assert_eq!(via_builder.explorations().len(), via_spec.explorations().len());
+    for (a, b) in via_builder.explorations().iter().zip(via_spec.explorations()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.locality.to_bits(), b.locality.to_bits(), "{}", a.benchmark);
+        for (x, y) in a.points().iter().zip(b.points()) {
+            assert_eq!(x, y, "{}/{}", a.benchmark, x.id);
+        }
     }
 }
 

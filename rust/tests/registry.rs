@@ -65,7 +65,10 @@ fn prop_built_designs_describe_their_model() {
     check(
         Config::default().cases(120),
         |rng| {
-            let ids = ["banked4", "banked2p2", "bankedblk4", "pump2", "lvt2r2w", "xor2r2w", "xorflat2r2w", "cmp2r1w"];
+            let ids = [
+                "banked4", "banked2p2", "bankedblk4", "pump2", "lvt2r2w", "xor2r2w",
+                "xorflat2r2w", "cmp2r1w",
+            ];
             let id = ids[rng.below(ids.len() as u64) as usize];
             let depth = 4 + rng.below(65536) as u32;
             let width = 8u32 << (rng.below(4) as u32);

@@ -1,0 +1,191 @@
+//! The declarative-spec contract: TOML round-trip, exact shard
+//! partitioning, merge-equivalence, spec-vs-builder lowering, and the
+//! scale-keyed resume rule.
+
+use amm_dse::campaign::{merge, sink, Campaign};
+use amm_dse::dse::Sweep;
+use amm_dse::spec::{shard_of, CampaignSpec, Shard};
+use amm_dse::suite::Scale;
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+/// A small canonical spec exercising every serialized field.
+fn sample_spec() -> CampaignSpec {
+    let mut sweep = Sweep::quick();
+    sweep.extra_models = vec!["cmp2r2w".into()];
+    sweep.threads = 2;
+    let mut spec = CampaignSpec::new()
+        .benchmark("gemm")
+        .benchmark("fft")
+        .locality_only("kmp")
+        .with_shard(0, 2);
+    spec.scale = Scale::Tiny;
+    spec.sweep = sweep;
+    spec.sink = Some(PathBuf::from("results/suite.jsonl"));
+    spec.threads = 4;
+    spec
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn spec_round_trips_through_toml_byte_for_byte() {
+    let spec = sample_spec();
+    let toml1 = spec.to_toml();
+    let parsed = CampaignSpec::parse(&toml1).expect("canonical TOML must parse");
+    assert_eq!(parsed, spec, "TOML -> spec must reproduce every field");
+    let toml2 = parsed.to_toml();
+    assert_eq!(toml1, toml2, "spec -> TOML must be canonical (byte-stable)");
+
+    // defaults are restored when omitted: a minimal document fills in
+    // the default sweep, no sink, no shard
+    let minimal = CampaignSpec::parse("[campaign]\nbenchmarks = [\"gemm\"]\n").unwrap();
+    assert_eq!(minimal.sweep, Sweep::default());
+    assert_eq!(minimal.scale, Scale::Paper);
+    assert!(minimal.sink.is_none() && minimal.shard.is_none());
+    assert_eq!(minimal.threads, 0);
+    // and a default-heavy spec also round-trips
+    let toml3 = minimal.to_toml();
+    assert_eq!(CampaignSpec::parse(&toml3).unwrap(), minimal);
+}
+
+#[test]
+fn config_files_and_builders_lower_to_the_same_spec() {
+    // the single-benchmark config form is a one-entry plan
+    let rc = amm_dse::config::parse("benchmark = \"gemm\"\nscale = \"tiny\"\n").unwrap();
+    let built = Campaign::new().benchmark("gemm").scale(Scale::Tiny).into_spec();
+    assert_eq!(rc.campaign, built);
+    // and the spec's own serialization closes the loop
+    assert_eq!(CampaignSpec::parse(&built.to_toml()).unwrap(), built);
+}
+
+#[test]
+fn shards_partition_the_planned_unit_stream_exactly() {
+    let mut spec = CampaignSpec::new().benchmark("gemm").benchmark("fft").benchmark("kmp");
+    spec.scale = Scale::Tiny;
+    spec.sweep = Sweep::quick();
+    let keys = spec.plan_keys();
+    assert!(!keys.is_empty());
+    let all: HashSet<&(String, String)> = keys.iter().collect();
+    assert_eq!(all.len(), keys.len(), "plan keys are unique");
+    for n in [2u32, 3, 7] {
+        let mut seen: HashSet<&(String, String)> = HashSet::new();
+        for i in 0..n {
+            let sh = Shard { index: i, count: n };
+            for k in keys.iter().filter(|(b, id)| sh.contains(b, id)) {
+                assert!(seen.insert(k), "{k:?} landed in two shards (n={n})");
+            }
+        }
+        assert_eq!(seen, all, "the union of {n} shards must be the full plan");
+    }
+    // shard_of agrees with Shard::contains (the engine uses the latter)
+    for (b, id) in &keys {
+        let bucket = shard_of(b, id, 3);
+        assert!(Shard { index: bucket, count: 3 }.contains(b, id));
+    }
+    // with 2 shards over dozens of units, both sides get work
+    let sh0 = Shard { index: 0, count: 2 };
+    let owned = keys.iter().filter(|(b, id)| sh0.contains(b, id)).count();
+    assert!(owned > 0 && owned < keys.len(), "{owned}/{} is a degenerate split", keys.len());
+}
+
+#[test]
+fn sharded_runs_merge_back_to_the_unsharded_campaign() {
+    let dir = tmp_dir("amm_dse_spec_shard_merge");
+    let mut spec = CampaignSpec::new()
+        .benchmark("gemm")
+        .benchmark("stencil2d")
+        .benchmark("fft")
+        .locality_only("kmp");
+    spec.scale = Scale::Tiny;
+    spec.sweep = Sweep::quick();
+
+    // ---- the reference: one unsharded offline campaign ---------------
+    let full = spec.run_offline().unwrap();
+    let full_csv = full.fig5_csv();
+
+    // ---- n=2 sharded runs, each to its own sink ----------------------
+    let n = 2u32;
+    let mut sinks = Vec::new();
+    let mut shard_points = 0usize;
+    for i in 0..n {
+        let mut shard_spec = spec.clone().with_shard(i, n);
+        let path = dir.join(format!("s{i}.jsonl"));
+        shard_spec.sink = Some(path.clone());
+        let outcome = shard_spec.run_offline().unwrap();
+        assert_eq!(outcome.shard, Some(Shard { index: i, count: n }));
+        assert_eq!(outcome.resumed, 0);
+        // a shard never traces benchmarks it owns no units of: the
+        // locality-only row stays unmaterialized (merge recomputes it)
+        let kmp = outcome.get("kmp").unwrap();
+        assert!(kmp.locality.is_nan() && kmp.trace_nodes == 0, "kmp traced on a shard host");
+        shard_points += outcome.total_points();
+        sinks.push(path);
+    }
+    assert_eq!(shard_points, full.total_points(), "shards partition the plan");
+    // the two sinks are disjoint record sets
+    let (r0, _) = sink::load(&sinks[0]).unwrap();
+    let (r1, _) = sink::load(&sinks[1]).unwrap();
+    let k0: HashSet<(String, String)> =
+        r0.iter().map(|(b, _, p)| (b.clone(), p.id.clone())).collect();
+    let k1: HashSet<(String, String)> =
+        r1.iter().map(|(b, _, p)| (b.clone(), p.id.clone())).collect();
+    assert!(k0.is_disjoint(&k1), "shard sinks must not overlap");
+    assert_eq!(k0.len() + k1.len(), full.total_points());
+
+    // ---- merge: byte-for-byte the unsharded fig5, zero missing -------
+    let merged = merge::merge(&spec, &sinks).unwrap();
+    assert!(merged.missing.is_empty(), "{:?}", merged.missing);
+    assert_eq!(merged.duplicates, 0);
+    assert_eq!(merged.conflicts, 0);
+    assert_eq!(merged.foreign, 0);
+    assert_eq!(merged.outcome.fig5_csv(), full_csv, "merged fig5 CSV must match byte-for-byte");
+    // point-for-point equality, in enumeration order
+    for (a, b) in full.explorations().iter().zip(merged.outcome.explorations()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.locality.to_bits(), b.locality.to_bits(), "{}", a.benchmark);
+        assert_eq!(a.points().len(), b.points().len(), "{}", a.benchmark);
+        for (x, y) in a.points().iter().zip(b.points()) {
+            assert_eq!(x, y, "{}/{}", a.benchmark, x.id);
+        }
+    }
+
+    // ---- a sharded run resumes from its own sink ---------------------
+    let mut shard0 = spec.clone().with_shard(0, n);
+    shard0.sink = Some(sinks[0].clone());
+    let resumed = shard0.run_offline().unwrap();
+    assert_eq!(resumed.simulated, 0, "a complete shard sink resumes everything");
+    assert_eq!(resumed.resumed, k0.len());
+}
+
+#[test]
+fn resume_is_scale_keyed() {
+    let dir = tmp_dir("amm_dse_spec_scale_key");
+    let path = dir.join("tiny.jsonl");
+    let mut spec = CampaignSpec::new().benchmark("gemm");
+    spec.scale = Scale::Tiny;
+    spec.sweep = Sweep::quick();
+    spec.sink = Some(path.clone());
+    let full = spec.run_offline().unwrap();
+    assert_eq!(full.resumed, 0);
+
+    // same records, but claiming another scale: must not satisfy resume
+    let text = std::fs::read_to_string(&path).unwrap();
+    let forged = text.replace("\"scale\":\"tiny\"", "\"scale\":\"paper\"");
+    assert_ne!(text, forged, "the forgery must actually rewrite the records");
+    std::fs::write(&path, forged).unwrap();
+    let rerun = spec.run_offline().unwrap();
+    assert_eq!(rerun.resumed, 0, "a paper-labelled sink must not satisfy a tiny resume");
+    assert_eq!(rerun.simulated, full.total_points());
+
+    // restore the genuine scale: everything resumes again
+    std::fs::write(&path, &text).unwrap();
+    let resumed = spec.run_offline().unwrap();
+    assert_eq!(resumed.simulated, 0);
+    assert_eq!(resumed.resumed, full.total_points());
+}
