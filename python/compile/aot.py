@@ -23,7 +23,7 @@ from jax._src.lib import xla_client as xc
 from . import model
 from .kernels import ref
 
-# Artifact shapes — keep in lockstep with rust/src/coordinator (COST_BATCH)
+# Artifact shapes — keep in lockstep with rust/src/cost/service.rs (COST_BATCH)
 # and the examples.
 COST_N = 1024
 XOR_D = 1024

@@ -46,9 +46,9 @@ def test_validate_passes_on_healthy_kernels():
 
 
 def test_cost_model_batch_matches_coordinator_constant():
-    # rust/src/coordinator/mod.rs::COST_BATCH must equal aot.COST_N.
+    # rust/src/cost/service.rs::COST_BATCH must equal aot.COST_N.
     rs = open(
-        os.path.join(os.path.dirname(__file__), "..", "..", "rust", "src", "coordinator", "mod.rs")
+        os.path.join(os.path.dirname(__file__), "..", "..", "rust", "src", "cost", "service.rs")
     ).read()
     assert f"COST_BATCH: usize = {aot.COST_N};" in rs
 

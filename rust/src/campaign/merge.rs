@@ -217,6 +217,7 @@ fn outcome(scale: Scale, explorations: Vec<Exploration>, resumed: usize) -> Camp
         simulated: 0,
         resumed,
         cost_batches: 0,
+        cost: Default::default(),
     }
 }
 

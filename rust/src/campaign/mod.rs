@@ -33,7 +33,12 @@
 //! 4. **score** — the macro-cost queries of every pending design, across
 //!    *all* benchmarks, go through
 //!    [`crate::coordinator::Coordinator::score_designs`] as **one**
-//!    deduplicated batch (one PJRT execute scores the whole campaign);
+//!    deduplicated batch, resolved through the tiered cost stack
+//!    ([`crate::cost`]): the campaign opens the persistent cost store
+//!    ([`CampaignSpec::cost_store`], or `<sink>.cost.jsonl` next to the
+//!    sink) before scoring and newly scored rows are flushed to it per
+//!    batch, so only shapes *no prior run ever scored* reach the PJRT
+//!    backend — a warmed re-run issues **zero** backend batches;
 //! 5. **compile** — one [`CompiledTrace`] per `(benchmark, word_bytes)`
 //!    group, shared by every model/knob variant in the group;
 //! 6. **simulate** — a single [`crate::util::pool::parallel_map_with`]
@@ -56,6 +61,7 @@ pub mod merge;
 pub mod sink;
 
 use crate::coordinator::{Coordinator, CostBackend};
+use crate::cost::CostCounters;
 use crate::dse::{self, BenchSummary, DesignPoint, Sweep};
 use crate::error::{Error, Result};
 use crate::explore::Exploration;
@@ -63,13 +69,19 @@ use crate::locality;
 use crate::mem::MemDesign;
 use crate::report;
 use crate::sched::{CompiledTrace, SimArena};
-use crate::spec::{CampaignSpec, Shard};
+use crate::spec::{CampaignSpec, Shard, ShardStrategy};
 use crate::suite::{self, Scale};
 use crate::util::{log, pool};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::Write as _;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc, Mutex};
+
+/// The default cost-store path for a sinked campaign:
+/// `<sink>.cost.jsonl`, next to the sidecar `<sink>.status.json`.
+pub fn default_cost_store(sink: &Path) -> PathBuf {
+    crate::util::jsonl::path_with_suffix(sink, ".cost.jsonl")
+}
 
 /// Execution-context knobs that ride *alongside* a [`CampaignSpec`]:
 /// they select how the plan runs here (cost service, progress
@@ -169,6 +181,14 @@ impl Campaign {
         self
     }
 
+    /// Persist (and warm-start from) the macro-cost store at `path`
+    /// (default for sinked runs: `<sink>.cost.jsonl`). See
+    /// [`crate::cost`].
+    pub fn cost_store(mut self, path: impl Into<PathBuf>) -> Self {
+        self.spec.cost_store = Some(path.into());
+        self
+    }
+
     /// Run only shard `index` of `count`: the planned units whose
     /// stable `(benchmark, point id)` hash lands in this bucket.
     pub fn shard(mut self, index: u32, count: u32) -> Self {
@@ -256,13 +276,29 @@ fn execute(
     let scale = spec.scale;
     let shard = spec.shard;
 
+    // ---- cost store: open the warm-start tier before scoring ----------
+    // The spec's explicit path wins; a sinked run derives
+    // `<sink>.cost.jsonl`. Offline (coordinator-less) runs score
+    // nothing and open nothing.
+    if let Some(coord) = coord {
+        let store_path = spec
+            .cost_store
+            .clone()
+            .or_else(|| spec.sink.as_ref().map(|s| default_cost_store(s)));
+        if let Some(path) = &store_path {
+            coord.open_cost_store(path)?;
+        }
+    }
+
     // ---- plan: memoized workloads + locality + sweep points -----------
     // A sharded run materializes only what it owns: point ids depend on
     // (model id, knobs) alone, so ownership is decidable before any
-    // workload is generated, and a benchmark whose every unit hashes to
-    // another shard (locality-only rows included) is never traced on
-    // this host — its exploration row carries NaN locality and no
-    // workload stats; `merge` recomputes locality from the full plan.
+    // workload is generated, and — under the default hash strategy — a
+    // benchmark whose every unit hashes to another shard (locality-only
+    // rows included) is never traced on this host; its exploration row
+    // carries NaN locality and no workload stats, and `merge` recomputes
+    // locality from the full plan. The weighted strategy instead traces
+    // every swept benchmark first (memoized) to obtain the LPT weights.
     struct Bench {
         name: String,
         swept: bool,
@@ -270,10 +306,36 @@ fn execute(
         locality: f64,
     }
     let points = spec.sweep.points();
+    // Weighted ownership, as benchmark -> owned point ids (probed by
+    // &str, so the per-unit ownership test below allocates nothing).
+    let weighted: Option<HashMap<String, HashSet<String>>> = match (&shard, spec.shard_strategy)
+    {
+        (Some(sh), ShardStrategy::Weighted) => {
+            let keys = spec.plan_keys();
+            let assignment = crate::spec::weighted_shard_assignment(
+                &keys,
+                |bench| suite::generate_cached(bench, scale).trace.len() as u64,
+                sh.count,
+            );
+            let mut owned: HashMap<String, HashSet<String>> = HashMap::new();
+            for ((bench, id), s) in keys.into_iter().zip(assignment) {
+                if s == sh.index {
+                    owned.entry(bench).or_default().insert(id);
+                }
+            }
+            Some(owned)
+        }
+        _ => None,
+    };
+    let owns = |bench: &str, id: &str| match (&shard, &weighted) {
+        (None, _) => true,
+        (Some(_), Some(owned)) => owned.get(bench).map_or(false, |ids| ids.contains(id)),
+        (Some(sh), None) => sh.contains(bench, id),
+    };
     let owns_units = |name: &str| match &shard {
         None => true,
-        Some(sh) => {
-            points.iter().any(|p| sh.contains(name, &dse::point_id(&p.model.id(), &p.knobs)))
+        Some(_) => {
+            points.iter().any(|p| owns(name, &dse::point_id(&p.model.id(), &p.knobs)))
         }
     };
     let benches: Vec<Bench> = spec
@@ -331,10 +393,8 @@ fn execute(
             // model id — the built design must carry the same id
             debug_assert_eq!(design.id, p.model.id(), "MemModel::build must preserve the id");
             let id = dse::point_id(&design.id, &p.knobs);
-            if let Some(sh) = &shard {
-                if !sh.contains(&b.name, &id) {
-                    continue;
-                }
+            if shard.is_some() && !owns(&b.name, &id) {
+                continue;
             }
             if let Some(prev) = done.remove(&sink::key(&b.name, scale, &id)) {
                 results[bi][pi] = Some(prev);
@@ -351,11 +411,11 @@ fn execute(
             units.push(Unit { bench: bi, point: pi, group: group_keys.len() - 1, seq, design });
         }
     }
-    if let Some(sh) = &shard {
+    if shard.is_some() {
         // records owned by other shards are expected when sinks are
         // shared or pre-merged — only genuinely foreign records (wrong
         // scale, sweep or benchmark set) warrant noise below
-        done.retain(|(b, s, id), _| *s != scale || sh.contains(b, id));
+        done.retain(|(b, s, id), _| *s != scale || owns(b, id));
     }
     if !done.is_empty() {
         log::warn(format!(
@@ -365,12 +425,17 @@ fn execute(
     }
     let simulated = units.len();
 
-    // ---- score: ONE deduplicated cost batch for the whole campaign ----
-    let mut cost_batches = 0usize;
+    // ---- score: ONE deduplicated cost call for the whole campaign -----
+    // The stack answers from its memo/store tiers where it can; only
+    // never-scored shapes reach the runtime backend (at most one
+    // batch). Counter deltas attribute exactly this campaign's traffic
+    // on a possibly long-lived coordinator.
+    let mut cost = CostCounters::default();
     if let Some(coord) = coord {
         if !units.is_empty() {
+            let before = coord.cost_counters();
             coord.score_designs(units.iter_mut().map(|u| &mut u.design))?;
-            cost_batches = 1;
+            cost = coord.cost_counters().since(&before);
         }
     }
 
@@ -398,6 +463,7 @@ fn execute(
     let mut writer: Option<std::thread::JoinHandle<std::io::Result<u64>>> = None;
     if spec.sink.is_some() || opts.progress {
         let mut file = None;
+        let mut status = None;
         if let Some(path) = &spec.sink {
             if let Some(dir) = path.parent() {
                 if !dir.as_os_str().is_empty() {
@@ -417,14 +483,24 @@ fn execute(
                     .map_err(|e| Error::io(format!("repair {}", path.display()), e))?;
             }
             file = Some(f);
+            status = Some(sink::StatusWriter::new(
+                path,
+                shard.map(|sh| sh.to_string()),
+                scale,
+                resumed,
+                units.len(),
+                cost.hits(),
+                cost.misses,
+                cost.batches,
+            ));
         }
-        let progress = opts.progress.then(|| Progress::new(resumed, units.len()));
+        let progress = opts.progress.then(|| Progress::new(resumed, units.len(), &cost));
         let (s, r) = mpsc::channel::<(usize, String)>();
         tx = Some(Mutex::new(s));
         writer = Some(
             std::thread::Builder::new()
                 .name("campaign-sink".into())
-                .spawn(move || sink_writer(file, r, progress))
+                .spawn(move || sink_writer(file, r, progress, status))
                 .expect("spawn campaign sink writer"),
         );
     }
@@ -483,25 +559,41 @@ fn execute(
         explorations,
         simulated,
         resumed,
-        cost_batches,
+        cost_batches: cost.batches,
+        cost,
     })
 }
 
 /// Stderr progress/ETA reporting for long campaigns: the sink-writer
 /// thread already sees every completion, so it emits a line every
 /// [`Progress::every`] completions (~20 lines per run) plus a final
-/// one. Silenced by `repro run --quiet` (which simply clears
+/// one, each carrying the campaign's cost hit/miss/batch accounting.
+/// Silenced by `repro run --quiet` (which simply clears
 /// [`ExecOptions::progress`]).
 struct Progress {
     resumed: usize,
     planned: usize,
     every: usize,
+    /// Fixed suffix: scoring finishes before simulation starts, so the
+    /// counters are final by the time the first line prints.
+    cost_note: String,
     start: std::time::Instant,
 }
 
 impl Progress {
-    fn new(resumed: usize, planned: usize) -> Progress {
-        Progress { resumed, planned, every: (planned / 20).max(1), start: std::time::Instant::now() }
+    fn new(resumed: usize, planned: usize, cost: &CostCounters) -> Progress {
+        Progress {
+            resumed,
+            planned,
+            every: (planned / 20).max(1),
+            cost_note: format!(
+                ", cost {} hit/{} miss/{} batch",
+                cost.hits(),
+                cost.misses,
+                cost.batches
+            ),
+            start: std::time::Instant::now(),
+        }
     }
 
     fn line(&self, received: usize) {
@@ -512,12 +604,15 @@ impl Progress {
         }
         let elapsed = self.start.elapsed().as_secs_f64();
         let pct = 100.0 * done as f64 / total as f64;
+        let cost = &self.cost_note;
         if received == 0 || received >= self.planned {
-            eprintln!("campaign: {done}/{total} points ({pct:.0}%), {elapsed:.1}s elapsed");
+            eprintln!(
+                "campaign: {done}/{total} points ({pct:.0}%), {elapsed:.1}s elapsed{cost}"
+            );
         } else {
             let eta = elapsed / received as f64 * (self.planned - received) as f64;
             eprintln!(
-                "campaign: {done}/{total} points ({pct:.0}%), {elapsed:.1}s elapsed, eta {eta:.0}s"
+                "campaign: {done}/{total} points ({pct:.0}%), {elapsed:.1}s elapsed, eta {eta:.0}s{cost}"
             );
         }
     }
@@ -526,11 +621,13 @@ impl Progress {
 /// Drain `(seq, line)` completions: count them for [`Progress`], and —
 /// when a sink file is attached — write lines in `seq` order through a
 /// reorder buffer, so the file always grows as the in-order prefix
-/// completes (and is flushed there, for `tail -f` observability).
+/// completes (and is flushed there, for `tail -f` observability), with
+/// the `<sink>.status.json` sidecar rewritten atomically on each flush.
 fn sink_writer(
     file: Option<std::fs::File>,
     rx: mpsc::Receiver<(usize, String)>,
     progress: Option<Progress>,
+    mut status: Option<sink::StatusWriter>,
 ) -> std::io::Result<u64> {
     use std::collections::BTreeMap;
     let mut out = file.map(std::io::BufWriter::new);
@@ -557,6 +654,9 @@ fn sink_writer(
         }
         if flushed {
             w.flush()?;
+            if let Some(st) = status.as_mut() {
+                st.update(written as usize, received, false);
+            }
         }
     }
     if let Some(w) = out.as_mut() {
@@ -569,6 +669,9 @@ fn sink_writer(
             written += 1;
         }
         w.flush()?;
+    }
+    if let Some(st) = status.as_mut() {
+        st.update(written as usize, received, true);
     }
     if let Some(p) = &progress {
         p.line(received);
@@ -593,9 +696,15 @@ pub struct CampaignOutcome {
     pub simulated: usize,
     /// Design points restored from the sink instead of re-simulated.
     pub resumed: usize,
-    /// Macro-cost batches issued (1 for any non-empty scored campaign,
-    /// 0 when offline or fully resumed).
+    /// Runtime-backend macro-cost batches issued by this campaign: 1
+    /// when any macro shape had to be scored fresh, **0** when offline,
+    /// fully resumed, or every shape was answered by the in-process
+    /// memo / persistent cost store (compat alias of
+    /// [`CampaignOutcome::cost`]`.batches`).
     pub cost_batches: usize,
+    /// Full cost-stack accounting for this campaign's scoring call
+    /// (memo/store hits, backend misses and batches).
+    pub cost: CostCounters,
 }
 
 impl CampaignOutcome {
@@ -716,6 +825,7 @@ mod tests {
             .sweep(Sweep::quick())
             .threads(3)
             .sink("results/x.jsonl")
+            .cost_store("results/x.cost.jsonl")
             .shard(1, 2);
         let spec = c.spec();
         assert_eq!(spec.swept(), ["gemm"]);
@@ -724,6 +834,16 @@ mod tests {
         assert_eq!(spec.sweep, Sweep::quick());
         assert_eq!(spec.threads, 3);
         assert_eq!(spec.sink.as_deref(), Some(std::path::Path::new("results/x.jsonl")));
+        assert_eq!(
+            spec.cost_store.as_deref(),
+            Some(std::path::Path::new("results/x.cost.jsonl"))
+        );
         assert_eq!(spec.shard, Some(Shard { index: 1, count: 2 }));
+    }
+
+    #[test]
+    fn default_cost_store_sits_next_to_the_sink() {
+        let p = default_cost_store(std::path::Path::new("results/s0.jsonl"));
+        assert_eq!(p, std::path::Path::new("results/s0.jsonl.cost.jsonl"));
     }
 }

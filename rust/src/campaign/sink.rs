@@ -21,10 +21,11 @@ use crate::dse::DesignPoint;
 use crate::error::{Error, Result};
 use crate::sched::SimOutput;
 use crate::suite::Scale;
+use crate::util::jsonl::{escape, field, path_with_suffix};
 use crate::util::log;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// The resume/dedupe key: `(benchmark, scale, point id)`. The scale is
 /// part of the key, so a sink written at `--scale tiny` can never
@@ -53,6 +54,153 @@ pub struct LoadInfo {
 
 /// Schema tag carried by every record.
 pub const SCHEMA: &str = "campaign/v1";
+
+/// Schema tag of the status sidecar (see [`StatusWriter`]).
+pub const STATUS_SCHEMA: &str = "campaign-status/v1";
+
+/// Sidecar path convention: `<sink>.status.json` (the cost store uses
+/// the parallel `<sink>.cost.jsonl`).
+pub fn status_path(sink: &Path) -> PathBuf {
+    path_with_suffix(sink, ".status.json")
+}
+
+/// The campaign's machine-readable health endpoint: the sink-writer
+/// thread atomically rewrites `<sink>.status.json` (tmp file + rename,
+/// so a poller never reads a half-written document) on every sink
+/// flush — throttled to one write per 100 ms, plus a final
+/// unconditional one — so fleet tooling polls shard progress without
+/// parsing stderr. One flat JSON object:
+///
+/// ```json
+/// {"schema":"campaign-status/v1","sink":"s0.jsonl","shard":"0/2",
+///  "scale":"tiny","done":123,"total":456,"resumed":10,"eta_s":42.1,
+///  "cost_hits":5,"cost_misses":7,"cost_batches":1,
+///  "complete":false,"updated_unix":1690000000}
+/// ```
+///
+/// `done` counts points *persisted to the sink* (resumed + written in
+/// order), `total` the shard's whole plan, `eta_s` is `null` until the
+/// first completion and after the last, `shard` is `null` for
+/// unsharded runs. Best-effort: an unwritable status file warns once
+/// and never fails the campaign.
+pub struct StatusWriter {
+    path: PathBuf,
+    sink: String,
+    shard: Option<String>,
+    scale: Scale,
+    resumed: usize,
+    planned: usize,
+    cost_hits: usize,
+    cost_misses: usize,
+    cost_batches: usize,
+    start: std::time::Instant,
+    last: Option<std::time::Instant>,
+    warned: bool,
+}
+
+impl StatusWriter {
+    /// A writer for the campaign streaming into `sink`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        sink: &Path,
+        shard: Option<String>,
+        scale: Scale,
+        resumed: usize,
+        planned: usize,
+        cost_hits: usize,
+        cost_misses: usize,
+        cost_batches: usize,
+    ) -> StatusWriter {
+        StatusWriter {
+            path: status_path(sink),
+            // escaped once here: the sink path is the one free-form
+            // string in the document (backslashes on Windows, say)
+            sink: escape(&sink.display().to_string()),
+            shard,
+            scale,
+            resumed,
+            planned,
+            cost_hits,
+            cost_misses,
+            cost_batches,
+            start: std::time::Instant::now(),
+            last: None,
+            warned: false,
+        }
+    }
+
+    /// The sidecar being written (tests).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Record a flush: `written` sink lines persisted so far,
+    /// `received` completions seen. Rewrites the status file unless one
+    /// was written within the last 100 ms (pass `force` for the final
+    /// write).
+    pub fn update(&mut self, written: usize, received: usize, force: bool) {
+        if !force {
+            if let Some(last) = self.last {
+                if last.elapsed() < std::time::Duration::from_millis(100) {
+                    return;
+                }
+            }
+        }
+        self.last = Some(std::time::Instant::now());
+        let done = self.resumed + written;
+        let total = self.resumed + self.planned;
+        let complete = written >= self.planned;
+        let eta = if received > 0 && received < self.planned {
+            let elapsed = self.start.elapsed().as_secs_f64();
+            format!("{:.1}", elapsed / received as f64 * (self.planned - received) as f64)
+        } else {
+            "null".to_string()
+        };
+        let shard = match &self.shard {
+            Some(s) => format!("\"{}\"", escape(s)),
+            None => "null".to_string(),
+        };
+        let updated = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let body = format!(
+            concat!(
+                "{{\"schema\":\"{}\",\"sink\":\"{}\",\"shard\":{},\"scale\":\"{}\",",
+                "\"done\":{},\"total\":{},\"resumed\":{},\"eta_s\":{},",
+                "\"cost_hits\":{},\"cost_misses\":{},\"cost_batches\":{},",
+                "\"complete\":{},\"updated_unix\":{}}}\n"
+            ),
+            STATUS_SCHEMA,
+            self.sink,
+            shard,
+            self.scale.as_str(),
+            done,
+            total,
+            self.resumed,
+            eta,
+            self.cost_hits,
+            self.cost_misses,
+            self.cost_batches,
+            complete,
+            updated,
+        );
+        // tmp + rename: a poller sees either the old or the new
+        // document, never a torn one
+        let tmp = path_with_suffix(&self.path, ".tmp");
+        let result =
+            std::fs::write(&tmp, body.as_bytes()).and_then(|()| std::fs::rename(&tmp, &self.path));
+        if let Err(e) = result {
+            if !self.warned {
+                self.warned = true;
+                log::warn(format!(
+                    "campaign status {}: {e} (status is best-effort; run continues)",
+                    self.path.display()
+                ));
+            }
+        }
+    }
+}
 
 /// Emit one design point as a single JSONL record.
 pub fn record_line(benchmark: &str, scale: Scale, p: &DesignPoint) -> String {
@@ -88,22 +236,6 @@ pub fn record_line(benchmark: &str, scale: Scale, p: &DesignPoint) -> String {
         o.port_stalls,
         o.stall_cycles,
     )
-}
-
-/// Extract one scalar field from a flat single-line JSON object emitted
-/// by [`record_line`]. Not a general JSON parser: it relies on the
-/// emitter never nesting objects or putting `"`/`,`/`}` inside string
-/// values (benchmark names and point ids are `[a-z0-9/-]`).
-fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
-    let pat = format!("\"{key}\":");
-    let at = line.find(&pat)? + pat.len();
-    let rest = &line[at..];
-    if let Some(s) = rest.strip_prefix('"') {
-        s.split('"').next()
-    } else {
-        let end = rest.find([',', '}'])?;
-        Some(rest[..end].trim())
-    }
 }
 
 /// Parse one record back into `(benchmark, scale, point)`. `None` for
@@ -291,6 +423,52 @@ mod tests {
         let again = load_keyed_into(&path, &mut map).unwrap();
         assert_eq!(map.len(), 2);
         assert_eq!(again.duplicates + again.conflicts, 4);
+    }
+
+    #[test]
+    fn status_writer_emits_a_complete_document_atomically() {
+        let dir = std::env::temp_dir().join("amm_dse_status_unit");
+        let _ = std::fs::create_dir_all(&dir);
+        let sink = dir.join("s0.jsonl");
+        let mut st = StatusWriter::new(
+            &sink,
+            Some("0/2".to_string()),
+            Scale::Tiny,
+            3,
+            10,
+            5,
+            7,
+            1,
+        );
+        assert_eq!(st.path(), status_path(&sink));
+        st.update(4, 4, true);
+        let text = std::fs::read_to_string(status_path(&sink)).unwrap();
+        assert!(text.ends_with('\n'));
+        for needle in [
+            "\"schema\":\"campaign-status/v1\"",
+            "\"shard\":\"0/2\"",
+            "\"scale\":\"tiny\"",
+            "\"done\":7",
+            "\"total\":13",
+            "\"resumed\":3",
+            "\"cost_hits\":5",
+            "\"cost_misses\":7",
+            "\"cost_batches\":1",
+            "\"complete\":false",
+            "\"updated_unix\":",
+        ] {
+            assert!(text.contains(needle), "{needle} missing from {text}");
+        }
+        assert!(!text.contains("\"eta_s\":null"), "mid-run status carries an ETA: {text}");
+        // the final write: complete, no ETA, null shard for unsharded
+        let mut unsharded = StatusWriter::new(&sink, None, Scale::Tiny, 0, 2, 0, 0, 0);
+        unsharded.update(2, 2, true);
+        let text = std::fs::read_to_string(status_path(&sink)).unwrap();
+        assert!(text.contains("\"shard\":null"), "{text}");
+        assert!(text.contains("\"complete\":true"), "{text}");
+        assert!(text.contains("\"eta_s\":null"), "{text}");
+        // no torn tmp file lingers
+        assert!(!status_path(&sink).with_extension("json.tmp").exists());
     }
 
     #[test]

@@ -42,7 +42,7 @@
 
 use crate::dse::Sweep;
 use crate::error::{Error, Result};
-use crate::spec::{CampaignSpec, PlanEntry, Shard};
+use crate::spec::{self, CampaignSpec, PlanEntry, Shard, ShardStrategy};
 use crate::suite::Scale;
 use crate::util::tomlmini::{self, Table, Value};
 use std::path::Path;
@@ -86,6 +86,17 @@ pub fn load(path: &Path) -> Result<RunConfig> {
 /// Parse config text.
 pub fn parse(text: &str) -> Result<RunConfig> {
     let doc = tomlmini::parse(text).map_err(|e| Error::config(e.to_string()))?;
+    // Spec evolution: an explicit schema tag must be one we understand;
+    // a missing tag is read as v1 (every pre-tag document is v1).
+    if let Some(v) = doc.root.get("schema") {
+        let tag = v.as_str().ok_or_else(|| Error::config("schema must be a string"))?;
+        if tag != spec::SCHEMA {
+            return Err(Error::config(format!(
+                "unsupported spec schema {tag:?} (this build reads {:?})",
+                spec::SCHEMA
+            )));
+        }
+    }
     let scale = match doc.root.get("scale").and_then(Value::as_str).unwrap_or("paper") {
         "tiny" => Scale::Tiny,
         "paper" => Scale::Paper,
@@ -181,6 +192,12 @@ pub fn parse(text: &str) -> Result<RunConfig> {
             let s = v.as_str().ok_or_else(|| Error::config("campaign.sink must be a string"))?;
             spec.sink = Some(s.into());
         }
+        if let Some(v) = t.get("cost_store") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("campaign.cost_store must be a string"))?;
+            spec.cost_store = Some(s.into());
+        }
         if let Some(v) = t.get("threads") {
             spec.threads =
                 v.as_int().ok_or_else(|| Error::config("campaign.threads must be int"))? as usize;
@@ -189,6 +206,14 @@ pub fn parse(text: &str) -> Result<RunConfig> {
             let s =
                 v.as_str().ok_or_else(|| Error::config("campaign.shard must be a string"))?;
             spec.shard = Some(Shard::parse(s)?);
+        }
+        if let Some(v) = t.get("shard_strategy") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("campaign.shard_strategy must be a string"))?;
+            spec.shard_strategy = ShardStrategy::parse(s).ok_or_else(|| {
+                Error::config(format!("unknown shard_strategy {s:?} (hash|weighted)"))
+            })?;
         }
     } else {
         let name = doc
@@ -313,6 +338,46 @@ mod tests {
         assert!(parse("[campaign]\nbenchmarks = [\"gemm\"]\nshard = \"9/2\"\n").is_err());
         // an empty plan is a config error, not a silent no-op campaign
         assert!(parse("[campaign]\nbenchmarks = []\n").is_err());
+        assert!(
+            parse("[campaign]\nbenchmarks = [\"gemm\"]\nshard_strategy = \"rr\"\n").is_err(),
+            "unknown shard strategies fail loudly"
+        );
+    }
+
+    #[test]
+    fn schema_tag_accepts_v1_and_rejects_the_future() {
+        // missing tag = v1
+        assert!(parse("benchmark = \"gemm\"\n").is_ok());
+        let tagged = format!("schema = \"{}\"\nbenchmark = \"gemm\"\n", spec::SCHEMA);
+        assert!(parse(&tagged).is_ok());
+        let err =
+            parse("schema = \"campaign-spec/v9\"\nbenchmark = \"gemm\"\n").unwrap_err();
+        assert!(err.to_string().contains("campaign-spec/v9"), "{err}");
+        assert!(parse("schema = 7\nbenchmark = \"gemm\"\n").is_err());
+    }
+
+    #[test]
+    fn campaign_table_parses_cost_store_and_shard_strategy() {
+        let cfg = parse(
+            r#"
+            [campaign]
+            benchmarks = ["gemm"]
+            cost_store = "results/suite.cost.jsonl"
+            shard = "0/2"
+            shard_strategy = "weighted"
+            "#,
+        )
+        .unwrap();
+        let spec = &cfg.campaign;
+        assert_eq!(
+            spec.cost_store.as_deref(),
+            Some(Path::new("results/suite.cost.jsonl"))
+        );
+        assert_eq!(spec.shard_strategy, ShardStrategy::Weighted);
+        // defaults: no store, hash strategy
+        let plain = parse("benchmark = \"gemm\"\n").unwrap();
+        assert!(plain.campaign.cost_store.is_none());
+        assert_eq!(plain.campaign.shard_strategy, ShardStrategy::Hash);
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //!
 //! Owns the process topology of a sweep run:
 //!
-//! * a **PJRT service thread** hosting the (non-`Send`) runtime, which
-//!   receives batched SRAM-macro cost queries over a channel and answers
-//!   with the AOT cost-model's outputs — design points are scored by the
-//!   *same compiled artifact* the Python build produced, never by ad-hoc
-//!   reimplementation (the pure-Rust mirror in [`crate::sram`] exists
-//!   only as a fallback and cross-check);
+//! * a tiered [`CostStack`] (see [`crate::cost`]): an in-process memo
+//!   and an optional persistent cost store in front of the **PJRT
+//!   service thread** hosting the (non-`Send`) runtime, which receives
+//!   batched SRAM-macro cost queries over a channel and answers with
+//!   the AOT cost-model's outputs — design points are scored by the
+//!   *same compiled artifact* the Python build produced, never by
+//!   ad-hoc reimplementation (the pure-Rust mirror in [`crate::sram`]
+//!   exists only as a fallback and cross-check);
 //! * a pool of **scheduler workers** ([`crate::util::pool`]) that run the
 //!   cycle-accurate simulation per design point;
 //! * result aggregation into [`crate::dse::DesignPoint`]s.
@@ -20,243 +22,40 @@
 //!
 //! Batching policy: macro-cost queries are deduplicated through a
 //! [`CostBatcher`] (many design points — and, across a campaign, many
-//! *benchmarks* — share macro configurations) and evaluated in one PJRT
-//! execute per scope: [`Coordinator::run_sweep`] batches one benchmark's
-//! sweep, [`Coordinator::score_designs`] batches an arbitrary design
-//! set, which is how [`crate::campaign`] scores an entire suite×sweep
-//! campaign in a single batch. The measured dispatch overhead is
+//! *benchmarks* — share macro configurations) and resolved through the
+//! stack in one call per scope: [`Coordinator::run_sweep`] batches one
+//! benchmark's sweep, [`Coordinator::score_designs`] batches an
+//! arbitrary design set, which is how [`crate::campaign`] scores an
+//! entire suite×sweep campaign. Only the stack's *misses* reach the
+//! runtime backend — a shape seen earlier in the process (memo) or
+//! persisted by any previous run (store) costs a map lookup, and
+//! [`Coordinator::batches_issued`] counts **backend** batches, so a
+//! fully warm scope issues zero. The measured dispatch overhead is
 //! amortized to <1 µs per design point (see EXPERIMENTS.md §Perf).
 
+use crate::cost::{self, CostCounters, CostStack};
 use crate::dse::{self, DesignPoint, Sweep, SweepPoint};
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::mem::MemDesign;
-use crate::runtime::{names, Runtime};
-use crate::sram::MacroCost;
 use crate::trace::Trace;
-use crate::util::{log, pool};
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use crate::util::pool;
+use std::path::Path;
 
-/// A macro-cost query: `[depth, width, read_ports, write_ports]`.
-pub type MacroQuery = [f32; 4];
-
-/// Requests accepted by the PJRT service thread.
-enum Request {
-    /// Evaluate a batch of macro queries; respond with one
-    /// `[area, e_read, e_write, leak, t_access]` row per query.
-    CostBatch(Vec<MacroQuery>, mpsc::Sender<Result<Vec<[f32; 5]>>>),
-    /// Shut the service down.
-    Stop,
-}
-
-/// Handle to the PJRT cost service. Clone-able across worker threads.
-#[derive(Clone)]
-pub struct CostService {
-    tx: mpsc::Sender<Request>,
-}
-
-/// Where the cost numbers came from (reported in run summaries).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CostBackend {
-    /// AOT Pallas/JAX cost model via PJRT (the production path).
-    Pjrt,
-    /// Pure-Rust mirror (artifacts not built).
-    RustFallback,
-}
-
-impl CostService {
-    /// Spawn the service thread. Returns the handle, a join guard, and
-    /// which backend is live. Falls back to the Rust mirror when the
-    /// artifact is missing or PJRT fails to initialize.
-    pub fn spawn(artifacts_dir: std::path::PathBuf) -> (CostService, ServiceGuard, CostBackend) {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<CostBackend>();
-        let join = std::thread::Builder::new()
-            .name("pjrt-cost-service".into())
-            .spawn(move || service_main(artifacts_dir, rx, ready_tx))
-            .expect("spawn pjrt service thread");
-        let backend = ready_rx.recv().unwrap_or(CostBackend::RustFallback);
-        (CostService { tx }, ServiceGuard { tx2: None, join: Some(join) }, backend)
-    }
-
-    /// Evaluate a batch of macro queries (blocking).
-    pub fn cost_batch(&self, queries: Vec<MacroQuery>) -> Result<Vec<[f32; 5]>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Request::CostBatch(queries, rtx))
-            .map_err(|_| Error::runtime("cost service stopped"))?;
-        rrx.recv().map_err(|_| Error::runtime("cost service dropped reply"))?
-    }
-
-    /// Ask the service to stop (the guard also does this on drop).
-    pub fn stop(&self) {
-        let _ = self.tx.send(Request::Stop);
-    }
-}
-
-/// Joins the service thread on drop.
-pub struct ServiceGuard {
-    tx2: Option<mpsc::Sender<Request>>,
-    join: Option<std::thread::JoinHandle<()>>,
-}
-
-impl Drop for ServiceGuard {
-    fn drop(&mut self) {
-        if let Some(tx) = self.tx2.take() {
-            let _ = tx.send(Request::Stop);
-        }
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-fn service_main(
-    dir: std::path::PathBuf,
-    rx: mpsc::Receiver<Request>,
-    ready: mpsc::Sender<CostBackend>,
-) {
-    // Try to bring up PJRT + the cost artifact; otherwise run the mirror.
-    let exe = match Runtime::with_dir(&dir) {
-        Ok(rt) if rt.has_artifact(names::COST_MODEL) => match rt.load(names::COST_MODEL) {
-            Ok(exe) => Some((rt, exe)),
-            Err(e) => {
-                log::warn(format!("cost model failed to compile ({e}); using Rust mirror"));
-                None
-            }
-        },
-        Ok(_) => {
-            log::info("artifacts not built; cost service using Rust mirror");
-            None
-        }
-        Err(e) => {
-            // With the pjrt feature on, a client that fails to come up
-            // is a real problem worth a warning; the stub build errors
-            // here by design, so only whisper.
-            let msg = format!("PJRT unavailable ({e}); cost service using Rust mirror");
-            if cfg!(feature = "pjrt") {
-                log::warn(msg);
-            } else {
-                log::info(msg);
-            }
-            None
-        }
-    };
-    let backend = if exe.is_some() { CostBackend::Pjrt } else { CostBackend::RustFallback };
-    let _ = ready.send(backend);
-
-    while let Ok(req) = rx.recv() {
-        match req {
-            Request::Stop => break,
-            Request::CostBatch(queries, reply) => {
-                let result = match &exe {
-                    Some((_rt, exe)) => pjrt_cost_batch(exe, &queries),
-                    None => Ok(crate::sram::macro_cost_batch(&queries)),
-                };
-                let _ = reply.send(result);
-            }
-        }
-    }
-}
-
-/// The artifact's batch size (must match `python/compile/aot.py`).
-pub const COST_BATCH: usize = 1024;
-
-fn pjrt_cost_batch(
-    exe: &crate::runtime::Executable,
-    queries: &[MacroQuery],
-) -> Result<Vec<[f32; 5]>> {
-    let mut out = Vec::with_capacity(queries.len());
-    // Pad to the fixed batch the artifact was lowered for.
-    for chunk in queries.chunks(COST_BATCH) {
-        let mut flat = vec![0f32; COST_BATCH * 4];
-        for (i, q) in chunk.iter().enumerate() {
-            flat[i * 4..i * 4 + 4].copy_from_slice(q);
-        }
-        // Padding rows use a benign config (depth 4, width 1, 1R1W).
-        for i in chunk.len()..COST_BATCH {
-            flat[i * 4..i * 4 + 4].copy_from_slice(&[4.0, 1.0, 1.0, 1.0]);
-        }
-        let results = exe.run_f32(&[(&flat, &[COST_BATCH, 4])])?;
-        let rows = &results[0]; // [COST_BATCH, 5] flattened
-        if rows.len() != COST_BATCH * 5 {
-            return Err(Error::runtime(format!("unexpected cost output size {}", rows.len())));
-        }
-        for i in 0..chunk.len() {
-            out.push([
-                rows[i * 5],
-                rows[i * 5 + 1],
-                rows[i * 5 + 2],
-                rows[i * 5 + 3],
-                rows[i * 5 + 4],
-            ]);
-        }
-    }
-    Ok(out)
-}
-
-/// Deduplicating accumulator for macro-cost queries.
-///
-/// Designs register their macro shape with [`CostBatcher::add`] and get
-/// back a slot into the batch; identical shapes share a slot. The batch
-/// is laid out in **first-seen order** and the key index is a
-/// `BTreeMap`, so the layout is identical run to run — campaign JSONL
-/// sinks and the resume golden test depend on byte-stable batches, and
-/// hash-seeded layouts would also defeat PJRT input caching.
-#[derive(Debug, Default)]
-pub struct CostBatcher {
-    unique: Vec<MacroQuery>,
-    index: BTreeMap<[u32; 4], usize>,
-}
-
-impl CostBatcher {
-    /// An empty batch.
-    pub fn new() -> Self {
-        CostBatcher::default()
-    }
-
-    /// Register a design's macro query; returns its slot in the batch.
-    pub fn add(&mut self, d: &MemDesign) -> usize {
-        let key = macro_key(d);
-        match self.index.get(&key) {
-            Some(&slot) => slot,
-            None => {
-                let slot = self.unique.len();
-                self.unique
-                    .push([key[0] as f32, key[1] as f32, key[2] as f32, key[3] as f32]);
-                self.index.insert(key, slot);
-                slot
-            }
-        }
-    }
-
-    /// Number of distinct macro configurations batched so far.
-    pub fn len(&self) -> usize {
-        self.unique.len()
-    }
-
-    /// True if nothing has been batched.
-    pub fn is_empty(&self) -> bool {
-        self.unique.is_empty()
-    }
-
-    /// The deduplicated queries, in first-seen order.
-    pub fn into_queries(self) -> Vec<MacroQuery> {
-        self.unique
-    }
-}
+// Compat re-exports: these types lived here before the cost subsystem
+// was extracted (tests, benches and the python build reference them
+// under both paths).
+pub use crate::cost::{
+    macro_cost_row, CostBackend, CostBatcher, CostService, MacroQuery, ServiceGuard, COST_BATCH,
+};
 
 /// Coordinator for sweep runs.
 pub struct Coordinator {
     cost: CostService,
+    stack: CostStack,
     _guard: ServiceGuard,
     /// Which backend scored the designs.
     pub backend: CostBackend,
     threads: usize,
-    /// Cost batches issued so far (observability: lets tests pin the
-    /// "one batch per campaign" contract).
-    batches: AtomicUsize,
 }
 
 impl Coordinator {
@@ -267,13 +66,15 @@ impl Coordinator {
 
     /// Coordinator rooted at a specific artifacts directory.
     pub fn with_artifacts(dir: std::path::PathBuf) -> Self {
-        let (cost, guard, backend) = CostService::spawn(dir);
+        let (cost, guard, backend) = CostService::spawn(dir.clone());
+        let fingerprint = cost::backend_fingerprint(backend, &dir);
+        let stack = CostStack::new(Box::new(cost.clone()), fingerprint);
         Coordinator {
             cost,
+            stack,
             _guard: guard,
             backend,
             threads: pool::default_threads(),
-            batches: AtomicUsize::new(0),
         }
     }
 
@@ -288,6 +89,23 @@ impl Coordinator {
         &self.cost
     }
 
+    /// The tiered cost stack every scoring call resolves through.
+    pub fn cost_stack(&self) -> &CostStack {
+        &self.stack
+    }
+
+    /// Attach (open or create) the persistent cost store at `path` —
+    /// the warm-start tier between the in-process memo and the runtime
+    /// backend. See [`CostStack::open_store`] for replacement rules.
+    pub fn open_cost_store(&self, path: &Path) -> Result<()> {
+        self.stack.open_store(path)
+    }
+
+    /// Hit/miss/batch accounting for every scoring call so far.
+    pub fn cost_counters(&self) -> CostCounters {
+        self.stack.counters()
+    }
+
     /// The configured scheduler worker-thread count (what sweeps and
     /// campaigns fall back to when neither they nor their sweep set an
     /// explicit count).
@@ -295,18 +113,21 @@ impl Coordinator {
         self.threads
     }
 
-    /// Cost batches issued by this coordinator so far. A well-batched
-    /// caller issues one per scope: `run_sweep` one per benchmark sweep,
-    /// a [`crate::campaign::Campaign`] one for its whole suite.
+    /// Runtime-backend cost batches issued by this coordinator so far.
+    /// A well-batched caller triggers at most one per scope (`run_sweep`
+    /// per benchmark sweep, a [`crate::campaign::Campaign`] per suite) —
+    /// and **zero** when the memo or a warmed cost store absorbs every
+    /// query (tests pin both contracts).
     pub fn batches_issued(&self) -> usize {
-        self.batches.load(Ordering::Relaxed)
+        self.stack.counters().batches
     }
 
     /// Campaign-scoped cost batching: deduplicate the macro queries of
     /// an arbitrary design set (any mix of benchmarks, models and word
-    /// sizes), evaluate them in **one** batch through the cost service,
-    /// and patch each design via [`MemDesign::restack`]. Scoring an
-    /// empty set issues no batch.
+    /// sizes), resolve them through the tiered stack — misses are
+    /// evaluated in **one** batch through the cost service — and patch
+    /// each design via [`MemDesign::restack`]. Scoring an empty set
+    /// touches nothing.
     pub fn score_designs<'a>(
         &self,
         designs: impl IntoIterator<Item = &'a mut MemDesign>,
@@ -317,8 +138,7 @@ impl Coordinator {
         }
         let mut batcher = CostBatcher::new();
         let slots: Vec<usize> = designs.iter().map(|d| batcher.add(&**d)).collect();
-        let costs = self.cost.cost_batch(batcher.into_queries())?;
-        self.batches.fetch_add(1, Ordering::Relaxed);
+        let costs = cost::CostProvider::cost_batch(&self.stack, &batcher.into_queries())?;
         for (d, slot) in designs.into_iter().zip(slots) {
             d.restack(macro_cost_row(costs[slot]));
         }
@@ -326,7 +146,7 @@ impl Coordinator {
     }
 
     /// Run a sweep over one trace, scoring every design's memory system
-    /// through the cost service in one deduplicated batch, then
+    /// through the cost stack in one deduplicated batch, then
     /// scheduling in parallel on the worker pool.
     pub fn run_sweep(&self, trace: &Trace, sweep: &Sweep) -> Result<Vec<DesignPoint>> {
         let points = sweep.points();
@@ -352,27 +172,10 @@ impl Coordinator {
     }
 }
 
-/// Unpack one cost-service row into a [`MacroCost`].
-fn macro_cost_row(row: [f32; 5]) -> MacroCost {
-    MacroCost {
-        area_um2: row[0],
-        e_read_pj: row[1],
-        e_write_pj: row[2],
-        leak_uw: row[3],
-        t_access_ns: row[4],
-    }
-}
-
 impl Default for Coordinator {
     fn default() -> Self {
         Self::new()
     }
-}
-
-/// The (depth, width, rports, wports) of the design's base macro — what
-/// the memory compiler (and the AOT cost model) is asked for.
-fn macro_key(d: &MemDesign) -> [u32; 4] {
-    [d.macro_depth, d.width, d.macro_ports.0, d.macro_ports.1]
 }
 
 #[cfg(test)]
@@ -401,20 +204,6 @@ mod tests {
             let relp = (a.out.power_mw - b.out.power_mw).abs() / b.out.power_mw;
             assert!(relp < 1e-4, "{}: power {} vs {}", a.id, a.out.power_mw, b.out.power_mw);
         }
-    }
-
-    #[test]
-    fn cost_service_survives_multiple_batches() {
-        let tmp = std::env::temp_dir().join("amm_dse_coord_test2");
-        let _ = std::fs::create_dir_all(&tmp);
-        let (svc, _guard, backend) = CostService::spawn(tmp);
-        assert_eq!(backend, CostBackend::RustFallback);
-        for _ in 0..3 {
-            let out = svc.cost_batch(vec![[1024.0, 32.0, 1.0, 1.0]; 10]).unwrap();
-            assert_eq!(out.len(), 10);
-            assert!(out[0][0] > 0.0);
-        }
-        svc.stop();
     }
 
     #[test]
@@ -466,6 +255,16 @@ mod tests {
             let rel = (d.sram.area_um2 - b.sram.area_um2).abs() / b.sram.area_um2;
             assert!(rel < 1e-5, "{}: {} vs {}", d.id, d.sram.area_um2, b.sram.area_um2);
         }
+        // the memo tier absorbs a repeat of the same shapes: still one
+        // backend batch, and the restacked numbers are identical
+        let mut again = before.clone();
+        coord.score_designs(again.iter_mut()).unwrap();
+        assert_eq!(coord.batches_issued(), 1, "memo-warm repeat must not re-batch");
+        let c = coord.cost_counters();
+        assert_eq!(c.memo_hits, 2, "{c:?}");
+        for (d, b) in again.iter().zip(&designs) {
+            assert_eq!(d.sram.area_um2.to_bits(), b.sram.area_um2.to_bits(), "{}", d.id);
+        }
     }
 
     #[test]
@@ -480,5 +279,18 @@ mod tests {
         sweep.extra_models = vec!["cmp2r2w".into()];
         let points = coord.run_sweep(&wl.trace, &sweep).unwrap();
         assert!(points.iter().any(|p| p.mem_id == "cmp2r2w"));
+    }
+
+    #[test]
+    fn coordinator_fingerprint_is_the_mirror_on_fallback() {
+        let tmp = std::env::temp_dir().join("amm_dse_coord_fp");
+        let _ = std::fs::create_dir_all(&tmp);
+        let coord = Coordinator::with_artifacts(tmp);
+        assert_eq!(coord.backend, CostBackend::RustFallback);
+        assert!(
+            coord.cost_stack().fingerprint().starts_with("rust-mirror/"),
+            "{}",
+            coord.cost_stack().fingerprint()
+        );
     }
 }

@@ -1,0 +1,139 @@
+//! Canonical macro-cost keys and scoring-context fingerprints.
+//!
+//! A persisted cost row is only reusable when two things match:
+//!
+//! * the **macro key** — the `(depth, width, read_ports, write_ports)`
+//!   tuple the memory compiler (and the AOT cost model) is asked for;
+//! * the **fingerprint** — a stable string identifying *what produced
+//!   the numbers*: the pure-Rust mirror keyed by its calibration
+//!   constants, or the PJRT backend keyed by the compiled cost-model
+//!   artifact's content hash. Stub- and pjrt-scored rows therefore can
+//!   never cross-contaminate: a store warmed by one backend is simply
+//!   cold for the other, and a recalibration of [`crate::sram::cal`] (or
+//!   a rebuilt artifact) invalidates every previously persisted row.
+//!
+//! [`key_hash`] combines both into the 64-bit FNV-1a id each store row
+//! carries; the store recomputes it on load, so a hand-edited or
+//! corrupted row is detected and dropped instead of silently served.
+
+use crate::mem::MemDesign;
+use crate::runtime;
+use crate::util::hash::{fnv1a, FNV_OFFSET};
+use std::path::Path;
+
+/// The canonical macro shape: `[depth, width, read_ports, write_ports]`
+/// of the design's base macro — identical to what
+/// [`crate::cost::CostBatcher`] deduplicates on.
+pub type MacroKey = [u32; 4];
+
+/// The macro key of one built design (what the cost service is asked
+/// for). The single home of this projection: batcher, stack and store
+/// all key on it.
+pub fn macro_key(d: &MemDesign) -> MacroKey {
+    [d.macro_depth, d.width, d.macro_ports.0, d.macro_ports.1]
+}
+
+/// Stable 64-bit id of one `(fingerprint, macro key)` pair: FNV-1a over
+/// the fingerprint bytes, a NUL separator, then the four key fields as
+/// little-endian u32s. Part of the `cost-store/v1` on-disk contract —
+/// change it and every existing store reads as corrupt.
+pub fn key_hash(fingerprint: &str, key: MacroKey) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, fingerprint.as_bytes());
+    h = fnv1a(h, &[0u8]);
+    for field in key {
+        h = fnv1a(h, &field.to_le_bytes());
+    }
+    h
+}
+
+/// Fingerprint of the pure-Rust CACTI-lite mirror: the calibration
+/// constants' exact f32 bit patterns, hashed. Recalibrating
+/// [`crate::sram::cal`] changes the fingerprint, so stale rows stop
+/// resolving instead of mis-scoring new runs.
+pub fn mirror_fingerprint() -> String {
+    use crate::sram::cal;
+    let consts = [
+        cal::CELL_UM2,
+        cal::PORT_PITCH,
+        cal::PERIPH_A,
+        cal::PERIPH_B,
+        cal::E_READ_0,
+        cal::E_READ_BIT,
+        cal::WRITE_FACTOR,
+        cal::LEAK_BIT,
+        cal::LEAK_0,
+        cal::T_0,
+        cal::T_DEC,
+        cal::T_BL,
+        cal::T_PORT,
+    ];
+    let mut h = FNV_OFFSET;
+    for c in consts {
+        h = fnv1a(h, &c.to_bits().to_le_bytes());
+    }
+    format!("rust-mirror/45nm/{h:016x}")
+}
+
+/// Fingerprint of the PJRT backend: the compiled cost-model artifact's
+/// content hash ([`runtime::artifact_fingerprint`]), so rows are keyed
+/// to the exact HLO the numbers came from. `unknown` only when the
+/// artifact vanished between service spawn and fingerprinting.
+pub fn pjrt_fingerprint(artifacts_dir: &Path) -> String {
+    match runtime::artifact_fingerprint(artifacts_dir, runtime::names::COST_MODEL) {
+        Some(h) => format!("pjrt/cost_model/{h:016x}"),
+        None => "pjrt/cost_model/unknown".to_string(),
+    }
+}
+
+/// The fingerprint for one live backend (what the coordinator installs
+/// in its [`crate::cost::CostStack`]).
+pub fn backend_fingerprint(backend: super::CostBackend, artifacts_dir: &Path) -> String {
+    match backend {
+        super::CostBackend::Pjrt => pjrt_fingerprint(artifacts_dir),
+        super::CostBackend::RustFallback => mirror_fingerprint(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_hash_is_stable_and_separates_fingerprints() {
+        let k: MacroKey = [1024, 32, 2, 1];
+        assert_eq!(key_hash("a", k), key_hash("a", k), "deterministic");
+        assert_ne!(key_hash("a", k), key_hash("b", k), "fingerprint is part of the key");
+        assert_ne!(key_hash("a", k), key_hash("a", [1024, 32, 1, 2]), "field order matters");
+        // the NUL separator keeps (fp, key) unambiguous against fp
+        // prefixes
+        assert_ne!(key_hash("ab", [0, 0, 0, 0]), key_hash("a", [b'b' as u32, 0, 0, 0]));
+    }
+
+    #[test]
+    fn mirror_fingerprint_is_stable_and_named() {
+        let a = mirror_fingerprint();
+        assert_eq!(a, mirror_fingerprint());
+        assert!(a.starts_with("rust-mirror/45nm/"), "{a}");
+    }
+
+    #[test]
+    fn pjrt_fingerprint_tracks_artifact_content() {
+        let dir = std::env::temp_dir().join("amm_dse_cost_key_fp");
+        let _ = std::fs::create_dir_all(&dir);
+        let file = dir.join(format!("{}.hlo.txt", runtime::names::COST_MODEL));
+        let _ = std::fs::remove_file(&file);
+        assert_eq!(pjrt_fingerprint(&dir), "pjrt/cost_model/unknown");
+        std::fs::write(&file, "HloModule cost_model_v1").unwrap();
+        let fp1 = pjrt_fingerprint(&dir);
+        assert!(fp1.starts_with("pjrt/cost_model/") && !fp1.ends_with("unknown"), "{fp1}");
+        std::fs::write(&file, "HloModule cost_model_v2").unwrap();
+        assert_ne!(pjrt_fingerprint(&dir), fp1, "content change must change the fingerprint");
+    }
+
+    #[test]
+    fn macro_key_matches_the_design_fields() {
+        let d = crate::mem::MemKind::Banked { banks: 4 }.build(4096, 32);
+        let k = macro_key(&d);
+        assert_eq!(k, [d.macro_depth, d.width, d.macro_ports.0, d.macro_ports.1]);
+    }
+}

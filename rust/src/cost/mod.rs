@@ -1,0 +1,489 @@
+//! Tiered macro-cost provider subsystem.
+//!
+//! The DSE loop is dominated by re-scoring the same SRAM macro shapes
+//! (depth × ports × banking) across sweeps, campaigns, shard hosts and
+//! resumes. The shapes are deterministic, so cost characterization is
+//! treated as an **artifact**, not a per-run side effect: every query
+//! flows through one [`CostStack`] of three tiers, each a cheaper cache
+//! in front of the next:
+//!
+//! 1. **memo** — an in-process map; repeated scoring inside one process
+//!    (sequential sweeps, perf probes, resumed campaigns sharing a
+//!    coordinator) never re-batches a shape it has already seen;
+//! 2. **store** — the persistent on-disk [`CostStore`]
+//!    (`cost-store/v1` append-only JSONL, see [`store`]): a campaign
+//!    opens it next to its sink and flushes newly scored rows after
+//!    each batch, so a *new process* — a resumed campaign, another
+//!    shard host, the next accelerator generation's sweep — starts
+//!    warm. Rows are keyed by a stable hash of the canonical macro key
+//!    plus a scoring-context **fingerprint** (see [`key`]), so stub-
+//!    and pjrt-scored rows can never cross-contaminate;
+//! 3. **backend** — any [`CostProvider`]: the PJRT/stub
+//!    [`CostService`] batch runtime in production, the in-process
+//!    [`MirrorProvider`] in tests. Only misses reach it, in one
+//!    deduplicated batch per scoring call, preserving first-seen order.
+//!
+//! The stack itself implements [`CostProvider`], so tiers compose and
+//! the [`crate::coordinator::Coordinator`]'s `score_designs` /
+//! `run_sweep` fronts are behavior-identical to the pre-stack code on a
+//! cold stack: same queries, same order, same backend, same f32 bits.
+//! [`CostCounters`] exposes hit/miss/batch accounting — the campaign
+//! reports it and tests pin the "warm run issues zero batches"
+//! contract.
+
+pub mod key;
+pub mod service;
+pub mod store;
+
+pub use key::{backend_fingerprint, key_hash, macro_key, MacroKey};
+pub use service::{CostBackend, CostService, MacroQuery, ServiceGuard, COST_BATCH};
+pub use store::{CostRow, CostStore};
+
+use crate::error::{Error, Result};
+use crate::mem::MemDesign;
+use crate::sram::MacroCost;
+use crate::util::log;
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Anything that can score a batch of macro-cost queries. Implemented
+/// by the runtime batch backend ([`CostService`]), the in-process
+/// mirror ([`MirrorProvider`]), and [`CostStack`] itself (tiers
+/// compose).
+pub trait CostProvider: Send {
+    /// Short human label (diagnostics, summaries).
+    fn label(&self) -> &'static str;
+
+    /// Evaluate a batch of macro queries, one
+    /// `[area, e_read, e_write, leak, t_access]` row per query, in
+    /// query order.
+    fn cost_batch(&self, queries: &[MacroQuery]) -> Result<Vec<[f32; 5]>>;
+}
+
+/// In-process pure-Rust mirror backend (no service thread). The
+/// offline twin of [`CostService`]: tests build stacks over it without
+/// spawning anything.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MirrorProvider;
+
+impl CostProvider for MirrorProvider {
+    fn label(&self) -> &'static str {
+        "rust-mirror"
+    }
+
+    fn cost_batch(&self, queries: &[MacroQuery]) -> Result<Vec<[f32; 5]>> {
+        Ok(crate::sram::macro_cost_batch(queries))
+    }
+}
+
+/// Unpack one cost row into a [`MacroCost`].
+pub fn macro_cost_row(row: [f32; 5]) -> MacroCost {
+    MacroCost {
+        area_um2: row[0],
+        e_read_pj: row[1],
+        e_write_pj: row[2],
+        leak_uw: row[3],
+        t_access_ns: row[4],
+    }
+}
+
+/// Deduplicating accumulator for macro-cost queries.
+///
+/// Designs register their macro shape with [`CostBatcher::add`] and get
+/// back a slot into the batch; identical shapes share a slot. The batch
+/// is laid out in **first-seen order** and the key index is a
+/// `BTreeMap`, so the layout is identical run to run — campaign JSONL
+/// sinks and the resume golden test depend on byte-stable batches, and
+/// hash-seeded layouts would also defeat PJRT input caching.
+#[derive(Debug, Default)]
+pub struct CostBatcher {
+    unique: Vec<MacroQuery>,
+    index: BTreeMap<MacroKey, usize>,
+}
+
+impl CostBatcher {
+    /// An empty batch.
+    pub fn new() -> Self {
+        CostBatcher::default()
+    }
+
+    /// Register a design's macro query; returns its slot in the batch.
+    pub fn add(&mut self, d: &MemDesign) -> usize {
+        let key = macro_key(d);
+        match self.index.get(&key) {
+            Some(&slot) => slot,
+            None => {
+                let slot = self.unique.len();
+                self.unique
+                    .push([key[0] as f32, key[1] as f32, key[2] as f32, key[3] as f32]);
+                self.index.insert(key, slot);
+                slot
+            }
+        }
+    }
+
+    /// Number of distinct macro configurations batched so far.
+    pub fn len(&self) -> usize {
+        self.unique.len()
+    }
+
+    /// True if nothing has been batched.
+    pub fn is_empty(&self) -> bool {
+        self.unique.is_empty()
+    }
+
+    /// The deduplicated queries, in first-seen order.
+    pub fn into_queries(self) -> Vec<MacroQuery> {
+        self.unique
+    }
+}
+
+/// Snapshot of a [`CostStack`]'s accounting. Campaigns diff two
+/// snapshots ([`CostCounters::since`]) to report their own share of a
+/// long-lived coordinator's traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CostCounters {
+    /// Queries answered by the in-process memo tier.
+    pub memo_hits: usize,
+    /// Queries answered by the persistent store tier.
+    pub store_hits: usize,
+    /// Queries that reached the runtime backend.
+    pub misses: usize,
+    /// Backend batches issued (≤ 1 per scoring call; 0 when every
+    /// query hit a cache tier).
+    pub batches: usize,
+}
+
+impl CostCounters {
+    /// Total cache hits (memo + store).
+    pub fn hits(&self) -> usize {
+        self.memo_hits + self.store_hits
+    }
+
+    /// The delta between this snapshot and an earlier one.
+    pub fn since(&self, earlier: &CostCounters) -> CostCounters {
+        CostCounters {
+            memo_hits: self.memo_hits.saturating_sub(earlier.memo_hits),
+            store_hits: self.store_hits.saturating_sub(earlier.store_hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            batches: self.batches.saturating_sub(earlier.batches),
+        }
+    }
+}
+
+/// The three-tier provider: memo → store → backend (see the module
+/// docs). Interior-mutable so a shared `&Coordinator` can score and a
+/// campaign can attach a store without exclusive access.
+pub struct CostStack {
+    fingerprint: String,
+    memo: Mutex<HashMap<MacroKey, [f32; 5]>>,
+    store: Mutex<Option<CostStore>>,
+    backend: Box<dyn CostProvider>,
+    memo_hits: AtomicUsize,
+    store_hits: AtomicUsize,
+    misses: AtomicUsize,
+    batches: AtomicUsize,
+}
+
+impl std::fmt::Debug for CostStack {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CostStack")
+            .field("fingerprint", &self.fingerprint)
+            .field("backend", &self.backend.label())
+            .field("counters", &self.counters())
+            .finish()
+    }
+}
+
+impl CostStack {
+    /// A stack over `backend`, scoring under `fingerprint` (see
+    /// [`key::backend_fingerprint`]). Starts with an empty memo and no
+    /// store attached.
+    pub fn new(backend: Box<dyn CostProvider>, fingerprint: String) -> Self {
+        CostStack {
+            fingerprint,
+            memo: Mutex::new(HashMap::new()),
+            store: Mutex::new(None),
+            backend,
+            memo_hits: AtomicUsize::new(0),
+            store_hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+        }
+    }
+
+    /// The scoring-context fingerprint rows are persisted under.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Attach (open or create) the persistent store at `path`. A store
+    /// already open at the same path is kept; a different path replaces
+    /// it (with a warning — one stack persists to one store at a time).
+    pub fn open_store(&self, path: &Path) -> Result<()> {
+        let mut slot = self.store.lock().expect("cost store slot poisoned");
+        if let Some(open) = slot.as_ref() {
+            if open.path() == path {
+                return Ok(());
+            }
+            log::warn(format!(
+                "cost stack: replacing open store {} with {}",
+                open.path().display(),
+                path.display()
+            ));
+        }
+        *slot = Some(CostStore::open(path)?);
+        Ok(())
+    }
+
+    /// Path of the attached store, if any.
+    pub fn store_path(&self) -> Option<PathBuf> {
+        self.store
+            .lock()
+            .expect("cost store slot poisoned")
+            .as_ref()
+            .map(|s| s.path().to_path_buf())
+    }
+
+    /// Hit/miss/batch accounting since construction.
+    pub fn counters(&self) -> CostCounters {
+        CostCounters {
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
+            store_hits: self.store_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A query's integral macro key (queries are built from u32 fields by
+/// [`CostBatcher`] / [`macro_key`], so the f32 round trip is exact).
+fn query_key(q: &MacroQuery) -> MacroKey {
+    [q[0] as u32, q[1] as u32, q[2] as u32, q[3] as u32]
+}
+
+impl CostProvider for CostStack {
+    fn label(&self) -> &'static str {
+        "tiered-stack"
+    }
+
+    fn cost_batch(&self, queries: &[MacroQuery]) -> Result<Vec<[f32; 5]>> {
+        let mut out: Vec<Option<[f32; 5]>> = vec![None; queries.len()];
+        let mut miss_at: Vec<usize> = Vec::new();
+        let mut miss_q: Vec<MacroQuery> = Vec::new();
+        let mut memo_hits = 0usize;
+        let mut store_hits = 0usize;
+        // Rows the attached store is missing: backend misses, plus
+        // memo hits the store never saw (it may have been attached — or
+        // swapped — after they were scored; the store's content must
+        // not depend on attach order).
+        let mut persist: Vec<(MacroKey, [f32; 5])> = Vec::new();
+        {
+            // one lock scope per batch, memo before store (every site
+            // that holds both acquires in this order)
+            let mut memo = self.memo.lock().expect("cost memo poisoned");
+            let store = self.store.lock().expect("cost store slot poisoned");
+            for (i, q) in queries.iter().enumerate() {
+                let key = query_key(q);
+                if let Some(row) = memo.get(&key) {
+                    out[i] = Some(*row);
+                    memo_hits += 1;
+                    if let Some(s) = store.as_ref() {
+                        if s.get(&self.fingerprint, key).is_none() {
+                            persist.push((key, *row));
+                        }
+                    }
+                    continue;
+                }
+                if let Some(row) =
+                    store.as_ref().and_then(|s| s.get(&self.fingerprint, key))
+                {
+                    memo.insert(key, row);
+                    out[i] = Some(row);
+                    store_hits += 1;
+                    continue;
+                }
+                miss_at.push(i);
+                miss_q.push(*q);
+            }
+        }
+        self.memo_hits.fetch_add(memo_hits, Ordering::Relaxed);
+        self.store_hits.fetch_add(store_hits, Ordering::Relaxed);
+
+        if !miss_q.is_empty() {
+            // the miss path: ONE backend batch, first-seen order
+            let rows = self.backend.cost_batch(&miss_q)?;
+            if rows.len() != miss_q.len() {
+                return Err(Error::runtime(format!(
+                    "cost backend {} returned {} rows for {} queries",
+                    self.backend.label(),
+                    rows.len(),
+                    miss_q.len()
+                )));
+            }
+            self.misses.fetch_add(miss_q.len(), Ordering::Relaxed);
+            self.batches.fetch_add(1, Ordering::Relaxed);
+            let mut memo = self.memo.lock().expect("cost memo poisoned");
+            for ((&at, q), row) in miss_at.iter().zip(&miss_q).zip(&rows) {
+                let key = query_key(q);
+                out[at] = Some(*row);
+                // a shape batched twice in one call persists once
+                if memo.insert(key, *row).is_none() {
+                    persist.push((key, *row));
+                }
+            }
+        }
+        if !persist.is_empty() {
+            // Flush after every batch, so a killed run still warms the
+            // next one — but persistence is a cache, not a result: an
+            // unwritable store must not fail a fully scored campaign.
+            let mut store = self.store.lock().expect("cost store slot poisoned");
+            if let Some(s) = store.as_mut() {
+                if let Err(e) = s.append(&self.fingerprint, &persist) {
+                    log::warn(format!(
+                        "cost store {}: {e} (rows stay memoized; persistence skipped)",
+                        s.path().display()
+                    ));
+                }
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("every query answered")).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queries() -> Vec<MacroQuery> {
+        vec![[1024.0, 32.0, 2.0, 1.0], [2048.0, 64.0, 1.0, 1.0], [1024.0, 32.0, 2.0, 1.0]]
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("amm_dse_cost_stack_unit");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(name);
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    #[test]
+    fn cold_stack_matches_the_backend_bit_for_bit() {
+        let stack = CostStack::new(Box::new(MirrorProvider), "fp-test".into());
+        let q = queries();
+        let via_stack = stack.cost_batch(&q).unwrap();
+        let direct = MirrorProvider.cost_batch(&q).unwrap();
+        assert_eq!(via_stack.len(), direct.len());
+        for (a, b) in via_stack.iter().zip(&direct) {
+            for k in 0..5 {
+                assert_eq!(a[k].to_bits(), b[k].to_bits());
+            }
+        }
+        let c = stack.counters();
+        // the duplicate query memo-hits within the batch? No: dedupe is
+        // the batcher's job — here all 3 miss (the dup scores twice in
+        // one backend batch but persists once)
+        assert_eq!((c.memo_hits, c.store_hits, c.misses, c.batches), (0, 0, 3, 1));
+    }
+
+    #[test]
+    fn memo_tier_absorbs_repeat_batches() {
+        let stack = CostStack::new(Box::new(MirrorProvider), "fp-test".into());
+        let q = queries();
+        let first = stack.cost_batch(&q).unwrap();
+        let second = stack.cost_batch(&q).unwrap();
+        assert_eq!(first, second);
+        let c = stack.counters();
+        assert_eq!(c.batches, 1, "repeat batch must not reach the backend");
+        assert_eq!(c.memo_hits, 3);
+    }
+
+    #[test]
+    fn store_tier_warms_a_fresh_stack_to_zero_batches() {
+        let path = tmp("warm.jsonl");
+        let q = queries();
+        let cold = CostStack::new(Box::new(MirrorProvider), "fp-test".into());
+        cold.open_store(&path).unwrap();
+        let cold_rows = cold.cost_batch(&q).unwrap();
+        assert_eq!(cold.counters().batches, 1);
+
+        // a fresh stack (new process) over the same store: zero batches
+        let warm = CostStack::new(Box::new(MirrorProvider), "fp-test".into());
+        warm.open_store(&path).unwrap();
+        let warm_rows = warm.cost_batch(&q).unwrap();
+        let c = warm.counters();
+        assert_eq!(c.batches, 0, "a warm store must absorb every query");
+        assert_eq!(c.misses, 0);
+        assert_eq!(c.store_hits + c.memo_hits, 3);
+        for (a, b) in cold_rows.iter().zip(&warm_rows) {
+            for k in 0..5 {
+                assert_eq!(a[k].to_bits(), b[k].to_bits(), "stored rows must be bit-exact");
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprints_keep_scoring_contexts_cold_for_each_other() {
+        let path = tmp("fp_cold.jsonl");
+        let q = queries();
+        let a = CostStack::new(Box::new(MirrorProvider), "fp-a".into());
+        a.open_store(&path).unwrap();
+        a.cost_batch(&q).unwrap();
+        // same store, different fingerprint: everything misses
+        let b = CostStack::new(Box::new(MirrorProvider), "fp-b".into());
+        b.open_store(&path).unwrap();
+        b.cost_batch(&q).unwrap();
+        assert_eq!(b.counters().batches, 1, "foreign-fingerprint rows must not satisfy");
+        assert_eq!(b.counters().store_hits, 0);
+    }
+
+    #[test]
+    fn memo_hits_backfill_a_store_attached_after_scoring() {
+        // Scored with no store, then a store is attached: the next
+        // scoring call must persist the memoized rows, so the store's
+        // content does not depend on when it was attached.
+        let path = tmp("backfill.jsonl");
+        let q = queries();
+        let stack = CostStack::new(Box::new(MirrorProvider), "fp-test".into());
+        stack.cost_batch(&q).unwrap();
+        assert_eq!(stack.counters().batches, 1);
+        stack.open_store(&path).unwrap();
+        stack.cost_batch(&q).unwrap();
+        assert_eq!(stack.counters().batches, 1, "memo still absorbs the repeat");
+        // a fresh stack over the backfilled store is fully warm
+        let fresh = CostStack::new(Box::new(MirrorProvider), "fp-test".into());
+        fresh.open_store(&path).unwrap();
+        fresh.cost_batch(&q).unwrap();
+        assert_eq!(fresh.counters().batches, 0, "backfilled store must warm a new process");
+        assert_eq!(fresh.counters().store_hits + fresh.counters().memo_hits, 3);
+    }
+
+    #[test]
+    fn counters_diff_with_since() {
+        let stack = CostStack::new(Box::new(MirrorProvider), "fp".into());
+        let q = queries();
+        stack.cost_batch(&q).unwrap();
+        let mid = stack.counters();
+        stack.cost_batch(&q).unwrap();
+        let delta = stack.counters().since(&mid);
+        assert_eq!(delta.batches, 0);
+        assert_eq!(delta.memo_hits, 3);
+        assert_eq!(delta.hits(), 3);
+    }
+
+    #[test]
+    fn open_store_is_idempotent_per_path() {
+        let path = tmp("idem.jsonl");
+        let stack = CostStack::new(Box::new(MirrorProvider), "fp".into());
+        stack.open_store(&path).unwrap();
+        stack.cost_batch(&queries()).unwrap();
+        // reopening the same path must keep the loaded/written rows
+        stack.open_store(&path).unwrap();
+        let again = stack.cost_batch(&queries()).unwrap();
+        assert_eq!(again.len(), 3);
+        assert_eq!(stack.counters().batches, 1);
+        assert_eq!(stack.store_path().as_deref(), Some(path.as_path()));
+    }
+}

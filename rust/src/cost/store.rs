@@ -1,0 +1,447 @@
+//! The persistent macro-cost store: `cost-store/v1` append-only JSONL.
+//!
+//! Macro-cost characterization is deterministic for a given scoring
+//! context (see [`super::key`]), so it should be an **artifact**, not a
+//! per-run side effect: one flat JSON object per line, one line per
+//! scored `(fingerprint, macro key)` pair. A store written by one
+//! campaign warms every later campaign, shard host or resume that
+//! shares it — the miss path (the runtime batch backend) is only paid
+//! once per macro shape per scoring context, ever.
+//!
+//! Properties, mirroring the campaign result sink:
+//!
+//! * **self-contained rows** — every line carries the fingerprint, the
+//!   explicit macro fields and the five cost numbers, plus the
+//!   [`super::key::key_hash`] id recomputed on load, so corrupt or
+//!   hand-edited rows are detected and skipped rather than served;
+//! * **bit-exact round trip** — floats use Rust's shortest round-trip
+//!   formatting, so a warm run restacks the *identical* f32 bits a cold
+//!   run computed (the warm-vs-cold fig5 byte-equality golden depends
+//!   on this);
+//! * **kill-safe appends** — rows are appended in one buffered write and
+//!   flushed per batch; a torn (newline-less) tail left by a kill is
+//!   detected on open and terminated before the next append, exactly
+//!   like the campaign sink;
+//! * **first record wins** — duplicate keys collapse, conflicting
+//!   payloads keep the first and are counted; [`CostStore::gc`]
+//!   compacts the file (drops malformed/duplicate/conflicting lines)
+//!   with an atomic tmp-file + rename rewrite.
+//!
+//! Rows scored under different fingerprints coexist in one file (a
+//! fleet can share a single store across stub and pjrt hosts); lookups
+//! are always fingerprint-filtered.
+
+use super::key::{key_hash, MacroKey};
+use crate::error::{Error, Result};
+use crate::util::jsonl::{field, path_with_suffix};
+use crate::util::log;
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Schema tag carried by every row.
+pub const SCHEMA: &str = "cost-store/v1";
+
+/// One scored cost row: `[area_um2, e_read_pj, e_write_pj, leak_uw,
+/// t_access_ns]` — the cost service's output shape.
+pub type CostRow = [f32; 5];
+
+/// Accounting from opening (or gc-ing) a store file.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoadReport {
+    /// Parseable, hash-valid rows read.
+    pub records: usize,
+    /// Lines that failed to parse or failed the key-hash check.
+    pub malformed: usize,
+    /// Identical repeats of an already-loaded key, collapsed.
+    pub duplicates: usize,
+    /// Same-key rows with differing payloads (first wins).
+    pub conflicts: usize,
+    /// Whether the file ended in a torn (newline-less) tail.
+    pub torn_tail: bool,
+}
+
+/// A loaded cost store: the full on-disk row set indexed by
+/// fingerprint, then macro key (nested so the per-query lookup on the
+/// scoring path is allocation-free), plus the append path.
+#[derive(Debug)]
+pub struct CostStore {
+    path: PathBuf,
+    rows: BTreeMap<String, BTreeMap<MacroKey, CostRow>>,
+    report: LoadReport,
+    /// True while the on-disk file still ends in a torn tail (repaired
+    /// lazily by the next append).
+    torn_tail: bool,
+}
+
+impl CostStore {
+    /// Open a store, loading every valid row. A missing file is an
+    /// empty store (created on first append); unreadable files and
+    /// malformed *rows* are not fatal — rows are skipped and counted —
+    /// but a real read error on an existing file is.
+    pub fn open(path: impl Into<PathBuf>) -> Result<CostStore> {
+        let path = path.into();
+        let mut store = CostStore {
+            path,
+            rows: BTreeMap::new(),
+            report: LoadReport::default(),
+            torn_tail: false,
+        };
+        if !store.path.exists() {
+            return Ok(store);
+        }
+        let text = std::fs::read_to_string(&store.path)
+            .map_err(|e| Error::io(format!("read cost store {}", store.path.display()), e))?;
+        store.report.torn_tail = !text.is_empty() && !text.ends_with('\n');
+        store.torn_tail = store.report.torn_tail;
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Some((fp, key, row)) = parse_line(line) else {
+                store.report.malformed += 1;
+                continue;
+            };
+            match store.rows.entry(fp).or_default().entry(key) {
+                Entry::Occupied(prev) => {
+                    if bits(prev.get()) == bits(&row) {
+                        store.report.duplicates += 1;
+                    } else {
+                        store.report.conflicts += 1;
+                    }
+                }
+                Entry::Vacant(slot) => {
+                    slot.insert(row);
+                    store.report.records += 1;
+                }
+            }
+        }
+        if store.report.malformed > 0 || store.report.conflicts > 0 {
+            log::warn(format!(
+                "cost store {}: skipped {} malformed line(s), kept first of {} conflict(s)",
+                store.path.display(),
+                store.report.malformed,
+                store.report.conflicts
+            ));
+        }
+        Ok(store)
+    }
+
+    /// The file this store persists to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Load-time accounting (what `repro cost-store stat` prints).
+    pub fn report(&self) -> LoadReport {
+        self.report
+    }
+
+    /// Distinct `(fingerprint, key)` rows held.
+    pub fn len(&self) -> usize {
+        self.rows.values().map(BTreeMap::len).sum()
+    }
+
+    /// True when no rows are held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look one row up within a scoring context (allocation-free: this
+    /// runs once per memo-missed query on the scoring path).
+    pub fn get(&self, fingerprint: &str, key: MacroKey) -> Option<CostRow> {
+        self.rows.get(fingerprint)?.get(&key).copied()
+    }
+
+    /// Row counts per fingerprint, sorted (for `stat`).
+    pub fn per_fingerprint(&self) -> Vec<(String, usize)> {
+        self.rows.iter().map(|(fp, m)| (fp.clone(), m.len())).collect()
+    }
+
+    /// Append freshly scored rows (skipping keys already held) and
+    /// flush, creating the file/parents on first use and terminating a
+    /// torn tail so it can never merge with a fresh row. One buffered
+    /// write per call: the campaign flushes after each backend batch,
+    /// so a killed campaign still warms the next one.
+    pub fn append(&mut self, fingerprint: &str, fresh: &[(MacroKey, CostRow)]) -> Result<()> {
+        let mut buf = String::new();
+        if self.torn_tail {
+            buf.push('\n');
+        }
+        if !fresh.is_empty() {
+            let held = self.rows.entry(fingerprint.to_string()).or_default();
+            for (key, row) in fresh {
+                if held.contains_key(key) {
+                    continue;
+                }
+                buf.push_str(&record_line(fingerprint, *key, *row));
+                buf.push('\n');
+                held.insert(*key, *row);
+            }
+        }
+        if buf.is_empty() {
+            return Ok(());
+        }
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| Error::io(format!("create {}", dir.display()), e))?;
+            }
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| Error::io(format!("open cost store {}", self.path.display()), e))?;
+        f.write_all(buf.as_bytes())
+            .map_err(|e| Error::io(format!("append cost store {}", self.path.display()), e))?;
+        f.flush()
+            .map_err(|e| Error::io(format!("flush cost store {}", self.path.display()), e))?;
+        self.torn_tail = false;
+        Ok(())
+    }
+
+    /// Compact the file: rewrite the held row set (sorted by
+    /// fingerprint, then key — byte-stable) through a tmp file + atomic
+    /// rename, dropping every malformed/duplicate/conflicting line the
+    /// load skipped. Returns how many lines the rewrite shed.
+    pub fn gc(&mut self) -> Result<usize> {
+        let dropped = self.report.malformed
+            + self.report.duplicates
+            + self.report.conflicts
+            + usize::from(self.report.torn_tail);
+        let mut buf = String::new();
+        for (fp, held) in &self.rows {
+            for (key, row) in held {
+                buf.push_str(&record_line(fp, *key, *row));
+                buf.push('\n');
+            }
+        }
+        let tmp = path_with_suffix(&self.path, ".tmp");
+        std::fs::write(&tmp, buf.as_bytes())
+            .map_err(|e| Error::io(format!("write {}", tmp.display()), e))?;
+        std::fs::rename(&tmp, &self.path)
+            .map_err(|e| Error::io(format!("rename {} over store", tmp.display()), e))?;
+        self.torn_tail = false;
+        self.report = LoadReport { records: self.len(), ..LoadReport::default() };
+        Ok(dropped)
+    }
+
+    /// The whole row set as a CSV document (for `export`), sorted like
+    /// [`CostStore::gc`] writes.
+    pub fn export_csv(&self) -> String {
+        let mut s = String::from(
+            "fingerprint,depth,width,read_ports,write_ports,area_um2,e_read_pj,e_write_pj,leak_uw,t_access_ns\n",
+        );
+        for (fp, held) in &self.rows {
+            for (k, r) in held {
+                s.push_str(&format!(
+                    "{fp},{},{},{},{},{},{},{},{},{}\n",
+                    k[0], k[1], k[2], k[3], r[0], r[1], r[2], r[3], r[4]
+                ));
+            }
+        }
+        s
+    }
+}
+
+/// The f32 bit patterns of a row (exact comparison: duplicate vs
+/// conflict must not be fooled by NaN or -0.0 semantics).
+fn bits(r: &CostRow) -> [u32; 5] {
+    [r[0].to_bits(), r[1].to_bits(), r[2].to_bits(), r[3].to_bits(), r[4].to_bits()]
+}
+
+/// Emit one store row. Floats use shortest round-trip formatting, so
+/// `parse_line(record_line(..))` reproduces the identical f32 bits.
+pub fn record_line(fingerprint: &str, key: MacroKey, row: CostRow) -> String {
+    format!(
+        concat!(
+            "{{\"schema\":\"{}\",\"k\":\"{:016x}\",\"fp\":\"{}\",",
+            "\"depth\":{},\"width\":{},\"rp\":{},\"wp\":{},",
+            "\"area_um2\":{},\"e_read_pj\":{},\"e_write_pj\":{},",
+            "\"leak_uw\":{},\"t_access_ns\":{}}}"
+        ),
+        SCHEMA,
+        key_hash(fingerprint, key),
+        fingerprint,
+        key[0],
+        key[1],
+        key[2],
+        key[3],
+        row[0],
+        row[1],
+        row[2],
+        row[3],
+        row[4],
+    )
+}
+
+/// Parse one row back. `None` for malformed lines, foreign schemas, or
+/// rows whose recorded key hash does not match the recomputed one
+/// (corruption / hand edits) — the store treats all of those as absent.
+pub fn parse_line(line: &str) -> Option<(String, MacroKey, CostRow)> {
+    if field(line, "schema")? != SCHEMA {
+        return None;
+    }
+    let fp = field(line, "fp")?.to_string();
+    let key: MacroKey = [
+        field(line, "depth")?.parse().ok()?,
+        field(line, "width")?.parse().ok()?,
+        field(line, "rp")?.parse().ok()?,
+        field(line, "wp")?.parse().ok()?,
+    ];
+    let recorded = u64::from_str_radix(field(line, "k")?, 16).ok()?;
+    if recorded != key_hash(&fp, key) {
+        return None;
+    }
+    let row: CostRow = [
+        field(line, "area_um2")?.parse().ok()?,
+        field(line, "e_read_pj")?.parse().ok()?,
+        field(line, "e_write_pj")?.parse().ok()?,
+        field(line, "leak_uw")?.parse().ok()?,
+        field(line, "t_access_ns")?.parse().ok()?,
+    ];
+    Some((fp, key, row))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("amm_dse_cost_store_unit");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(name);
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    fn sample_row() -> CostRow {
+        [98765.4, 0.512345, 0.61234567, 3.1415927, 0.4242424]
+    }
+
+    #[test]
+    fn rows_round_trip_bit_for_bit() {
+        let key: MacroKey = [1024, 32, 2, 1];
+        let row = sample_row();
+        let line = record_line("rust-mirror/45nm/abc", key, row);
+        let (fp, k, r) = parse_line(&line).expect("must parse");
+        assert_eq!(fp, "rust-mirror/45nm/abc");
+        assert_eq!(k, key);
+        assert_eq!(bits(&r), bits(&row), "shortest float reprs reparse to identical bits");
+    }
+
+    #[test]
+    fn corrupt_rows_and_foreign_schemas_parse_to_none() {
+        let key: MacroKey = [1024, 32, 2, 1];
+        let line = record_line("fp", key, sample_row());
+        assert!(parse_line("").is_none());
+        assert!(parse_line("{\"schema\":\"other/v9\"}").is_none());
+        assert!(parse_line(&line[..line.len() / 2]).is_none(), "torn tail must not parse");
+        // flipping a field invalidates the recorded key hash
+        let tampered = line.replace("\"depth\":1024", "\"depth\":2048");
+        assert_ne!(line, tampered);
+        assert!(parse_line(&tampered).is_none(), "hash check must catch edits");
+    }
+
+    #[test]
+    fn store_appends_persist_and_reload() {
+        let path = tmp("roundtrip.jsonl");
+        let mut store = CostStore::open(&path).unwrap();
+        assert!(store.is_empty());
+        let rows = vec![([1024u32, 32, 2, 1], sample_row()), ([2048, 64, 1, 1], sample_row())];
+        store.append("fp-a", &rows).unwrap();
+        assert_eq!(store.len(), 2);
+        // re-appending held keys writes nothing new
+        store.append("fp-a", &rows).unwrap();
+        let reloaded = CostStore::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(reloaded.report().records, 2);
+        assert_eq!(reloaded.report().duplicates, 0, "held keys must not re-append");
+        assert_eq!(
+            bits(&reloaded.get("fp-a", [1024, 32, 2, 1]).unwrap()),
+            bits(&sample_row())
+        );
+    }
+
+    #[test]
+    fn fingerprints_isolate_rows() {
+        let path = tmp("fp_isolation.jsonl");
+        let mut store = CostStore::open(&path).unwrap();
+        let key: MacroKey = [4096, 32, 4, 2];
+        store.append("rust-mirror/45nm/aaaa", &[(key, sample_row())]).unwrap();
+        // stub-scored rows are invisible to a pjrt-fingerprinted lookup
+        assert!(store.get("pjrt/cost_model/bbbb", key).is_none());
+        assert!(store.get("rust-mirror/45nm/aaaa", key).is_some());
+        // both contexts can coexist in one file
+        let other = [key[0], key[1], key[2], key[3]];
+        store.append("pjrt/cost_model/bbbb", &[(other, [1.0, 2.0, 3.0, 4.0, 5.0])]).unwrap();
+        let reloaded = CostStore::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(reloaded.get("rust-mirror/45nm/aaaa", key).unwrap()[0], sample_row()[0]);
+        assert_eq!(reloaded.get("pjrt/cost_model/bbbb", key).unwrap()[0], 1.0);
+        let per_fp = reloaded.per_fingerprint();
+        assert_eq!(per_fp.len(), 2);
+        assert!(per_fp.iter().all(|(_, n)| *n == 1), "{per_fp:?}");
+    }
+
+    #[test]
+    fn torn_tails_are_detected_and_repaired_by_the_next_append() {
+        let path = tmp("torn.jsonl");
+        let mut store = CostStore::open(&path).unwrap();
+        store.append("fp", &[([512, 32, 1, 1], sample_row())]).unwrap();
+        // simulate a kill mid-append: a newline-less fragment
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, format!("{full}{}", &full[..30])).unwrap();
+        let mut reopened = CostStore::open(&path).unwrap();
+        assert!(reopened.report().torn_tail);
+        assert_eq!(reopened.len(), 1, "the torn fragment must not parse");
+        reopened.append("fp", &[([640, 32, 1, 1], sample_row())]).unwrap();
+        // the repair newline keeps the fresh row parseable
+        let repaired = CostStore::open(&path).unwrap();
+        assert!(!repaired.report().torn_tail);
+        assert_eq!(repaired.len(), 2);
+        assert_eq!(repaired.report().malformed, 1, "the terminated fragment is skipped");
+    }
+
+    #[test]
+    fn gc_compacts_duplicates_conflicts_and_garbage() {
+        let path = tmp("gc.jsonl");
+        let key: MacroKey = [1024, 32, 2, 1];
+        let good = record_line("fp", key, sample_row());
+        let mut conflicted = sample_row();
+        conflicted[0] += 1.0;
+        let conflict = record_line("fp", key, conflicted);
+        std::fs::write(&path, format!("{good}\ngarbage line\n{good}\n{conflict}\n")).unwrap();
+        let mut store = CostStore::open(&path).unwrap();
+        let rep = store.report();
+        assert_eq!((rep.records, rep.malformed, rep.duplicates, rep.conflicts), (1, 1, 1, 1));
+        // first record wins the conflict
+        assert_eq!(bits(&store.get("fp", key).unwrap()), bits(&sample_row()));
+        let dropped = store.gc().unwrap();
+        assert_eq!(dropped, 3);
+        let clean = CostStore::open(&path).unwrap();
+        let rep = clean.report();
+        assert_eq!((rep.records, rep.malformed, rep.duplicates, rep.conflicts), (1, 0, 0, 0));
+        // gc output is byte-stable
+        let once = std::fs::read_to_string(&path).unwrap();
+        CostStore::open(&path).unwrap().gc().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), once);
+    }
+
+    #[test]
+    fn export_csv_lists_every_row() {
+        let path = tmp("export.jsonl");
+        let mut store = CostStore::open(&path).unwrap();
+        store.append("fp-b", &[([1024, 32, 2, 1], sample_row())]).unwrap();
+        store.append("fp-a", &[([64, 16, 1, 1], sample_row())]).unwrap();
+        let csv = store.export_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3, "{csv}");
+        assert!(lines[0].starts_with("fingerprint,depth,width"));
+        // sorted by fingerprint then key
+        assert!(lines[1].starts_with("fp-a,64,16,1,1,"));
+        assert!(lines[2].starts_with("fp-b,1024,32,2,1,"));
+    }
+}

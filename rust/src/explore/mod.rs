@@ -53,6 +53,7 @@ pub struct Explorer {
     models: Vec<String>,
     threads: usize,
     artifacts: Option<PathBuf>,
+    cost_store: Option<PathBuf>,
     offline: bool,
 }
 
@@ -73,6 +74,7 @@ impl Explorer {
             models: Vec::new(),
             threads: 0,
             artifacts: None,
+            cost_store: None,
             offline: false,
         }
     }
@@ -108,6 +110,14 @@ impl Explorer {
     /// [`crate::runtime::artifacts_dir`]).
     pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
         self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Persist (and warm-start from) the macro-cost store at `path` —
+    /// the exploration rides the campaign engine, so it inherits the
+    /// tiered cost stack (see [`crate::cost`]) for free.
+    pub fn cost_store(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cost_store = Some(path.into());
         self
     }
 
@@ -160,7 +170,11 @@ impl Explorer {
         if self.threads != 0 {
             sweep.threads = self.threads;
         }
-        Ok(Campaign::new().benchmark(benchmark).scale(self.scale).sweep(sweep))
+        let mut campaign = Campaign::new().benchmark(benchmark).scale(self.scale).sweep(sweep);
+        if let Some(store) = self.cost_store {
+            campaign = campaign.cost_store(store);
+        }
+        Ok(campaign)
     }
 }
 

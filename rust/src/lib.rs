@@ -121,8 +121,13 @@
 //!   shard-sink merging ([`campaign::merge`]).
 //! * [`runtime`] — PJRT client wrapper for the AOT-compiled JAX/Pallas
 //!   cost-model artifacts (stubbed without the `pjrt` feature).
-//! * [`coordinator`] — the parallel DSE orchestrator which batches
-//!   design-point cost queries through the cost service.
+//! * [`cost`] — the tiered macro-cost provider subsystem: the
+//!   [`cost::CostProvider`] trait, an in-process memo, the persistent
+//!   `cost-store/v1` JSONL store (fingerprint-keyed so stub- and
+//!   pjrt-scored rows never mix), and the runtime batch backend as the
+//!   miss path.
+//! * [`coordinator`] — the parallel DSE orchestrator: a thin front over
+//!   the cost stack that batches design-point cost queries.
 //! * [`report`] — CSV and ASCII-plot emitters for every paper figure.
 //! * [`config`] — TOML-subset run configuration files.
 //! * [`error`] — the unified [`Error`]/[`Result`] pair.
@@ -145,6 +150,7 @@ pub mod dse;
 
 pub mod explore;
 pub mod runtime;
+pub mod cost;
 pub mod coordinator;
 pub mod spec;
 pub mod campaign;

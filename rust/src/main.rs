@@ -11,6 +11,7 @@
 //! repro simulate <bench> --mem <id> [...] one design point
 //! repro run <config.toml> [...]           spec-driven campaign (the canonical verb)
 //! repro merge <sinks...> [--config c]     merge shard sinks -> reports
+//! repro cost-store <stat|gc|export> <f>   inspect/compact/export a cost store
 //! repro sweep --config <file.toml>        config-driven sweep -> CSV
 //! repro figure fig4 [--bench b] [...]     regenerate Fig 4 CSV + plots
 //! repro figure fig5 [--scale s]           regenerate Fig 5 + correlation
@@ -24,10 +25,11 @@
 //! resolve memory organizations through the model registry — they work
 //! unchanged for any registered [`amm_dse::mem::MemModel`].
 
+use amm_dse::cost::CostStore;
 use amm_dse::dse::{self, Sweep};
 use amm_dse::mem;
 use amm_dse::sched::Knobs;
-use amm_dse::spec::Shard;
+use amm_dse::spec::{Shard, ShardStrategy};
 use amm_dse::suite::{self, Scale};
 use amm_dse::{campaign, config, locality, report, Campaign, Error, Explorer, Result};
 use std::path::{Path, PathBuf};
@@ -54,6 +56,7 @@ fn run(args: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&args[1..]),
         "run" => cmd_run(&args[1..]),
         "merge" => cmd_merge(&args[1..]),
+        "cost-store" => cmd_cost_store(&args[1..]),
         "sweep" => cmd_sweep(&args[1..]),
         "figure" => cmd_figure(&args[1..]),
         "synth-table" => cmd_synth_table(),
@@ -75,10 +78,12 @@ USAGE:
   repro trace <benchmark> [--scale tiny|paper|large]
   repro locality [--scale tiny|paper|large]
   repro simulate <benchmark> --mem <id> [--unroll N] [--word N] [--alus N] [--scale s]
-  repro run <config.toml> [--shard i/n] [--sink f.jsonl] [--scale s]
+  repro run <config.toml> [--shard i/n] [--shard-strategy hash|weighted]
+            [--sink f.jsonl] [--cost-store f.cost.jsonl] [--scale s]
             [--threads N] [--out-dir results] [--quiet]
   repro merge <sink.jsonl>... [--config <config.toml>] [--scale s]
             [--out-dir results] [--partial]
+  repro cost-store <stat|gc|export> <store.jsonl> [--out f.csv]
   repro sweep --config configs/<file>.toml [--out results/out.csv]
   repro figure fig4 [--bench <name>|all] [--scale s] [--out-dir results] [--sink f.jsonl]
   repro figure fig5 [--scale s] [--out-dir results] [--sink f.jsonl]
@@ -94,9 +99,17 @@ executes as one work stream over one worker pool, scored by one
 deduplicated cost batch, with stderr progress/ETA (silence: --quiet).
 With --sink, results stream to an append-only JSONL file as points
 complete; re-running with the same --sink resumes, skipping every
-already-scored point. With --shard i/n, this process runs only its
-deterministic 1/n bucket of the plan — run the other shards anywhere
-(any host: a spec is data), then reconcile with `repro merge`.
+already-scored point, and a `<sink>.status.json` sidecar is rewritten
+atomically as the run progresses (done/total, ETA, shard, cost
+counters) so fleet tooling polls health without parsing stderr. Macro
+costs persist to a cost store (`--cost-store`, `[campaign]
+cost_store`, default `<sink>.cost.jsonl`): any later run sharing the
+store skips the runtime cost batch for every shape already scored
+under the same backend fingerprint. With --shard i/n, this process
+runs only its deterministic 1/n bucket of the plan — run the other
+shards anywhere (any host: a spec is data), then reconcile with `repro
+merge`; `--shard-strategy weighted` balances shards by benchmark trace
+size instead of the uniform hash.
 
 Flags take `--name value` or `--name=value`; unknown flags are errors.
 
@@ -319,7 +332,15 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
 fn cmd_run(rest: &[String]) -> Result<()> {
     let args = parse_args(
         rest,
-        &["--shard", "--sink", "--scale", "--threads", "--out-dir"],
+        &[
+            "--shard",
+            "--shard-strategy",
+            "--sink",
+            "--cost-store",
+            "--scale",
+            "--threads",
+            "--out-dir",
+        ],
         &["--quiet"],
     )?;
     let cfg_path = args
@@ -333,8 +354,15 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     if let Some(s) = args.get("--sink") {
         spec.sink = Some(s.into());
     }
+    if let Some(s) = args.get("--cost-store") {
+        spec.cost_store = Some(s.into());
+    }
     if let Some(s) = args.get("--shard") {
         spec.shard = Some(Shard::parse(s)?);
+    }
+    if let Some(s) = args.get("--shard-strategy") {
+        spec.shard_strategy = ShardStrategy::parse(s)
+            .ok_or_else(|| Error::config(format!("bad --shard-strategy {s:?} (hash|weighted)")))?;
     }
     if let Some(s) = args.get("--threads") {
         spec.threads = s
@@ -361,13 +389,15 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     let outcome = campaign::run(&spec, &opts)?;
     if !quiet {
         eprintln!(
-            "campaign: {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es))",
+            "campaign: {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s), {} miss(es))",
             outcome.total_points(),
             outcome.simulated,
             outcome.resumed,
             t0.elapsed(),
             outcome.backend_label(),
-            outcome.cost_batches
+            outcome.cost.batches,
+            outcome.cost.hits(),
+            outcome.cost.misses
         );
     }
     if let Some(sh) = spec.shard {
@@ -381,6 +411,14 @@ fn cmd_run(rest: &[String]) -> Result<()> {
                 .as_ref()
                 .map(|s| format!(" -> {}", s.display()))
                 .unwrap_or_else(|| " (no --sink: results discarded!)".into()),
+        );
+        // always on stdout (CI's shared-store job greps it even with
+        // --quiet): a warm store makes this "0 backend batch(es)"
+        println!(
+            "cost: {} backend batch(es), {} hit(s), {} miss(es)",
+            outcome.cost.batches,
+            outcome.cost.hits(),
+            outcome.cost.misses
         );
         println!("reconcile with: repro merge <all shard sinks> --config {cfg_path}");
         return Ok(());
@@ -487,6 +525,69 @@ fn cmd_merge(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Operate on a persistent macro-cost store (`cost-store/v1`, see the
+/// `cost` module): `stat` prints row/fingerprint accounting, `gc`
+/// compacts the file (drops malformed/duplicate/conflicting lines via
+/// an atomic rewrite), `export` renders the rows as CSV.
+fn cmd_cost_store(rest: &[String]) -> Result<()> {
+    let args = parse_args(rest, &["--out"], &[])?;
+    let usage = || {
+        Error::config("usage: repro cost-store <stat|gc|export> <store.jsonl> [--out f.csv]")
+    };
+    let verb = args.positional.first().cloned().ok_or_else(usage)?;
+    let path = args.positional.get(1).cloned().ok_or_else(usage)?;
+    let path = Path::new(&path);
+    match verb.as_str() {
+        "stat" => {
+            let store = CostStore::open(path)?;
+            let rep = store.report();
+            println!("cost store {}", path.display());
+            println!("  rows        {}", store.len());
+            println!(
+                "  skipped     {} malformed, {} duplicate(s), {} conflict(s){}",
+                rep.malformed,
+                rep.duplicates,
+                rep.conflicts,
+                if rep.torn_tail { ", torn tail" } else { "" }
+            );
+            for (fp, n) in store.per_fingerprint() {
+                println!("  {n:>6} x {fp}");
+            }
+            if rep.malformed + rep.duplicates + rep.conflicts > 0 || rep.torn_tail {
+                println!("  (run `repro cost-store gc {}` to compact)", path.display());
+            }
+        }
+        "gc" => {
+            let mut store = CostStore::open(path)?;
+            let before = store.len();
+            let dropped = store.gc()?;
+            println!(
+                "cost store {}: kept {} row(s), dropped {} line(s)",
+                path.display(),
+                before,
+                dropped
+            );
+        }
+        "export" => {
+            let csv = CostStore::open(path)?.export_csv();
+            match args.get("--out") {
+                Some(out) => {
+                    report::write_file(Path::new(out), &csv)
+                        .map_err(|e| Error::io(format!("write {out}"), e))?;
+                    println!("wrote {out}");
+                }
+                None => print!("{csv}"),
+            }
+        }
+        other => {
+            return Err(Error::config(format!(
+                "unknown cost-store verb {other:?} (stat|gc|export)"
+            )))
+        }
+    }
+    Ok(())
+}
+
 fn cmd_sweep(rest: &[String]) -> Result<()> {
     let args = parse_args(rest, &["--config", "--out"], &[])?;
     let cfg_path = args
@@ -555,14 +656,15 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
             let t0 = std::time::Instant::now();
             let outcome = campaign.run()?;
             eprintln!(
-                "fig4 campaign: {} benchmark(s), {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es))",
+                "fig4 campaign: {} benchmark(s), {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
                 outcome.explorations().len(),
                 outcome.total_points(),
                 outcome.simulated,
                 outcome.resumed,
                 t0.elapsed(),
                 outcome.backend_label(),
-                outcome.cost_batches
+                outcome.cost.batches,
+                outcome.cost.hits()
             );
             for ex in outcome.explorations() {
                 ex.write_csv(out_dir.join(format!("fig4_{}.csv", ex.benchmark)))?;
@@ -588,13 +690,14 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
             let t0 = std::time::Instant::now();
             let outcome = campaign.run()?;
             eprintln!(
-                "fig5 campaign: {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es))",
+                "fig5 campaign: {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
                 outcome.total_points(),
                 outcome.simulated,
                 outcome.resumed,
                 t0.elapsed(),
                 outcome.backend_label(),
-                outcome.cost_batches
+                outcome.cost.batches,
+                outcome.cost.hits()
             );
             let summaries = outcome.summaries();
             report::write_file(&out_dir.join("fig5.csv"), &outcome.fig5_csv())

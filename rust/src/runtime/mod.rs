@@ -54,6 +54,17 @@ pub fn missing_artifacts(dir: &Path) -> Vec<&'static str> {
         .collect()
 }
 
+/// Stable content fingerprint of one artifact's HLO text: FNV-1a
+/// (64-bit) over the file bytes, `None` when the artifact is absent.
+/// The cost subsystem keys persisted PJRT-scored rows to this value, so
+/// rebuilding the cost model invalidates every previously stored row
+/// instead of silently serving numbers from a different artifact.
+pub fn artifact_fingerprint(dir: &Path, name: &str) -> Option<u64> {
+    use crate::util::hash::{fnv1a, FNV_OFFSET};
+    let bytes = std::fs::read(dir.join(format!("{name}.hlo.txt"))).ok()?;
+    Some(fnv1a(FNV_OFFSET, &bytes))
+}
+
 #[cfg(feature = "pjrt")]
 mod pjrt;
 #[cfg(feature = "pjrt")]
@@ -82,6 +93,20 @@ mod tests {
         let _ = std::fs::create_dir_all(&tmp);
         let missing = missing_artifacts(&tmp);
         assert_eq!(missing.len(), names::ALL.len());
+    }
+
+    #[test]
+    fn artifact_fingerprint_tracks_content_and_absence() {
+        let tmp = std::env::temp_dir().join("amm_dse_artifact_fp");
+        let _ = std::fs::create_dir_all(&tmp);
+        let file = tmp.join("cost_model.hlo.txt");
+        let _ = std::fs::remove_file(&file);
+        assert_eq!(artifact_fingerprint(&tmp, "cost_model"), None);
+        std::fs::write(&file, "HloModule a").unwrap();
+        let a = artifact_fingerprint(&tmp, "cost_model").unwrap();
+        assert_eq!(artifact_fingerprint(&tmp, "cost_model"), Some(a), "deterministic");
+        std::fs::write(&file, "HloModule b").unwrap();
+        assert_ne!(artifact_fingerprint(&tmp, "cost_model"), Some(a));
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -29,9 +29,16 @@ use crate::coordinator::Coordinator;
 use crate::dse::{self, Sweep};
 use crate::error::{Error, Result};
 use crate::suite::{self, Scale};
+use std::collections::BTreeMap;
 use std::fmt;
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
+
+/// The canonical TOML document's schema tag. Parsing accepts a missing
+/// tag as v1 (every pre-tag document *is* v1); any other value is
+/// rejected up front, so a future v2 can change the grammar without
+/// old binaries silently mis-reading it.
+pub const SCHEMA: &str = "campaign-spec/v1";
 
 /// One row of the campaign plan, in display (Fig-5) order.
 #[derive(Clone, Debug, PartialEq)]
@@ -102,14 +109,96 @@ impl fmt::Display for Shard {
 /// of the sink/spec contract — change it and mixed-version shard fleets
 /// stop partitioning.
 pub fn shard_of(benchmark: &str, point_id: &str, count: u32) -> u32 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = OFFSET;
-    for b in benchmark.bytes().chain(std::iter::once(0u8)).chain(point_id.bytes()) {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(PRIME);
-    }
+    use crate::util::hash::{fnv1a, FNV_OFFSET};
+    let h = fnv1a(fnv1a(fnv1a(FNV_OFFSET, benchmark.as_bytes()), &[0u8]), point_id.as_bytes());
     (h % u64::from(count.max(1))) as u32
+}
+
+/// How a sharded run decides which planned units it owns.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Per-unit [`shard_of`] hash (the default): uniform, stateless,
+    /// and a shard host never traces a benchmark it owns no units of.
+    #[default]
+    Hash,
+    /// [`weighted_shard_assignment`]: LPT over per-benchmark trace node
+    /// counts, so heterogeneous suites split into shards of comparable
+    /// *simulation work*, not just comparable unit counts. Needs every
+    /// swept benchmark's trace size, so each host traces the whole
+    /// swept set (memoized) before filtering.
+    Weighted,
+}
+
+impl ShardStrategy {
+    /// Stable lowercase name (TOML/CLI).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardStrategy::Hash => "hash",
+            ShardStrategy::Weighted => "weighted",
+        }
+    }
+
+    /// Parse the name produced by [`ShardStrategy::as_str`].
+    pub fn parse(s: &str) -> Option<ShardStrategy> {
+        match s {
+            "hash" => Some(ShardStrategy::Hash),
+            "weighted" => Some(ShardStrategy::Weighted),
+            _ => None,
+        }
+    }
+}
+
+/// The weighted variant of [`shard_of`]: assign every planned unit a
+/// shard via LPT (longest-processing-time-first) over per-benchmark
+/// weights, returning one bucket per `keys` entry (same order).
+///
+/// Balance is a *global* property, so unlike the per-unit hash this
+/// needs the whole key stream at once: units are visited heaviest
+/// benchmark first (ties broken by the `(benchmark, point id)` key
+/// itself), each going to the currently least-loaded shard (ties to
+/// the lowest index). The result is a deterministic function of
+/// `(keys, weights, count)` alone — every host computes the identical
+/// assignment — and trivially partitions the cross-product exactly:
+/// each unit lands in exactly one bucket (pinned by
+/// `tests/spec_shard.rs`).
+///
+/// `weight_of` is consulted once per distinct benchmark (the campaign
+/// passes trace node counts); weights are clamped to ≥ 1.
+pub fn weighted_shard_assignment<F>(
+    keys: &[(String, String)],
+    mut weight_of: F,
+    count: u32,
+) -> Vec<u32>
+where
+    F: FnMut(&str) -> u64,
+{
+    let count = count.max(1) as usize;
+    let mut weights: BTreeMap<&str, u64> = BTreeMap::new();
+    for (bench, _) in keys {
+        if !weights.contains_key(bench.as_str()) {
+            let w = weight_of(bench.as_str()).max(1);
+            weights.insert(bench.as_str(), w);
+        }
+    }
+    let mut order: Vec<usize> = (0..keys.len()).collect();
+    order.sort_by(|&a, &b| {
+        weights[keys[b].0.as_str()]
+            .cmp(&weights[keys[a].0.as_str()])
+            .then_with(|| keys[a].cmp(&keys[b]))
+    });
+    let mut load = vec![0u64; count];
+    let mut out = vec![0u32; keys.len()];
+    for i in order {
+        let mut best = 0usize;
+        for s in 1..count {
+            if load[s] < load[best] {
+                best = s;
+            }
+        }
+        load[best] += weights[keys[i].0.as_str()];
+        out[i] = best as u32;
+    }
+    out
 }
 
 /// A validated, serializable campaign plan — the single lowering target
@@ -124,11 +213,17 @@ pub struct CampaignSpec {
     pub sweep: Sweep,
     /// Streaming/resume JSONL sink path, if any.
     pub sink: Option<PathBuf>,
+    /// Persistent macro-cost store path (`cost-store/v1`, see
+    /// [`crate::cost`]). `None` derives `<sink>.cost.jsonl` when a sink
+    /// is set; coordinator-less (offline) runs never open one.
+    pub cost_store: Option<PathBuf>,
     /// Campaign-level worker threads (0 = fall through to
     /// `sweep.threads`, then the coordinator's count, then auto).
     pub threads: usize,
     /// Optional shard assignment: run only this bucket of the plan.
     pub shard: Option<Shard>,
+    /// How shard ownership is decided (ignored without a shard).
+    pub shard_strategy: ShardStrategy,
 }
 
 impl Default for CampaignSpec {
@@ -138,8 +233,10 @@ impl Default for CampaignSpec {
             scale: Scale::Paper,
             sweep: Sweep::default(),
             sink: None,
+            cost_store: None,
             threads: 0,
             shard: None,
+            shard_strategy: ShardStrategy::Hash,
         }
     }
 }
@@ -165,6 +262,18 @@ impl CampaignSpec {
     /// Set the shard assignment (validated by [`CampaignSpec::validate`]).
     pub fn with_shard(mut self, index: u32, count: u32) -> Self {
         self.shard = Some(Shard { index, count });
+        self
+    }
+
+    /// Set the shard-ownership strategy.
+    pub fn with_shard_strategy(mut self, strategy: ShardStrategy) -> Self {
+        self.shard_strategy = strategy;
+        self
+    }
+
+    /// Set the persistent macro-cost store path.
+    pub fn with_cost_store(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cost_store = Some(path.into());
         self
     }
 
@@ -229,16 +338,19 @@ impl CampaignSpec {
         keys
     }
 
-    /// Serialize to the canonical TOML form. Canonicalization notes:
-    /// swept benchmarks are listed before locality-only rows (relative
+    /// Serialize to the canonical TOML form (tagged
+    /// `schema = "campaign-spec/v1"`). Canonicalization notes: swept
+    /// benchmarks are listed before locality-only rows (relative
     /// order within each group is preserved), defaults that parsing
-    /// restores (`threads = 0`, absent sink/shard, empty model list) are
-    /// omitted. `parse(to_toml(spec)) == spec` for specs already in
+    /// restores (`threads = 0`, absent sink/cost-store/shard, `hash`
+    /// shard strategy, empty model list) are omitted.
+    /// `parse(to_toml(spec)) == spec` for specs already in
     /// canonical plan order, and `to_toml(parse(text)) == text` for
     /// canonical documents (pinned by `tests/spec_shard.rs`).
     pub fn to_toml(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "# amm-dse campaign spec");
+        let _ = writeln!(s, "schema = \"{SCHEMA}\"");
         let _ = writeln!(s, "scale = \"{}\"", self.scale.as_str());
         let _ = writeln!(s);
         let _ = writeln!(s, "[campaign]");
@@ -250,11 +362,17 @@ impl CampaignSpec {
         if let Some(sink) = &self.sink {
             let _ = writeln!(s, "sink = \"{}\"", sink.display());
         }
+        if let Some(store) = &self.cost_store {
+            let _ = writeln!(s, "cost_store = \"{}\"", store.display());
+        }
         if self.threads != 0 {
             let _ = writeln!(s, "threads = {}", self.threads);
         }
         if let Some(sh) = &self.shard {
             let _ = writeln!(s, "shard = \"{sh}\"");
+        }
+        if self.shard_strategy != ShardStrategy::Hash {
+            let _ = writeln!(s, "shard_strategy = \"{}\"", self.shard_strategy.as_str());
         }
         let _ = writeln!(s);
         let _ = writeln!(s, "[sweep]");
@@ -374,6 +492,69 @@ mod tests {
         assert!(dup.validate().is_err(), "swept twice");
         let dup = CampaignSpec::new().benchmark("gemm").locality_only("gemm");
         assert!(dup.validate().is_err(), "swept + locality-only");
+    }
+
+    #[test]
+    fn shard_strategy_names_round_trip() {
+        for s in [ShardStrategy::Hash, ShardStrategy::Weighted] {
+            assert_eq!(ShardStrategy::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(ShardStrategy::parse("round-robin"), None);
+        assert_eq!(ShardStrategy::default(), ShardStrategy::Hash);
+    }
+
+    #[test]
+    fn weighted_assignment_partitions_and_balances() {
+        // synthetic suite: one heavy benchmark, two light ones
+        let mut keys: Vec<(String, String)> = Vec::new();
+        for bench in ["heavy", "light-a", "light-b"] {
+            for u in 0..8 {
+                keys.push((bench.to_string(), format!("m/u{u}/w8/a4")));
+            }
+        }
+        let weight = |b: &str| if b == "heavy" { 1000u64 } else { 10 };
+        for n in [2u32, 3, 7] {
+            let assign = weighted_shard_assignment(&keys, weight, n);
+            assert_eq!(assign.len(), keys.len());
+            assert!(assign.iter().all(|&s| s < n), "buckets in range (n={n})");
+            // determinism: same inputs, same assignment
+            assert_eq!(assign, weighted_shard_assignment(&keys, weight, n));
+        }
+        // 2-way: the heavy units must spread across BOTH shards (a
+        // whole-benchmark split would leave one shard with 100x the
+        // work), and total weight per shard must be near-balanced
+        let assign = weighted_shard_assignment(&keys, weight, 2);
+        let heavy: Vec<u32> = keys
+            .iter()
+            .zip(&assign)
+            .filter(|((b, _), _)| b == "heavy")
+            .map(|(_, &s)| s)
+            .collect();
+        assert!(heavy.contains(&0) && heavy.contains(&1), "{heavy:?}");
+        let mut load = [0u64; 2];
+        for ((b, _), &s) in keys.iter().zip(&assign) {
+            load[s as usize] += weight(b);
+        }
+        let (hi, lo) = (load[0].max(load[1]), load[0].min(load[1]));
+        assert!(hi - lo <= 1000, "LPT must balance within one heavy unit: {load:?}");
+    }
+
+    #[test]
+    fn weighted_assignment_consults_each_benchmark_once() {
+        let keys: Vec<(String, String)> = (0..6)
+            .map(|i| ("gemm".to_string(), format!("m/u{i}/w8/a4")))
+            .collect();
+        let mut calls = 0usize;
+        let assign = weighted_shard_assignment(
+            &keys,
+            |_| {
+                calls += 1;
+                7
+            },
+            3,
+        );
+        assert_eq!(calls, 1, "weights are memoized per benchmark");
+        assert_eq!(assign.len(), 6);
     }
 
     #[test]

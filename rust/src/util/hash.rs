@@ -1,0 +1,41 @@
+//! FNV-1a (64-bit): the crate's one stable content hash. Both the
+//! shard assignment ([`crate::spec::shard_of`]) and the cost-store
+//! keying ([`crate::cost::key_hash`], [`crate::runtime::artifact_fingerprint`])
+//! are *pinned on-disk/cross-host contracts* built on these constants —
+//! keeping the fold in one place means a typo can't silently fork one
+//! of them.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into a running FNV-1a hash (seed with [`FNV_OFFSET`]).
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_published_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(FNV_OFFSET, b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(FNV_OFFSET, b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(FNV_OFFSET, b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv1a_folds_incrementally() {
+        let whole = fnv1a(FNV_OFFSET, b"hello world");
+        let split = fnv1a(fnv1a(FNV_OFFSET, b"hello "), b"world");
+        assert_eq!(whole, split);
+    }
+}

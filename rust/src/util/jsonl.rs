@@ -1,0 +1,85 @@
+//! Shared helpers for the crate's flat single-line JSON record formats
+//! (the campaign result sink, the cost store, the status sidecar).
+//!
+//! These are deliberately **not** a general JSON parser: every emitter
+//! in this crate writes one flat object per line with no nesting, and
+//! the only free-form string it embeds is escaped with [`escape`].
+//! Keeping the extractor in one place stops the sink and the cost
+//! store from drifting apart (both pin the prefixed-key pitfall in
+//! their tests).
+
+use std::path::{Path, PathBuf};
+
+/// Extract one scalar field from a flat single-line JSON object. The
+/// quote in the `"key":` pattern anchors the match to the real key, so
+/// `"id"` is not fooled by `"mem_id"`. Relies on the emitters never
+/// nesting objects or leaving `"`/`,`/`}` unescaped inside string
+/// values.
+pub fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    if let Some(s) = rest.strip_prefix('"') {
+        s.split('"').next()
+    } else {
+        let end = rest.find([',', '}'])?;
+        Some(rest[..end].trim())
+    }
+}
+
+/// Escape a free-form string for embedding in a JSON string value:
+/// backslashes, double quotes, and control characters (the latter as
+/// `\u00XX`). Everything this crate emits besides user-supplied paths
+/// is already from a constrained alphabet.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `<path><suffix>` as a new path: the sidecar-naming idiom shared by
+/// the campaign sink (`<sink>.status.json`, `<sink>.cost.jsonl`) and
+/// the stores' atomic-rewrite tmp files (`<file>.tmp`).
+pub fn path_with_suffix(path: &Path, suffix: &str) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(suffix);
+    PathBuf::from(os)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_extracts_strings_and_scalars() {
+        let line = "{\"schema\":\"x/v1\",\"id\":\"a/b\",\"mem_id\":\"zzz\",\"n\":42,\"f\":1.5}";
+        assert_eq!(field(line, "schema"), Some("x/v1"));
+        assert_eq!(field(line, "id"), Some("a/b"), "not fooled by the mem_id key");
+        assert_eq!(field(line, "n"), Some("42"));
+        assert_eq!(field(line, "f"), Some("1.5"));
+        assert_eq!(field(line, "missing"), None);
+    }
+
+    #[test]
+    fn escape_handles_quotes_backslashes_and_controls() {
+        assert_eq!(escape("plain/path.jsonl"), "plain/path.jsonl");
+        assert_eq!(escape("a\\b"), "a\\\\b");
+        assert_eq!(escape("say \"hi\""), "say \\\"hi\\\"");
+        assert_eq!(escape("tab\there"), "tab\\u0009here");
+    }
+
+    #[test]
+    fn path_with_suffix_appends_to_the_full_name() {
+        let p = path_with_suffix(Path::new("results/s0.jsonl"), ".status.json");
+        assert_eq!(p, Path::new("results/s0.jsonl.status.json"));
+    }
+}

@@ -5,6 +5,8 @@
 //! and a criterion-style benchmark harness (`benchkit`).
 
 pub mod benchkit;
+pub mod hash;
+pub mod jsonl;
 pub mod log;
 pub mod pool;
 pub mod propkit;

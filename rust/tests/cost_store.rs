@@ -1,0 +1,205 @@
+//! The persistent cost-store contract, end to end.
+//!
+//! Core claim (ROADMAP "Cross-campaign cost-batch reuse"): macro-cost
+//! characterization is a reusable artifact. A campaign re-run against a
+//! warm store — a *fresh* coordinator, as a new process/host would have
+//! — must issue **zero** runtime cost batches (`batches_issued == 0`)
+//! while producing a byte-identical fig5 CSV, across ≥ 3 benchmarks.
+//! Plus: the `<sink>.status.json` health sidecar, and warm-start
+//! through the `Explorer` facade.
+
+use amm_dse::campaign::{self, sink, Campaign};
+use amm_dse::coordinator::Coordinator;
+use amm_dse::cost::CostStore;
+use amm_dse::dse::Sweep;
+use amm_dse::suite::Scale;
+use amm_dse::Explorer;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A RustFallback coordinator rooted at an empty artifacts dir.
+fn coordinator(dir: &Path) -> Coordinator {
+    let artifacts = dir.join("artifacts");
+    let _ = std::fs::create_dir_all(&artifacts);
+    Coordinator::with_artifacts(artifacts)
+}
+
+fn campaign_with_store(store: &Path) -> Campaign {
+    Campaign::new()
+        .benchmarks(["gemm", "fft", "stencil2d"])
+        .scale(Scale::Tiny)
+        .sweep(Sweep::quick())
+        .cost_store(store)
+}
+
+#[test]
+fn warm_store_rerun_issues_zero_batches_and_reproduces_fig5_byte_for_byte() {
+    let dir = tmp_dir("amm_dse_cost_store_golden");
+    let store_path = dir.join("suite.cost.jsonl");
+
+    // ---- cold run: scores through the runtime backend, fills the store
+    let cold_coord = coordinator(&dir);
+    let cold = campaign_with_store(&store_path).run_with(&cold_coord).unwrap();
+    assert_eq!(cold_coord.batches_issued(), 1, "cold campaign scores in ONE batch");
+    assert_eq!(cold.cost_batches, 1);
+    assert_eq!(cold.cost.store_hits, 0);
+    assert!(cold.cost.misses > 0);
+    let cold_fig5 = cold.fig5_csv();
+    let rows = CostStore::open(&store_path).unwrap();
+    assert_eq!(rows.len(), cold.cost.misses, "every scored shape persisted");
+    assert!(!rows.is_empty());
+
+    // ---- warm run: a FRESH coordinator (new process) over the same
+    // store must re-simulate everything but batch NOTHING
+    let warm_coord = coordinator(&dir);
+    assert_eq!(warm_coord.batches_issued(), 0);
+    let warm = campaign_with_store(&store_path).run_with(&warm_coord).unwrap();
+    assert_eq!(
+        warm_coord.batches_issued(),
+        0,
+        "a warm cost store must absorb every macro-cost query"
+    );
+    assert_eq!(warm.cost_batches, 0);
+    assert_eq!(warm.cost.misses, 0);
+    assert_eq!(warm.cost.store_hits, cold.cost.misses + cold.cost.hits());
+    assert_eq!(warm.simulated, cold.simulated, "no sink: simulation still runs");
+    assert_eq!(warm.fig5_csv(), cold_fig5, "warm fig5 CSV must match byte-for-byte");
+    // point-for-point bit equality, not just the summary
+    for (a, b) in cold.explorations().iter().zip(warm.explorations()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        for (x, y) in a.points().iter().zip(b.points()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.out, y.out, "{}/{}", a.benchmark, x.id);
+        }
+    }
+    // the warm pass appended nothing
+    assert_eq!(CostStore::open(&store_path).unwrap().len(), rows.len());
+}
+
+#[test]
+fn sink_plus_store_makes_a_resume_fully_free() {
+    // The tentpole's headline: sink resume skips re-SIMULATION, the
+    // store skips re-SCORING — together a restarted campaign does
+    // neither, which is what makes shard fleets cheap to restart.
+    let dir = tmp_dir("amm_dse_cost_store_resume");
+    let sink_path = dir.join("suite.jsonl");
+    // no explicit cost_store: the default `<sink>.cost.jsonl` applies
+    let run = |coord: &Coordinator| {
+        Campaign::new()
+            .benchmarks(["gemm", "kmp"])
+            .scale(Scale::Tiny)
+            .sweep(Sweep::quick())
+            .sink(&sink_path)
+            .run_with(coord)
+            .unwrap()
+    };
+    let coord_a = coordinator(&dir);
+    let full = run(&coord_a);
+    assert_eq!(full.cost_batches, 1);
+    let derived = campaign::default_cost_store(&sink_path);
+    assert!(derived.exists(), "store must derive next to the sink: {}", derived.display());
+
+    // fresh coordinator + intact sink: zero simulation AND zero batches
+    let coord_b = coordinator(&dir);
+    let resumed = run(&coord_b);
+    assert_eq!(resumed.simulated, 0);
+    assert_eq!(resumed.resumed, full.total_points());
+    assert_eq!(coord_b.batches_issued(), 0, "warmed resume must issue zero cost batches");
+
+    // fresh coordinator + LOST sink, kept store: everything
+    // re-simulates, nothing re-batches
+    std::fs::remove_file(&sink_path).unwrap();
+    let coord_c = coordinator(&dir);
+    let rebuilt = run(&coord_c);
+    assert_eq!(rebuilt.simulated, full.total_points());
+    assert_eq!(coord_c.batches_issued(), 0, "store outlives the sink");
+    assert_eq!(rebuilt.fig5_csv(), full.fig5_csv(), "byte-identical rebuild");
+}
+
+#[test]
+fn torn_store_tail_is_repaired_and_only_costs_the_lost_rows() {
+    let dir = tmp_dir("amm_dse_cost_store_torn");
+    let store_path = dir.join("torn.cost.jsonl");
+    let cold = coordinator(&dir);
+    campaign_with_store(&store_path).run_with(&cold).unwrap();
+    let text = std::fs::read_to_string(&store_path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 3, "need rows to tear: {}", lines.len());
+    // keep all but the last line, plus a torn fragment of it (what a
+    // kill mid-append leaves behind)
+    let kept = lines.len() - 1;
+    let mut torn: String = lines[..kept].iter().map(|l| format!("{l}\n")).collect();
+    torn.push_str(&lines[kept][..25]);
+    std::fs::write(&store_path, torn).unwrap();
+
+    let warm = coordinator(&dir);
+    let outcome = campaign_with_store(&store_path).run_with(&warm).unwrap();
+    assert_eq!(outcome.cost.store_hits, kept, "intact rows still serve");
+    assert_eq!(outcome.cost.misses, 1, "only the torn row re-scores");
+    assert_eq!(outcome.cost_batches, 1);
+    // the repaired store is whole again: a third run is fully warm
+    let reloaded = CostStore::open(&store_path).unwrap();
+    assert_eq!(reloaded.len(), lines.len());
+    assert!(!reloaded.report().torn_tail);
+    assert_eq!(reloaded.report().malformed, 1, "the terminated fragment is skipped");
+    let third = coordinator(&dir);
+    campaign_with_store(&store_path).run_with(&third).unwrap();
+    assert_eq!(third.batches_issued(), 0);
+}
+
+#[test]
+fn campaign_writes_a_status_sidecar_next_to_the_sink() {
+    let dir = tmp_dir("amm_dse_status_sidecar");
+    let sink_path = dir.join("s.jsonl");
+    let outcome = Campaign::new()
+        .benchmarks(["gemm"])
+        .scale(Scale::Tiny)
+        .sweep(Sweep::quick())
+        .offline()
+        .sink(&sink_path)
+        .run()
+        .unwrap();
+    let status_path = sink::status_path(&sink_path);
+    let text = std::fs::read_to_string(&status_path)
+        .unwrap_or_else(|e| panic!("{} missing: {e}", status_path.display()));
+    assert!(text.contains("\"schema\":\"campaign-status/v1\""), "{text}");
+    assert!(text.contains("\"complete\":true"), "final status must be complete: {text}");
+    assert!(
+        text.contains(&format!("\"done\":{}", outcome.total_points())),
+        "done must equal the persisted point count: {text}"
+    );
+    assert!(text.contains("\"shard\":null"), "{text}");
+    assert!(text.contains("\"scale\":\"tiny\""), "{text}");
+    // offline: no scoring happened
+    assert!(text.contains("\"cost_batches\":0"), "{text}");
+}
+
+#[test]
+fn explorer_inherits_warm_start_through_the_campaign_engine() {
+    let dir = tmp_dir("amm_dse_explorer_warm");
+    let store_path = dir.join("gemm.cost.jsonl");
+    let explore = |coord: &Coordinator| {
+        Explorer::new()
+            .workload("gemm", Scale::Tiny)
+            .sweep(Sweep::quick())
+            .cost_store(&store_path)
+            .run_with(coord)
+            .unwrap()
+    };
+    let coord_a = coordinator(&dir);
+    let cold = explore(&coord_a);
+    assert_eq!(coord_a.batches_issued(), 1);
+    let coord_b = coordinator(&dir);
+    let warm = explore(&coord_b);
+    assert_eq!(coord_b.batches_issued(), 0, "facade rides the same warm-start");
+    for (a, b) in cold.points().iter().zip(warm.points()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.out, b.out, "{}", a.id);
+    }
+}

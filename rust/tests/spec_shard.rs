@@ -4,7 +4,7 @@
 
 use amm_dse::campaign::{merge, sink, Campaign};
 use amm_dse::dse::Sweep;
-use amm_dse::spec::{shard_of, CampaignSpec, Shard};
+use amm_dse::spec::{self, shard_of, CampaignSpec, Shard, ShardStrategy};
 use amm_dse::suite::Scale;
 use std::collections::HashSet;
 use std::path::PathBuf;
@@ -18,7 +18,9 @@ fn sample_spec() -> CampaignSpec {
         .benchmark("gemm")
         .benchmark("fft")
         .locality_only("kmp")
-        .with_shard(0, 2);
+        .with_shard(0, 2)
+        .with_shard_strategy(ShardStrategy::Weighted)
+        .with_cost_store("results/suite.cost.jsonl");
     spec.scale = Scale::Tiny;
     spec.sweep = sweep;
     spec.sink = Some(PathBuf::from("results/suite.jsonl"));
@@ -37,21 +39,34 @@ fn tmp_dir(name: &str) -> PathBuf {
 fn spec_round_trips_through_toml_byte_for_byte() {
     let spec = sample_spec();
     let toml1 = spec.to_toml();
+    assert!(
+        toml1.contains(&format!("schema = \"{}\"\n", spec::SCHEMA)),
+        "canonical documents carry the schema tag: {toml1}"
+    );
     let parsed = CampaignSpec::parse(&toml1).expect("canonical TOML must parse");
     assert_eq!(parsed, spec, "TOML -> spec must reproduce every field");
     let toml2 = parsed.to_toml();
     assert_eq!(toml1, toml2, "spec -> TOML must be canonical (byte-stable)");
 
-    // defaults are restored when omitted: a minimal document fills in
-    // the default sweep, no sink, no shard
+    // defaults are restored when omitted: a minimal (untagged = v1)
+    // document fills in the default sweep, no sink/store, hash shards
     let minimal = CampaignSpec::parse("[campaign]\nbenchmarks = [\"gemm\"]\n").unwrap();
     assert_eq!(minimal.sweep, Sweep::default());
     assert_eq!(minimal.scale, Scale::Paper);
     assert!(minimal.sink.is_none() && minimal.shard.is_none());
+    assert!(minimal.cost_store.is_none());
+    assert_eq!(minimal.shard_strategy, ShardStrategy::Hash);
     assert_eq!(minimal.threads, 0);
     // and a default-heavy spec also round-trips
     let toml3 = minimal.to_toml();
     assert_eq!(CampaignSpec::parse(&toml3).unwrap(), minimal);
+
+    // spec evolution: an unknown schema version is rejected up front,
+    // not silently mis-read
+    let future = toml1.replace(spec::SCHEMA, "campaign-spec/v2");
+    assert_ne!(future, toml1);
+    let err = CampaignSpec::parse(&future).unwrap_err();
+    assert!(err.to_string().contains("campaign-spec/v2"), "{err}");
 }
 
 #[test]
@@ -160,6 +175,54 @@ fn sharded_runs_merge_back_to_the_unsharded_campaign() {
     shard0.sink = Some(sinks[0].clone());
     let resumed = shard0.run_offline().unwrap();
     assert_eq!(resumed.simulated, 0, "a complete shard sink resumes everything");
+    assert_eq!(resumed.resumed, k0.len());
+}
+
+#[test]
+fn weighted_shards_partition_exactly_and_merge_back() {
+    // The weighted (LPT-over-trace-size) strategy must keep the hash
+    // strategy's correctness contract: n shard runs partition the
+    // cross-product exactly and merge back to the unsharded campaign
+    // byte-for-byte — only the *placement* of units changes.
+    let dir = tmp_dir("amm_dse_weighted_shard_merge");
+    let mut spec = CampaignSpec::new().benchmark("gemm").benchmark("kmp");
+    spec.scale = Scale::Tiny;
+    spec.sweep = Sweep::quick();
+    let full = spec.run_offline().unwrap();
+
+    let n = 2u32;
+    let mut sinks = Vec::new();
+    let mut shard_points = 0usize;
+    for i in 0..n {
+        let mut shard_spec =
+            spec.clone().with_shard(i, n).with_shard_strategy(ShardStrategy::Weighted);
+        let path = dir.join(format!("w{i}.jsonl"));
+        shard_spec.sink = Some(path.clone());
+        let outcome = shard_spec.run_offline().unwrap();
+        assert!(outcome.total_points() > 0, "LPT must give shard {i} work");
+        shard_points += outcome.total_points();
+        sinks.push(path);
+    }
+    assert_eq!(shard_points, full.total_points(), "weighted shards partition the plan");
+    let (r0, _) = sink::load(&sinks[0]).unwrap();
+    let (r1, _) = sink::load(&sinks[1]).unwrap();
+    let k0: HashSet<(String, String)> =
+        r0.iter().map(|(b, _, p)| (b.clone(), p.id.clone())).collect();
+    let k1: HashSet<(String, String)> =
+        r1.iter().map(|(b, _, p)| (b.clone(), p.id.clone())).collect();
+    assert!(k0.is_disjoint(&k1), "weighted shard sinks must not overlap");
+    assert_eq!(k0.len() + k1.len(), full.total_points());
+
+    let merged = merge::merge(&spec, &sinks).unwrap();
+    assert!(merged.missing.is_empty(), "{:?}", merged.missing);
+    assert_eq!(merged.outcome.fig5_csv(), full.fig5_csv(), "merged fig5 matches byte-for-byte");
+
+    // and a weighted shard resumes from its own sink like any other
+    let mut again =
+        spec.clone().with_shard(0, n).with_shard_strategy(ShardStrategy::Weighted);
+    again.sink = Some(sinks[0].clone());
+    let resumed = again.run_offline().unwrap();
+    assert_eq!(resumed.simulated, 0, "deterministic ownership: the sink satisfies resume");
     assert_eq!(resumed.resumed, k0.len());
 }
 
