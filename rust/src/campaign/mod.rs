@@ -75,6 +75,7 @@ use crate::util::{log, pool};
 use std::collections::{HashMap, HashSet};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 /// The default cost-store path for a sinked campaign:
@@ -86,7 +87,7 @@ pub fn default_cost_store(sink: &Path) -> PathBuf {
 /// Execution-context knobs that ride *alongside* a [`CampaignSpec`]:
 /// they select how the plan runs here (cost service, progress
 /// reporting), not what the plan is, so they are never serialized.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct ExecOptions {
     /// Artifacts directory for the PJRT cost model (default:
     /// [`crate::runtime::artifacts_dir`]).
@@ -96,6 +97,28 @@ pub struct ExecOptions {
     pub offline: bool,
     /// Emit stderr progress/ETA lines as completions stream in.
     pub progress: bool,
+    /// Cooperative cancellation flag (the serve daemon's job-scoped
+    /// hook): checked before scoring and per simulated unit. A raised
+    /// flag aborts the run with a `campaign cancelled` error, leaving
+    /// the sink's clean in-order prefix behind (`complete:false` in the
+    /// status sidecar) — re-running the same spec resumes it.
+    pub cancel: Option<Arc<AtomicBool>>,
+    /// Status-history ring length: snapshots kept in
+    /// `<sink>.status.history.jsonl` alongside the last-write-wins
+    /// sidecar (see [`sink::StatusWriter`]). 0 disables the ring.
+    pub status_history: usize,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            artifacts: None,
+            offline: false,
+            progress: false,
+            cancel: None,
+            status_history: sink::DEFAULT_HISTORY,
+        }
+    }
 }
 
 /// Builder for one exploration campaign over many benchmarks — a thin
@@ -261,6 +284,19 @@ fn execute(
     opts: &ExecOptions,
 ) -> Result<CampaignOutcome> {
     spec.validate()?;
+    // Cooperative cancellation: cheap flag probes at the phase
+    // boundaries that matter (before the expensive scoring call, per
+    // simulated unit) — never mid-unit, so the sink prefix stays clean.
+    let cancelled =
+        || opts.cancel.as_ref().map_or(false, |c| c.load(Ordering::SeqCst));
+    let cancel_err = || {
+        Err(Error::runtime(
+            "campaign cancelled (the sink keeps the completed prefix; re-run to resume)",
+        ))
+    };
+    if cancelled() {
+        return cancel_err();
+    }
     // Thread precedence mirrors the pre-campaign run_sweep path:
     // explicit spec setting > sweep setting > the coordinator's
     // configured worker count > auto.
@@ -297,8 +333,10 @@ fn execute(
     // benchmark whose every unit hashes to another shard (locality-only
     // rows included) is never traced on this host; its exploration row
     // carries NaN locality and no workload stats, and `merge` recomputes
-    // locality from the full plan. The weighted strategy instead traces
-    // every swept benchmark first (memoized) to obtain the LPT weights.
+    // locality from the full plan. The weighted strategy needs every
+    // swept benchmark's LPT weight: a warm [`crate::spec::weights`]
+    // table answers those from disk, otherwise the host traces the
+    // swept set first (memoized).
     struct Bench {
         name: String,
         swept: bool,
@@ -312,9 +350,18 @@ fn execute(
     {
         (Some(sh), ShardStrategy::Weighted) => {
             let keys = spec.plan_keys();
+            // LPT weights come from the persistent weight table when
+            // the spec names one (`weight-table/v1`): a warm table
+            // answers every count from disk, so this host never traces
+            // a benchmark it owns no units of. Cold keys fall back to
+            // tracing (memoized) and are cached for the fleet.
+            let mut table = match &spec.weights {
+                Some(path) => crate::spec::weights::WeightTable::open(path)?,
+                None => crate::spec::weights::WeightTable::in_memory(),
+            };
             let assignment = crate::spec::weighted_shard_assignment(
                 &keys,
-                |bench| suite::generate_cached(bench, scale).trace.len() as u64,
+                |bench| table.nodes_or_trace(bench, scale),
                 sh.count,
             );
             let mut owned: HashMap<String, HashSet<String>> = HashMap::new();
@@ -431,6 +478,9 @@ fn execute(
     // batch). Counter deltas attribute exactly this campaign's traffic
     // on a possibly long-lived coordinator.
     let mut cost = CostCounters::default();
+    if cancelled() {
+        return cancel_err();
+    }
     if let Some(coord) = coord {
         if !units.is_empty() {
             let before = coord.cost_counters();
@@ -492,6 +542,7 @@ fn execute(
                 cost.hits(),
                 cost.misses,
                 cost.batches,
+                opts.status_history,
             ));
         }
         let progress = opts.progress.then(|| Progress::new(resumed, units.len(), &cost));
@@ -506,6 +557,12 @@ fn execute(
     }
     let fresh: Vec<DesignPoint> =
         pool::parallel_map_with(&units, threads, SimArena::new, |arena, u| {
+            if cancelled() {
+                // drain the remaining units without simulating or
+                // sending; every line already sent is a complete record,
+                // so the sink stays a valid resume journal
+                return DesignPoint::default();
+            }
             let knobs = &points[u.point].knobs;
             let sim = groups[u.group].simulate(arena, knobs, &u.design);
             let p = dse::point_from(&u.design.id, u.design.is_amm, knobs, sim);
@@ -520,6 +577,9 @@ fn execute(
         j.join()
             .expect("campaign sink writer panicked")
             .map_err(|e| Error::io("write campaign sink", e))?;
+    }
+    if cancelled() {
+        return cancel_err();
     }
     for (u, p) in units.iter().zip(fresh) {
         results[u.bench][u.point] = Some(p);
@@ -771,6 +831,26 @@ mod tests {
         let err =
             Campaign::new().benchmark("gemm").sweep(sweep).offline().run().unwrap_err();
         assert!(matches!(err, Error::UnknownModel { .. }), "{err}");
+    }
+
+    #[test]
+    fn cancellation_flag_aborts_cleanly_and_a_lowered_flag_is_inert() {
+        let mut spec = CampaignSpec::new().benchmark("gemm");
+        spec.scale = Scale::Tiny;
+        spec.sweep = Sweep::quick();
+        let raised = Arc::new(AtomicBool::new(true));
+        let opts = ExecOptions {
+            offline: true,
+            cancel: Some(Arc::clone(&raised)),
+            ..Default::default()
+        };
+        let err = run(&spec, &opts).unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        let lowered = Arc::new(AtomicBool::new(false));
+        let opts =
+            ExecOptions { offline: true, cancel: Some(lowered), ..Default::default() };
+        let ok = run(&spec, &opts).unwrap();
+        assert_eq!(ok.total_points(), spec.sweep.points().len());
     }
 
     #[test]

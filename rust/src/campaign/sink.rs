@@ -64,6 +64,14 @@ pub fn status_path(sink: &Path) -> PathBuf {
     path_with_suffix(sink, ".status.json")
 }
 
+/// History-ring path convention: `<sink>.status.history.jsonl`.
+pub fn history_path(sink: &Path) -> PathBuf {
+    path_with_suffix(sink, ".status.history.jsonl")
+}
+
+/// Default [`StatusWriter`] history-ring length (snapshots kept).
+pub const DEFAULT_HISTORY: usize = 64;
+
 /// The campaign's machine-readable health endpoint: the sink-writer
 /// thread atomically rewrites `<sink>.status.json` (tmp file + rename,
 /// so a poller never reads a half-written document) on every sink
@@ -83,6 +91,14 @@ pub fn status_path(sink: &Path) -> PathBuf {
 /// first completion and after the last, `shard` is `null` for
 /// unsharded runs. Best-effort: an unwritable status file warns once
 /// and never fails the campaign.
+///
+/// Alongside the last-write-wins sidecar, every *emitted* document is
+/// also appended to a bounded history ring at
+/// `<sink>.status.history.jsonl` (same schema, one snapshot per line,
+/// already throttled by the 100 ms rule), so tooling can graph shard
+/// throughput over time. When the ring grows past twice its configured
+/// length it is compacted (atomically) to the newest `history` lines;
+/// `history = 0` disables the ring entirely.
 pub struct StatusWriter {
     path: PathBuf,
     sink: String,
@@ -93,13 +109,17 @@ pub struct StatusWriter {
     cost_hits: usize,
     cost_misses: usize,
     cost_batches: usize,
+    history_path: PathBuf,
+    history_limit: usize,
+    history_lines: usize,
     start: std::time::Instant,
     last: Option<std::time::Instant>,
     warned: bool,
 }
 
 impl StatusWriter {
-    /// A writer for the campaign streaming into `sink`.
+    /// A writer for the campaign streaming into `sink`. `history` is
+    /// the ring length (snapshots kept; 0 disables the history file).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         sink: &Path,
@@ -110,7 +130,16 @@ impl StatusWriter {
         cost_hits: usize,
         cost_misses: usize,
         cost_batches: usize,
+        history: usize,
     ) -> StatusWriter {
+        let history_path = history_path(sink);
+        // a resumed campaign keeps appending to the prior ring; the
+        // compaction threshold needs the current line count
+        let history_lines = if history > 0 {
+            std::fs::read_to_string(&history_path).map_or(0, |t| t.lines().count())
+        } else {
+            0
+        };
         StatusWriter {
             path: status_path(sink),
             // escaped once here: the sink path is the one free-form
@@ -123,6 +152,9 @@ impl StatusWriter {
             cost_hits,
             cost_misses,
             cost_batches,
+            history_path,
+            history_limit: history,
+            history_lines,
             start: std::time::Instant::now(),
             last: None,
             warned: false,
@@ -188,8 +220,9 @@ impl StatusWriter {
         // tmp + rename: a poller sees either the old or the new
         // document, never a torn one
         let tmp = path_with_suffix(&self.path, ".tmp");
-        let result =
-            std::fs::write(&tmp, body.as_bytes()).and_then(|()| std::fs::rename(&tmp, &self.path));
+        let result = std::fs::write(&tmp, body.as_bytes())
+            .and_then(|()| std::fs::rename(&tmp, &self.path))
+            .and_then(|()| self.append_history(&body));
         if let Err(e) = result {
             if !self.warned {
                 self.warned = true;
@@ -199,6 +232,38 @@ impl StatusWriter {
                 ));
             }
         }
+    }
+
+    /// Append one emitted snapshot to the history ring, compacting to
+    /// the newest `history_limit` lines once it doubles past the limit
+    /// (tmp + rename, so a tailing poller never sees a torn file).
+    fn append_history(&mut self, body: &str) -> std::io::Result<()> {
+        if self.history_limit == 0 {
+            return Ok(());
+        }
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.history_path)?;
+        f.write_all(body.as_bytes())?;
+        f.flush()?;
+        self.history_lines += 1;
+        if self.history_lines > 2 * self.history_limit {
+            let text = std::fs::read_to_string(&self.history_path)?;
+            let lines: Vec<&str> = text.lines().collect();
+            let keep = lines.len().saturating_sub(self.history_limit);
+            let mut compact = String::new();
+            for line in &lines[keep..] {
+                compact.push_str(line);
+                compact.push('\n');
+            }
+            let tmp = path_with_suffix(&self.history_path, ".tmp");
+            std::fs::write(&tmp, compact.as_bytes())?;
+            std::fs::rename(&tmp, &self.history_path)?;
+            self.history_lines = self.history_limit;
+        }
+        Ok(())
     }
 }
 
@@ -439,6 +504,7 @@ mod tests {
             5,
             7,
             1,
+            0, // no history ring in this test
         );
         assert_eq!(st.path(), status_path(&sink));
         st.update(4, 4, true);
@@ -461,7 +527,7 @@ mod tests {
         }
         assert!(!text.contains("\"eta_s\":null"), "mid-run status carries an ETA: {text}");
         // the final write: complete, no ETA, null shard for unsharded
-        let mut unsharded = StatusWriter::new(&sink, None, Scale::Tiny, 0, 2, 0, 0, 0);
+        let mut unsharded = StatusWriter::new(&sink, None, Scale::Tiny, 0, 2, 0, 0, 0, 0);
         unsharded.update(2, 2, true);
         let text = std::fs::read_to_string(status_path(&sink)).unwrap();
         assert!(text.contains("\"shard\":null"), "{text}");
@@ -469,6 +535,42 @@ mod tests {
         assert!(text.contains("\"eta_s\":null"), "{text}");
         // no torn tmp file lingers
         assert!(!status_path(&sink).with_extension("json.tmp").exists());
+        // history disabled: no ring file appears
+        assert!(!history_path(&sink).exists());
+    }
+
+    #[test]
+    fn status_history_ring_appends_and_compacts() {
+        let dir = std::env::temp_dir().join("amm_dse_status_history");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::create_dir_all(&dir);
+        let sink = dir.join("h.jsonl");
+        let limit = 4usize;
+        let mut st = StatusWriter::new(&sink, None, Scale::Tiny, 0, 100, 0, 0, 0, limit);
+        for i in 0..(2 * limit + 3) {
+            st.update(i, i, true); // force past the 100 ms throttle
+        }
+        let text = std::fs::read_to_string(history_path(&sink)).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(
+            lines.len() <= 2 * limit,
+            "ring stays bounded: {} lines for limit {limit}",
+            lines.len()
+        );
+        // every snapshot is a full status document, newest last
+        for line in &lines {
+            assert!(line.contains("\"schema\":\"campaign-status/v1\""), "{line}");
+        }
+        let newest = lines.last().unwrap();
+        assert!(newest.contains(&format!("\"done\":{}", 2 * limit + 2)), "{newest}");
+        // a resumed writer keeps appending to the surviving ring
+        let before = lines.len();
+        let mut resumed = StatusWriter::new(&sink, None, Scale::Tiny, 0, 100, 0, 0, 0, limit);
+        resumed.update(50, 50, true);
+        let text = std::fs::read_to_string(history_path(&sink)).unwrap();
+        assert_eq!(text.lines().count(), before + 1);
+        assert!(text.lines().last().unwrap().contains("\"done\":50"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

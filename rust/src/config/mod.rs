@@ -198,6 +198,12 @@ pub fn parse(text: &str) -> Result<RunConfig> {
                 .ok_or_else(|| Error::config("campaign.cost_store must be a string"))?;
             spec.cost_store = Some(s.into());
         }
+        if let Some(v) = t.get("weights") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("campaign.weights must be a string"))?;
+            spec.weights = Some(s.into());
+        }
         if let Some(v) = t.get("threads") {
             spec.threads =
                 v.as_int().ok_or_else(|| Error::config("campaign.threads must be int"))? as usize;
@@ -363,6 +369,7 @@ mod tests {
             [campaign]
             benchmarks = ["gemm"]
             cost_store = "results/suite.cost.jsonl"
+            weights = "results/weights.jsonl"
             shard = "0/2"
             shard_strategy = "weighted"
             "#,
@@ -373,10 +380,14 @@ mod tests {
             spec.cost_store.as_deref(),
             Some(Path::new("results/suite.cost.jsonl"))
         );
+        assert_eq!(spec.weights.as_deref(), Some(Path::new("results/weights.jsonl")));
         assert_eq!(spec.shard_strategy, ShardStrategy::Weighted);
-        // defaults: no store, hash strategy
+        // round-trip: the canonical TOML re-parses to the same spec
+        assert_eq!(CampaignSpec::parse(&spec.to_toml()).unwrap(), *spec);
+        // defaults: no store, no weight table, hash strategy
         let plain = parse("benchmark = \"gemm\"\n").unwrap();
         assert!(plain.campaign.cost_store.is_none());
+        assert!(plain.campaign.weights.is_none());
         assert_eq!(plain.campaign.shard_strategy, ShardStrategy::Hash);
     }
 

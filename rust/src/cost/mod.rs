@@ -51,8 +51,10 @@ use std::sync::Mutex;
 /// Anything that can score a batch of macro-cost queries. Implemented
 /// by the runtime batch backend ([`CostService`]), the in-process
 /// mirror ([`MirrorProvider`]), and [`CostStack`] itself (tiers
-/// compose).
-pub trait CostProvider: Send {
+/// compose). `Sync` is part of the contract: one provider may be
+/// scored through concurrently (the serve daemon shares a single
+/// coordinator across its whole worker fleet).
+pub trait CostProvider: Send + Sync {
     /// Short human label (diagnostics, summaries).
     fn label(&self) -> &'static str;
 

@@ -246,6 +246,61 @@ impl CostStore {
     }
 }
 
+/// Accounting from one [`pool`] call (what `repro merge --pool-stores`
+/// prints).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolReport {
+    /// Input store files read.
+    pub inputs: usize,
+    /// Distinct rows held across the inputs (after each input's own
+    /// dedupe).
+    pub rows_seen: usize,
+    /// Rows appended to the output store.
+    pub added: usize,
+    /// Rows the output already held with the identical payload.
+    pub already_held: usize,
+    /// Rows whose key was already held with a *different* payload —
+    /// the earlier row wins (pre-existing output rows beat inputs,
+    /// earlier inputs beat later ones).
+    pub conflicts: usize,
+    /// Malformed/corrupt lines skipped across the inputs.
+    pub malformed: usize,
+}
+
+/// Reconcile N shard-fleet stores into one: open (or create) `out`,
+/// absorb every input's rows with first-wins semantics, and append the
+/// genuinely new rows in one sorted batch per `(input, fingerprint)` —
+/// the multi-host closing move of a sharded campaign, where each host
+/// accumulated its own store and the fleet wants one warm artifact.
+///
+/// First-wins ordering: rows already in `out` beat every input, and an
+/// earlier input beats a later one (matching the sink-merge and
+/// load-time conflict rules). Conflicts can only arise across
+/// *different* scoring contexts mis-sharing a fingerprint — counted and
+/// kept-first, never merged.
+pub fn pool<P: AsRef<Path>>(inputs: &[P], out: &Path) -> Result<(CostStore, PoolReport)> {
+    let mut store = CostStore::open(out)?;
+    let mut report = PoolReport { inputs: inputs.len(), ..PoolReport::default() };
+    for input in inputs {
+        let src = CostStore::open(input.as_ref())?;
+        report.malformed += src.report().malformed;
+        for (fp, held) in &src.rows {
+            let mut fresh: Vec<(MacroKey, CostRow)> = Vec::new();
+            for (key, row) in held {
+                report.rows_seen += 1;
+                match store.get(fp, *key) {
+                    Some(prev) if bits(&prev) == bits(row) => report.already_held += 1,
+                    Some(_) => report.conflicts += 1,
+                    None => fresh.push((*key, *row)),
+                }
+            }
+            report.added += fresh.len();
+            store.append(fp, &fresh)?;
+        }
+    }
+    Ok((store, report))
+}
+
 /// The f32 bit patterns of a row (exact comparison: duplicate vs
 /// conflict must not be fooled by NaN or -0.0 semantics).
 fn bits(r: &CostRow) -> [u32; 5] {
@@ -428,6 +483,62 @@ mod tests {
         let once = std::fs::read_to_string(&path).unwrap();
         CostStore::open(&path).unwrap().gc().unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), once);
+    }
+
+    #[test]
+    fn pool_reconciles_shard_stores_first_wins() {
+        let a_path = tmp("pool_a.jsonl");
+        let b_path = tmp("pool_b.jsonl");
+        let out_path = tmp("pool_out.jsonl");
+        let shared: MacroKey = [1024, 32, 2, 1];
+        let only_a: MacroKey = [2048, 32, 2, 1];
+        let only_b: MacroKey = [4096, 64, 1, 1];
+        let mut a = CostStore::open(&a_path).unwrap();
+        a.append("fp", &[(shared, sample_row()), (only_a, sample_row())]).unwrap();
+        let mut b = CostStore::open(&b_path).unwrap();
+        let mut divergent = sample_row();
+        divergent[0] += 1.0;
+        b.append("fp", &[(shared, divergent), (only_b, sample_row())]).unwrap();
+        let (pooled, rep) = pool(&[&a_path, &b_path], &out_path).unwrap();
+        assert_eq!(rep.inputs, 2);
+        assert_eq!(rep.rows_seen, 4);
+        assert_eq!(rep.added, 3, "shared key pools once");
+        assert_eq!(rep.conflicts, 1, "divergent payload for the shared key");
+        assert_eq!(rep.already_held, 0);
+        assert_eq!(pooled.len(), 3);
+        // first input wins the conflict
+        assert_eq!(bits(&pooled.get("fp", shared).unwrap()), bits(&sample_row()));
+        // the output is a normal store: reload agrees
+        let reloaded = CostStore::open(&out_path).unwrap();
+        assert_eq!(reloaded.len(), 3);
+        assert_eq!(reloaded.report().records, 3);
+        // pooling again is a no-op: everything already held
+        let (_, again) = pool(&[&a_path, &b_path], &out_path).unwrap();
+        assert_eq!(again.added, 0);
+        assert_eq!(again.already_held, 3);
+        assert_eq!(again.conflicts, 1, "the divergent row still conflicts");
+        assert_eq!(CostStore::open(&out_path).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn pool_preserves_fingerprint_isolation_and_skips_garbage() {
+        let a_path = tmp("pool_fp_a.jsonl");
+        let out_path = tmp("pool_fp_out.jsonl");
+        let key: MacroKey = [512, 32, 1, 1];
+        let mut a = CostStore::open(&a_path).unwrap();
+        a.append("fp-one", &[(key, sample_row())]).unwrap();
+        a.append("fp-two", &[(key, [1.0, 2.0, 3.0, 4.0, 5.0])]).unwrap();
+        // corrupt line rides along in the input file
+        let mut text = std::fs::read_to_string(&a_path).unwrap();
+        text.push_str("garbage\n");
+        std::fs::write(&a_path, text).unwrap();
+        let (pooled, rep) = pool(&[&a_path], &out_path).unwrap();
+        assert_eq!(rep.malformed, 1, "input garbage is counted, not copied");
+        assert_eq!(pooled.len(), 2);
+        assert_eq!(pooled.get("fp-one", key).unwrap()[0], sample_row()[0]);
+        assert_eq!(pooled.get("fp-two", key).unwrap()[0], 1.0);
+        let text = std::fs::read_to_string(&out_path).unwrap();
+        assert!(!text.contains("garbage"));
     }
 
     #[test]

@@ -130,6 +130,8 @@
 //!   the cost stack that batches design-point cost queries.
 //! * [`report`] — CSV and ASCII-plot emitters for every paper figure.
 //! * [`config`] — TOML-subset run configuration files.
+//! * [`serve`] — DSE-as-a-service: the zero-dependency HTTP daemon
+//!   behind `repro serve` (job queue, worker fleet, result/cost APIs).
 //! * [`error`] — the unified [`Error`]/[`Result`] pair.
 //! * [`util`] — in-tree replacements for crates unavailable offline
 //!   (PRNG, stats, thread pool, mini-TOML, property testing, benchkit).
@@ -156,6 +158,7 @@ pub mod spec;
 pub mod campaign;
 pub mod report;
 pub mod config;
+pub mod serve;
 
 pub use campaign::{Campaign, CampaignOutcome};
 pub use error::{Error, Result};

@@ -30,6 +30,7 @@ use amm_dse::dse::{self, Sweep};
 use amm_dse::mem;
 use amm_dse::sched::Knobs;
 use amm_dse::spec::{Shard, ShardStrategy};
+use amm_dse::serve;
 use amm_dse::suite::{self, Scale};
 use amm_dse::{campaign, config, locality, report, Campaign, Error, Explorer, Result};
 use std::path::{Path, PathBuf};
@@ -56,6 +57,7 @@ fn run(args: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&args[1..]),
         "run" => cmd_run(&args[1..]),
         "merge" => cmd_merge(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
         "cost-store" => cmd_cost_store(&args[1..]),
         "sweep" => cmd_sweep(&args[1..]),
         "figure" => cmd_figure(&args[1..]),
@@ -80,9 +82,13 @@ USAGE:
   repro simulate <benchmark> --mem <id> [--unroll N] [--word N] [--alus N] [--scale s]
   repro run <config.toml> [--shard i/n] [--shard-strategy hash|weighted]
             [--sink f.jsonl] [--cost-store f.cost.jsonl] [--scale s]
+            [--weights w.jsonl] [--status-history N]
             [--threads N] [--out-dir results] [--quiet]
   repro merge <sink.jsonl>... [--config <config.toml>] [--scale s]
             [--out-dir results] [--partial]
+  repro merge --pool-stores <store.jsonl>... --out pooled.jsonl
+  repro serve [--addr host:port] [--workers N] [--data-dir serve-data]
+            [--artifacts dir] [--status-history N]
   repro cost-store <stat|gc|export> <store.jsonl> [--out f.csv]
   repro sweep --config configs/<file>.toml [--out results/out.csv]
   repro figure fig4 [--bench <name>|all] [--scale s] [--out-dir results] [--sink f.jsonl]
@@ -109,7 +115,17 @@ under the same backend fingerprint. With --shard i/n, this process
 runs only its deterministic 1/n bucket of the plan — run the other
 shards anywhere (any host: a spec is data), then reconcile with `repro
 merge`; `--shard-strategy weighted` balances shards by benchmark trace
-size instead of the uniform hash.
+size instead of the uniform hash (a `--weights` table answers trace
+sizes from disk so hosts don't trace benchmarks they don't own).
+`merge --pool-stores` reconciles shard-fleet cost stores into one
+warm store (first-wins on conflicting fingerprint rows).
+
+`serve` runs the campaign engine as a daemon: POST the same TOML spec
+to /campaigns, poll /campaigns/<id>/status, tail
+/campaigns/<id>/results?after=N, query /query/pareto and
+/cost-store/stat. Every job shares one coordinator and one cost store
+under --data-dir, so re-submitting a finished spec issues zero
+backend batches. See README "Serving" for the endpoint table.
 
 Flags take `--name value` or `--name=value`; unknown flags are errors.
 
@@ -338,6 +354,8 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             "--sink",
             "--cost-store",
             "--scale",
+            "--weights",
+            "--status-history",
             "--threads",
             "--out-dir",
         ],
@@ -359,6 +377,9 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     }
     if let Some(s) = args.get("--shard") {
         spec.shard = Some(Shard::parse(s)?);
+    }
+    if let Some(s) = args.get("--weights") {
+        spec.weights = Some(s.into());
     }
     if let Some(s) = args.get("--shard-strategy") {
         spec.shard_strategy = ShardStrategy::parse(s)
@@ -384,7 +405,12 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             spec.plan_keys().len(),
         );
     }
-    let opts = campaign::ExecOptions { progress: !quiet, ..Default::default() };
+    let mut opts = campaign::ExecOptions { progress: !quiet, ..Default::default() };
+    if let Some(s) = args.get("--status-history") {
+        opts.status_history = s
+            .parse()
+            .map_err(|_| Error::config(format!("bad --status-history {s:?}")))?;
+    }
     let t0 = std::time::Instant::now();
     let outcome = campaign::run(&spec, &opts)?;
     if !quiet {
@@ -458,7 +484,17 @@ fn cmd_run(rest: &[String]) -> Result<()> {
 /// the plan (missing/duplicate/foreign accounting, enumeration-order
 /// output); without it the records speak for themselves.
 fn cmd_merge(rest: &[String]) -> Result<()> {
-    let args = parse_args(rest, &["--config", "--scale", "--out-dir"], &["--partial"])?;
+    let args = parse_args(
+        rest,
+        &["--config", "--scale", "--out-dir", "--out"],
+        &["--partial", "--pool-stores"],
+    )?;
+    if args.has("--pool-stores") {
+        return cmd_pool_stores(&args);
+    }
+    if args.get("--out").is_some() {
+        return Err(Error::config("--out is a --pool-stores flag (sinks use --out-dir)"));
+    }
     if args.positional.is_empty() {
         return Err(Error::config(
             "usage: repro merge <sink.jsonl>... [--config <config.toml>]",
@@ -523,6 +559,75 @@ fn cmd_merge(rest: &[String]) -> Result<()> {
         dir = out_dir.display()
     );
     Ok(())
+}
+
+/// `repro merge --pool-stores`: reconcile N shard-fleet cost stores
+/// into one warm store. First-wins on conflicting fingerprint rows —
+/// the `--out` store's own rows beat every input, earlier inputs beat
+/// later ones — and the accounting is printed so a fleet operator can
+/// see what the pool actually absorbed.
+fn cmd_pool_stores(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("--out").ok_or_else(|| {
+        Error::config("usage: repro merge --pool-stores <store.jsonl>... --out pooled.jsonl")
+    })?);
+    if args.positional.is_empty() {
+        return Err(Error::config("--pool-stores needs at least one input store"));
+    }
+    if args.get("--config").is_some() || args.get("--scale").is_some() || args.has("--partial") {
+        return Err(Error::config(
+            "--pool-stores takes store files only (--config/--scale/--partial are sink-merge flags)",
+        ));
+    }
+    let inputs: Vec<&Path> = args.positional.iter().map(Path::new).collect();
+    let (store, rep) = amm_dse::cost::store::pool(&inputs, &out)?;
+    println!(
+        "pooled {} store(s) -> {}: {} row(s) ({} added, {} already held, {} conflict(s) kept-first, {} malformed skipped)",
+        rep.inputs,
+        out.display(),
+        store.len(),
+        rep.added,
+        rep.already_held,
+        rep.conflicts,
+        rep.malformed,
+    );
+    for (fp, rows) in store.per_fingerprint() {
+        println!("  {fp}: {rows} row(s)");
+    }
+    Ok(())
+}
+
+/// `repro serve`: the DSE-as-a-service daemon. Binds, prints the
+/// resolved address (stdout, so scripts can scrape an ephemeral-port
+/// bind), then serves until `POST /shutdown`.
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let args = parse_args(
+        rest,
+        &["--addr", "--workers", "--data-dir", "--artifacts", "--status-history"],
+        &[],
+    )?;
+    let mut opts = serve::ServeOptions::default();
+    if let Some(a) = args.get("--addr") {
+        opts.addr = a.to_string();
+    }
+    if let Some(w) = args.get("--workers") {
+        opts.workers = w
+            .parse()
+            .map_err(|_| Error::config(format!("bad --workers {w:?}")))?;
+    }
+    if let Some(d) = args.get("--data-dir") {
+        opts.data_dir = d.into();
+    }
+    if let Some(d) = args.get("--artifacts") {
+        opts.artifacts = Some(d.into());
+    }
+    if let Some(s) = args.get("--status-history") {
+        opts.status_history = s
+            .parse()
+            .map_err(|_| Error::config(format!("bad --status-history {s:?}")))?;
+    }
+    let server = serve::Server::bind(&opts)?;
+    println!("serving on http://{} (data dir {})", server.addr(), opts.data_dir.display());
+    server.run()
 }
 
 /// Operate on a persistent macro-cost store (`cost-store/v1`, see the

@@ -1,0 +1,490 @@
+//! Hand-rolled HTTP/1.1 request/response layer for [`crate::serve`].
+//!
+//! In idiom with the crate's other in-tree formats (`util::tomlmini`,
+//! `util::jsonl`): a deliberately small subset, not a general HTTP
+//! implementation. What it supports is exactly what the daemon needs —
+//! `GET`/`POST`/`DELETE`/`HEAD`, `Content-Length` bodies, keep-alive
+//! with pipelining, percent-encoded query strings — and everything else
+//! is rejected with the right status code instead of misparsed.
+//!
+//! The parser is *feed-based*: callers push raw socket bytes into a
+//! [`RequestBuf`] and drain complete requests out, so torn reads (a
+//! request split across arbitrary TCP segment boundaries) and pipelined
+//! requests (two requests in one segment) are handled by construction
+//! and unit-testable without sockets.
+
+use std::io::{self, Write};
+
+/// Maximum accepted request-head size (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Maximum accepted request-body size (campaign spec TOMLs are ~1 KiB).
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// Upper-case method token (`GET`, `POST`, …).
+    pub method: String,
+    /// Decoded path component, query stripped (`/campaigns/c0001/status`).
+    pub path: String,
+    /// Decoded `key=value` query parameters, in order of appearance.
+    pub query: Vec<(String, String)>,
+    /// Headers with lower-cased names and trimmed values, in order.
+    pub headers: Vec<(String, String)>,
+    /// Raw body bytes (exactly `Content-Length` of them).
+    pub body: Vec<u8>,
+    /// True when the request was `HTTP/1.1` (keep-alive by default).
+    http11: bool,
+}
+
+impl Request {
+    /// First header value with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// First query parameter with this name.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should stay open after this request:
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Why a request could not be parsed. Maps to the HTTP status the
+/// connection handler sends before closing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParseError {
+    /// Malformed request line, header, or unsupported framing → 400.
+    BadRequest(String),
+    /// Method token is not one the daemon implements → 501.
+    BadMethod(String),
+    /// Declared `Content-Length` exceeds [`MAX_BODY_BYTES`] → 413.
+    BodyTooLarge(usize),
+    /// Head grew past [`MAX_HEAD_BYTES`] without terminating → 431.
+    HeadTooLarge,
+}
+
+impl ParseError {
+    /// HTTP status code for the error response.
+    pub fn status(&self) -> u16 {
+        match self {
+            ParseError::BadRequest(_) => 400,
+            ParseError::BadMethod(_) => 501,
+            ParseError::BodyTooLarge(_) => 413,
+            ParseError::HeadTooLarge => 431,
+        }
+    }
+
+    /// Human-readable detail for the error body.
+    pub fn detail(&self) -> String {
+        match self {
+            ParseError::BadRequest(m) => format!("bad request: {m}"),
+            ParseError::BadMethod(m) => format!("method not implemented: {m}"),
+            ParseError::BodyTooLarge(n) => {
+                format!("body of {n} bytes exceeds limit of {MAX_BODY_BYTES}")
+            }
+            ParseError::HeadTooLarge => {
+                format!("request head exceeds limit of {MAX_HEAD_BYTES} bytes")
+            }
+        }
+    }
+}
+
+/// Incremental request parser: push raw bytes in, drain requests out.
+#[derive(Debug, Default)]
+pub struct RequestBuf {
+    buf: Vec<u8>,
+}
+
+impl RequestBuf {
+    /// Fresh empty buffer.
+    pub fn new() -> Self {
+        RequestBuf::default()
+    }
+
+    /// Append raw bytes read from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered (parsed requests are drained out).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no bytes are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Try to parse one complete request off the front of the buffer.
+    /// `Ok(None)` means "need more bytes"; an `Err` poisons the
+    /// connection (the caller responds with [`ParseError::status`] and
+    /// closes). Call repeatedly to drain pipelined requests.
+    pub fn next_request(&mut self) -> Result<Option<Request>, ParseError> {
+        let head_end = match find_head_end(&self.buf) {
+            Some(e) => e,
+            None if self.buf.len() > MAX_HEAD_BYTES => return Err(ParseError::HeadTooLarge),
+            None => return Ok(None),
+        };
+        if head_end > MAX_HEAD_BYTES {
+            return Err(ParseError::HeadTooLarge);
+        }
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| ParseError::BadRequest("head is not UTF-8".into()))?;
+        let mut lines = head.lines().map(|l| l.strip_suffix('\r').unwrap_or(l));
+        let request_line =
+            lines.next().ok_or_else(|| ParseError::BadRequest("empty head".into()))?;
+        let (method, target, http11) = parse_request_line(request_line)?;
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                break;
+            }
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| ParseError::BadRequest(format!("header without colon: {line:?}")))?;
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let chunked = headers
+            .iter()
+            .any(|(n, v)| n == "transfer-encoding" && !v.eq_ignore_ascii_case("identity"));
+        if chunked {
+            return Err(ParseError::BadRequest("transfer-encoding not supported".into()));
+        }
+        let body_len = match headers.iter().find(|(n, _)| n == "content-length") {
+            Some((_, v)) => v
+                .parse::<usize>()
+                .map_err(|_| ParseError::BadRequest(format!("bad content-length: {v:?}")))?,
+            None => 0,
+        };
+        if body_len > MAX_BODY_BYTES {
+            return Err(ParseError::BodyTooLarge(body_len));
+        }
+        if self.buf.len() < head_end + body_len {
+            return Ok(None); // body not fully arrived yet
+        }
+        let body = self.buf[head_end..head_end + body_len].to_vec();
+        self.buf.drain(..head_end + body_len);
+        let (path, query) = parse_target(target)?;
+        Ok(Some(Request { method, path, query, headers, body, http11 }))
+    }
+}
+
+/// Index one past the blank line terminating the header block, if the
+/// buffer holds one. Accepts both `\r\n` and bare-`\n` line endings.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut line_start = 0;
+    for (i, &b) in buf.iter().enumerate() {
+        if b != b'\n' {
+            continue;
+        }
+        let mut line = &buf[line_start..i];
+        if let [rest @ .., b'\r'] = line {
+            line = rest;
+        }
+        if line.is_empty() {
+            return Some(i + 1);
+        }
+        line_start = i + 1;
+    }
+    None
+}
+
+/// Split and validate `METHOD /target HTTP/1.x`.
+fn parse_request_line(line: &str) -> Result<(String, String, bool), ParseError> {
+    let mut parts = line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => return Err(ParseError::BadRequest(format!("malformed request line: {line:?}"))),
+    };
+    if method.is_empty() || !method.chars().all(|c| c.is_ascii_uppercase()) {
+        return Err(ParseError::BadRequest(format!("malformed method: {method:?}")));
+    }
+    if !matches!(method, "GET" | "POST" | "DELETE" | "HEAD") {
+        return Err(ParseError::BadMethod(method.to_string()));
+    }
+    if !target.starts_with('/') {
+        return Err(ParseError::BadRequest(format!("target must be absolute: {target:?}")));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => return Err(ParseError::BadRequest(format!("unsupported version: {other:?}"))),
+    };
+    Ok((method.to_string(), target.to_string(), http11))
+}
+
+/// Split a request target into decoded path + query parameters.
+fn parse_target(target: String) -> Result<(String, Vec<(String, String)>), ParseError> {
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target.as_str(), None),
+    };
+    let path = percent_decode(raw_path)?;
+    let mut query = Vec::new();
+    if let Some(q) = raw_query {
+        for pair in q.split('&').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            query.push((percent_decode(k)?, percent_decode(v)?));
+        }
+    }
+    Ok((path, query))
+}
+
+/// Decode `%XX` escapes and `+`-as-space (query-string convention).
+fn percent_decode(s: &str) -> Result<String, ParseError> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = bytes
+                    .get(i + 1..i + 3)
+                    .and_then(|h| std::str::from_utf8(h).ok())
+                    .and_then(|h| u8::from_str_radix(h, 16).ok())
+                    .ok_or_else(|| ParseError::BadRequest(format!("bad escape in {s:?}")))?;
+                out.push(hex);
+                i += 3;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).map_err(|_| ParseError::BadRequest(format!("non-UTF-8 target: {s:?}")))
+}
+
+/// One HTTP response, written with `Content-Length` framing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Body bytes.
+    pub body: Vec<u8>,
+    /// Extra response headers (name, value) — already well-formed.
+    pub extra: Vec<(String, String)>,
+}
+
+impl Response {
+    /// Response with an arbitrary content type.
+    pub fn new(status: u16, content_type: &'static str, body: impl Into<Vec<u8>>) -> Response {
+        Response { status, content_type, body: body.into(), extra: Vec::new() }
+    }
+
+    /// `application/json` response (bodies are flat `serve/v1` objects).
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        let mut body = body.into();
+        if !body.ends_with('\n') {
+            body.push('\n');
+        }
+        Response::new(status, "application/json", body.into_bytes())
+    }
+
+    /// `text/plain` response.
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response::new(status, "text/plain; charset=utf-8", body.into().into_bytes())
+    }
+
+    /// Uniform JSON error body (`serve/v1`, `error` field).
+    pub fn error(status: u16, detail: &str) -> Response {
+        let msg = crate::util::jsonl::escape(detail);
+        Response::json(status, format!("{{\"schema\":\"serve/v1\",\"error\":\"{msg}\"}}"))
+    }
+
+    /// Attach an extra header.
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Response {
+        self.extra.push((name.to_string(), value.into()));
+        self
+    }
+
+    /// Serialize to the wire. `keep_alive` controls the `Connection`
+    /// header; the caller closes the stream when it is false.
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> io::Result<()> {
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            self.status,
+            status_text(self.status),
+            self.content_type,
+            self.body.len(),
+            conn
+        )?;
+        for (name, value) in &self.extra {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the status codes the daemon emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_one(raw: &[u8]) -> Result<Option<Request>, ParseError> {
+        let mut rb = RequestBuf::new();
+        rb.push(raw);
+        rb.next_request()
+    }
+
+    #[test]
+    fn parses_a_simple_get() {
+        let req = parse_one(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.query.is_empty());
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn decodes_query_parameters() {
+        let raw: &[u8] = b"GET /query/pareto?benchmark=md%2Dknn&scale=large&x=a+b HTTP/1.1\r\n\r\n";
+        let req = parse_one(raw).unwrap().unwrap();
+        assert_eq!(req.path, "/query/pareto");
+        assert_eq!(req.query_param("benchmark"), Some("md-knn"));
+        assert_eq!(req.query_param("scale"), Some("large"));
+        assert_eq!(req.query_param("x"), Some("a b"));
+        assert_eq!(req.query_param("missing"), None);
+    }
+
+    #[test]
+    fn torn_reads_reassemble_byte_by_byte() {
+        let raw = b"POST /campaigns HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let mut rb = RequestBuf::new();
+        for (i, b) in raw.iter().enumerate() {
+            assert!(
+                rb.next_request().unwrap().is_none(),
+                "no request before byte {i} of {}",
+                raw.len()
+            );
+            rb.push(&[*b]);
+        }
+        let req = rb.next_request().unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"hello");
+        assert!(rb.is_empty(), "request fully drained");
+    }
+
+    #[test]
+    fn keep_alive_pipelining_drains_two_requests() {
+        let mut rb = RequestBuf::new();
+        rb.push(b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nConnection: close\r\n\r\n");
+        let a = rb.next_request().unwrap().unwrap();
+        let b = rb.next_request().unwrap().unwrap();
+        assert_eq!((a.path.as_str(), a.keep_alive()), ("/a", true));
+        assert_eq!((b.path.as_str(), b.keep_alive()), ("/b", false));
+        assert!(rb.next_request().unwrap().is_none());
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let req = parse_one(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive());
+        let req =
+            parse_one(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
+        assert!(req.keep_alive(), "explicit keep-alive overrides the 1.0 default");
+    }
+
+    #[test]
+    fn bad_methods_are_rejected_with_the_right_status() {
+        let err = parse_one(b"FROB / HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(err, ParseError::BadMethod("FROB".into()));
+        assert_eq!(err.status(), 501);
+        let err = parse_one(b"frob / HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(err.status(), 400, "lower-case token is malformed, not a method");
+        let err = parse_one(b"GET /\r\n\r\n").unwrap_err();
+        assert_eq!(err.status(), 400, "missing version");
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_before_it_arrives() {
+        let n = MAX_BODY_BYTES + 1;
+        let raw = format!("POST /campaigns HTTP/1.1\r\nContent-Length: {n}\r\n\r\n");
+        let err = parse_one(raw.as_bytes()).unwrap_err();
+        assert_eq!(err, ParseError::BodyTooLarge(n));
+        assert_eq!(err.status(), 413);
+    }
+
+    #[test]
+    fn oversized_head_is_rejected() {
+        let mut rb = RequestBuf::new();
+        rb.push(b"GET / HTTP/1.1\r\n");
+        rb.push(&vec![b'x'; MAX_HEAD_BYTES + 1]);
+        assert_eq!(rb.next_request().unwrap_err(), ParseError::HeadTooLarge);
+        assert_eq!(ParseError::HeadTooLarge.status(), 431);
+    }
+
+    #[test]
+    fn framing_oddities_are_bad_requests() {
+        let chunked: &[u8] = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert_eq!(parse_one(chunked).unwrap_err().status(), 400);
+        let bad_len: &[u8] = b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n";
+        assert_eq!(parse_one(bad_len).unwrap_err().status(), 400);
+        assert_eq!(parse_one(b"GET relative HTTP/1.1\r\n\r\n").unwrap_err().status(), 400);
+        assert_eq!(parse_one(b"GET / HTTP/2\r\n\r\n").unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn bare_lf_line_endings_are_accepted() {
+        let req = parse_one(b"GET /healthz HTTP/1.1\nHost: y\n\n").unwrap().unwrap();
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("y"));
+    }
+
+    #[test]
+    fn responses_serialize_with_length_framing() {
+        let mut out = Vec::new();
+        Response::json(202, "{\"schema\":\"serve/v1\"}".to_string())
+            .with_header("X-After", "7")
+            .write_to(&mut out, true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 202 Accepted\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 22\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.contains("X-After: 7\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"schema\":\"serve/v1\"}\n"), "{text}");
+    }
+}

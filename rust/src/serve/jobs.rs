@@ -1,0 +1,453 @@
+//! Job registry + queue + worker fleet for the serve daemon.
+//!
+//! Every submitted [`CampaignSpec`] becomes a *job*: a numbered
+//! directory under `<data-dir>/campaigns/` holding the canonical spec
+//! (`spec.toml`) and the result sink (`results.jsonl` plus its status /
+//! history sidecars). Jobs are queued FIFO onto a fixed worker fleet
+//! that executes through one shared [`Coordinator`], so every job in
+//! the daemon's lifetime shares one cost service, one in-process macro
+//! memo, and one persistent cost store under the data dir — a warm
+//! re-submission of a spec scores with **0 backend batches**.
+//!
+//! On restart the registry rescans the campaign directories: completed
+//! jobs stay queryable (Pareto endpoint), interrupted ones surface as
+//! failed with a resubmit hint (their sinks resume on the next run).
+
+use crate::campaign::{self, sink, ExecOptions};
+use crate::coordinator::Coordinator;
+use crate::error::{Error, Result};
+use crate::spec::CampaignSpec;
+use crate::util::jsonl;
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Lifecycle of one job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, waiting for a worker.
+    Queued,
+    /// A worker is executing it.
+    Running,
+    /// Completed successfully.
+    Done,
+    /// Execution returned an error.
+    Failed,
+    /// Cancelled before or during execution.
+    Cancelled,
+}
+
+impl JobState {
+    /// Stable lowercase name (JSON `state` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// True once the job can no longer change state.
+    pub fn terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// Summary numbers kept from a completed campaign.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JobOutcome {
+    /// Total design points across the job's explorations.
+    pub points: usize,
+    /// Points simulated fresh by this run.
+    pub simulated: usize,
+    /// Points restored from the sink.
+    pub resumed: usize,
+    /// Runtime-backend batches issued (0 = fully warm).
+    pub cost_batches: usize,
+    /// Cost-stack cache hits (memo + store).
+    pub cost_hits: usize,
+    /// Cost-stack backend misses.
+    pub cost_misses: usize,
+}
+
+impl JobOutcome {
+    fn from_campaign(o: &campaign::CampaignOutcome) -> JobOutcome {
+        JobOutcome {
+            points: o.total_points(),
+            simulated: o.simulated,
+            resumed: o.resumed,
+            cost_batches: o.cost_batches,
+            cost_hits: o.cost.hits(),
+            cost_misses: o.cost.misses,
+        }
+    }
+}
+
+/// Internal mutable job record.
+struct Job {
+    id: String,
+    dir: PathBuf,
+    spec: CampaignSpec,
+    state: JobState,
+    error: Option<String>,
+    cancel: Arc<AtomicBool>,
+    outcome: Option<JobOutcome>,
+}
+
+/// Immutable snapshot of one job, handed to the router.
+#[derive(Clone, Debug)]
+pub struct JobView {
+    /// Job id (`c0001`, …).
+    pub id: String,
+    /// Job directory under the data dir.
+    pub dir: PathBuf,
+    /// Result sink path (`<dir>/results.jsonl`).
+    pub sink: PathBuf,
+    /// The spec as executed (sink / cost store rewritten under the
+    /// data dir).
+    pub spec: CampaignSpec,
+    /// Current lifecycle state.
+    pub state: JobState,
+    /// Failure detail, when [`JobState::Failed`].
+    pub error: Option<String>,
+    /// Summary numbers, when [`JobState::Done`].
+    pub outcome: Option<JobOutcome>,
+}
+
+struct Inner {
+    jobs: Vec<Job>,
+    queue: VecDeque<usize>,
+    next_id: usize,
+}
+
+/// The daemon's job registry: a FIFO queue guarded by a condvar, plus
+/// the persistent directory layout that survives restarts.
+pub struct JobQueue {
+    root: PathBuf,
+    shared_store: PathBuf,
+    shared_weights: PathBuf,
+    inner: Mutex<Inner>,
+    ready: Condvar,
+    stopping: AtomicBool,
+}
+
+impl JobQueue {
+    /// Open (and create) the registry under `data_dir`, re-registering
+    /// any jobs a previous daemon left behind.
+    pub fn open(data_dir: &Path) -> Result<JobQueue> {
+        let root = data_dir.join("campaigns");
+        std::fs::create_dir_all(&root)
+            .map_err(|e| Error::io(format!("create {}", root.display()), e))?;
+        let q = JobQueue {
+            root: root.clone(),
+            shared_store: data_dir.join("cost-store.jsonl"),
+            shared_weights: data_dir.join("weights.jsonl"),
+            inner: Mutex::new(Inner { jobs: Vec::new(), queue: VecDeque::new(), next_id: 1 }),
+            ready: Condvar::new(),
+            stopping: AtomicBool::new(false),
+        };
+        q.rescan(&root)?;
+        Ok(q)
+    }
+
+    /// Path of the cost store every job shares.
+    pub fn shared_store(&self) -> &Path {
+        &self.shared_store
+    }
+
+    /// Path of the trace-weight table every job shares.
+    pub fn shared_weights(&self) -> &Path {
+        &self.shared_weights
+    }
+
+    /// Re-register jobs from a previous daemon run. Completed jobs stay
+    /// queryable; anything else is surfaced as failed with a hint (the
+    /// sink is resumable by re-submitting the same spec).
+    fn rescan(&self, root: &Path) -> Result<()> {
+        let mut dirs: Vec<PathBuf> = std::fs::read_dir(root)
+            .map_err(|e| Error::io(format!("scan {}", root.display()), e))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.is_dir())
+            .collect();
+        dirs.sort();
+        let mut inner = self.inner.lock().expect("job registry poisoned");
+        for dir in dirs {
+            let id = match dir.file_name().and_then(|n| n.to_str()) {
+                Some(n) => n.to_string(),
+                None => continue,
+            };
+            let spec = match CampaignSpec::load(&dir.join("spec.toml")) {
+                Ok(s) => s,
+                Err(_) => continue, // not a job directory
+            };
+            let sink = dir.join("results.jsonl");
+            let complete = std::fs::read_to_string(sink::status_path(&sink))
+                .ok()
+                .and_then(|doc| jsonl::field(&doc, "complete").map(|v| v == "true"))
+                .unwrap_or(false);
+            let (state, error) = if complete {
+                (JobState::Done, None)
+            } else {
+                (JobState::Failed, Some("interrupted; resubmit the spec to resume".to_string()))
+            };
+            if let Some(n) = id.strip_prefix('c').and_then(|n| n.parse::<usize>().ok()) {
+                inner.next_id = inner.next_id.max(n + 1);
+            }
+            inner.jobs.push(Job {
+                id,
+                dir,
+                spec,
+                state,
+                error,
+                cancel: Arc::new(AtomicBool::new(false)),
+                outcome: None,
+            });
+        }
+        Ok(())
+    }
+
+    /// Accept a validated spec: assign an id, pin its sink / cost store
+    /// / weight table under the data dir, persist the canonical spec,
+    /// and queue it for the worker fleet.
+    pub fn submit(&self, mut spec: CampaignSpec) -> Result<JobView> {
+        spec.validate()?;
+        let mut inner = self.inner.lock().expect("job registry poisoned");
+        let id = format!("c{:04}", inner.next_id);
+        inner.next_id += 1;
+        let dir = self.root.join(&id);
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| Error::io(format!("create {}", dir.display()), e))?;
+        spec.sink = Some(dir.join("results.jsonl"));
+        spec.cost_store = Some(self.shared_store.clone());
+        if spec.weights.is_none() {
+            spec.weights = Some(self.shared_weights.clone());
+        }
+        let spec_path = dir.join("spec.toml");
+        std::fs::write(&spec_path, spec.to_toml())
+            .map_err(|e| Error::io(format!("write {}", spec_path.display()), e))?;
+        let ix = inner.jobs.len();
+        inner.jobs.push(Job {
+            id,
+            dir,
+            spec,
+            state: JobState::Queued,
+            error: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            outcome: None,
+        });
+        inner.queue.push_back(ix);
+        let view = view_of(&inner.jobs[ix]);
+        drop(inner);
+        self.ready.notify_one();
+        Ok(view)
+    }
+
+    /// Block until a job is available (marking it running) or the
+    /// queue is shut down (`None`).
+    pub fn claim(&self) -> Option<(usize, CampaignSpec, Arc<AtomicBool>)> {
+        let mut inner = self.inner.lock().expect("job registry poisoned");
+        loop {
+            if self.stopping.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(ix) = inner.queue.pop_front() {
+                let job = &mut inner.jobs[ix];
+                job.state = JobState::Running;
+                return Some((ix, job.spec.clone(), Arc::clone(&job.cancel)));
+            }
+            inner = self.ready.wait(inner).expect("job registry poisoned");
+        }
+    }
+
+    /// Record a worker's result for a claimed job.
+    pub fn finish(&self, ix: usize, result: Result<JobOutcome>) {
+        let mut inner = self.inner.lock().expect("job registry poisoned");
+        let job = &mut inner.jobs[ix];
+        match result {
+            Ok(outcome) => {
+                job.state = JobState::Done;
+                job.outcome = Some(outcome);
+            }
+            Err(e) => {
+                if job.cancel.load(Ordering::SeqCst) {
+                    job.state = JobState::Cancelled;
+                } else {
+                    job.state = JobState::Failed;
+                    job.error = Some(e.to_string());
+                }
+            }
+        }
+    }
+
+    /// Cancel a job: queued jobs flip to cancelled immediately, running
+    /// jobs get their cooperative flag raised (the worker records the
+    /// terminal state). Returns the state after the request.
+    pub fn cancel(&self, id: &str) -> Result<JobState> {
+        let mut inner = self.inner.lock().expect("job registry poisoned");
+        let ix = inner
+            .jobs
+            .iter()
+            .position(|j| j.id == id)
+            .ok_or_else(|| Error::msg(format!("no such job: {id}")))?;
+        let state = inner.jobs[ix].state;
+        match state {
+            JobState::Queued => {
+                inner.queue.retain(|&q| q != ix);
+                inner.jobs[ix].state = JobState::Cancelled;
+                Ok(JobState::Cancelled)
+            }
+            JobState::Running => {
+                inner.jobs[ix].cancel.store(true, Ordering::SeqCst);
+                Ok(JobState::Running)
+            }
+            terminal => Err(Error::msg(format!("job {id} already {}", terminal.as_str()))),
+        }
+    }
+
+    /// Snapshot one job by id.
+    pub fn get(&self, id: &str) -> Option<JobView> {
+        let inner = self.inner.lock().expect("job registry poisoned");
+        inner.jobs.iter().find(|j| j.id == id).map(view_of)
+    }
+
+    /// Snapshot every job, oldest first.
+    pub fn list(&self) -> Vec<JobView> {
+        let inner = self.inner.lock().expect("job registry poisoned");
+        inner.jobs.iter().map(view_of).collect()
+    }
+
+    /// Wake every worker and make [`JobQueue::claim`] return `None`.
+    pub fn stop(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        self.ready.notify_all();
+    }
+
+    /// True once [`JobQueue::stop`] has been called.
+    pub fn stopping(&self) -> bool {
+        self.stopping.load(Ordering::SeqCst)
+    }
+}
+
+fn view_of(job: &Job) -> JobView {
+    JobView {
+        id: job.id.clone(),
+        dir: job.dir.clone(),
+        sink: job.dir.join("results.jsonl"),
+        spec: job.spec.clone(),
+        state: job.state,
+        error: job.error.clone(),
+        outcome: job.outcome,
+    }
+}
+
+/// One worker thread's main loop: claim → execute via the shared
+/// coordinator → record, until the queue stops. `base` carries the
+/// daemon-wide [`ExecOptions`] (artifacts dir, status-history length);
+/// the per-job cancellation flag is layered on top.
+pub fn worker_loop(queue: &JobQueue, coord: &Coordinator, base: &ExecOptions) {
+    while let Some((ix, spec, cancel)) = queue.claim() {
+        let mut opts = base.clone();
+        opts.cancel = Some(Arc::clone(&cancel));
+        let result =
+            campaign::run_with(&spec, coord, &opts).map(|o| JobOutcome::from_campaign(&o));
+        queue.finish(ix, result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suite::Scale;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("amm-serve-jobs-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tiny_spec() -> CampaignSpec {
+        let mut spec = CampaignSpec::default().benchmark("gemm");
+        spec.scale = Scale::Tiny;
+        spec.sweep = crate::dse::Sweep::quick();
+        spec
+    }
+
+    #[test]
+    fn submit_pins_paths_and_persists_the_spec() {
+        let dir = tmpdir("submit");
+        let q = JobQueue::open(&dir).unwrap();
+        let view = q.submit(tiny_spec()).unwrap();
+        assert_eq!(view.id, "c0001");
+        assert_eq!(view.state, JobState::Queued);
+        assert_eq!(view.spec.sink.as_deref(), Some(view.sink.as_path()));
+        assert_eq!(view.spec.cost_store.as_deref(), Some(q.shared_store()));
+        assert_eq!(view.spec.weights.as_deref(), Some(q.shared_weights()));
+        let persisted = CampaignSpec::load(&view.dir.join("spec.toml")).unwrap();
+        assert_eq!(persisted, view.spec, "spec.toml round-trips the executed spec");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn claim_marks_running_and_finish_records_terminal_states() {
+        let dir = tmpdir("claim");
+        let q = JobQueue::open(&dir).unwrap();
+        let a = q.submit(tiny_spec()).unwrap();
+        let b = q.submit(tiny_spec()).unwrap();
+        assert_eq!(b.id, "c0002");
+        let (ix, _, cancel) = q.claim().unwrap();
+        assert_eq!(q.get(&a.id).unwrap().state, JobState::Running);
+        q.finish(ix, Ok(JobOutcome { points: 6, ..JobOutcome::default() }));
+        assert_eq!(q.get(&a.id).unwrap().state, JobState::Done);
+        assert_eq!(q.get(&a.id).unwrap().outcome.unwrap().points, 6);
+        assert!(!cancel.load(Ordering::SeqCst));
+        let (ix, _, cancel) = q.claim().unwrap();
+        cancel.store(true, Ordering::SeqCst);
+        q.finish(ix, Err(Error::runtime("campaign cancelled")));
+        assert_eq!(q.get(&b.id).unwrap().state, JobState::Cancelled);
+        q.stop();
+        assert!(q.claim().is_none(), "stopped queue releases workers");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn queued_jobs_cancel_immediately_and_terminal_jobs_conflict() {
+        let dir = tmpdir("cancel");
+        let q = JobQueue::open(&dir).unwrap();
+        let a = q.submit(tiny_spec()).unwrap();
+        assert_eq!(q.cancel(&a.id).unwrap(), JobState::Cancelled);
+        assert!(q.cancel(&a.id).is_err(), "cancelling twice conflicts");
+        assert!(q.cancel("c9999").is_err());
+        // the cancelled job never reaches a worker
+        q.stop();
+        assert!(q.claim().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restart_rescan_recovers_completed_and_interrupted_jobs() {
+        let dir = tmpdir("rescan");
+        {
+            let q = JobQueue::open(&dir).unwrap();
+            let done = q.submit(tiny_spec()).unwrap();
+            let torn = q.submit(tiny_spec()).unwrap();
+            // fake a completed sidecar for the first, none for the second
+            let doc = "{\"schema\":\"campaign-status/v1\",\"done\":6,\"complete\":true}\n";
+            std::fs::write(sink::status_path(&done.sink), doc).unwrap();
+            std::fs::write(&torn.sink, "").unwrap();
+        }
+        let q = JobQueue::open(&dir).unwrap();
+        let jobs = q.list();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].state, JobState::Done);
+        assert_eq!(jobs[1].state, JobState::Failed);
+        assert!(jobs[1].error.as_deref().unwrap_or("").contains("resubmit"));
+        // numbering continues past recovered jobs
+        assert_eq!(q.submit(tiny_spec()).unwrap().id, "c0003");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

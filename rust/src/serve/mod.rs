@@ -1,0 +1,233 @@
+//! DSE-as-a-service: a zero-dependency HTTP daemon around the
+//! campaign engine (`repro serve`).
+//!
+//! One process owns one data directory, one [`Coordinator`] (so every
+//! job shares the memo → store → backend cost stack and a warm
+//! re-submission reaches the backend zero times), and one persistent
+//! [`jobs::JobQueue`] worker fleet. Campaign specs arrive as the same
+//! TOML `repro run --spec` takes; results, status sidecars and the
+//! shared cost store are plain files under the data dir, served
+//! verbatim — the daemon adds transport, not formats:
+//!
+//! ```text
+//! <data-dir>/
+//!   cost-store.jsonl            shared macro-cost store (cost-store/v1)
+//!   weights.jsonl               trace weight table (weight-table/v1)
+//!   campaigns/c0001/spec.toml   pinned spec (campaign-spec/v1)
+//!   campaigns/c0001/results.jsonl                 sink (campaign/v1)
+//!   campaigns/c0001/results.jsonl.status.json     live status (campaign-status/v1)
+//!   campaigns/c0001/results.jsonl.status.history.jsonl  status ring
+//! ```
+//!
+//! The server is std-only: a blocking [`TcpListener`] accept loop,
+//! one thread per connection feeding [`http::RequestBuf`], and the
+//! endpoint table in [`router`]. Shutdown (`POST /shutdown`, or
+//! [`ServeState::begin_shutdown`]) raises a flag and pokes the
+//! listener with a loopback connect so the blocking accept observes
+//! it; workers drain via the queue's condvar and are joined before
+//! [`Server::run`] returns.
+
+pub mod http;
+pub mod jobs;
+pub mod router;
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::campaign::{sink, ExecOptions};
+use crate::coordinator::Coordinator;
+use crate::error::{Error, Result};
+use crate::util::log;
+use http::{RequestBuf, Response};
+use jobs::JobQueue;
+
+/// Schema tag on every JSON body the daemon itself authors.
+pub const SCHEMA: &str = "serve/v1";
+
+/// How long a keep-alive connection may sit idle between requests.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Daemon configuration (`repro serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Campaign worker threads (jobs run concurrently, ≥ 1).
+    pub workers: usize,
+    /// Root for job dirs, the shared cost store and weight table.
+    pub data_dir: PathBuf,
+    /// Backend artifacts dir override (None: `AMM_DSE_ARTIFACTS` or
+    /// the baked-in default, falling back to the Rust model).
+    pub artifacts: Option<PathBuf>,
+    /// Status-history ring length handed to every job's sidecar.
+    pub status_history: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 1,
+            data_dir: PathBuf::from("serve-data"),
+            artifacts: None,
+            status_history: sink::DEFAULT_HISTORY,
+        }
+    }
+}
+
+/// Shared daemon state: the job queue, the one coordinator, and the
+/// shutdown flag. Handed to every connection thread and the router.
+pub struct ServeState {
+    pub data_dir: PathBuf,
+    pub jobs: JobQueue,
+    pub coord: Coordinator,
+    pub workers: usize,
+    pub started: Instant,
+    pub addr: SocketAddr,
+    stop: AtomicBool,
+}
+
+impl ServeState {
+    /// Raise the stop flag, wake queued workers, and poke the
+    /// listener so the blocking accept loop sees the flag.
+    pub fn begin_shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.jobs.stop();
+        if let Ok(poke) = TcpStream::connect(self.addr) {
+            drop(poke);
+        }
+    }
+
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// A bound, not-yet-running daemon. `bind` then `run`; `addr` is
+/// resolved (so `:0` binds are queryable) between the two.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServeState>,
+    base: ExecOptions,
+}
+
+impl Server {
+    pub fn bind(opts: &ServeOptions) -> Result<Server> {
+        std::fs::create_dir_all(&opts.data_dir)
+            .map_err(|e| Error::io(format!("create {}", opts.data_dir.display()), e))?;
+        let jobs = JobQueue::open(&opts.data_dir)?;
+        let listener = TcpListener::bind(opts.addr.as_str())
+            .map_err(|e| Error::io(format!("bind {}", opts.addr), e))?;
+        let addr = listener.local_addr().map_err(|e| Error::io("local_addr", e))?;
+        let dir = opts.artifacts.clone().unwrap_or_else(crate::runtime::artifacts_dir);
+        let coord = Coordinator::with_artifacts(dir);
+        let state = Arc::new(ServeState {
+            data_dir: opts.data_dir.clone(),
+            jobs,
+            coord,
+            workers: opts.workers.max(1),
+            started: Instant::now(),
+            addr,
+            stop: AtomicBool::new(false),
+        });
+        let base = ExecOptions {
+            artifacts: opts.artifacts.clone(),
+            status_history: opts.status_history,
+            ..ExecOptions::default()
+        };
+        Ok(Server { listener, state, base })
+    }
+
+    /// The resolved bind address.
+    pub fn addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// A handle to the shared state (tests; shutdown from outside).
+    pub fn state(&self) -> Arc<ServeState> {
+        Arc::clone(&self.state)
+    }
+
+    /// Serve until shutdown: spawn the worker fleet, accept
+    /// connections, then drain and join the workers.
+    pub fn run(self) -> Result<()> {
+        let Server { listener, state, base } = self;
+        let mut workers = Vec::with_capacity(state.workers);
+        for i in 0..state.workers {
+            let st = Arc::clone(&state);
+            let base = base.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || jobs::worker_loop(&st.jobs, &st.coord, &base))
+                .map_err(|e| Error::io("spawn worker", e))?;
+            workers.push(handle);
+        }
+        log::info(&format!(
+            "serve: listening on {} ({} worker(s), data dir {})",
+            state.addr,
+            state.workers,
+            state.data_dir.display()
+        ));
+        for conn in listener.incoming() {
+            if state.stopping() {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let st = Arc::clone(&state);
+                    let spawned = std::thread::Builder::new()
+                        .name("serve-conn".to_string())
+                        .spawn(move || handle_connection(&st, stream));
+                    if let Err(e) = spawned {
+                        log::warn(&format!("serve: spawn connection thread: {e}"));
+                    }
+                }
+                Err(e) => log::warn(&format!("serve: accept: {e}")),
+            }
+        }
+        state.jobs.stop();
+        for handle in workers {
+            let _ = handle.join();
+        }
+        log::info("serve: stopped");
+        Ok(())
+    }
+}
+
+/// Bind and serve in one call (the `repro serve` entry point).
+pub fn serve(opts: &ServeOptions) -> Result<()> {
+    Server::bind(opts)?.run()
+}
+
+/// Per-connection loop: read, parse (tolerating torn reads), route,
+/// respond; keep-alive until the peer closes, errors, times out, or
+/// the daemon stops.
+fn handle_connection(state: &ServeState, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let mut buf = RequestBuf::new();
+    let mut chunk = [0u8; 8192];
+    loop {
+        match buf.next_request() {
+            Ok(Some(req)) => {
+                let resp = router::route(state, &req);
+                let keep = req.keep_alive() && !state.stopping();
+                if resp.write_to(&mut stream, keep).is_err() || !keep {
+                    return;
+                }
+            }
+            Ok(None) => match stream.read(&mut chunk) {
+                Ok(0) => return, // peer closed
+                Ok(n) => buf.push(&chunk[..n]),
+                Err(_) => return, // timeout or reset
+            },
+            Err(e) => {
+                let _ = Response::error(e.status(), &e.detail()).write_to(&mut stream, false);
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! Endpoint dispatch for the serve daemon (`serve/v1`).
+//!
+//! | Method | Path                        | Body / query            | Returns |
+//! |--------|-----------------------------|-------------------------|---------|
+//! | GET    | `/healthz`                  |                         | daemon + queue summary |
+//! | GET    | `/campaigns`                |                         | job list |
+//! | POST   | `/campaigns`                | campaign-spec TOML      | 202 + job id |
+//! | GET    | `/campaigns/<id>`           |                         | job detail |
+//! | DELETE | `/campaigns/<id>`           |                         | cancel |
+//! | GET    | `/campaigns/<id>/status`    | `?history=1` for the ring | live status sidecar |
+//! | GET    | `/campaigns/<id>/results`   | `?after=<n>`            | sink tail (JSONL) |
+//! | GET    | `/query/pareto`             | `?benchmark=&scale=`    | Pareto front CSV |
+//! | GET    | `/cost-store/stat`          |                         | shared-store counters |
+//! | POST   | `/shutdown`                 |                         | graceful stop |
+//!
+//! Every JSON body is a flat `serve/v1` object (one line, no nesting
+//! beyond the fingerprint array of `stat`), in idiom with the crate's
+//! other flat-JSON formats. Raw sidecar/sink files are served verbatim
+//! — their own schemas (`campaign-status/v1`, `campaign/v1`) are the
+//! contract, so a poller of the daemon and a poller of the files see
+//! identical documents.
+
+use super::http::{Request, Response};
+use super::jobs::{JobState, JobView};
+use super::ServeState;
+use crate::campaign::{merge, sink};
+use crate::cost::CostStore;
+use crate::report;
+use crate::spec::CampaignSpec;
+use crate::suite::Scale;
+use crate::util::jsonl::escape;
+
+/// Dispatch one parsed request.
+pub fn route(state: &ServeState, req: &Request) -> Response {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => healthz(state),
+        ("GET", ["campaigns"]) => list(state),
+        ("POST", ["campaigns"]) => submit(state, req),
+        ("GET", ["campaigns", id]) => with_job(state, id, job_detail),
+        ("DELETE", ["campaigns", id]) => cancel(state, id),
+        ("GET", ["campaigns", id, "status"]) => with_job(state, id, |v| status(v, req)),
+        ("GET", ["campaigns", id, "results"]) => with_job(state, id, |v| results(v, req)),
+        ("GET", ["query", "pareto"]) => pareto(state, req),
+        ("GET", ["cost-store", "stat"]) => store_stat(state),
+        ("POST", ["shutdown"]) => shutdown(state),
+        // known path, wrong method → 405; anything else → 404
+        (_, ["healthz"] | ["campaigns"] | ["campaigns", _] | ["campaigns", _, "status"])
+        | (_, ["campaigns", _, "results"] | ["query", "pareto"] | ["cost-store", "stat"])
+        | (_, ["shutdown"]) => {
+            Response::error(405, &format!("method {} not allowed for {}", req.method, req.path))
+        }
+        _ => Response::error(404, &format!("no such endpoint: {}", req.path)),
+    }
+}
+
+/// Look a job up by id, or 404.
+fn with_job(state: &ServeState, id: &str, f: impl FnOnce(&JobView) -> Response) -> Response {
+    match state.jobs.get(id) {
+        Some(view) => f(&view),
+        None => Response::error(404, &format!("no such job: {id}")),
+    }
+}
+
+fn healthz(state: &ServeState) -> Response {
+    let jobs = state.jobs.list();
+    let count = |s: JobState| jobs.iter().filter(|j| j.state == s).count();
+    Response::json(
+        200,
+        format!(
+            concat!(
+                "{{\"schema\":\"serve/v1\",\"ok\":true,\"workers\":{},\"uptime_s\":{},",
+                "\"jobs\":{},\"queued\":{},\"running\":{},\"done\":{},\"failed\":{},",
+                "\"cancelled\":{},\"data_dir\":\"{}\"}}"
+            ),
+            state.workers,
+            state.started.elapsed().as_secs(),
+            jobs.len(),
+            count(JobState::Queued),
+            count(JobState::Running),
+            count(JobState::Done),
+            count(JobState::Failed),
+            count(JobState::Cancelled),
+            escape(&state.data_dir.display().to_string()),
+        ),
+    )
+}
+
+fn list(state: &ServeState) -> Response {
+    let rows: Vec<String> = state.jobs.list().iter().map(job_json).collect();
+    Response::json(
+        200,
+        format!("{{\"schema\":\"serve/v1\",\"jobs\":[{}]}}", rows.join(",")),
+    )
+}
+
+fn submit(state: &ServeState, req: &Request) -> Response {
+    if state.jobs.stopping() {
+        return Response::error(503, "daemon is shutting down");
+    }
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "spec body must be UTF-8 TOML"),
+    };
+    let spec = match CampaignSpec::parse(text) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("bad campaign spec: {e}")),
+    };
+    match state.jobs.submit(spec) {
+        Ok(view) => Response::json(
+            202,
+            format!(
+                concat!(
+                    "{{\"schema\":\"serve/v1\",\"id\":\"{}\",\"state\":\"{}\",",
+                    "\"status\":\"/campaigns/{}/status\",\"results\":\"/campaigns/{}/results\"}}"
+                ),
+                view.id,
+                view.state.as_str(),
+                view.id,
+                view.id,
+            ),
+        ),
+        Err(e) => Response::error(500, &format!("submit failed: {e}")),
+    }
+}
+
+fn job_detail(view: &JobView) -> Response {
+    Response::json(200, job_json(view))
+}
+
+fn cancel(state: &ServeState, id: &str) -> Response {
+    if state.jobs.get(id).is_none() {
+        return Response::error(404, &format!("no such job: {id}"));
+    }
+    match state.jobs.cancel(id) {
+        // a running job stops at its next cancellation probe
+        Ok(JobState::Running) => Response::json(
+            200,
+            format!(
+                "{{\"schema\":\"serve/v1\",\"id\":\"{}\",\"state\":\"cancelling\"}}",
+                escape(id)
+            ),
+        ),
+        Ok(st) => Response::json(
+            200,
+            format!(
+                "{{\"schema\":\"serve/v1\",\"id\":\"{}\",\"state\":\"{}\"}}",
+                escape(id),
+                st.as_str()
+            ),
+        ),
+        Err(e) => Response::error(409, &e.to_string()),
+    }
+}
+
+/// `GET /campaigns/<id>/status`: the live `campaign-status/v1` sidecar,
+/// verbatim. Before the worker's first flush (or for a never-started
+/// job) a minimal `serve/v1` document carries the job state instead.
+/// `?history=1` serves the bounded snapshot ring as JSONL.
+fn status(view: &JobView, req: &Request) -> Response {
+    let history = req.query_param("history").map_or(false, |h| h == "1" || h == "true");
+    if history {
+        let text = std::fs::read_to_string(sink::history_path(&view.sink)).unwrap_or_default();
+        return Response::new(200, "application/x-ndjson", text.into_bytes());
+    }
+    match std::fs::read_to_string(sink::status_path(&view.sink)) {
+        Ok(doc) => Response::new(200, "application/json", doc.into_bytes()),
+        Err(_) => Response::json(
+            200,
+            format!(
+                "{{\"schema\":\"serve/v1\",\"id\":\"{}\",\"state\":\"{}\"}}",
+                view.id,
+                view.state.as_str()
+            ),
+        ),
+    }
+}
+
+/// `GET /campaigns/<id>/results?after=<n>`: the sink's complete lines
+/// past the first `n`, as JSONL. The `X-After` response header carries
+/// the new total — pass it back as the next `after` to tail
+/// incrementally. A torn (newline-less) tail is never served.
+fn results(view: &JobView, req: &Request) -> Response {
+    let after = match req.query_param("after").map(str::parse::<usize>) {
+        None => 0,
+        Some(Ok(n)) => n,
+        Some(Err(_)) => return Response::error(400, "after must be a non-negative integer"),
+    };
+    let text = std::fs::read_to_string(&view.sink).unwrap_or_default();
+    let mut complete: Vec<&str> = text.lines().collect();
+    if !text.is_empty() && !text.ends_with('\n') {
+        complete.pop(); // torn tail: not a record yet
+    }
+    let total = complete.len();
+    let mut body = String::new();
+    for line in complete.iter().skip(after) {
+        body.push_str(line);
+        body.push('\n');
+    }
+    Response::new(200, "application/x-ndjson", body.into_bytes())
+        .with_header("X-After", total.to_string())
+}
+
+/// `GET /query/pareto?benchmark=<b>[&scale=<s>]`: the Pareto front of
+/// the newest completed job covering that benchmark (and scale, when
+/// given), as the same fig4-format CSV `repro pareto` writes — byte-
+/// identical to the offline `Explorer` path over the same sweep.
+fn pareto(state: &ServeState, req: &Request) -> Response {
+    let Some(bench) = req.query_param("benchmark") else {
+        return Response::error(400, "missing query parameter: benchmark");
+    };
+    let scale = match req.query_param("scale") {
+        Some(s) => match Scale::parse(s) {
+            Some(sc) => Some(sc),
+            None => return Response::error(400, &format!("bad scale: {s:?}")),
+        },
+        None => None,
+    };
+    let mut jobs = state.jobs.list();
+    jobs.reverse(); // newest first
+    for view in jobs.iter().filter(|v| v.state == JobState::Done) {
+        if !view.spec.swept().contains(&bench) {
+            continue;
+        }
+        if scale.map_or(false, |sc| view.spec.scale != sc) {
+            continue;
+        }
+        let mut spec = view.spec.clone();
+        spec.shard = None; // reassemble against the full plan
+        let merged = match merge::merge(&spec, &[&view.sink]) {
+            Ok(m) => m,
+            Err(e) => return Response::error(500, &format!("merge {}: {e}", view.id)),
+        };
+        if !merged.missing.is_empty() {
+            continue; // a shard job's sink alone is partial: keep looking
+        }
+        if let Some(ex) = merged.outcome.get(bench) {
+            return Response::new(200, "text/csv; charset=utf-8", report::pareto_csv(ex.points()))
+                .with_header("X-Job", view.id.clone());
+        }
+    }
+    let scale_note = scale.map_or(String::new(), |s| format!(" at scale {}", s.as_str()));
+    Response::error(404, &format!("no completed campaign covers {bench}{scale_note}"))
+}
+
+/// `GET /cost-store/stat`: the shared store's on-disk counters plus the
+/// live coordinator's cost-stack counters (memo/store hits, backend
+/// misses and batches across every job this daemon ran).
+fn store_stat(state: &ServeState) -> Response {
+    let path = state.jobs.shared_store();
+    let store = match CostStore::open(path) {
+        Ok(s) => s,
+        Err(e) => return Response::error(500, &format!("open cost store: {e}")),
+    };
+    let rep = store.report();
+    let fps: Vec<String> = store
+        .per_fingerprint()
+        .iter()
+        .map(|(fp, n)| format!("{{\"fp\":\"{}\",\"rows\":{n}}}", escape(fp)))
+        .collect();
+    let c = state.coord.cost_counters();
+    Response::json(
+        200,
+        format!(
+            concat!(
+                "{{\"schema\":\"serve/v1\",\"path\":\"{}\",\"rows\":{},",
+                "\"malformed\":{},\"duplicates\":{},\"conflicts\":{},\"torn_tail\":{},",
+                "\"memo_hits\":{},\"store_hits\":{},\"misses\":{},\"batches\":{},",
+                "\"fingerprints\":[{}]}}"
+            ),
+            escape(&path.display().to_string()),
+            store.len(),
+            rep.malformed,
+            rep.duplicates,
+            rep.conflicts,
+            rep.torn_tail,
+            c.memo_hits,
+            c.store_hits,
+            c.misses,
+            c.batches,
+            fps.join(","),
+        ),
+    )
+}
+
+fn shutdown(state: &ServeState) -> Response {
+    state.begin_shutdown();
+    let body = "{\"schema\":\"serve/v1\",\"stopping\":true}".to_string();
+    Response::json(200, body)
+}
+
+/// One job as a flat `serve/v1` JSON object.
+fn job_json(view: &JobView) -> String {
+    let mut s = format!(
+        concat!(
+            "{{\"schema\":\"serve/v1\",\"id\":\"{}\",\"state\":\"{}\",\"scale\":\"{}\",",
+            "\"benchmarks\":{},\"shard\":{},\"sink\":\"{}\""
+        ),
+        view.id,
+        view.state.as_str(),
+        view.spec.scale.as_str(),
+        view.spec.swept().len(),
+        match &view.spec.shard {
+            Some(sh) => format!("\"{sh}\""),
+            None => "null".to_string(),
+        },
+        escape(&view.sink.display().to_string()),
+    );
+    if let Some(err) = &view.error {
+        s.push_str(&format!(",\"error\":\"{}\"", escape(err)));
+    }
+    if let Some(o) = &view.outcome {
+        s.push_str(&format!(
+            concat!(
+                ",\"points\":{},\"simulated\":{},\"resumed\":{},",
+                "\"cost_batches\":{},\"cost_hits\":{},\"cost_misses\":{}"
+            ),
+            o.points, o.simulated, o.resumed, o.cost_batches, o.cost_hits, o.cost_misses
+        ));
+    }
+    s.push('}');
+    s
+}

@@ -25,6 +25,8 @@
 //! any $ repro merge s0.jsonl s1.jsonl --config suite.toml
 //! ```
 
+pub mod weights;
+
 use crate::coordinator::Coordinator;
 use crate::dse::{self, Sweep};
 use crate::error::{Error, Result};
@@ -124,8 +126,9 @@ pub enum ShardStrategy {
     /// [`weighted_shard_assignment`]: LPT over per-benchmark trace node
     /// counts, so heterogeneous suites split into shards of comparable
     /// *simulation work*, not just comparable unit counts. Needs every
-    /// swept benchmark's trace size, so each host traces the whole
-    /// swept set (memoized) before filtering.
+    /// swept benchmark's trace size; a warm [`weights`] table answers
+    /// those from disk, otherwise each host traces the whole swept set
+    /// (memoized) before filtering.
     Weighted,
 }
 
@@ -224,6 +227,11 @@ pub struct CampaignSpec {
     pub shard: Option<Shard>,
     /// How shard ownership is decided (ignored without a shard).
     pub shard_strategy: ShardStrategy,
+    /// Persistent trace-weight table (`weight-table/v1`, see
+    /// [`weights`]): caches per-`(benchmark, scale)` node counts so
+    /// weighted sharding stops tracing benchmarks this host owns no
+    /// units of. `None` falls back to tracing (memoized in-process).
+    pub weights: Option<PathBuf>,
 }
 
 impl Default for CampaignSpec {
@@ -237,6 +245,7 @@ impl Default for CampaignSpec {
             threads: 0,
             shard: None,
             shard_strategy: ShardStrategy::Hash,
+            weights: None,
         }
     }
 }
@@ -274,6 +283,12 @@ impl CampaignSpec {
     /// Set the persistent macro-cost store path.
     pub fn with_cost_store(mut self, path: impl Into<PathBuf>) -> Self {
         self.cost_store = Some(path.into());
+        self
+    }
+
+    /// Set the persistent trace-weight table path (see [`weights`]).
+    pub fn with_weights(mut self, path: impl Into<PathBuf>) -> Self {
+        self.weights = Some(path.into());
         self
     }
 
@@ -364,6 +379,9 @@ impl CampaignSpec {
         }
         if let Some(store) = &self.cost_store {
             let _ = writeln!(s, "cost_store = \"{}\"", store.display());
+        }
+        if let Some(w) = &self.weights {
+            let _ = writeln!(s, "weights = \"{}\"", w.display());
         }
         if self.threads != 0 {
             let _ = writeln!(s, "threads = {}", self.threads);

@@ -1,0 +1,226 @@
+//! Persistent per-`(benchmark, scale)` trace node-count table
+//! (`weight-table/v1` JSONL).
+//!
+//! Weighted (LPT) sharding needs every swept benchmark's trace size to
+//! compute the global assignment — which used to force each shard host
+//! to *trace the whole swept set*, including benchmarks it owns no
+//! units of. Trace generation is deterministic, so the node counts are
+//! a pure function of `(benchmark, scale)`; this table caches them in
+//! one small JSONL file that hosts can share (ship it with the spec, or
+//! point every host at a common data dir). A host with a warm table
+//! computes the identical assignment without tracing anything it does
+//! not own.
+//!
+//! Format, in idiom with the sink and cost store: one flat JSON object
+//! per line, append-only, first-wins on duplicate keys (the counts are
+//! deterministic, so duplicates can only agree), malformed/torn lines
+//! skipped with a warning. Missing file = empty table.
+
+use crate::error::{Error, Result};
+use crate::suite::{self, Scale};
+use crate::util::jsonl;
+use crate::util::log;
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Schema tag stamped on every row.
+pub const SCHEMA: &str = "weight-table/v1";
+
+/// A cached map from `(benchmark, scale)` to trace node count, with an
+/// optional JSONL file backing it.
+#[derive(Debug, Default)]
+pub struct WeightTable {
+    path: Option<PathBuf>,
+    rows: BTreeMap<(String, Scale), u64>,
+    warned: bool,
+}
+
+impl WeightTable {
+    /// A table with no backing file: lookups miss, recordings stay
+    /// in-process. The behaviour before this table existed.
+    pub fn in_memory() -> WeightTable {
+        WeightTable::default()
+    }
+
+    /// Open (or start) the table at `path`. A missing file is an empty
+    /// table; unreadable or malformed lines are skipped.
+    pub fn open(path: impl Into<PathBuf>) -> Result<WeightTable> {
+        let path = path.into();
+        let mut table = WeightTable { path: Some(path.clone()), ..WeightTable::default() };
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(table),
+            Err(e) => return Err(Error::io(format!("read weight table {}", path.display()), e)),
+        };
+        let mut malformed = 0usize;
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_line(line) {
+                // First-wins: counts are deterministic, so a duplicate
+                // can only repeat the held value; keep the oldest.
+                Some((bench, scale, nodes)) => {
+                    table.rows.entry((bench, scale)).or_insert(nodes);
+                }
+                None => malformed += 1,
+            }
+        }
+        if malformed > 0 {
+            log::warn(format!(
+                "weight table {}: skipped {malformed} malformed line(s)",
+                path.display()
+            ));
+        }
+        Ok(table)
+    }
+
+    /// Backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Cached node count, if present.
+    pub fn get(&self, benchmark: &str, scale: Scale) -> Option<u64> {
+        self.rows.get(&(benchmark.to_string(), scale)).copied()
+    }
+
+    /// Cache a count, appending to the backing file (best-effort: an
+    /// unwritable table still works in-process, with one warning).
+    pub fn record(&mut self, benchmark: &str, scale: Scale, nodes: u64) {
+        let key = (benchmark.to_string(), scale);
+        if self.rows.contains_key(&key) {
+            return;
+        }
+        self.rows.insert(key, nodes);
+        let Some(path) = &self.path else { return };
+        let line = record_line(benchmark, scale, nodes);
+        let appended = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .and_then(|mut f| f.write_all(line.as_bytes()).and_then(|()| f.flush()));
+        if let Err(e) = appended {
+            if !self.warned {
+                self.warned = true;
+                log::warn(format!("weight table {} not updatable: {e}", path.display()));
+            }
+        }
+    }
+
+    /// The weighted-sharding lookup: cached count, or trace the
+    /// benchmark once (memoized per process) and cache the result.
+    pub fn nodes_or_trace(&mut self, benchmark: &str, scale: Scale) -> u64 {
+        if let Some(n) = self.get(benchmark, scale) {
+            return n;
+        }
+        let nodes = suite::generate_cached(benchmark, scale).trace.len() as u64;
+        self.record(benchmark, scale, nodes);
+        nodes
+    }
+}
+
+/// One table row, newline-terminated.
+pub fn record_line(benchmark: &str, scale: Scale, nodes: u64) -> String {
+    format!(
+        "{{\"schema\":\"{SCHEMA}\",\"benchmark\":\"{}\",\"scale\":\"{}\",\"trace_nodes\":{nodes}}}\n",
+        jsonl::escape(benchmark),
+        scale.as_str()
+    )
+}
+
+/// Parse one table row; `None` on schema mismatch or malformed/torn
+/// lines.
+pub fn parse_line(line: &str) -> Option<(String, Scale, u64)> {
+    if !line.ends_with('}') || jsonl::field(line, "schema") != Some(SCHEMA) {
+        return None;
+    }
+    let bench = jsonl::field(line, "benchmark")?.to_string();
+    let scale = Scale::parse(jsonl::field(line, "scale")?)?;
+    let nodes = jsonl::field(line, "trace_nodes")?.parse::<u64>().ok()?;
+    Some((bench, scale, nodes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir();
+        dir.join(format!("amm-weights-{tag}-{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn rows_round_trip() {
+        let line = record_line("gemm", Scale::Tiny, 12345);
+        assert!(line.ends_with('\n'));
+        assert_eq!(parse_line(line.trim_end()), Some(("gemm".into(), Scale::Tiny, 12345)));
+        assert_eq!(parse_line("{\"schema\":\"other/v1\"}"), None, "schema gate");
+        let torn = &line[..line.len() - 3];
+        assert_eq!(parse_line(torn), None, "torn tail rejected");
+    }
+
+    #[test]
+    fn open_record_reopen_persists_first_wins() {
+        let path = tmpfile("persist");
+        let _ = std::fs::remove_file(&path);
+        let mut t = WeightTable::open(&path).unwrap();
+        assert!(t.is_empty(), "missing file is an empty table");
+        t.record("gemm", Scale::Tiny, 100);
+        t.record("gemm", Scale::Tiny, 999); // ignored: first-wins
+        t.record("fft", Scale::Paper, 5000);
+        assert_eq!(t.get("gemm", Scale::Tiny), Some(100));
+        assert_eq!(t.len(), 2);
+        let t2 = WeightTable::open(&path).unwrap();
+        assert_eq!(t2.get("gemm", Scale::Tiny), Some(100));
+        assert_eq!(t2.get("fft", Scale::Paper), Some(5000));
+        assert_eq!(t2.get("gemm", Scale::Paper), None, "scales are distinct keys");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_and_torn_lines_are_skipped() {
+        let path = tmpfile("torn");
+        let good = record_line("kmp", Scale::Tiny, 77);
+        let torn = &good[..good.len() - 4];
+        std::fs::write(&path, format!("{good}not json\n{torn}")).unwrap();
+        let t = WeightTable::open(&path).unwrap();
+        assert_eq!(t.len(), 1, "only the intact row survives");
+        assert_eq!(t.get("kmp", Scale::Tiny), Some(77));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn nodes_or_trace_fills_the_table_and_matches_the_real_trace() {
+        let path = tmpfile("trace");
+        let _ = std::fs::remove_file(&path);
+        let mut t = WeightTable::open(&path).unwrap();
+        let real = suite::generate_cached("gemm", Scale::Tiny).trace.len() as u64;
+        assert_eq!(t.nodes_or_trace("gemm", Scale::Tiny), real);
+        // warm path: the table now answers without tracing
+        assert_eq!(t.get("gemm", Scale::Tiny), Some(real));
+        let t2 = WeightTable::open(&path).unwrap();
+        assert_eq!(t2.get("gemm", Scale::Tiny), Some(real), "persisted across reopen");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn in_memory_table_works_without_a_file() {
+        let mut t = WeightTable::in_memory();
+        assert_eq!(t.path(), None);
+        t.record("gemm", Scale::Tiny, 42);
+        assert_eq!(t.get("gemm", Scale::Tiny), Some(42));
+    }
+}

@@ -43,7 +43,7 @@ pub struct Workload {
 
 /// Scale selector: `Tiny` keeps unit tests fast, `Paper` is the size used
 /// for the figure reproductions, `Large` stresses the scheduler benches.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Scale {
     /// Smallest functional size (unit tests).
     Tiny,

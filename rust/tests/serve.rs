@@ -1,0 +1,272 @@
+//! End-to-end loopback test of the serve daemon.
+//!
+//! One daemon, one real TCP socket, raw `std::net` clients: a tiny
+//! gemm spec is POSTed as TOML, polled to completion, tailed
+//! incrementally, and its `/query/pareto` CSV must equal the offline
+//! sequential [`Explorer`] path byte for byte (valid because the
+//! daemon's coordinator is rooted at an empty artifacts dir, i.e. the
+//! RustFallback backend, which is pinned bit-identical to direct
+//! evaluation). A warm re-submission of the same spec must report
+//! zero backend batches through the shared cost store.
+//!
+//! HTTP/1.1 parser unit tests (torn reads, bad methods, oversized
+//! bodies, keep-alive) live next to the parser in `serve::http`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use amm_dse::campaign::Campaign;
+use amm_dse::dse::Sweep;
+use amm_dse::report;
+use amm_dse::serve::{ServeOptions, Server};
+use amm_dse::suite::Scale;
+use amm_dse::Explorer;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("amm_dse_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One raw `Connection: close` HTTP exchange; returns (status,
+/// headers, body).
+fn exchange(addr: SocketAddr, request: &[u8]) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(request).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let head_end = raw.windows(4).position(|w| w == b"\r\n\r\n").expect("response head");
+    let head = std::str::from_utf8(&raw[..head_end]).unwrap();
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(n, v)| (n.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    (status, headers, raw[head_end + 4..].to_vec())
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, Vec<(String, String)>, String) {
+    let req = format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    let (status, headers, body) = exchange(addr, req.as_bytes());
+    (status, headers, String::from_utf8(body).unwrap())
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let (status, _, resp) = exchange(addr, req.as_bytes());
+    (status, String::from_utf8(resp).unwrap())
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> &'a str {
+    headers
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| v.as_str())
+        .unwrap_or_else(|| panic!("missing header {name}"))
+}
+
+/// Pull `"field":"value"` out of a flat JSON body.
+fn json_str(body: &str, field: &str) -> String {
+    let tag = format!("\"{field}\":\"");
+    let at = body.find(&tag).unwrap_or_else(|| panic!("no {field} in {body}"));
+    let rest = &body[at + tag.len()..];
+    rest[..rest.find('"').unwrap()].to_string()
+}
+
+fn poll_done(addr: SocketAddr, id: &str) -> String {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, _, body) = get(addr, &format!("/campaigns/{id}"));
+        assert_eq!(status, 200, "{body}");
+        if body.contains("\"state\":\"done\"") {
+            return body;
+        }
+        assert!(
+            !body.contains("\"state\":\"failed\"") && !body.contains("\"state\":\"cancelled\""),
+            "job {id} did not complete: {body}"
+        );
+        assert!(Instant::now() < deadline, "job {id} timed out: {body}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn daemon_runs_submitted_specs_and_serves_results_and_pareto_queries() {
+    let dir = tmp("serve_e2e");
+    // empty artifacts dir → RustFallback backend (bit-identical to the
+    // offline path), regardless of what the host env has installed
+    let artifacts = dir.join("artifacts");
+    std::fs::create_dir_all(&artifacts).unwrap();
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        data_dir: dir.join("data"),
+        artifacts: Some(artifacts),
+        status_history: 8,
+    };
+    let server = Server::bind(&opts).unwrap();
+    let addr = server.addr();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let (status, _, body) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"schema\":\"serve/v1\"") && body.contains("\"ok\":true"), "{body}");
+    assert!(body.contains("\"workers\":2"), "{body}");
+
+    // bad inputs first: they must not wedge the daemon
+    let (status, body) = post(addr, "/campaigns", "benchmark = ");
+    assert_eq!(status, 400, "{body}");
+    let (status, _, _) = get(addr, "/no/such/endpoint");
+    assert_eq!(status, 404);
+    let req = b"DELETE /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n";
+    let (status, _, _) = exchange(addr, req);
+    assert_eq!(status, 405);
+    let (status, _, _) = get(addr, "/campaigns/c9999");
+    assert_eq!(status, 404);
+
+    // submit the tiny spec exactly as a remote host would: TOML text
+    let spec_toml = Campaign::new()
+        .benchmarks(["gemm"])
+        .scale(Scale::Tiny)
+        .sweep(Sweep::quick())
+        .into_spec()
+        .to_toml();
+    let (status, body) = post(addr, "/campaigns", &spec_toml);
+    assert_eq!(status, 202, "{body}");
+    let id = json_str(&body, "id");
+    assert_eq!(id, "c0001");
+
+    let done = poll_done(addr, &id);
+    assert!(done.contains("\"points\":"), "{done}");
+
+    // status: the raw campaign-status/v1 sidecar, served verbatim
+    let (status, _, body) = get(addr, &format!("/campaigns/{id}/status"));
+    assert_eq!(status, 200);
+    assert!(body.contains("campaign-status/v1") && body.contains("\"complete\":true"), "{body}");
+
+    // the throttled history ring arrived and is valid JSONL
+    let (status, _, hist) = get(addr, &format!("/campaigns/{id}/status?history=1"));
+    assert_eq!(status, 200);
+    assert!(!hist.is_empty(), "history ring is empty");
+    assert!(hist.lines().all(|l| l.contains("campaign-status/v1")), "{hist}");
+
+    // incremental tail: after=0 yields everything, then resume from
+    // the X-After cursor like a fleet poller would
+    let (status, headers, all) = get(addr, &format!("/campaigns/{id}/results?after=0"));
+    assert_eq!(status, 200);
+    let total: usize = header(&headers, "x-after").parse().unwrap();
+    assert_eq!(all.lines().count(), total);
+    assert!(total > 0 && all.lines().all(|l| l.contains("campaign/v1")), "{all}");
+    let (_, headers, tail) = get(addr, &format!("/campaigns/{id}/results?after={}", total - 1));
+    assert_eq!(tail.lines().count(), 1);
+    assert_eq!(header(&headers, "x-after"), total.to_string());
+    let (_, _, empty) = get(addr, &format!("/campaigns/{id}/results?after={total}"));
+    assert!(empty.is_empty());
+
+    // the HTTP Pareto answer == the offline sequential Explorer, byte
+    // for byte
+    let (status, _, served) = get(addr, "/query/pareto?benchmark=gemm&scale=tiny");
+    assert_eq!(status, 200, "{served}");
+    let seq = Explorer::new()
+        .workload("gemm", Scale::Tiny)
+        .sweep(Sweep::quick())
+        .offline()
+        .run()
+        .unwrap();
+    assert_eq!(served, report::pareto_csv(seq.points()));
+    let (status, _, _) = get(addr, "/query/pareto?benchmark=nosuch");
+    assert_eq!(status, 404);
+
+    // warm re-submission: same spec, shared store → zero backend
+    // batches (the cross-campaign warm-start contract, over HTTP)
+    let (status, body) = post(addr, "/campaigns", &spec_toml);
+    assert_eq!(status, 202, "{body}");
+    let id2 = json_str(&body, "id");
+    let done2 = poll_done(addr, &id2);
+    assert!(done2.contains("\"cost_batches\":0"), "warm job hit the backend: {done2}");
+
+    let (status, _, body) = get(addr, "/cost-store/stat");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"schema\":\"serve/v1\"") && body.contains("\"rows\":"), "{body}");
+    assert!(!body.contains("\"rows\":0,"), "shared store stayed empty: {body}");
+
+    // cancelling a finished job is a conflict, not a state change
+    let req = format!("DELETE /campaigns/{id} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    let (status, _, _) = exchange(addr, req.as_bytes());
+    assert_eq!(status, 409);
+
+    // the job list shows both runs
+    let (_, _, list) = get(addr, "/campaigns");
+    assert!(list.contains("c0001") && list.contains(&id2), "{list}");
+
+    let (status, body) = post(addr, "/shutdown", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"stopping\":true"), "{body}");
+    daemon.join().unwrap().unwrap();
+
+    // the data dir holds everything a cold restart needs
+    let data = dir.join("data");
+    assert!(data.join("cost-store.jsonl").exists());
+    assert!(data.join("campaigns/c0001/spec.toml").exists());
+    assert!(data.join("campaigns/c0001/results.jsonl").exists());
+}
+
+#[test]
+fn daemon_recovers_registered_jobs_after_restart() {
+    let dir = tmp("serve_restart");
+    let artifacts = dir.join("artifacts");
+    std::fs::create_dir_all(&artifacts).unwrap();
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        data_dir: dir.join("data"),
+        artifacts: Some(artifacts),
+        status_history: 0,
+    };
+
+    let first = Server::bind(&opts).unwrap();
+    let addr = first.addr();
+    let daemon = std::thread::spawn(move || first.run());
+    let spec_toml = Campaign::new()
+        .benchmarks(["kmp"])
+        .scale(Scale::Tiny)
+        .sweep(Sweep::quick())
+        .into_spec()
+        .to_toml();
+    let (status, body) = post(addr, "/campaigns", &spec_toml);
+    assert_eq!(status, 202, "{body}");
+    let id = json_str(&body, "id");
+    poll_done(addr, &id);
+    let (status, _) = post(addr, "/shutdown", "");
+    assert_eq!(status, 200);
+    daemon.join().unwrap().unwrap();
+
+    // a fresh daemon over the same data dir re-registers the job and
+    // keeps numbering past it; history=0 → no ring file was written
+    let second = Server::bind(&opts).unwrap();
+    let addr = second.addr();
+    let daemon = std::thread::spawn(move || second.run());
+    let (status, _, body) = get(addr, &format!("/campaigns/{id}"));
+    assert_eq!(status, 200);
+    assert!(body.contains("\"state\":\"done\""), "{body}");
+    let (status, _, hist) = get(addr, &format!("/campaigns/{id}/status?history=1"));
+    assert_eq!(status, 200);
+    assert!(hist.is_empty(), "unexpected ring with history=0: {hist}");
+    let (status, body) = post(addr, "/campaigns", &spec_toml);
+    assert_eq!(status, 202, "{body}");
+    assert_eq!(json_str(&body, "id"), "c0002");
+    poll_done(addr, "c0002");
+    let (_, body) = post(addr, "/shutdown", "");
+    assert!(body.contains("stopping"));
+    daemon.join().unwrap().unwrap();
+}
