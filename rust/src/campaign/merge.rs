@@ -216,6 +216,7 @@ fn outcome(scale: Scale, explorations: Vec<Exploration>, resumed: usize) -> Camp
         explorations,
         simulated: 0,
         resumed,
+        points_per_s: 0.0,
         cost_batches: 0,
         cost: Default::default(),
     }

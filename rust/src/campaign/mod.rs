@@ -41,10 +41,15 @@
 //!    backend — a warmed re-run issues **zero** backend batches;
 //! 5. **compile** — one [`CompiledTrace`] per `(benchmark, word_bytes)`
 //!    group, shared by every model/knob variant in the group;
-//! 6. **simulate** — a single [`crate::util::pool::parallel_map_with`]
-//!    dispatch over the whole flat unit stream: workers steal across
-//!    benchmark boundaries (no per-benchmark barrier) and own one
-//!    [`SimArena`] each for the entire campaign;
+//! 6. **simulate** — units sharing a compiled-trace group and
+//!    `(unroll, alus)` knobs are bucketed into lane chunks of up to the
+//!    sweep's `lanes` (0 = auto) and scored through the lane-batched
+//!    engine ([`crate::sched::CompiledTrace::simulate_batch`]; scalar
+//!    for singleton chunks) in a single
+//!    [`crate::util::pool::parallel_map_with`] dispatch: workers steal
+//!    chunks across benchmark boundaries (no per-benchmark barrier) and
+//!    own one [`SimArena`] + [`BatchArena`] each for the entire
+//!    campaign;
 //! 7. **stream** — completed points flow through a reorder buffer to the
 //!    append-only JSONL [`sink`] in enumeration order (with optional
 //!    stderr progress/ETA lines, [`ExecOptions::progress`]), so the
@@ -68,7 +73,7 @@ use crate::explore::Exploration;
 use crate::locality;
 use crate::mem::MemDesign;
 use crate::report;
-use crate::sched::{CompiledTrace, SimArena};
+use crate::sched::{BatchArena, CompiledTrace, SimArena, SimOutput};
 use crate::spec::{CampaignSpec, Shard, ShardStrategy};
 use crate::suite::{self, Scale};
 use crate::util::{log, pool};
@@ -555,33 +560,81 @@ fn execute(
                 .expect("spawn campaign sink writer"),
         );
     }
-    let fresh: Vec<DesignPoint> =
-        pool::parallel_map_with(&units, threads, SimArena::new, |arena, u| {
+    // Lane-group the unit stream: units sharing a compiled-trace group
+    // and (unroll, alus) knobs form one batched engine call of up to
+    // `lanes` lanes (singletons take the scalar engine). Buckets key on
+    // identity, not contiguity, so resume/shard gaps never split a
+    // compatible set — and every unit keeps its `seq`, so the reorder
+    // buffer, sink byte-stability and resume semantics are untouched.
+    let lanes = dse::effective_lanes(spec.sweep.lanes);
+    let chunks: Vec<Vec<usize>> = {
+        let mut index: HashMap<(usize, u32, u32), usize> = HashMap::new();
+        let mut buckets: Vec<Vec<usize>> = Vec::new();
+        for (i, u) in units.iter().enumerate() {
+            let k = &points[u.point].knobs;
+            let b = *index.entry((u.group, k.unroll, k.alus)).or_insert_with(|| {
+                buckets.push(Vec::new());
+                buckets.len() - 1
+            });
+            buckets[b].push(i);
+        }
+        let mut chunks = Vec::new();
+        for b in buckets {
+            for c in b.chunks(lanes.max(1)) {
+                chunks.push(c.to_vec());
+            }
+        }
+        chunks
+    };
+    let sim_start = std::time::Instant::now();
+    let fresh: Vec<Vec<(usize, DesignPoint)>> = pool::parallel_map_with(
+        &chunks,
+        threads,
+        || (SimArena::new(), BatchArena::new()),
+        |(arena, batch), chunk| {
             if cancelled() {
-                // drain the remaining units without simulating or
+                // drain the remaining chunks without simulating or
                 // sending; every line already sent is a complete record,
                 // so the sink stays a valid resume journal
-                return DesignPoint::default();
+                return Vec::new();
             }
-            let knobs = &points[u.point].knobs;
-            let sim = groups[u.group].simulate(arena, knobs, &u.design);
-            let p = dse::point_from(&u.design.id, u.design.is_amm, knobs, sim);
-            if let Some(tx) = &tx {
-                let line = sink::record_line(&benches[u.bench].name, scale, &p);
-                let _ = tx.lock().expect("sink sender poisoned").send((u.seq, line));
-            }
-            p
-        });
+            let first = &units[chunk[0]];
+            let knobs = &points[first.point].knobs;
+            let sims: Vec<SimOutput> = if chunk.len() == 1 {
+                vec![groups[first.group].simulate(arena, knobs, &first.design)]
+            } else {
+                let designs: Vec<MemDesign> =
+                    chunk.iter().map(|&i| units[i].design.clone()).collect();
+                groups[first.group].simulate_batch(batch, knobs, &designs)
+            };
+            chunk
+                .iter()
+                .zip(sims)
+                .map(|(&i, sim)| {
+                    let u = &units[i];
+                    let p = dse::point_from(&u.design.id, u.design.is_amm, knobs, sim);
+                    if let Some(tx) = &tx {
+                        let line = sink::record_line(&benches[u.bench].name, scale, &p);
+                        let _ = tx.lock().expect("sink sender poisoned").send((u.seq, line));
+                    }
+                    (i, p)
+                })
+                .collect()
+        },
+    );
     drop(tx); // hang up so the writer drains and exits
     if let Some(j) = writer {
         j.join()
             .expect("campaign sink writer panicked")
             .map_err(|e| Error::io("write campaign sink", e))?;
     }
+    let sim_secs = sim_start.elapsed().as_secs_f64();
+    let points_per_s = if sim_secs > 0.0 { simulated as f64 / sim_secs } else { 0.0 };
     if cancelled() {
         return cancel_err();
     }
-    for (u, p) in units.iter().zip(fresh) {
+    for (i, p) in fresh.into_iter().flatten() {
+        let u = &units[i];
         results[u.bench][u.point] = Some(p);
     }
 
@@ -619,6 +672,7 @@ fn execute(
         explorations,
         simulated,
         resumed,
+        points_per_s,
         cost_batches: cost.batches,
         cost,
     })
@@ -756,6 +810,11 @@ pub struct CampaignOutcome {
     pub simulated: usize,
     /// Design points restored from the sink instead of re-simulated.
     pub resumed: usize,
+    /// Sustained simulation throughput: fresh points per second over
+    /// the simulate+stream stage's wall clock (0.0 when nothing was
+    /// simulated). The live (throttled) counterpart streams through the
+    /// `campaign-status/v1` sidecar while the run is in flight.
+    pub points_per_s: f64,
     /// Runtime-backend macro-cost batches issued by this campaign: 1
     /// when any macro shape had to be scored fresh, **0** when offline,
     /// fully resumed, or every shape was answered by the in-process

@@ -82,15 +82,16 @@ pub const DEFAULT_HISTORY: usize = 64;
 /// ```json
 /// {"schema":"campaign-status/v1","sink":"s0.jsonl","shard":"0/2",
 ///  "scale":"tiny","done":123,"total":456,"resumed":10,"eta_s":42.1,
-///  "cost_hits":5,"cost_misses":7,"cost_batches":1,
+///  "points_per_s":350.0,"cost_hits":5,"cost_misses":7,"cost_batches":1,
 ///  "complete":false,"updated_unix":1690000000}
 /// ```
 ///
 /// `done` counts points *persisted to the sink* (resumed + written in
 /// order), `total` the shard's whole plan, `eta_s` is `null` until the
-/// first completion and after the last, `shard` is `null` for
-/// unsharded runs. Best-effort: an unwritable status file warns once
-/// and never fails the campaign.
+/// first completion and after the last, `points_per_s` is the sustained
+/// fresh-simulation throughput (`null` until the first completion),
+/// `shard` is `null` for unsharded runs. Best-effort: an unwritable
+/// status file warns once and never fails the campaign.
 ///
 /// Alongside the last-write-wins sidecar, every *emitted* document is
 /// also appended to a bounded history ring at
@@ -188,6 +189,17 @@ impl StatusWriter {
         } else {
             "null".to_string()
         };
+        // Sustained fresh-simulation throughput since the stage started
+        // (null until the first completion lands) — the field serve
+        // fleets watch for live throughput regressions.
+        let points_per_s = {
+            let elapsed = self.start.elapsed().as_secs_f64();
+            if received > 0 && elapsed > 0.0 {
+                format!("{:.1}", received as f64 / elapsed)
+            } else {
+                "null".to_string()
+            }
+        };
         let shard = match &self.shard {
             Some(s) => format!("\"{}\"", escape(s)),
             None => "null".to_string(),
@@ -199,7 +211,7 @@ impl StatusWriter {
         let body = format!(
             concat!(
                 "{{\"schema\":\"{}\",\"sink\":\"{}\",\"shard\":{},\"scale\":\"{}\",",
-                "\"done\":{},\"total\":{},\"resumed\":{},\"eta_s\":{},",
+                "\"done\":{},\"total\":{},\"resumed\":{},\"eta_s\":{},\"points_per_s\":{},",
                 "\"cost_hits\":{},\"cost_misses\":{},\"cost_batches\":{},",
                 "\"complete\":{},\"updated_unix\":{}}}\n"
             ),
@@ -211,6 +223,7 @@ impl StatusWriter {
             total,
             self.resumed,
             eta,
+            points_per_s,
             self.cost_hits,
             self.cost_misses,
             self.cost_batches,

@@ -154,6 +154,10 @@ pub fn parse(text: &str) -> Result<RunConfig> {
             sweep.threads =
                 v.as_int().ok_or_else(|| Error::config("threads must be int"))? as usize;
         }
+        if let Some(v) = t.get("lanes") {
+            sweep.lanes =
+                v.as_int().ok_or_else(|| Error::config("lanes must be int"))? as usize;
+        }
     }
     let amms = doc.array_of("amm");
     if !amms.is_empty() {

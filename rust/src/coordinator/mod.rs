@@ -163,12 +163,13 @@ impl Coordinator {
         // 3. Schedule in parallel. The sweep's explicit thread request
         //    wins over the coordinator's default (lets Explorer::threads
         //    / config `threads = N` work through a shared coordinator
-        //    too). Scheduling runs on the compiled-trace engine: one
-        //    `CompiledTrace` per word-size group, one reusable
-        //    `SimArena` per worker thread.
+        //    too). Scheduling runs on the compiled-trace engines: one
+        //    `CompiledTrace` per word-size group, compatible points
+        //    lane-batched per the sweep's `lanes` knob, one reusable
+        //    arena pair per worker thread.
         let patched: Vec<(SweepPoint, MemDesign)> = points.into_iter().zip(designs).collect();
         let threads = if sweep.threads != 0 { sweep.threads } else { self.threads };
-        Ok(dse::evaluate_designs(trace, &patched, threads))
+        Ok(dse::evaluate_designs(trace, &patched, threads, sweep.lanes))
     }
 }
 

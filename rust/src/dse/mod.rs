@@ -11,7 +11,7 @@
 //!   "AMMs win below L_spatial ≈ 0.3" claim.
 
 use crate::mem::{self, MemDesign, MemKind, MemModel};
-use crate::sched::{self, CompiledTrace, DesignConfig, Knobs, SimArena, SimOutput};
+use crate::sched::{self, BatchArena, CompiledTrace, DesignConfig, Knobs, SimArena, SimOutput};
 use crate::trace::Trace;
 use crate::util::{pool, stats};
 use std::sync::Arc;
@@ -93,6 +93,13 @@ pub struct Sweep {
     pub extra_models: Vec<String>,
     /// Worker threads (0 = auto).
     pub threads: usize,
+    /// Simulation lanes per batched engine call (0 = auto, 1 = force
+    /// the scalar engine). Compatible points — same word size, unroll
+    /// and ALU count, memory designs varying — are scored together
+    /// through [`CompiledTrace::simulate_batch`] in groups of up to
+    /// this many lanes. Purely a scheduling knob: results are
+    /// bit-identical for every value.
+    pub lanes: usize,
 }
 
 impl Default for Sweep {
@@ -110,6 +117,7 @@ impl Default for Sweep {
             include_lvt: true,
             extra_models: Vec::new(),
             threads: 0,
+            lanes: 0,
         }
     }
 }
@@ -231,11 +239,26 @@ impl Sweep {
     }
 
     /// Run the sweep over a trace: word-size groups share one
-    /// [`CompiledTrace`], workers reuse one [`SimArena`] each, design
-    /// points are evaluated in parallel, results in enumeration order.
+    /// [`CompiledTrace`], compatible points run lane-batched, workers
+    /// reuse their arenas, results in enumeration order.
     pub fn run(&self, trace: &Trace) -> Vec<DesignPoint> {
         let threads = if self.threads == 0 { pool::default_threads() } else { self.threads };
-        run_points(trace, &self.points(), threads)
+        run_points(trace, &self.points(), threads, self.lanes)
+    }
+}
+
+/// Default lane width for the batched engine when `lanes = 0` (auto):
+/// wide enough to amortize the shared trace pass, small enough that a
+/// lane-major arena stays cache-resident per worker.
+pub const AUTO_LANES: usize = 8;
+
+/// Resolve a `lanes` knob: 0 = auto ([`AUTO_LANES`]), anything else is
+/// taken literally (1 forces the scalar engine).
+pub fn effective_lanes(lanes: usize) -> usize {
+    if lanes == 0 {
+        AUTO_LANES
+    } else {
+        lanes
     }
 }
 
@@ -272,47 +295,115 @@ pub fn build_designs(trace: &Trace, points: &[SweepPoint]) -> Vec<MemDesign> {
 /// Evaluate enumerated sweep points with the compiled-trace engine:
 /// designs from [`build_designs`], scheduling through
 /// [`evaluate_designs`]. Output order matches `points`.
-pub fn run_points(trace: &Trace, points: &[SweepPoint], threads: usize) -> Vec<DesignPoint> {
+pub fn run_points(
+    trace: &Trace,
+    points: &[SweepPoint],
+    threads: usize,
+    lanes: usize,
+) -> Vec<DesignPoint> {
     let designs = build_designs(trace, points);
     let work: Vec<(SweepPoint, MemDesign)> = points.iter().cloned().zip(designs).collect();
-    evaluate_designs(trace, &work, threads)
+    evaluate_designs(trace, &work, threads, lanes)
+}
+
+/// Partition one word-size group into lane chunks: indices (into the
+/// group) of points sharing `(unroll, alus)`, bucketed in first-seen
+/// order and split to at most `lanes` per chunk. [`Sweep::points`] puts
+/// the model axis *outside* the knob axes, so one knob combination
+/// recurs once per model at a fixed stride — the buckets gather those
+/// recurrences into maximal compatible lane sets. Scattering results
+/// back through the indices restores exact enumeration order.
+fn lane_chunks(group: &[(SweepPoint, MemDesign)], lanes: usize) -> Vec<Vec<usize>> {
+    let lanes = lanes.max(1);
+    let mut buckets: Vec<((u32, u32), Vec<usize>)> = Vec::new();
+    for (i, (p, _)) in group.iter().enumerate() {
+        let key = (p.knobs.unroll, p.knobs.alus);
+        match buckets.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(i),
+            None => buckets.push((key, vec![i])),
+        }
+    }
+    let mut chunks = Vec::new();
+    for (_, idxs) in buckets {
+        for c in idxs.chunks(lanes) {
+            chunks.push(c.to_vec());
+        }
+    }
+    chunks
+}
+
+/// Score one lane chunk: the batched engine for real lane groups, the
+/// scalar engine for singletons (a one-lane batch would pay lane-arena
+/// setup for zero sharing). Returns points in chunk order.
+fn evaluate_chunk(
+    compiled: &CompiledTrace<'_>,
+    group: &[(SweepPoint, MemDesign)],
+    chunk: &[usize],
+    arena: &mut SimArena,
+    batch: &mut BatchArena,
+) -> Vec<DesignPoint> {
+    let knobs = group[chunk[0]].0.knobs;
+    if chunk.len() == 1 {
+        let (p, design) = &group[chunk[0]];
+        let sim = compiled.simulate(arena, &p.knobs, design);
+        return vec![point_from(&design.id, design.is_amm, &p.knobs, sim)];
+    }
+    let designs: Vec<MemDesign> = chunk.iter().map(|&i| group[i].1.clone()).collect();
+    let sims = compiled.simulate_batch(batch, &knobs, &designs);
+    chunk
+        .iter()
+        .zip(sims)
+        .map(|(&i, sim)| {
+            let (p, design) = &group[i];
+            point_from(&design.id, design.is_amm, &p.knobs, sim)
+        })
+        .collect()
 }
 
 /// Evaluate pre-built `(point, design)` pairs with the compiled-trace
-/// engine: consecutive pairs sharing a `word_bytes` form one group, the
-/// trace compiles once per group (word size is [`Sweep::points`]'
-/// outermost axis, so each size compiles exactly once), and every
-/// [`crate::util::pool::parallel_map_with`] worker reuses one
-/// [`SimArena`] across its whole slice of the group (arenas and worker
-/// threads are per group, so a sweep allocates `threads` arenas per
-/// word size — not per point). This is the single grouped
-/// dispatcher — [`run_points`] feeds it freshly built designs, the
-/// [`crate::coordinator`] feeds it cost-patched ones. Output order
-/// matches the input.
+/// engines: consecutive pairs sharing a `word_bytes` form one group,
+/// the trace compiles once per group (word size is [`Sweep::points`]'
+/// outermost axis, so each size compiles exactly once), the group is
+/// split into compatible lane chunks ([`lane_chunks`]) scored through
+/// [`CompiledTrace::simulate_batch`] — scalar for singletons — and
+/// every [`crate::util::pool::parallel_map_with`] worker reuses one
+/// [`SimArena`] + [`BatchArena`] across its whole slice of the group.
+/// This is the single grouped dispatcher — [`run_points`] feeds it
+/// freshly built designs, the [`crate::coordinator`] feeds it
+/// cost-patched ones. Output order matches the input for every `lanes`
+/// value, and so do the output bytes (the engines are bit-identical).
 pub fn evaluate_designs(
     trace: &Trace,
     work: &[(SweepPoint, MemDesign)],
     threads: usize,
+    lanes: usize,
 ) -> Vec<DesignPoint> {
-    let mut out = Vec::with_capacity(work.len());
+    let lanes = effective_lanes(lanes);
+    let mut out: Vec<Option<DesignPoint>> = Vec::with_capacity(work.len());
+    out.resize_with(work.len(), || None);
     let mut start = 0;
     while start < work.len() {
         let wb = work[start].0.knobs.word_bytes;
         let end = start
             + work[start..].iter().take_while(|(p, _)| p.knobs.word_bytes == wb).count();
+        let group = &work[start..end];
         let compiled = CompiledTrace::new(trace, wb);
-        out.extend(pool::parallel_map_with(
-            &work[start..end],
+        let chunks = lane_chunks(group, lanes);
+        let scored = pool::parallel_map_with(
+            &chunks,
             threads,
-            SimArena::new,
-            |arena, (p, design)| {
-                let sim = compiled.simulate(arena, &p.knobs, design);
-                point_from(&design.id, design.is_amm, &p.knobs, sim)
+            || (SimArena::new(), BatchArena::new()),
+            |(arena, batch), chunk| {
+                let points = evaluate_chunk(&compiled, group, chunk, arena, batch);
+                chunk.iter().copied().zip(points).collect::<Vec<(usize, DesignPoint)>>()
             },
-        ));
+        );
+        for (i, p) in scored.into_iter().flatten() {
+            out[start + i] = Some(p);
+        }
         start = end;
     }
-    out
+    out.into_iter().map(|p| p.expect("every sweep point scored exactly once")).collect()
 }
 
 /// Evaluate a single design point (compat wrapper over the model path).

@@ -96,7 +96,8 @@ USAGE:
   repro synth-table
   repro port-scaling
   repro perf-smoke [--out BENCH_sweep.json] [--campaign-out BENCH_campaign.json]
-                   [--iters N] [--min-speedup X] [--min-campaign-speedup X]
+                   [--batch-out BENCH_batch.json] [--iters N] [--min-speedup X]
+                   [--min-campaign-speedup X] [--min-batch-speedup X]
 
 `run` is the canonical campaign verb: the config file (single-benchmark
 or `[campaign]`-table form, see configs/suite.toml) lowers to one
@@ -415,11 +416,12 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     let outcome = campaign::run(&spec, &opts)?;
     if !quiet {
         eprintln!(
-            "campaign: {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s), {} miss(es))",
+            "campaign: {} points ({} simulated, {} resumed) in {:.2?} ({:.0} points/s sustained, cost backend {}, {} cost batch(es), {} hit(s), {} miss(es))",
             outcome.total_points(),
             outcome.simulated,
             outcome.resumed,
             t0.elapsed(),
+            outcome.points_per_s,
             outcome.backend_label(),
             outcome.cost.batches,
             outcome.cost.hits(),
@@ -871,14 +873,20 @@ fn cmd_synth_table() -> Result<()> {
     Ok(())
 }
 
-/// CI perf smoke (no `cargo bench` needed), two sections:
+/// CI perf smoke (no `cargo bench` needed), three sections:
 ///
 /// 1. **sweep engine** — time the quick sweep on gemm/fft through the
 ///    per-point compat path (fresh `CompiledTrace` + `SimArena` per
-///    design point) and through the grouped engine; write points/sec +
-///    wall ms to `BENCH_sweep.json`. Single-threaded on both sides so
-///    the ratio measures the engine, not the pool.
-/// 2. **campaign** — run the whole 13-benchmark suite × quick sweep as
+///    design point) and through the grouped lane-batched engine; write
+///    points/sec + wall ms to `BENCH_sweep.json`. Single-threaded on
+///    both sides so the ratio measures the engine, not the pool.
+/// 2. **batch lanes** — same quick sweep through the grouped dispatcher
+///    with `lanes = 1` (scalar engine per point) and `lanes = auto`
+///    (lane-batched kernel); write lanes used, points/sec and the
+///    batch-vs-scalar-engine speedup to `BENCH_batch.json`. This
+///    isolates the lane kernel's contribution from the grouping wins
+///    section 1 already had.
+/// 3. **campaign** — run the whole 13-benchmark suite × quick sweep as
 ///    sequential per-benchmark `Explorer` runs and as one `Campaign`
 ///    (shared coordinator on both sides), and write suite points/sec +
 ///    campaign-vs-sequential speedup to `BENCH_campaign.json`.
@@ -886,22 +894,35 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     use amm_dse::util::benchkit::Bench;
     let args = parse_args(
         rest,
-        &["--out", "--campaign-out", "--iters", "--min-speedup", "--min-campaign-speedup"],
+        &[
+            "--out",
+            "--campaign-out",
+            "--batch-out",
+            "--iters",
+            "--min-speedup",
+            "--min-campaign-speedup",
+            "--min-batch-speedup",
+        ],
         &[],
     )?;
     let out_path = args.get("--out").unwrap_or("BENCH_sweep.json").to_string();
     let campaign_out = args.get("--campaign-out").unwrap_or("BENCH_campaign.json").to_string();
+    let batch_out = args.get("--batch-out").unwrap_or("BENCH_batch.json").to_string();
     let iters = args.u32_or("--iters", 7)? as usize;
     // Regression gate: fail if any benchmark's engine speedup drops
-    // below this (0 = report only). CI gates with a noise margin below
-    // 1.0 (Tiny-scale iterations are microseconds, shared runners are
-    // jittery) so only a real engine regression goes red; the >= 1.5x
-    // target stays visible in the JSON trajectory.
+    // below this (0 = report only). With the lane-batched kernel on the
+    // engine side the observed floor is well above the old 0.8x noise
+    // gate, so CI now holds 1.2x (the >= 2x points/sec target stays
+    // visible in the JSON trajectory).
     let min_speedup = args.f64_or("--min-speedup", 0.0)?;
     // Same shape for the campaign section (0 = report only): campaign
     // wall time includes workload/locality planning, so the gate exists
     // for local use while CI keeps it advisory.
     let min_campaign_speedup = args.f64_or("--min-campaign-speedup", 0.0)?;
+    // Gate for the batch-vs-scalar-engine section (0 = report only):
+    // both sides share grouping/arena wins, so this is a pure kernel
+    // ratio — CI holds a conservative floor above 1.0x.
+    let min_batch_speedup = args.f64_or("--min-batch-speedup", 0.0)?;
     let sweep = Sweep::quick();
     let mut rows = Vec::new();
     let mut worst = f64::INFINITY;
@@ -916,8 +937,11 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
                 .map(|p| dse::evaluate_model(&wl.trace, &*p.model, &p.knobs).out.cycles)
                 .fold(0u64, u64::wrapping_add)
         });
+        // Engine side runs with auto lanes — this row now carries the
+        // lane-batched kernel, so its points/sec step vs the per-point
+        // baseline is the headline number the CI gate ratchets on.
         bench.run(&format!("sweep/{name}/engine"), Some(n_points), || {
-            dse::run_points(&wl.trace, &points, 1)
+            dse::run_points(&wl.trace, &points, 1, 0)
                 .iter()
                 .map(|p| p.out.cycles)
                 .fold(0u64, u64::wrapping_add)
@@ -955,6 +979,70 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     report::write_file(Path::new(&out_path), &json)
         .map_err(|e| Error::io(format!("write {out_path}"), e))?;
     println!("wrote {out_path}");
+
+    // --- batch lanes: lane kernel vs scalar engine, same dispatcher ---
+    // Both sides go through the grouped dispatcher (shared trace
+    // compile, shared arenas), so the only variable is lanes=1 (scalar
+    // oracle per point) vs lanes=auto (lane-batched kernel). The ratio
+    // is therefore the kernel's own contribution, independent of the
+    // grouping wins the sweep section measures.
+    let lanes = dse::effective_lanes(0);
+    let mut brows = Vec::new();
+    let mut bworst = f64::INFINITY;
+    for name in ["gemm", "fft"] {
+        let wl = suite::generate_cached(name, Scale::Tiny);
+        let points = sweep.points();
+        let n_points = points.len() as u64;
+        let mut bench = Bench::new(iters, 2);
+        bench.run(&format!("batch/{name}/scalar"), Some(n_points), || {
+            dse::run_points(&wl.trace, &points, 1, 1)
+                .iter()
+                .map(|p| p.out.cycles)
+                .fold(0u64, u64::wrapping_add)
+        });
+        bench.run(&format!("batch/{name}/lanes"), Some(n_points), || {
+            dse::run_points(&wl.trace, &points, 1, 0)
+                .iter()
+                .map(|p| p.out.cycles)
+                .fold(0u64, u64::wrapping_add)
+        });
+        let rs = bench.results();
+        let (scalar, batched) = (&rs[0], &rs[1]);
+        let speedup = scalar.median_ns() / batched.median_ns();
+        brows.push(format!(
+            concat!(
+                "    {{\"benchmark\": \"{}\", \"points\": {}, \"lanes\": {}, ",
+                "\"scalar_wall_ms\": {:.4}, \"batch_wall_ms\": {:.4}, ",
+                "\"scalar_points_per_s\": {:.1}, \"batch_points_per_s\": {:.1}, ",
+                "\"speedup\": {:.3}}}"
+            ),
+            name,
+            n_points,
+            lanes,
+            scalar.median_ns() / 1e6,
+            batched.median_ns() / 1e6,
+            scalar.items_per_s().unwrap_or(0.0),
+            batched.items_per_s().unwrap_or(0.0),
+            speedup,
+        ));
+        println!(
+            "perf-smoke {name}: batch kernel {speedup:.2}x points/sec vs scalar engine ({lanes} lanes)"
+        );
+        bworst = bworst.min(speedup);
+    }
+    let bjson = format!(
+        concat!(
+            "{{\n  \"schema\": \"bench_batch/v1\",\n  \"sweep\": \"quick\",\n",
+            "  \"scale\": \"tiny\",\n  \"threads\": 1,\n  \"lanes\": {},\n",
+            "  \"iters\": {},\n  \"results\": [\n{}\n  ]\n}}\n"
+        ),
+        lanes,
+        iters,
+        brows.join(",\n")
+    );
+    report::write_file(Path::new(&batch_out), &bjson)
+        .map_err(|e| Error::io(format!("write {batch_out}"), e))?;
+    println!("wrote {batch_out}");
 
     // --- campaign throughput: suite × quick sweep, one work stream ----
     // Sequential baseline = per-benchmark Explorer runs; campaign = one
@@ -1029,6 +1117,11 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     if min_speedup > 0.0 && worst < min_speedup {
         return Err(Error::msg(format!(
             "perf-smoke: worst engine speedup {worst:.3}x is below the required {min_speedup}x"
+        )));
+    }
+    if min_batch_speedup > 0.0 && bworst < min_batch_speedup {
+        return Err(Error::msg(format!(
+            "perf-smoke: worst batch speedup {bworst:.3}x is below the required {min_batch_speedup}x"
         )));
     }
     if min_campaign_speedup > 0.0 && campaign_speedup < min_campaign_speedup {

@@ -1,0 +1,610 @@
+//! Lane-batched simulation engine — layer 4 of the scheduler stack.
+//!
+//! A DSE sweep scores the *same* compiled trace against many memory
+//! designs whose only differences are port counts, bank maps and access
+//! costs. The scalar engine walks the full trace once per design point,
+//! so a sweep re-traverses identical successor lists and re-pops
+//! identical ready events for every point.
+//! [`CompiledTrace::simulate_batch`] instead schedules up to L
+//! *compatible* design points (same trace, same `word_bytes`; knobs
+//! shared, ports/banking/model varying per lane) in ONE pass: the
+//! trace-shaped work — iteration gates ([`BatchArena::gates`] is
+//! computed once per call), node classes, sub-word decomposition,
+//! successor lists — is shared across lanes marching in cache-friendly
+//! lockstep, while the design-dependent port-arbitration step
+//! ([`CompiledTrace::try_mem`]) diverges per lane.
+//!
+//! The per-lane event machinery also drops the scalar engine's five
+//! `BinaryHeap`s for [`ReadyQ`]s — cycle-indexed ready queues whose
+//! common case (a successor becoming ready at the cycle being retired)
+//! is an O(1) push and whose pops come off a pre-sorted list, reserving
+//! the heap for the rare far-future iteration-gate events.
+//!
+//! **Bit-identity contract**: every lane must produce the exact
+//! [`SimOutput`] the scalar [`CompiledTrace::simulate`] produces for
+//! that design (`PartialEq`, no tolerance) — the scalar engine stays
+//! the oracle. Each lane therefore runs the scalar state machine
+//! unmodified: a lane is stepped only at the cycles its own advance
+//! rule would visit (skipped cycles touch no lane state, so skipping is
+//! exact), every step executes the scalar phase order — retire, reg
+//! drain, FU issue, memory issue, advance — and the port arbitration
+//! and physical composition are the *same functions* the scalar engine
+//! calls ([`CompiledTrace::try_mem`] /
+//! [`CompiledTrace::compose_output`]). The [`ReadyQ`] preserves the
+//! heaps' exact `(ready_cycle, node)` pop order (keys are unique per
+//! queue, so heap order is fully determined by the key set).
+//! `tests/engine_golden.rs` pins the contract across all suite
+//! benchmarks × mixed model families; `tests/sched_props.rs` fuzzes it
+//! over random traces × random lane mixes.
+
+use super::arena::{Heap, RING};
+use super::compile::{Accum, CompiledTrace, MemIssue, NodeClass, PortCfg};
+use super::{Knobs, SimOutput};
+use crate::mem::MemDesign;
+use crate::trace::OpKind;
+use std::cmp::Reverse;
+use std::collections::VecDeque;
+
+/// A cycle-aware ready queue with the scalar heap's exact pop order —
+/// ascending `(ready_cycle, node)` — but O(1) for the dominant flows:
+/// same-cycle wakeups append to a scratch list and pops read a
+/// pre-sorted deque; only far-future events (iteration gates ahead of
+/// the clock) pay heap costs.
+///
+/// Ordering invariant for `due`: leftover entries (ready at some
+/// earlier visited cycle) precede newly matured ones (which mature in
+/// ascending heap order at strictly later cycles), so `due` is always
+/// sorted by `(ready_cycle, node)` and `pop_due` replays the heap's
+/// order exactly.
+struct ReadyQ {
+    /// Events ready at or before the last synced cycle, in pop order.
+    due: VecDeque<(u64, u32)>,
+    /// Events pushed at exactly the cycle being processed (a successor
+    /// freed by a completion this cycle — the common case).
+    today: Vec<u32>,
+    /// Far events, keyed `(ready_cycle, node)` like the scalar heaps.
+    fut: Heap,
+    /// Scratch: heap events maturing exactly at the syncing cycle.
+    tmp: Vec<u32>,
+    /// Total queued events across `due`/`today`/`fut`.
+    len: usize,
+}
+
+impl ReadyQ {
+    fn new() -> ReadyQ {
+        ReadyQ {
+            due: VecDeque::new(),
+            today: Vec::new(),
+            fut: Heap::new(),
+            tmp: Vec::new(),
+            len: 0,
+        }
+    }
+
+    fn clear(&mut self) {
+        self.due.clear();
+        self.today.clear();
+        self.fut.clear();
+        self.tmp.clear();
+        self.len = 0;
+    }
+
+    /// Queue `nid` to become ready at cycle `at` (`at >= now` always:
+    /// seed and retire pushes never target the past).
+    #[inline]
+    fn push(&mut self, at: u64, now: u64, nid: u32) {
+        if at <= now {
+            self.today.push(nid);
+        } else {
+            self.fut.push(Reverse((at, nid)));
+        }
+        self.len += 1;
+    }
+
+    /// Fold matured events into `due`, preserving `(cycle, node)`
+    /// order. Called once per visited cycle, after the retire phase
+    /// (the only pusher) and before any pop.
+    fn sync(&mut self, now: u64) {
+        if self.len == 0 {
+            return;
+        }
+        while let Some(&Reverse((rc, _))) = self.fut.peek() {
+            if rc > now {
+                break;
+            }
+            let Reverse((rc, nid)) = self.fut.pop().unwrap();
+            if rc < now {
+                // matured between visits: pops ascending, all later than
+                // any leftover already in `due`
+                self.due.push_back((rc, nid));
+            } else {
+                self.tmp.push(nid);
+            }
+        }
+        if self.today.is_empty() && self.tmp.is_empty() {
+            return;
+        }
+        // merge the two node-ascending runs ready at exactly `now` (a
+        // node is queued at most once, so the runs never share an id)
+        self.today.sort_unstable();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.tmp.len() && j < self.today.len() {
+            if self.tmp[i] < self.today[j] {
+                self.due.push_back((now, self.tmp[i]));
+                i += 1;
+            } else {
+                self.due.push_back((now, self.today[j]));
+                j += 1;
+            }
+        }
+        for &nid in &self.tmp[i..] {
+            self.due.push_back((now, nid));
+        }
+        for &nid in &self.today[j..] {
+            self.due.push_back((now, nid));
+        }
+        self.tmp.clear();
+        self.today.clear();
+    }
+
+    /// Pop the next matured event (everything in `due` is ready at the
+    /// current cycle by construction).
+    #[inline]
+    fn pop_due(&mut self) -> Option<(u64, u32)> {
+        let e = self.due.pop_front()?;
+        self.len -= 1;
+        Some(e)
+    }
+
+    /// Re-queue a popped-but-stalled op under its ORIGINAL key. It was
+    /// the queue minimum when popped, so the front keeps exact order —
+    /// the scalar engine's `push(Reverse((rc0, nid)))` equivalent.
+    #[inline]
+    fn requeue_front(&mut self, rc0: u64, nid: u32) {
+        self.due.push_front((rc0, nid));
+        self.len += 1;
+    }
+
+    /// Earliest queued event, `u64::MAX` when empty — the scalar
+    /// engine's heap peek for the advance step. (`today` is always
+    /// empty by advance time: only the retire phase feeds it and `sync`
+    /// drains it.)
+    #[inline]
+    fn next_at(&self) -> u64 {
+        let d = self.due.front().map_or(u64::MAX, |&(rc, _)| rc);
+        let f = self.fut.peek().map_or(u64::MAX, |&Reverse((rc, _))| rc);
+        d.min(f)
+    }
+}
+
+/// The five per-class ready queues of one lane (mirrors `SimArena`'s
+/// heap quintet; which memory queue is live depends on the lane's
+/// banked-vs-true-port split).
+struct ReadySet {
+    reg: ReadyQ,
+    alu: ReadyQ,
+    mem: ReadyQ,
+    rd: ReadyQ,
+    wr: ReadyQ,
+}
+
+impl ReadySet {
+    fn new() -> ReadySet {
+        ReadySet {
+            reg: ReadyQ::new(),
+            alu: ReadyQ::new(),
+            mem: ReadyQ::new(),
+            rd: ReadyQ::new(),
+            wr: ReadyQ::new(),
+        }
+    }
+
+    fn clear(&mut self) {
+        self.reg.clear();
+        self.alu.clear();
+        self.mem.clear();
+        self.rd.clear();
+        self.wr.clear();
+    }
+
+    /// Route one ready node to its class queue — the scalar engine's
+    /// `push_ready!` with the per-lane port split made explicit.
+    #[inline]
+    fn push(&mut self, class: NodeClass, per_bank: bool, nid: u32, at: u64, now: u64) {
+        match class {
+            NodeClass::Alu => self.alu.push(at, now, nid),
+            NodeClass::Reg => self.reg.push(at, now, nid),
+            NodeClass::Load => {
+                if per_bank {
+                    self.mem.push(at, now, nid);
+                } else {
+                    self.rd.push(at, now, nid);
+                }
+            }
+            NodeClass::Store => {
+                if per_bank {
+                    self.mem.push(at, now, nid);
+                } else {
+                    self.wr.push(at, now, nid);
+                }
+            }
+        }
+    }
+
+    fn sync(&mut self, now: u64) {
+        self.reg.sync(now);
+        self.alu.sync(now);
+        self.mem.sync(now);
+        self.rd.sync(now);
+        self.wr.sync(now);
+    }
+
+    /// Earliest ready event across every queue.
+    fn next_at(&self) -> u64 {
+        self.reg
+            .next_at()
+            .min(self.alu.next_at())
+            .min(self.mem.next_at())
+            .min(self.rd.next_at())
+            .min(self.wr.next_at())
+    }
+}
+
+/// One lane's private scheduling state: everything of the scalar
+/// engine's per-run state that is design-dependent. The trace-shaped
+/// halves (`remaining`, `subs_left`, iteration gates) live lane-major
+/// in the [`BatchArena`].
+struct Lane {
+    ready: ReadySet,
+    /// Completion ring, `RING` slots indexed `cycle % RING` (same
+    /// schema as `SimArena::ring`, but per lane — each lane's retire
+    /// set and ring scan must match its own scalar run exactly).
+    ring: Vec<Vec<u32>>,
+    ring_pending: usize,
+    retire_buf: Vec<u32>,
+    used_rd: Vec<u32>,
+    used_wr: Vec<u32>,
+    cfg: PortCfg,
+    acc: Accum,
+    /// Last cycle this lane was stepped at (the scalar engine's clock).
+    cycle: u64,
+    /// Next cycle this lane's advance rule wants to visit.
+    next_visit: u64,
+    done: usize,
+    finished: bool,
+}
+
+impl Lane {
+    fn new() -> Lane {
+        Lane {
+            ready: ReadySet::new(),
+            ring: vec![Vec::new(); RING],
+            ring_pending: 0,
+            retire_buf: Vec::new(),
+            used_rd: Vec::new(),
+            used_wr: Vec::new(),
+            cfg: PortCfg::default(),
+            acc: Accum::default(),
+            cycle: 0,
+            next_visit: 0,
+            done: 0,
+            finished: false,
+        }
+    }
+
+    /// Re-arm for a new batch, keeping allocations (dirty reuse across
+    /// traces and lane mixes is part of the contract, like
+    /// `SimArena::reset`).
+    fn reset(&mut self) {
+        self.ready.clear();
+        for slot in &mut self.ring {
+            slot.clear();
+        }
+        self.ring_pending = 0;
+        self.retire_buf.clear();
+        self.acc = Accum::default();
+        self.cycle = 0;
+        self.next_visit = 0;
+        self.done = 0;
+        self.finished = false;
+    }
+
+    /// Run ONE cycle of this lane's scalar state machine — the exact
+    /// phase order of `CompiledTrace::simulate` — then compute the
+    /// lane's next visit cycle via the scalar advance rule. Marks the
+    /// lane finished when its DDG drains (or when no events remain).
+    fn step(
+        &mut self,
+        ct: &CompiledTrace<'_>,
+        gates: &[u64],
+        rem: &mut [u32],
+        subs: &mut [u32],
+        alus: u32,
+        now: u64,
+    ) {
+        let Lane {
+            ready,
+            ring,
+            ring_pending,
+            retire_buf,
+            used_rd,
+            used_wr,
+            cfg,
+            acc,
+            cycle,
+            next_visit,
+            done,
+            finished,
+        } = self;
+        let cfg = *cfg;
+        *cycle = now;
+        let n = ct.trace.len();
+
+        // retire completions for this cycle
+        let slot = (now % RING as u64) as usize;
+        if !ring[slot].is_empty() {
+            retire_buf.clear();
+            retire_buf.append(&mut ring[slot]);
+            *ring_pending -= retire_buf.len();
+            *done += retire_buf.len();
+            for &node in retire_buf.iter() {
+                for &s in ct.trace.successors(node) {
+                    rem[s as usize] -= 1;
+                    if rem[s as usize] == 0 {
+                        // producer completes at the start of this cycle,
+                        // so the consumer may issue this cycle
+                        let si = s as usize;
+                        ready.push(ct.class[si], cfg.per_bank, s, gates[si].max(now), now);
+                    }
+                }
+            }
+        }
+        ready.sync(now);
+
+        macro_rules! complete_at {
+            ($cycle:expr, $nid:expr) => {{
+                ring[($cycle % RING as u64) as usize].push($nid);
+                *ring_pending += 1;
+            }};
+        }
+
+        // reset per-cycle port + FU counters
+        let mut st = MemIssue {
+            used_rd: used_rd.as_mut_slice(),
+            used_wr: used_wr.as_mut_slice(),
+            subs_left: subs,
+            n_reads: &mut acc.n_reads,
+            n_writes: &mut acc.n_writes,
+            port_stalls: &mut acc.port_stalls,
+            issued_mem: &mut acc.issued_mem,
+        };
+        for c in st.used_rd.iter_mut() {
+            *c = 0;
+        }
+        for c in st.used_wr.iter_mut() {
+            *c = 0;
+        }
+        let mut alu_slots = alus;
+        let mut had_mem_stall = false;
+
+        // register-promoted accesses are free: drain them all
+        while let Some((_, nid)) = ready.reg.pop_due() {
+            *st.issued_mem += 1;
+            acc.n_reg += 1;
+            complete_at!(now + 1, nid);
+        }
+
+        // FU issue: stop the moment slots run out
+        while alu_slots > 0 {
+            let Some((_, nid)) = ready.alu.pop_due() else { break };
+            let OpKind::Alu(kind) = ct.trace.nodes[nid as usize].kind else { unreachable!() };
+            alu_slots -= 1;
+            acc.n_alu_energy += kind.energy_pj() as f64;
+            complete_at!(now + kind.latency() as u64, nid);
+        }
+
+        if cfg.per_bank {
+            // banked: in-order issue, first conflict stalls the rest
+            while let Some((rc0, nid)) = ready.mem.pop_due() {
+                let left = ct.try_mem(nid, &cfg, &mut st);
+                if left > 0 {
+                    had_mem_stall = true;
+                    ready.mem.requeue_front(rc0, nid);
+                    break;
+                }
+                complete_at!(now + 1, nid);
+            }
+        } else {
+            // true multi-port: reads and writes issue independently
+            while st.used_rd[0] < cfg.rd_ports {
+                let Some((rc0, nid)) = ready.rd.pop_due() else { break };
+                let left = ct.try_mem(nid, &cfg, &mut st);
+                if left > 0 {
+                    had_mem_stall = true;
+                    ready.rd.requeue_front(rc0, nid);
+                    break;
+                }
+                complete_at!(now + 1, nid);
+            }
+            while st.used_wr[0] < cfg.wr_ports {
+                let Some((rc0, nid)) = ready.wr.pop_due() else { break };
+                let left = ct.try_mem(nid, &cfg, &mut st);
+                if left > 0 {
+                    had_mem_stall = true;
+                    ready.wr.requeue_front(rc0, nid);
+                    break;
+                }
+                complete_at!(now + 1, nid);
+            }
+        }
+        if had_mem_stall {
+            acc.stall_cycles += 1;
+        }
+
+        // advance to this lane's next event
+        let mut next = ready.next_at();
+        if *ring_pending > 0 {
+            for d in 1..=RING as u64 {
+                if !ring[((now + d) % RING as u64) as usize].is_empty() {
+                    next = next.min(now + d);
+                    break;
+                }
+            }
+        }
+        if *done >= n || next == u64::MAX {
+            *finished = true;
+        } else {
+            *next_visit = next.max(now + 1);
+        }
+    }
+}
+
+/// Struct-of-arrays scratch state for [`CompiledTrace::simulate_batch`]:
+/// the trace-shaped counters are lane-major flat vectors (lane `l` owns
+/// `[l*n, (l+1)*n)`), the iteration gates are computed once and shared
+/// by every lane, and the design-dependent event state is per [`Lane`].
+/// Like `SimArena`, an arena may be dirty from ANY previous batch —
+/// `simulate_batch` resets it allocation-preservingly.
+pub struct BatchArena {
+    lanes: Vec<Lane>,
+    /// Lane-major unsatisfied-predecessor counts.
+    remaining: Vec<u32>,
+    /// Lane-major outstanding sub-word accesses per node.
+    subs_left: Vec<u32>,
+    /// Shared per-batch iteration gates: `node.iter / unroll`, computed
+    /// once for all lanes (knobs are batch-uniform).
+    gates: Vec<u64>,
+}
+
+impl BatchArena {
+    /// A fresh (empty) arena; lanes and counters are sized lazily by
+    /// the first `simulate_batch` call.
+    pub fn new() -> BatchArena {
+        BatchArena {
+            lanes: Vec::new(),
+            remaining: Vec::new(),
+            subs_left: Vec::new(),
+            gates: Vec::new(),
+        }
+    }
+
+    /// Re-arm for `lanes` lanes over `ct`, keeping allocations.
+    fn reset(&mut self, ct: &CompiledTrace<'_>, unroll: u32, lanes: usize) {
+        if self.lanes.len() < lanes {
+            self.lanes.resize_with(lanes, Lane::new);
+        }
+        self.gates.clear();
+        self.gates.extend(ct.trace.nodes.iter().map(|nd| (nd.iter / unroll) as u64));
+        self.remaining.clear();
+        self.subs_left.clear();
+        for _ in 0..lanes {
+            self.remaining.extend_from_slice(&ct.trace.pred_count);
+            self.subs_left.extend_from_slice(&ct.subs_init);
+        }
+        for lane in &mut self.lanes[..lanes] {
+            lane.reset();
+        }
+    }
+}
+
+impl Default for BatchArena {
+    fn default() -> Self {
+        BatchArena::new()
+    }
+}
+
+impl<'t> CompiledTrace<'t> {
+    /// Schedule up to L compatible design points in one pass over the
+    /// trace: `designs[l]` becomes lane `l`, and the result vector
+    /// matches the input order. All lanes share this compiled trace and
+    /// `knobs` (`knobs.word_bytes` must match the compiled word size);
+    /// ports, banking and model vary freely per lane.
+    ///
+    /// Bit-identical to running [`CompiledTrace::simulate`] per design:
+    /// each lane advances by its own scalar event rule on a global
+    /// lockstep clock (the global cycle is the min over active lanes'
+    /// next events, and only lanes due at that cycle are stepped — a
+    /// skipped cycle would have been a no-op for the lane anyway).
+    pub fn simulate_batch(
+        &self,
+        arena: &mut BatchArena,
+        knobs: &Knobs,
+        designs: &[MemDesign],
+    ) -> Vec<SimOutput> {
+        debug_assert_eq!(
+            knobs.word_bytes.max(1),
+            self.word_bytes,
+            "CompiledTrace built for word_bytes={}, knobs ask {}",
+            self.word_bytes,
+            knobs.word_bytes
+        );
+        let lanes = designs.len();
+        if lanes == 0 {
+            return Vec::new();
+        }
+        let n = self.trace.len();
+        let unroll = knobs.unroll.max(1);
+        let alus = knobs.alus.max(1);
+
+        arena.reset(self, unroll, lanes);
+        let BatchArena { lanes: lane_vec, remaining, subs_left, gates } = arena;
+        let lane_vec = &mut lane_vec[..lanes];
+        let gates = &gates[..];
+
+        // per-lane port config + counters + ready seed
+        for (l, lane) in lane_vec.iter_mut().enumerate() {
+            lane.cfg = PortCfg::of(&designs[l]);
+            let counters = lane.cfg.counters();
+            lane.used_rd.clear();
+            lane.used_rd.resize(counters, 0);
+            lane.used_wr.clear();
+            lane.used_wr.resize(counters, 0);
+            let rem = &remaining[l * n..(l + 1) * n];
+            let per_bank = lane.cfg.per_bank;
+            for i in 0..n {
+                if rem[i] == 0 {
+                    lane.ready.push(self.class[i], per_bank, i as u32, gates[i], 0);
+                }
+            }
+            if n == 0 {
+                lane.finished = true;
+            }
+        }
+
+        // Global lockstep clock: every lane is stepped at exactly the
+        // cycles its own scalar run would visit; the shared trace data
+        // stays hot across lanes working the same region of the DDG.
+        let mut active = lane_vec.iter().filter(|l| !l.finished).count();
+        let mut gcycle: u64 = 0;
+        while active > 0 {
+            let mut next_g = u64::MAX;
+            for (l, lane) in lane_vec.iter_mut().enumerate() {
+                if lane.finished {
+                    continue;
+                }
+                if lane.next_visit > gcycle {
+                    next_g = next_g.min(lane.next_visit);
+                    continue;
+                }
+                let rem = &mut remaining[l * n..(l + 1) * n];
+                let subs = &mut subs_left[l * n..(l + 1) * n];
+                lane.step(self, gates, rem, subs, alus, gcycle);
+                if lane.finished {
+                    active -= 1;
+                } else {
+                    next_g = next_g.min(lane.next_visit);
+                }
+            }
+            if next_g == u64::MAX {
+                break; // no events anywhere (or every lane drained)
+            }
+            gcycle = next_g;
+        }
+
+        lane_vec
+            .iter()
+            .zip(designs)
+            .map(|(lane, design)| self.compose_output(design, alus, lane.cycle, &lane.acc))
+            .collect()
+    }
+}

@@ -11,6 +11,16 @@
 //! [`CompiledTrace::simulate`] with a reusable
 //! [`SimArena`](super::SimArena).
 //!
+//! The design-dependent halves of the inner loop live here too, shared
+//! with the lane-batched engine (`super::batch`): [`PortCfg`] resolves a
+//! design's port model once, [`MemIssue`] bundles everything one
+//! memory-issue attempt mutates (so the issue loops thread ONE `&mut`
+//! instead of eight), and [`CompiledTrace::try_mem`] /
+//! [`CompiledTrace::compose_output`] are the single implementations of
+//! sub-word port arbitration and the Aladdin physical backend — which is
+//! what makes the batch kernel bit-identical by construction on those
+//! steps.
+//!
 //! The compat wrappers [`super::simulate`] / [`super::simulate_design`]
 //! are thin shims over this engine and produce byte-identical
 //! [`SimOutput`]s (asserted by `tests/engine_golden.rs`).
@@ -35,6 +45,92 @@ pub(super) enum NodeClass {
     Load,
     /// Scratchpad store.
     Store,
+}
+
+/// A design's port model resolved for the scheduler: the only part of
+/// the inner loop that differs between the lanes of a batched run.
+#[derive(Clone, Copy, Debug, Default)]
+pub(super) struct PortCfg {
+    /// Bank count for banked designs, 0 for true multi-port.
+    pub bank_count: u32,
+    /// Read ports (per bank when `per_bank`).
+    pub rd_ports: u32,
+    /// Write ports (per bank when `per_bank`).
+    pub wr_ports: u32,
+    /// 1RW: reads and writes share one port budget per bank.
+    pub shared: bool,
+    /// Block (contiguous-range) partitioning instead of cyclic.
+    pub block: bool,
+    /// Banked conflict model (in-order issue, per-bank counters).
+    pub per_bank: bool,
+    /// Words per bank under block partitioning (0 when cyclic).
+    pub block_size: u32,
+}
+
+impl PortCfg {
+    /// Resolve `design.ports` (the block size needs the design's depth).
+    pub fn of(design: &MemDesign) -> PortCfg {
+        let (bank_count, rd_ports, wr_ports, shared, block) = match design.ports {
+            PortModel::PerBank { banks, reads, writes, shared, block } => {
+                (banks, reads, writes, shared, block)
+            }
+            PortModel::TruePorts { reads, writes } => (0, reads, writes, false, false),
+        };
+        let per_bank = bank_count > 0;
+        // Block partitioning: contiguous address ranges per bank.
+        let block_size = if block { design.depth.div_ceil(bank_count.max(1)).max(1) } else { 0 };
+        PortCfg { bank_count, rd_ports, wr_ports, shared, block, per_bank, block_size }
+    }
+
+    /// Per-cycle port-counter slots: one per bank, or one global pair.
+    pub fn counters(&self) -> usize {
+        if self.per_bank {
+            self.bank_count as usize
+        } else {
+            1
+        }
+    }
+}
+
+/// Everything one memory-issue attempt mutates, bundled so the issue
+/// loops hand [`CompiledTrace::try_mem`] a single `&mut` (and so the
+/// batch engine can aim the same code at any lane's slice of its
+/// lane-major arena).
+pub(super) struct MemIssue<'a> {
+    /// Read-port usage this cycle (per bank, or one global slot).
+    pub used_rd: &'a mut [u32],
+    /// Write-port usage this cycle.
+    pub used_wr: &'a mut [u32],
+    /// Outstanding sub-accesses per node.
+    pub subs_left: &'a mut [u32],
+    /// Scratchpad word reads issued.
+    pub n_reads: &'a mut u64,
+    /// Scratchpad word writes issued.
+    pub n_writes: &'a mut u64,
+    /// Cycles a memory op made zero progress on ports.
+    pub port_stalls: &'a mut u64,
+    /// Memory ops fully issued.
+    pub issued_mem: &'a mut u64,
+}
+
+/// Activity accumulated by one scheduled run (one lane of a batch) —
+/// the inputs to [`CompiledTrace::compose_output`].
+#[derive(Clone, Copy, Debug, Default)]
+pub(super) struct Accum {
+    /// Memory ops fully issued (promoted accesses included).
+    pub issued_mem: u64,
+    /// Zero-progress memory-op cycles.
+    pub port_stalls: u64,
+    /// Cycles with at least one stalled memory op.
+    pub stall_cycles: u64,
+    /// Scratchpad word reads.
+    pub n_reads: u64,
+    /// Scratchpad word writes.
+    pub n_writes: u64,
+    /// Register-file accesses (promoted arrays).
+    pub n_reg: u64,
+    /// FU energy, pJ (accumulated in issue order).
+    pub n_alu_energy: f64,
 }
 
 /// Map a memory op to its scratchpad *word* index (arrays are packed
@@ -151,6 +247,110 @@ impl<'t> CompiledTrace<'t> {
         self.fu_blend * alus as f32
     }
 
+    /// Try to issue the sub-word accesses of one memory op under `cfg`'s
+    /// port budget; returns the number still outstanding after this
+    /// cycle. Shared verbatim by the scalar and batch engines.
+    pub(super) fn try_mem(&self, nid: u32, cfg: &PortCfg, st: &mut MemIssue<'_>) -> u32 {
+        let node = &self.trace.nodes[nid as usize];
+        let (array, _index) = node.kind.mem_ref().unwrap();
+        let is_write = matches!(node.kind, OpKind::Store { .. });
+        let total_subs = self.subwords[array as usize];
+        let base_word = self.base_words[nid as usize];
+        let mut left = st.subs_left[nid as usize];
+        let mut progressed = false;
+        while left > 0 {
+            let sub = total_subs - left;
+            let slot = if !cfg.per_bank {
+                0
+            } else if cfg.block {
+                (((base_word + sub) / cfg.block_size).min(cfg.bank_count - 1)) as usize
+            } else {
+                ((base_word + sub) % cfg.bank_count) as usize
+            };
+            let ok = if cfg.shared {
+                // 1RW: reads and writes share one port per bank
+                if st.used_rd[slot] + st.used_wr[slot] < cfg.rd_ports.max(cfg.wr_ports) {
+                    if is_write {
+                        st.used_wr[slot] += 1;
+                    } else {
+                        st.used_rd[slot] += 1;
+                    }
+                    true
+                } else {
+                    false
+                }
+            } else if is_write {
+                if st.used_wr[slot] < cfg.wr_ports {
+                    st.used_wr[slot] += 1;
+                    true
+                } else {
+                    false
+                }
+            } else if st.used_rd[slot] < cfg.rd_ports {
+                st.used_rd[slot] += 1;
+                true
+            } else {
+                false
+            };
+            if !ok {
+                break;
+            }
+            left -= 1;
+            progressed = true;
+            if is_write {
+                *st.n_writes += 1;
+            } else {
+                *st.n_reads += 1;
+            }
+        }
+        st.subs_left[nid as usize] = left;
+        if left == 0 {
+            *st.issued_mem += 1;
+        } else if !progressed {
+            *st.port_stalls += 1;
+        }
+        left
+    }
+
+    /// The physical composition (the Aladdin backend step) shared by
+    /// the scalar and batch engines: schedule length + accumulated
+    /// activity → timing, area, energy, power.
+    pub(super) fn compose_output(
+        &self,
+        design: &MemDesign,
+        alus: u32,
+        cycle: u64,
+        acc: &Accum,
+    ) -> SimOutput {
+        let period_ns = BASE_PERIOD_NS.max(design.t_access_ns()) * design.freq_factor;
+        let cycles = cycle.max(1);
+        let time_ns = cycles as f64 * period_ns as f64;
+
+        let mem_area = design.area_um2() + self.reg_area_um2;
+        let fu_area_um2 = self.fu_area(alus);
+        let dyn_energy = acc.n_reads as f64 * design.e_read_pj() as f64
+            + acc.n_writes as f64 * design.e_write_pj() as f64
+            + acc.n_reg as f64 * REG_ACCESS_PJ
+            + acc.n_alu_energy;
+        let leak_uw = design.leak_uw() + fu_area_um2 * FU_LEAK_UW_PER_UM2;
+        // pJ / ns = mW; leakage µW → mW.
+        let power_mw = (dyn_energy / time_ns) as f32 + leak_uw / 1000.0;
+
+        SimOutput {
+            cycles,
+            period_ns,
+            time_ns,
+            mem_area_um2: mem_area,
+            fu_area_um2,
+            area_um2: mem_area + fu_area_um2,
+            power_mw,
+            dyn_energy_pj: dyn_energy,
+            mem_accesses: acc.issued_mem,
+            port_stalls: acc.port_stalls,
+            stall_cycles: acc.stall_cycles,
+        }
+    }
+
     /// Schedule one design point: cycles + physical cost, exactly as the
     /// compat [`super::simulate_design`] computes them.
     ///
@@ -185,15 +385,8 @@ impl<'t> CompiledTrace<'t> {
             retire_buf,
         } = arena;
 
-        let (bank_count, rd_ports, wr_ports, shared, block) = match design.ports {
-            PortModel::PerBank { banks, reads, writes, shared, block } => {
-                (banks, reads, writes, shared, block)
-            }
-            PortModel::TruePorts { reads, writes } => (0, reads, writes, false, false),
-        };
-        let per_bank = bank_count > 0;
-        // Block partitioning: contiguous address ranges per bank.
-        let block_size = if block { design.depth.div_ceil(bank_count.max(1)).max(1) } else { 0 };
+        let cfg = PortCfg::of(design);
+        let per_bank = cfg.per_bank;
 
         macro_rules! push_ready {
             ($nid:expr, $at:expr) => {{
@@ -237,21 +430,27 @@ impl<'t> CompiledTrace<'t> {
 
         // Per-cycle port counters: per bank for banked designs, a single
         // global pair for true-port designs.
-        let counters = if per_bank { bank_count as usize } else { 1 };
         used_rd.clear();
-        used_rd.resize(counters, 0);
+        used_rd.resize(cfg.counters(), 0);
         used_wr.clear();
-        used_wr.resize(counters, 0);
+        used_wr.resize(cfg.counters(), 0);
 
         let mut cycle: u64 = 0;
         let mut done = 0usize;
-        let mut issued_mem: u64 = 0;
-        let mut port_stalls: u64 = 0;
-        let mut stall_cycles: u64 = 0;
-        let mut n_reads: u64 = 0;
-        let mut n_writes: u64 = 0;
-        let mut n_reg: u64 = 0;
-        let mut n_alu_energy: f64 = 0.0;
+        let mut acc = Accum::default();
+        // One issue-state bundle for the whole run: every counter the
+        // memory pipeline touches flows through `st`, so the issue loops
+        // below stay single-`&mut` (NLL releases the `acc` field borrows
+        // for the composition tail after the loop).
+        let mut st = MemIssue {
+            used_rd: used_rd.as_mut_slice(),
+            used_wr: used_wr.as_mut_slice(),
+            subs_left: subs_left.as_mut_slice(),
+            n_reads: &mut acc.n_reads,
+            n_writes: &mut acc.n_writes,
+            port_stalls: &mut acc.port_stalls,
+            issued_mem: &mut acc.issued_mem,
+        };
 
         while done < n {
             // retire completions for this cycle (ring slot owns exactly
@@ -277,10 +476,10 @@ impl<'t> CompiledTrace<'t> {
             }
 
             // reset per-cycle port + FU counters
-            for c in used_rd.iter_mut() {
+            for c in st.used_rd.iter_mut() {
                 *c = 0;
             }
-            for c in used_wr.iter_mut() {
+            for c in st.used_wr.iter_mut() {
                 *c = 0;
             }
             let mut alu_slots = alus;
@@ -292,8 +491,8 @@ impl<'t> CompiledTrace<'t> {
                     break;
                 }
                 let Reverse((_, nid)) = ready_reg.pop().unwrap();
-                issued_mem += 1;
-                n_reg += 1;
+                *st.issued_mem += 1;
+                acc.n_reg += 1;
                 complete_at!(cycle + 1, nid);
             }
 
@@ -306,81 +505,9 @@ impl<'t> CompiledTrace<'t> {
                 let Reverse((_, nid)) = ready_alu.pop().unwrap();
                 let OpKind::Alu(kind) = trace.nodes[nid as usize].kind else { unreachable!() };
                 alu_slots -= 1;
-                n_alu_energy += kind.energy_pj() as f64;
+                acc.n_alu_energy += kind.energy_pj() as f64;
                 complete_at!(cycle + kind.latency() as u64, nid);
             }
-
-            // Try to issue the sub-word accesses of one memory op;
-            // returns the number still outstanding after this cycle.
-            let try_mem = |nid: u32,
-                               used_rd: &mut Vec<u32>,
-                               used_wr: &mut Vec<u32>,
-                               n_reads: &mut u64,
-                               n_writes: &mut u64,
-                               subs_left: &mut Vec<u32>,
-                               port_stalls: &mut u64,
-                               issued_mem: &mut u64|
-             -> u32 {
-                let node = &trace.nodes[nid as usize];
-                let (array, _index) = node.kind.mem_ref().unwrap();
-                let is_write = matches!(node.kind, OpKind::Store { .. });
-                let total_subs = self.subwords[array as usize];
-                let base_word = self.base_words[nid as usize];
-                let mut left = subs_left[nid as usize];
-                let mut progressed = false;
-                while left > 0 {
-                    let sub = total_subs - left;
-                    let slot = if !per_bank {
-                        0
-                    } else if block {
-                        (((base_word + sub) / block_size).min(bank_count - 1)) as usize
-                    } else {
-                        ((base_word + sub) % bank_count) as usize
-                    };
-                    let ok = if shared {
-                        // 1RW: reads and writes share one port per bank
-                        if used_rd[slot] + used_wr[slot] < rd_ports.max(wr_ports) {
-                            if is_write {
-                                used_wr[slot] += 1;
-                            } else {
-                                used_rd[slot] += 1;
-                            }
-                            true
-                        } else {
-                            false
-                        }
-                    } else if is_write {
-                        if used_wr[slot] < wr_ports {
-                            used_wr[slot] += 1;
-                            true
-                        } else {
-                            false
-                        }
-                    } else if used_rd[slot] < rd_ports {
-                        used_rd[slot] += 1;
-                        true
-                    } else {
-                        false
-                    };
-                    if !ok {
-                        break;
-                    }
-                    left -= 1;
-                    progressed = true;
-                    if is_write {
-                        *n_writes += 1;
-                    } else {
-                        *n_reads += 1;
-                    }
-                }
-                subs_left[nid as usize] = left;
-                if left == 0 {
-                    *issued_mem += 1;
-                } else if !progressed {
-                    *port_stalls += 1;
-                }
-                left
-            };
 
             if per_bank {
                 // Banked designs model Aladdin's *static* schedule:
@@ -392,10 +519,7 @@ impl<'t> CompiledTrace<'t> {
                         break;
                     }
                     let Reverse((rc0, nid)) = ready_mem.pop().unwrap();
-                    let left = try_mem(
-                        nid, &mut *used_rd, &mut *used_wr, &mut n_reads, &mut n_writes,
-                        &mut *subs_left, &mut port_stalls, &mut issued_mem,
-                    );
+                    let left = self.try_mem(nid, &cfg, &mut st);
                     if left > 0 {
                         had_mem_stall = true;
                         // Re-queue under the ORIGINAL key so program order
@@ -409,16 +533,13 @@ impl<'t> CompiledTrace<'t> {
                 // True multi-port (AMM / multipump / circuit MP): reads
                 // and writes issue independently until their port class
                 // is full.
-                while used_rd[0] < rd_ports {
+                while st.used_rd[0] < cfg.rd_ports {
                     match ready_rd.peek() {
                         Some(&Reverse((rc, _))) if rc <= cycle => {}
                         _ => break,
                     }
                     let Reverse((rc0, nid)) = ready_rd.pop().unwrap();
-                    let left = try_mem(
-                        nid, &mut *used_rd, &mut *used_wr, &mut n_reads, &mut n_writes,
-                        &mut *subs_left, &mut port_stalls, &mut issued_mem,
-                    );
+                    let left = self.try_mem(nid, &cfg, &mut st);
                     if left > 0 {
                         had_mem_stall = true;
                         // Re-queue under the ORIGINAL key so program order
@@ -428,16 +549,13 @@ impl<'t> CompiledTrace<'t> {
                     }
                     complete_at!(cycle + 1, nid);
                 }
-                while used_wr[0] < wr_ports {
+                while st.used_wr[0] < cfg.wr_ports {
                     match ready_wr.peek() {
                         Some(&Reverse((rc, _))) if rc <= cycle => {}
                         _ => break,
                     }
                     let Reverse((rc0, nid)) = ready_wr.pop().unwrap();
-                    let left = try_mem(
-                        nid, &mut *used_rd, &mut *used_wr, &mut n_reads, &mut n_writes,
-                        &mut *subs_left, &mut port_stalls, &mut issued_mem,
-                    );
+                    let left = self.try_mem(nid, &cfg, &mut st);
                     if left > 0 {
                         had_mem_stall = true;
                         // Re-queue under the ORIGINAL key so program order
@@ -449,7 +567,7 @@ impl<'t> CompiledTrace<'t> {
                 }
             }
             if had_mem_stall {
-                stall_cycles += 1;
+                acc.stall_cycles += 1;
             }
 
             // advance to the next event (earliest ready or completion)
@@ -474,33 +592,6 @@ impl<'t> CompiledTrace<'t> {
             cycle = next.max(cycle + 1);
         }
 
-        // --- physical composition (the Aladdin backend step) ----------
-        let period_ns = BASE_PERIOD_NS.max(design.t_access_ns()) * design.freq_factor;
-        let cycles = cycle.max(1);
-        let time_ns = cycles as f64 * period_ns as f64;
-
-        let mem_area = design.area_um2() + self.reg_area_um2;
-        let fu_area_um2 = self.fu_area(alus);
-        let dyn_energy = n_reads as f64 * design.e_read_pj() as f64
-            + n_writes as f64 * design.e_write_pj() as f64
-            + n_reg as f64 * REG_ACCESS_PJ
-            + n_alu_energy;
-        let leak_uw = design.leak_uw() + fu_area_um2 * FU_LEAK_UW_PER_UM2;
-        // pJ / ns = mW; leakage µW → mW.
-        let power_mw = (dyn_energy / time_ns) as f32 + leak_uw / 1000.0;
-
-        SimOutput {
-            cycles,
-            period_ns,
-            time_ns,
-            mem_area_um2: mem_area,
-            fu_area_um2,
-            area_um2: mem_area + fu_area_um2,
-            power_mw,
-            dyn_energy_pj: dyn_energy,
-            mem_accesses: issued_mem,
-            port_stalls,
-            stall_cycles,
-        }
+        self.compose_output(design, alus, cycle, &acc)
     }
 }

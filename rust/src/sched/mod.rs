@@ -19,8 +19,8 @@
 //!
 //! ## Layering (sweep-aware engine)
 //!
-//! The scheduler is split into three layers so Cartesian sweeps never
-//! repeat `(trace, word_bytes)`-invariant work:
+//! The scheduler is split into layers so Cartesian sweeps never repeat
+//! `(trace, word_bytes)`-invariant work:
 //!
 //! 1. [`compile`] — [`CompiledTrace`] precomputes, once per word size,
 //!    everything the inner loop consumes: promotion mask, sub-word
@@ -29,18 +29,25 @@
 //! 2. [`arena`] — [`SimArena`] owns the mutable run state (ready heaps,
 //!    completion ring, dependence/sub-access counters) and is `reset()`
 //!    between runs instead of reallocated; one arena per worker thread.
-//! 3. the engine — [`CompiledTrace::simulate`] schedules one design
-//!    point against an arena.
+//! 3. the scalar engine — [`CompiledTrace::simulate`] schedules one
+//!    design point against an arena. It is the correctness oracle.
+//! 4. [`batch`] — [`CompiledTrace::simulate_batch`] schedules up to L
+//!    compatible design points (same trace/word size/knobs; ports,
+//!    banking and model varying per lane) in ONE pass over the trace,
+//!    against a lane-major [`BatchArena`]; bit-identical to the scalar
+//!    engine per lane.
 //!
 //! [`simulate`] and [`simulate_design`] remain as compat wrappers
 //! (compile + fresh arena per call) with byte-identical [`SimOutput`];
 //! sweep layers ([`crate::dse`], [`crate::coordinator`]) drive the
-//! engine directly.
+//! engines directly, grouping compatible points into lane sets.
 
 pub mod arena;
+pub mod batch;
 pub mod compile;
 
 pub use arena::SimArena;
+pub use batch::BatchArena;
 pub use compile::CompiledTrace;
 
 use crate::mem::{MemDesign, MemKind, MemModel};

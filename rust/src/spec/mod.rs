@@ -357,8 +357,9 @@ impl CampaignSpec {
     /// `schema = "campaign-spec/v1"`). Canonicalization notes: swept
     /// benchmarks are listed before locality-only rows (relative
     /// order within each group is preserved), defaults that parsing
-    /// restores (`threads = 0`, absent sink/cost-store/shard, `hash`
-    /// shard strategy, empty model list) are omitted.
+    /// restores (`threads = 0`, `lanes = 0`, absent
+    /// sink/cost-store/shard, `hash` shard strategy, empty model
+    /// list) are omitted.
     /// `parse(to_toml(spec)) == spec` for specs already in
     /// canonical plan order, and `to_toml(parse(text)) == text` for
     /// canonical documents (pinned by `tests/spec_shard.rs`).
@@ -410,6 +411,9 @@ impl CampaignSpec {
         }
         if sw.threads != 0 {
             let _ = writeln!(s, "threads = {}", sw.threads);
+        }
+        if sw.lanes != 0 {
+            let _ = writeln!(s, "lanes = {}", sw.lanes);
         }
         for (r, w) in &sw.amm_ports {
             let _ = writeln!(s);

@@ -206,6 +206,46 @@ fn campaign_sink_streams_byte_stable_and_resumes_without_resimulating() {
 }
 
 #[test]
+fn lane_batched_campaign_sink_is_byte_identical_to_sequential() {
+    // The lane-batched simulate stage must not change a single sink
+    // byte: a campaign forced onto the scalar engine (lanes = 1) and
+    // one running the batch kernel (lanes = 8) must write identical
+    // JSONL and produce identical results, point for point.
+    let dir = std::env::temp_dir().join("amm_dse_campaign_lanes");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |lanes: usize, sink_path: &std::path::Path| {
+        let mut sweep = Sweep::quick();
+        sweep.lanes = lanes;
+        Campaign::new()
+            .benchmarks(["gemm", "stencil2d", "fft"])
+            .scale(Scale::Tiny)
+            .sweep(sweep)
+            .threads(4)
+            .offline()
+            .sink(sink_path)
+            .run()
+            .unwrap()
+    };
+    let scalar_sink = dir.join("scalar.jsonl");
+    let batched_sink = dir.join("batched.jsonl");
+    let scalar = run(1, &scalar_sink);
+    let batched = run(8, &batched_sink);
+    assert_eq!(scalar.simulated, batched.simulated);
+    assert!(batched.points_per_s > 0.0, "fresh campaigns report sustained throughput");
+    assert_eq!(
+        std::fs::read_to_string(&scalar_sink).unwrap(),
+        std::fs::read_to_string(&batched_sink).unwrap(),
+        "lane-batched campaign sink must be byte-identical to the scalar one"
+    );
+    for (a, b) in scalar.explorations().iter().zip(batched.explorations()) {
+        for (x, y) in a.points().iter().zip(b.points()) {
+            assert_eq!(x, y, "{}/{}", a.benchmark, x.id);
+        }
+    }
+}
+
+#[test]
 fn coordinator_backed_campaign_resumes_identically() {
     // Resume is backend-agnostic at the record level: a sink written by
     // one run is trusted verbatim by the next. Here both runs use the

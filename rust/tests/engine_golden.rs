@@ -4,7 +4,11 @@
 //! group, `SimArena` reused dirty across runs, grouped parallel
 //! dispatch) must reproduce the compat `simulate_design` wrapper's
 //! `SimOutput` **bit-for-bit** — cycles, stalls, energies, areas — on
-//! every suite benchmark across the paper's design families.
+//! every suite benchmark across the paper's design families. The
+//! lane-batched kernel (`simulate_batch`) carries the same contract
+//! against the scalar engine: every lane of a batch — mixed port
+//! models, dirty `BatchArena` reuse, L=1 through wider-than-auto
+//! groups — must equal the scalar `SimOutput` bit-for-bit.
 //!
 //! Scope note: `simulate_design` is itself a thin wrapper over the same
 //! engine (compile + fresh arena per call), so what these tests pin is
@@ -18,7 +22,7 @@
 
 use amm_dse::dse::{self, Sweep};
 use amm_dse::mem::MemKind;
-use amm_dse::sched::{self, CompiledTrace, Knobs, SimArena};
+use amm_dse::sched::{self, BatchArena, CompiledTrace, Knobs, SimArena};
 use amm_dse::suite::{self, Scale};
 
 /// One design per port-model family the scheduler distinguishes:
@@ -80,6 +84,91 @@ fn dirty_arena_resets_cleanly_between_different_traces() {
         let k = CompiledTrace::new(&kmp.trace, knobs.word_bytes)
             .simulate(&mut arena, &knobs, &d_kmp);
         assert_eq!(k, fresh_kmp, "kmp round {round}");
+    }
+}
+
+#[test]
+fn batch_matches_scalar_on_all_suite_benchmarks() {
+    // The lane-batched kernel's bit-identity contract: a mixed-model
+    // lane group (one lane per port-model family — banked, XOR, LVT,
+    // multipump — all scored in a SINGLE `simulate_batch` pass) must
+    // reproduce the scalar oracle's `SimOutput` exactly on every suite
+    // benchmark. One `BatchArena` shared (and dirtied) across every
+    // benchmark × knob combination, plus an L=1 singleton group per
+    // combination so the narrowest lane count is pinned too.
+    let knob_sets = [
+        Knobs { unroll: 4, word_bytes: 8, alus: 4 },
+        Knobs { unroll: 8, word_bytes: 1, alus: 8 },
+    ];
+    let mut arena = SimArena::new();
+    let mut batch = BatchArena::new();
+    for name in suite::ALL_BENCHMARKS {
+        let wl = suite::generate(name, Scale::Tiny);
+        for knobs in &knob_sets {
+            let ct = CompiledTrace::new(&wl.trace, knobs.word_bytes);
+            let designs: Vec<_> = design_families()
+                .into_iter()
+                .map(|k| sched::build_memory_model(&wl.trace, &*k.model(), knobs.word_bytes))
+                .collect();
+            let lanes = ct.simulate_batch(&mut batch, knobs, &designs);
+            assert_eq!(lanes.len(), designs.len(), "{name} {knobs:?}");
+            for (lane, design) in lanes.iter().zip(&designs) {
+                let scalar = ct.simulate(&mut arena, knobs, design);
+                assert_eq!(*lane, scalar, "{name}/{} {knobs:?}", design.id);
+            }
+            let solo = ct.simulate_batch(&mut batch, knobs, &designs[..1]);
+            assert_eq!(solo[0], ct.simulate(&mut arena, knobs, &designs[0]), "{name} L=1");
+        }
+    }
+}
+
+#[test]
+fn dirty_batch_arena_resets_cleanly_between_different_traces() {
+    // gemm and kmp differ in node count, array count and op mix; ping-
+    // ponging one `BatchArena` between them must reproduce fresh-arena
+    // lane outputs exactly, every round.
+    let gemm = suite::generate("gemm", Scale::Tiny);
+    let kmp = suite::generate("kmp", Scale::Tiny);
+    let knobs = Knobs::default();
+    let d_gemm: Vec<_> = design_families()
+        .into_iter()
+        .map(|k| sched::build_memory_model(&gemm.trace, &*k.model(), knobs.word_bytes))
+        .collect();
+    let d_kmp: Vec<_> = design_families()
+        .into_iter()
+        .map(|k| sched::build_memory_model(&kmp.trace, &*k.model(), knobs.word_bytes))
+        .collect();
+    let ct_gemm = CompiledTrace::new(&gemm.trace, knobs.word_bytes);
+    let ct_kmp = CompiledTrace::new(&kmp.trace, knobs.word_bytes);
+    let fresh_gemm = ct_gemm.simulate_batch(&mut BatchArena::new(), &knobs, &d_gemm);
+    let fresh_kmp = ct_kmp.simulate_batch(&mut BatchArena::new(), &knobs, &d_kmp);
+    let mut arena = BatchArena::new();
+    for round in 0..3 {
+        let g = ct_gemm.simulate_batch(&mut arena, &knobs, &d_gemm);
+        assert_eq!(g, fresh_gemm, "gemm round {round}");
+        let k = ct_kmp.simulate_batch(&mut arena, &knobs, &d_kmp);
+        assert_eq!(k, fresh_kmp, "kmp round {round}");
+    }
+}
+
+#[test]
+fn batch_handles_max_width_lane_groups() {
+    // L = every model the default sweep enumerates — wider than the
+    // auto lane count the dispatcher would ever form — all sharing one
+    // trace pass; each lane must still match the oracle.
+    let wl = suite::generate("stencil2d", Scale::Tiny);
+    let knobs = Knobs { unroll: 4, word_bytes: 4, alus: 4 };
+    let ct = CompiledTrace::new(&wl.trace, knobs.word_bytes);
+    let designs: Vec<_> = Sweep::default()
+        .models()
+        .into_iter()
+        .map(|m| sched::build_memory_model(&wl.trace, &*m, knobs.word_bytes))
+        .collect();
+    assert!(designs.len() > 8, "expected a wide lane group, got {}", designs.len());
+    let lanes = ct.simulate_batch(&mut BatchArena::new(), &knobs, &designs);
+    let mut arena = SimArena::new();
+    for (lane, design) in lanes.iter().zip(&designs) {
+        assert_eq!(*lane, ct.simulate(&mut arena, &knobs, design), "{}", design.id);
     }
 }
 

@@ -3,7 +3,7 @@
 
 use amm_dse::dse::{self, Sweep};
 use amm_dse::mem::MemKind;
-use amm_dse::sched::{self, DesignConfig};
+use amm_dse::sched::{self, BatchArena, CompiledTrace, DesignConfig, Knobs, SimArena};
 use amm_dse::suite::{self, Scale};
 use amm_dse::trace::{AluKind, Trace, TraceBuilder};
 use amm_dse::util::propkit::{check, Config};
@@ -99,6 +99,64 @@ fn prop_cycles_lower_bounded_by_port_capacity() {
             let out = sched::simulate(&t, &cfg);
             let bound = (t.mem_ops() as u64).div_ceil((*r + *w) as u64);
             out.cycles >= bound
+        },
+        |_| vec![],
+    );
+}
+
+#[test]
+fn prop_batch_bit_identical_to_scalar_on_random_lane_mixes() {
+    // The lane-batched kernel's contract, fuzzed: random traces ×
+    // random lane mixes (1–6 lanes drawn from all four port-model
+    // families with random port counts) × random knobs must equal the
+    // scalar oracle lane-for-lane, `SimOutput` bit-for-bit. The batch
+    // arena is reused dirty across the two knob sets within a case.
+    check(
+        Config::default().cases(40),
+        |rng| rng.next_u64(),
+        |seed| {
+            let mut rng = Rng::new(*seed);
+            let t = random_trace(&mut rng, 40 + rng.below_usize(120));
+            if t.validate().is_err() {
+                return false;
+            }
+            let knobs_of = |rng: &mut Rng| Knobs {
+                unroll: 1u32 << rng.below(4),
+                word_bytes: 1u32 << rng.below(4),
+                alus: 1 + rng.below(8) as u32,
+            };
+            let knob_sets = [knobs_of(&mut rng), knobs_of(&mut rng)];
+            let mut batch = BatchArena::new();
+            let mut arena = SimArena::new();
+            for knobs in &knob_sets {
+                let designs: Vec<_> = (0..1 + rng.below_usize(6))
+                    .map(|_| {
+                        let kind = match rng.below(4) {
+                            0 => MemKind::Banked { banks: 1u32 << rng.below(3) },
+                            1 => MemKind::XorAmm {
+                                read_ports: 1u32 << rng.below(3),
+                                write_ports: 1u32 << rng.below(2),
+                            },
+                            2 => MemKind::LvtAmm {
+                                read_ports: 1u32 << rng.below(3),
+                                write_ports: 1u32 << rng.below(2),
+                            },
+                            _ => MemKind::MultiPump { factor: 2u32 << rng.below(2) },
+                        };
+                        sched::build_memory_model(&t, &*kind.model(), knobs.word_bytes)
+                    })
+                    .collect();
+                let ct = CompiledTrace::new(&t, knobs.word_bytes);
+                let lanes = ct.simulate_batch(&mut batch, knobs, &designs);
+                let ok = lanes
+                    .iter()
+                    .zip(&designs)
+                    .all(|(lane, d)| *lane == ct.simulate(&mut arena, knobs, d));
+                if !ok {
+                    return false;
+                }
+            }
+            true
         },
         |_| vec![],
     );
