@@ -561,12 +561,13 @@ fn execute(
         );
     }
     // Lane-group the unit stream: units sharing a compiled-trace group
-    // and (unroll, alus) knobs form one batched engine call of up to
-    // `lanes` lanes (singletons take the scalar engine). Buckets key on
-    // identity, not contiguity, so resume/shard gaps never split a
-    // compatible set — and every unit keeps its `seq`, so the reorder
-    // buffer, sink byte-stability and resume semantics are untouched.
-    let lanes = dse::effective_lanes(spec.sweep.lanes);
+    // and (unroll, alus) knobs form one batched engine call (singletons
+    // take the scalar engine). The lane width resolves per bucket —
+    // auto-calibration sees each bucket's size and its trace footprint
+    // ([`dse::resolve_lanes`]). Buckets key on identity, not contiguity,
+    // so resume/shard gaps never split a compatible set — and every unit
+    // keeps its `seq`, so the reorder buffer, sink byte-stability and
+    // resume semantics are untouched.
     let chunks: Vec<Vec<usize>> = {
         let mut index: HashMap<(usize, u32, u32), usize> = HashMap::new();
         let mut buckets: Vec<Vec<usize>> = Vec::new();
@@ -580,7 +581,9 @@ fn execute(
         }
         let mut chunks = Vec::new();
         for b in buckets {
-            for c in b.chunks(lanes.max(1)) {
+            let g = units[b[0]].group;
+            let width = dse::resolve_lanes(spec.sweep.lanes, b.len(), groups[g].trace().len());
+            for c in b.chunks(width.max(1)) {
                 chunks.push(c.to_vec());
             }
         }
@@ -590,8 +593,8 @@ fn execute(
     let fresh: Vec<Vec<(usize, DesignPoint)>> = pool::parallel_map_with(
         &chunks,
         threads,
-        || (SimArena::new(), BatchArena::new()),
-        |(arena, batch), chunk| {
+        || (SimArena::new(), BatchArena::new(), Vec::new()),
+        |(arena, batch, scratch), chunk| {
             if cancelled() {
                 // drain the remaining chunks without simulating or
                 // sending; every line already sent is a complete record,
@@ -603,9 +606,12 @@ fn execute(
             let sims: Vec<SimOutput> = if chunk.len() == 1 {
                 vec![groups[first.group].simulate(arena, knobs, &first.design)]
             } else {
-                let designs: Vec<MemDesign> =
-                    chunk.iter().map(|&i| units[i].design.clone()).collect();
-                groups[first.group].simulate_batch(batch, knobs, &designs)
+                // design clones land in a per-worker scratch buffer so
+                // the unit-to-unit path never allocates the lane vector
+                let scratch: &mut Vec<MemDesign> = scratch;
+                scratch.clear();
+                scratch.extend(chunk.iter().map(|&i| units[i].design.clone()));
+                groups[first.group].simulate_batch(batch, knobs, scratch)
             };
             chunk
                 .iter()
@@ -806,14 +812,18 @@ pub struct CampaignOutcome {
     /// One exploration per planned benchmark (locality-only rows carry
     /// an empty point set; sharded runs carry only their bucket).
     pub explorations: Vec<Exploration>,
-    /// Design points simulated by this run.
+    /// Design points freshly simulated by this run.
     pub simulated: usize,
-    /// Design points restored from the sink instead of re-simulated.
+    /// Design points restored from the sink instead of re-simulated
+    /// (reported as both `resumed` and `restored` in the status
+    /// sidecar; [`CampaignOutcome::restored`] is the reading accessor).
     pub resumed: usize,
-    /// Sustained simulation throughput: fresh points per second over
-    /// the simulate+stream stage's wall clock (0.0 when nothing was
-    /// simulated). The live (throttled) counterpart streams through the
-    /// `campaign-status/v1` sidecar while the run is in flight.
+    /// Sustained simulation throughput, derived STRICTLY from freshly
+    /// simulated points over the simulate+stream stage's wall clock —
+    /// restored points never count, so a warm resume reports 0.0, not
+    /// an inflated number. The live (throttled) counterpart streams
+    /// through the `campaign-status/v1` sidecar while the run is in
+    /// flight.
     pub points_per_s: f64,
     /// Runtime-backend macro-cost batches issued by this campaign: 1
     /// when any macro shape had to be scored fresh, **0** when offline,
@@ -837,9 +847,17 @@ impl CampaignOutcome {
         self.explorations.iter().find(|e| e.benchmark == benchmark)
     }
 
-    /// Total design points across the campaign (simulated + resumed).
+    /// Total design points across the campaign (simulated + restored).
     pub fn total_points(&self) -> usize {
         self.explorations.iter().map(|e| e.points().len()).sum()
+    }
+
+    /// Design points restored from the sink instead of re-simulated —
+    /// the number the status sidecar reports next to `simulated`.
+    /// (Field name `resumed` predates the restored/simulated split and
+    /// stays for compatibility.)
+    pub fn restored(&self) -> usize {
+        self.resumed
     }
 
     /// Fig-5 rows, one per planned benchmark, in plan order.

@@ -81,17 +81,23 @@ pub const DEFAULT_HISTORY: usize = 64;
 ///
 /// ```json
 /// {"schema":"campaign-status/v1","sink":"s0.jsonl","shard":"0/2",
-///  "scale":"tiny","done":123,"total":456,"resumed":10,"eta_s":42.1,
-///  "points_per_s":350.0,"cost_hits":5,"cost_misses":7,"cost_batches":1,
-///  "complete":false,"updated_unix":1690000000}
+///  "scale":"tiny","done":123,"total":456,"resumed":10,"restored":10,
+///  "simulated":113,"eta_s":42.1,"points_per_s":350.0,"cost_hits":5,
+///  "cost_misses":7,"cost_batches":1,"complete":false,
+///  "updated_unix":1690000000}
 /// ```
 ///
 /// `done` counts points *persisted to the sink* (resumed + written in
 /// order), `total` the shard's whole plan, `eta_s` is `null` until the
-/// first completion and after the last, `points_per_s` is the sustained
-/// fresh-simulation throughput (`null` until the first completion),
-/// `shard` is `null` for unsharded runs. Best-effort: an unwritable
-/// status file warns once and never fails the campaign.
+/// first completion and after the last, `shard` is `null` for unsharded
+/// runs. `restored` (alias: the original `resumed`, kept for pollers of
+/// the v1 document) counts points recovered from the sink without
+/// re-simulation; `simulated` counts completions freshly scored this
+/// run — and `points_per_s` is derived STRICTLY from `simulated` over
+/// the stage's own wall clock (`null` until the first fresh
+/// completion), so a warm resume can never inflate the throughput
+/// number. Best-effort: an unwritable status file warns once and never
+/// fails the campaign.
 ///
 /// Alongside the last-write-wins sidecar, every *emitted* document is
 /// also appended to a bounded history ring at
@@ -211,7 +217,8 @@ impl StatusWriter {
         let body = format!(
             concat!(
                 "{{\"schema\":\"{}\",\"sink\":\"{}\",\"shard\":{},\"scale\":\"{}\",",
-                "\"done\":{},\"total\":{},\"resumed\":{},\"eta_s\":{},\"points_per_s\":{},",
+                "\"done\":{},\"total\":{},\"resumed\":{},\"restored\":{},\"simulated\":{},",
+                "\"eta_s\":{},\"points_per_s\":{},",
                 "\"cost_hits\":{},\"cost_misses\":{},\"cost_batches\":{},",
                 "\"complete\":{},\"updated_unix\":{}}}\n"
             ),
@@ -222,6 +229,8 @@ impl StatusWriter {
             done,
             total,
             self.resumed,
+            self.resumed,
+            received,
             eta,
             points_per_s,
             self.cost_hits,
@@ -530,6 +539,8 @@ mod tests {
             "\"done\":7",
             "\"total\":13",
             "\"resumed\":3",
+            "\"restored\":3",
+            "\"simulated\":4",
             "\"cost_hits\":5",
             "\"cost_misses\":7",
             "\"cost_batches\":1",

@@ -154,6 +154,10 @@ pub fn parse(text: &str) -> Result<RunConfig> {
             sweep.threads =
                 v.as_int().ok_or_else(|| Error::config("threads must be int"))? as usize;
         }
+        // Batch width: 0 (default) auto-calibrates per compatible group
+        // from group size and trace footprint; explicit values are
+        // clamped to `dse::MAX_LANES` (32), and 1 forces the scalar
+        // engine. Purely a scheduling knob — results are bit-identical.
         if let Some(v) = t.get("lanes") {
             sweep.lanes =
                 v.as_int().ok_or_else(|| Error::config("lanes must be int"))? as usize;

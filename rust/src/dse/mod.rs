@@ -93,12 +93,13 @@ pub struct Sweep {
     pub extra_models: Vec<String>,
     /// Worker threads (0 = auto).
     pub threads: usize,
-    /// Simulation lanes per batched engine call (0 = auto, 1 = force
-    /// the scalar engine). Compatible points — same word size, unroll
-    /// and ALU count, memory designs varying — are scored together
-    /// through [`CompiledTrace::simulate_batch`] in groups of up to
-    /// this many lanes. Purely a scheduling knob: results are
-    /// bit-identical for every value.
+    /// Simulation lanes per batched engine call (0 = auto-calibrated
+    /// per group by [`auto_lanes`], 1 = force the scalar engine,
+    /// explicit values clamped to [`MAX_LANES`]). Compatible points —
+    /// same word size, unroll and ALU count, memory designs varying —
+    /// are scored together through [`CompiledTrace::simulate_batch`]
+    /// in groups of up to this many lanes. Purely a scheduling knob:
+    /// results are bit-identical for every value.
     pub lanes: usize,
 }
 
@@ -247,18 +248,37 @@ impl Sweep {
     }
 }
 
-/// Default lane width for the batched engine when `lanes = 0` (auto):
-/// wide enough to amortize the shared trace pass, small enough that a
-/// lane-major arena stays cache-resident per worker.
-pub const AUTO_LANES: usize = 8;
+/// Hard lane cap for batched dispatch. The v2 kernel tracks lanes in
+/// `u64` bitmasks (event wheel, active set) so it physically supports
+/// 64, but past ~32 lanes the lane-major counter arena outgrows a
+/// per-core cache slice for typical traces — the dispatchers stop here.
+pub const MAX_LANES: usize = 32;
 
-/// Resolve a `lanes` knob: 0 = auto ([`AUTO_LANES`]), anything else is
-/// taken literally (1 forces the scalar engine).
-pub fn effective_lanes(lanes: usize) -> usize {
+/// Per-worker budget for the lane-major hot state backing the
+/// auto-calibration in [`auto_lanes`]: ~8 B of counters per (lane,
+/// node), kept within ~1 MiB so a worker's working set stays inside
+/// its L2 slice.
+const LANE_CACHE_BUDGET_BYTES: usize = 1 << 20;
+
+/// Auto-calibrated lane width for `lanes = 0`: as wide as the
+/// compatible group allows, clamped so `trace_nodes` lanes of counters
+/// fit the cache budget (big traces narrow the batch, small traces run
+/// the full [`MAX_LANES`]). Always at least 2 — a 1-wide batch would
+/// pay lane setup for zero sharing.
+pub fn auto_lanes(group: usize, trace_nodes: usize) -> usize {
+    let per_lane_bytes = trace_nodes.max(1) * 8;
+    (LANE_CACHE_BUDGET_BYTES / per_lane_bytes.max(1)).clamp(2, MAX_LANES).min(group.max(1))
+}
+
+/// Resolve the `lanes` knob for one compatible group: 0 = auto
+/// ([`auto_lanes`] from the group size and trace footprint), explicit
+/// values clamped to [`MAX_LANES`] (1 still forces the scalar engine).
+/// Purely a scheduling decision — results are bit-identical regardless.
+pub fn resolve_lanes(lanes: usize, group: usize, trace_nodes: usize) -> usize {
     if lanes == 0 {
-        AUTO_LANES
+        auto_lanes(group, trace_nodes)
     } else {
-        lanes
+        lanes.min(MAX_LANES)
     }
 }
 
@@ -334,13 +354,16 @@ fn lane_chunks(group: &[(SweepPoint, MemDesign)], lanes: usize) -> Vec<Vec<usize
 
 /// Score one lane chunk: the batched engine for real lane groups, the
 /// scalar engine for singletons (a one-lane batch would pay lane-arena
-/// setup for zero sharing). Returns points in chunk order.
+/// setup for zero sharing). `scratch` holds the chunk's design clones
+/// in a buffer reused across every chunk a worker scores — no per-chunk
+/// `Vec` on the dispatch path. Returns points in chunk order.
 fn evaluate_chunk(
     compiled: &CompiledTrace<'_>,
     group: &[(SweepPoint, MemDesign)],
     chunk: &[usize],
     arena: &mut SimArena,
     batch: &mut BatchArena,
+    scratch: &mut Vec<MemDesign>,
 ) -> Vec<DesignPoint> {
     let knobs = group[chunk[0]].0.knobs;
     if chunk.len() == 1 {
@@ -348,8 +371,9 @@ fn evaluate_chunk(
         let sim = compiled.simulate(arena, &p.knobs, design);
         return vec![point_from(&design.id, design.is_amm, &p.knobs, sim)];
     }
-    let designs: Vec<MemDesign> = chunk.iter().map(|&i| group[i].1.clone()).collect();
-    let sims = compiled.simulate_batch(batch, &knobs, &designs);
+    scratch.clear();
+    scratch.extend(chunk.iter().map(|&i| group[i].1.clone()));
+    let sims = compiled.simulate_batch(batch, &knobs, scratch);
     chunk
         .iter()
         .zip(sims)
@@ -378,7 +402,6 @@ pub fn evaluate_designs(
     threads: usize,
     lanes: usize,
 ) -> Vec<DesignPoint> {
-    let lanes = effective_lanes(lanes);
     let mut out: Vec<Option<DesignPoint>> = Vec::with_capacity(work.len());
     out.resize_with(work.len(), || None);
     let mut start = 0;
@@ -388,13 +411,14 @@ pub fn evaluate_designs(
             + work[start..].iter().take_while(|(p, _)| p.knobs.word_bytes == wb).count();
         let group = &work[start..end];
         let compiled = CompiledTrace::new(trace, wb);
-        let chunks = lane_chunks(group, lanes);
+        let width = resolve_lanes(lanes, group.len(), trace.len());
+        let chunks = lane_chunks(group, width);
         let scored = pool::parallel_map_with(
             &chunks,
             threads,
-            || (SimArena::new(), BatchArena::new()),
-            |(arena, batch), chunk| {
-                let points = evaluate_chunk(&compiled, group, chunk, arena, batch);
+            || (SimArena::new(), BatchArena::new(), Vec::new()),
+            |(arena, batch, scratch), chunk| {
+                let points = evaluate_chunk(&compiled, group, chunk, arena, batch, scratch);
                 chunk.iter().copied().zip(points).collect::<Vec<(usize, DesignPoint)>>()
             },
         );

@@ -96,8 +96,8 @@ USAGE:
   repro synth-table
   repro port-scaling
   repro perf-smoke [--out BENCH_sweep.json] [--campaign-out BENCH_campaign.json]
-                   [--batch-out BENCH_batch.json] [--iters N] [--min-speedup X]
-                   [--min-campaign-speedup X] [--min-batch-speedup X]
+                   [--batch-out BENCH_batch.json] [--iters N] [--repeats N]
+                   [--min-speedup X] [--min-campaign-speedup X] [--min-batch-speedup X]
 
 `run` is the canonical campaign verb: the config file (single-benchmark
 or `[campaign]`-table form, see configs/suite.toml) lowers to one
@@ -416,7 +416,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     let outcome = campaign::run(&spec, &opts)?;
     if !quiet {
         eprintln!(
-            "campaign: {} points ({} simulated, {} resumed) in {:.2?} ({:.0} points/s sustained, cost backend {}, {} cost batch(es), {} hit(s), {} miss(es))",
+            "campaign: {} points ({} simulated, {} restored) in {:.2?} ({:.0} points/s sustained, cost backend {}, {} cost batch(es), {} hit(s), {} miss(es))",
             outcome.total_points(),
             outcome.simulated,
             outcome.resumed,
@@ -431,7 +431,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     if let Some(sh) = spec.shard {
         // a shard owns a partial result set: reports come from `merge`
         println!(
-            "shard {sh}: {} point(s) ({} simulated, {} resumed){}",
+            "shard {sh}: {} point(s) ({} simulated, {} restored){}",
             outcome.total_points(),
             outcome.simulated,
             outcome.resumed,
@@ -763,7 +763,7 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
             let t0 = std::time::Instant::now();
             let outcome = campaign.run()?;
             eprintln!(
-                "fig4 campaign: {} benchmark(s), {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
+                "fig4 campaign: {} benchmark(s), {} points ({} simulated, {} restored) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
                 outcome.explorations().len(),
                 outcome.total_points(),
                 outcome.simulated,
@@ -797,7 +797,7 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
             let t0 = std::time::Instant::now();
             let outcome = campaign.run()?;
             eprintln!(
-                "fig5 campaign: {} points ({} simulated, {} resumed) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
+                "fig5 campaign: {} points ({} simulated, {} restored) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
                 outcome.total_points(),
                 outcome.simulated,
                 outcome.resumed,
@@ -880,18 +880,24 @@ fn cmd_synth_table() -> Result<()> {
 ///    design point) and through the grouped lane-batched engine; write
 ///    points/sec + wall ms to `BENCH_sweep.json`. Single-threaded on
 ///    both sides so the ratio measures the engine, not the pool.
-/// 2. **batch lanes** — same quick sweep through the grouped dispatcher
-///    with `lanes = 1` (scalar engine per point) and `lanes = auto`
-///    (lane-batched kernel); write lanes used, points/sec and the
-///    batch-vs-scalar-engine speedup to `BENCH_batch.json`. This
-///    isolates the lane kernel's contribution from the grouping wins
-///    section 1 already had.
+/// 2. **batch lanes** — the full default model set at one knob
+///    combination (wide compatible groups, the shape the v2 kernel is
+///    built for) through the grouped dispatcher with `lanes = 1`
+///    (scalar engine per point) and `lanes = auto`; write lanes used,
+///    points/sec and the batch-vs-scalar-engine speedup to
+///    `BENCH_batch.json`. This isolates the lane kernel's contribution
+///    from the grouping wins section 1 already had.
 /// 3. **campaign** — run the whole 13-benchmark suite × quick sweep as
 ///    sequential per-benchmark `Explorer` runs and as one `Campaign`
 ///    (shared coordinator on both sides), and write suite points/sec +
 ///    campaign-vs-sequential speedup to `BENCH_campaign.json`.
+///
+/// `--repeats N` runs every timed side N times and reports the median
+/// of the per-run medians, so one noisy run cannot flip a CI gate; each
+/// JSON also records a host fingerprint (CPU model, logical cores,
+/// thread count) so trajectories are comparable across runners.
 fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
-    use amm_dse::util::benchkit::Bench;
+    use amm_dse::util::benchkit::{self, Bench};
     let args = parse_args(
         rest,
         &[
@@ -899,6 +905,7 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
             "--campaign-out",
             "--batch-out",
             "--iters",
+            "--repeats",
             "--min-speedup",
             "--min-campaign-speedup",
             "--min-batch-speedup",
@@ -909,6 +916,16 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     let campaign_out = args.get("--campaign-out").unwrap_or("BENCH_campaign.json").to_string();
     let batch_out = args.get("--batch-out").unwrap_or("BENCH_batch.json").to_string();
     let iters = args.u32_or("--iters", 7)? as usize;
+    // De-flake knob: each section's timed pair runs `repeats` times and
+    // the reported statistic is the median over per-run medians.
+    let repeats = (args.u32_or("--repeats", 1)? as usize).max(1);
+    let (host_cpu, host_cores) = benchkit::host_fingerprint();
+    let host_json = format!(
+        "{{\"cpu\": \"{}\", \"logical_cores\": {}, \"threads\": {}}}",
+        amm_dse::util::jsonl::escape(&host_cpu),
+        host_cores,
+        amm_dse::util::pool::default_threads()
+    );
     // Regression gate: fail if any benchmark's engine speedup drops
     // below this (0 = report only). With the lane-batched kernel on the
     // engine side the observed floor is well above the old 0.8x noise
@@ -921,7 +938,8 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     let min_campaign_speedup = args.f64_or("--min-campaign-speedup", 0.0)?;
     // Gate for the batch-vs-scalar-engine section (0 = report only):
     // both sides share grouping/arena wins, so this is a pure kernel
-    // ratio — CI holds a conservative floor above 1.0x.
+    // ratio — with the v2 event-wheel kernel on wide default-model
+    // groups, CI ratchets this to 1.5x.
     let min_batch_speedup = args.f64_or("--min-batch-speedup", 0.0)?;
     let sweep = Sweep::quick();
     let mut rows = Vec::new();
@@ -931,24 +949,28 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
         let points = sweep.points();
         let n_points = points.len() as u64;
         let mut bench = Bench::new(iters, 2);
-        bench.run(&format!("sweep/{name}/per-point"), Some(n_points), || {
-            points
-                .iter()
-                .map(|p| dse::evaluate_model(&wl.trace, &*p.model, &p.knobs).out.cycles)
-                .fold(0u64, u64::wrapping_add)
-        });
-        // Engine side runs with auto lanes — this row now carries the
-        // lane-batched kernel, so its points/sec step vs the per-point
-        // baseline is the headline number the CI gate ratchets on.
-        bench.run(&format!("sweep/{name}/engine"), Some(n_points), || {
-            dse::run_points(&wl.trace, &points, 1, 0)
-                .iter()
-                .map(|p| p.out.cycles)
-                .fold(0u64, u64::wrapping_add)
-        });
-        let rs = bench.results();
-        let (base, eng) = (&rs[0], &rs[1]);
-        let speedup = base.median_ns() / eng.median_ns();
+        for _ in 0..repeats {
+            bench.run(&format!("sweep/{name}/per-point"), Some(n_points), || {
+                points
+                    .iter()
+                    .map(|p| dse::evaluate_model(&wl.trace, &*p.model, &p.knobs).out.cycles)
+                    .fold(0u64, u64::wrapping_add)
+            });
+            // Engine side runs with auto lanes — this row carries the
+            // lane-batched kernel, so its points/sec step vs the
+            // per-point baseline is the headline the CI gate ratchets.
+            bench.run(&format!("sweep/{name}/engine"), Some(n_points), || {
+                dse::run_points(&wl.trace, &points, 1, 0)
+                    .iter()
+                    .map(|p| p.out.cycles)
+                    .fold(0u64, u64::wrapping_add)
+            });
+        }
+        let base_ns =
+            benchkit::median_median_ns(bench.results(), &format!("sweep/{name}/per-point"));
+        let eng_ns = benchkit::median_median_ns(bench.results(), &format!("sweep/{name}/engine"));
+        let speedup = base_ns / eng_ns;
+        let pps = |ns: f64| n_points as f64 / (ns / 1e9);
         rows.push(format!(
             concat!(
                 "    {{\"benchmark\": \"{}\", \"points\": {}, ",
@@ -958,10 +980,10 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
             ),
             name,
             n_points,
-            base.median_ns() / 1e6,
-            eng.median_ns() / 1e6,
-            base.items_per_s().unwrap_or(0.0),
-            eng.items_per_s().unwrap_or(0.0),
+            base_ns / 1e6,
+            eng_ns / 1e6,
+            pps(base_ns),
+            pps(eng_ns),
             speedup,
         ));
         println!("perf-smoke {name}: engine {speedup:.2}x points/sec vs per-point baseline");
@@ -971,9 +993,12 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
         concat!(
             "{{\n  \"schema\": \"bench_sweep/v1\",\n  \"sweep\": \"quick\",\n",
             "  \"scale\": \"tiny\",\n  \"threads\": 1,\n  \"iters\": {},\n",
+            "  \"repeats\": {},\n  \"host\": {},\n",
             "  \"results\": [\n{}\n  ]\n}}\n"
         ),
         iters,
+        repeats,
+        host_json,
         rows.join(",\n")
     );
     report::write_file(Path::new(&out_path), &json)
@@ -985,30 +1010,46 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     // compile, shared arenas), so the only variable is lanes=1 (scalar
     // oracle per point) vs lanes=auto (lane-batched kernel). The ratio
     // is therefore the kernel's own contribution, independent of the
-    // grouping wins the sweep section measures.
-    let lanes = dse::effective_lanes(0);
+    // grouping wins the sweep section measures. The sweep here is the
+    // full default model set at one knob combination — wide compatible
+    // groups, the shape the v2 event-wheel kernel is built for — so the
+    // ratio reflects the kernel at its real campaign width rather than
+    // the 4-wide groups of `Sweep::quick()`.
+    let bsweep = {
+        let mut s = Sweep::default();
+        s.unrolls = vec![1, 4];
+        s.word_bytes = vec![8];
+        s.alus = vec![4];
+        s
+    };
+    let bmodels = bsweep.models().len();
     let mut brows = Vec::new();
     let mut bworst = f64::INFINITY;
     for name in ["gemm", "fft"] {
         let wl = suite::generate_cached(name, Scale::Tiny);
-        let points = sweep.points();
+        let points = bsweep.points();
         let n_points = points.len() as u64;
+        let lanes = dse::resolve_lanes(0, bmodels, wl.trace.len());
         let mut bench = Bench::new(iters, 2);
-        bench.run(&format!("batch/{name}/scalar"), Some(n_points), || {
-            dse::run_points(&wl.trace, &points, 1, 1)
-                .iter()
-                .map(|p| p.out.cycles)
-                .fold(0u64, u64::wrapping_add)
-        });
-        bench.run(&format!("batch/{name}/lanes"), Some(n_points), || {
-            dse::run_points(&wl.trace, &points, 1, 0)
-                .iter()
-                .map(|p| p.out.cycles)
-                .fold(0u64, u64::wrapping_add)
-        });
-        let rs = bench.results();
-        let (scalar, batched) = (&rs[0], &rs[1]);
-        let speedup = scalar.median_ns() / batched.median_ns();
+        for _ in 0..repeats {
+            bench.run(&format!("batch/{name}/scalar"), Some(n_points), || {
+                dse::run_points(&wl.trace, &points, 1, 1)
+                    .iter()
+                    .map(|p| p.out.cycles)
+                    .fold(0u64, u64::wrapping_add)
+            });
+            bench.run(&format!("batch/{name}/lanes"), Some(n_points), || {
+                dse::run_points(&wl.trace, &points, 1, 0)
+                    .iter()
+                    .map(|p| p.out.cycles)
+                    .fold(0u64, u64::wrapping_add)
+            });
+        }
+        let scalar_ns =
+            benchkit::median_median_ns(bench.results(), &format!("batch/{name}/scalar"));
+        let batch_ns = benchkit::median_median_ns(bench.results(), &format!("batch/{name}/lanes"));
+        let speedup = scalar_ns / batch_ns;
+        let pps = |ns: f64| n_points as f64 / (ns / 1e9);
         brows.push(format!(
             concat!(
                 "    {{\"benchmark\": \"{}\", \"points\": {}, \"lanes\": {}, ",
@@ -1019,10 +1060,10 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
             name,
             n_points,
             lanes,
-            scalar.median_ns() / 1e6,
-            batched.median_ns() / 1e6,
-            scalar.items_per_s().unwrap_or(0.0),
-            batched.items_per_s().unwrap_or(0.0),
+            scalar_ns / 1e6,
+            batch_ns / 1e6,
+            pps(scalar_ns),
+            pps(batch_ns),
             speedup,
         ));
         println!(
@@ -1032,12 +1073,15 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     }
     let bjson = format!(
         concat!(
-            "{{\n  \"schema\": \"bench_batch/v1\",\n  \"sweep\": \"quick\",\n",
-            "  \"scale\": \"tiny\",\n  \"threads\": 1,\n  \"lanes\": {},\n",
-            "  \"iters\": {},\n  \"results\": [\n{}\n  ]\n}}\n"
+            "{{\n  \"schema\": \"bench_batch/v2\",\n  \"sweep\": \"default-models\",\n",
+            "  \"scale\": \"tiny\",\n  \"threads\": 1,\n  \"models\": {},\n",
+            "  \"iters\": {},\n  \"repeats\": {},\n  \"host\": {},\n",
+            "  \"results\": [\n{}\n  ]\n}}\n"
         ),
-        lanes,
+        bmodels,
         iters,
+        repeats,
+        host_json,
         brows.join(",\n")
     );
     report::write_file(Path::new(&batch_out), &bjson)
@@ -1057,37 +1101,40 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     let suite_points = (sweep.points().len() * n_benchmarks) as u64;
     let citers = iters.clamp(1, 5);
     let mut cbench = Bench::new(citers, 1);
-    cbench.run("campaign/suite/sequential", Some(suite_points), || {
-        let mut cycles = 0u64;
-        for name in suite::ALL_BENCHMARKS {
-            let ex = Explorer::new()
-                .workload(name, Scale::Tiny)
+    for _ in 0..repeats {
+        cbench.run("campaign/suite/sequential", Some(suite_points), || {
+            let mut cycles = 0u64;
+            for name in suite::ALL_BENCHMARKS {
+                let ex = Explorer::new()
+                    .workload(name, Scale::Tiny)
+                    .sweep(sweep.clone())
+                    .threads(threads)
+                    .run_with(&coord)
+                    .expect("sequential explorer run");
+                cycles =
+                    ex.points().iter().map(|p| p.out.cycles).fold(cycles, u64::wrapping_add);
+            }
+            cycles
+        });
+        cbench.run("campaign/suite/campaign", Some(suite_points), || {
+            let outcome = Campaign::new()
+                .benchmarks(suite::ALL_BENCHMARKS)
+                .scale(Scale::Tiny)
                 .sweep(sweep.clone())
                 .threads(threads)
                 .run_with(&coord)
-                .expect("sequential explorer run");
-            cycles =
-                ex.points().iter().map(|p| p.out.cycles).fold(cycles, u64::wrapping_add);
-        }
-        cycles
-    });
-    cbench.run("campaign/suite/campaign", Some(suite_points), || {
-        let outcome = Campaign::new()
-            .benchmarks(suite::ALL_BENCHMARKS)
-            .scale(Scale::Tiny)
-            .sweep(sweep.clone())
-            .threads(threads)
-            .run_with(&coord)
-            .expect("campaign run");
-        outcome
-            .explorations()
-            .iter()
-            .flat_map(|e| e.points().iter().map(|p| p.out.cycles))
-            .fold(0u64, u64::wrapping_add)
-    });
-    let rs = cbench.results();
-    let (seq, camp) = (&rs[0], &rs[1]);
-    let campaign_speedup = seq.median_ns() / camp.median_ns();
+                .expect("campaign run");
+            outcome
+                .explorations()
+                .iter()
+                .flat_map(|e| e.points().iter().map(|p| p.out.cycles))
+                .fold(0u64, u64::wrapping_add)
+        });
+    }
+    let seq_ns = benchkit::median_median_ns(cbench.results(), "campaign/suite/sequential");
+    let camp_ns = benchkit::median_median_ns(cbench.results(), "campaign/suite/campaign");
+    let campaign_speedup = seq_ns / camp_ns;
+    let cpps = |ns: f64| suite_points as f64 / (ns / 1e9);
     println!(
         "perf-smoke campaign: {campaign_speedup:.2}x suite points/sec vs sequential explorer runs"
     );
@@ -1095,7 +1142,7 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
         concat!(
             "{{\n  \"schema\": \"bench_campaign/v1\",\n  \"sweep\": \"quick\",\n",
             "  \"scale\": \"tiny\",\n  \"benchmarks\": {},\n  \"threads\": {},\n",
-            "  \"iters\": {},\n  \"suite_points\": {},\n",
+            "  \"iters\": {},\n  \"repeats\": {},\n  \"host\": {},\n  \"suite_points\": {},\n",
             "  \"sequential_wall_ms\": {:.4},\n  \"campaign_wall_ms\": {:.4},\n",
             "  \"sequential_points_per_s\": {:.1},\n  \"campaign_points_per_s\": {:.1},\n",
             "  \"speedup\": {:.3}\n}}\n"
@@ -1103,11 +1150,13 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
         n_benchmarks,
         threads,
         citers,
+        repeats,
+        host_json,
         suite_points,
-        seq.median_ns() / 1e6,
-        camp.median_ns() / 1e6,
-        seq.items_per_s().unwrap_or(0.0),
-        camp.items_per_s().unwrap_or(0.0),
+        seq_ns / 1e6,
+        camp_ns / 1e6,
+        cpps(seq_ns),
+        cpps(camp_ns),
         campaign_speedup,
     );
     report::write_file(Path::new(&campaign_out), &cjson)

@@ -20,6 +20,17 @@
 //! is an O(1) push and whose pops come off a pre-sorted list, reserving
 //! the heap for the rare far-future iteration-gate events.
 //!
+//! The v2 kernel replaces the v1 global clock (a per-step linear
+//! `min(next_visit)` scan over every lane) with an [`EventWheel`]: a
+//! 64-slot bucket queue of lane bitmasks keyed by cycle, with an
+//! occupancy summary word and a far-event mask. Advancing the clock is
+//! one rotate + `trailing_zeros`, lanes due at the new cycle pop as a
+//! bitmask, and idle lanes cost literally zero per step. The same trick
+//! collapses the per-lane completion-ring probe loop (`Lane::ring_occ`)
+//! and raises the lane cap from 8 to the bitmask width
+//! ([`crate::dse::MAX_LANES`] caps dispatch at 32; the kernel itself
+//! accepts up to 64).
+//!
 //! **Bit-identity contract**: every lane must produce the exact
 //! [`SimOutput`] the scalar [`CompiledTrace::simulate`] produces for
 //! that design (`PartialEq`, no tolerance) — the scalar engine stays
@@ -260,6 +271,10 @@ struct Lane {
     /// schema as `SimArena::ring`, but per lane — each lane's retire
     /// set and ring scan must match its own scalar run exactly).
     ring: Vec<Vec<u32>>,
+    /// Slot-occupancy bitmask: bit `s` set iff `ring[s]` is non-empty,
+    /// so the advance step finds the nearest completion with a rotate +
+    /// `trailing_zeros` instead of probing up to `RING` slots.
+    ring_occ: u32,
     ring_pending: usize,
     retire_buf: Vec<u32>,
     used_rd: Vec<u32>,
@@ -279,6 +294,7 @@ impl Lane {
         Lane {
             ready: ReadySet::new(),
             ring: vec![Vec::new(); RING],
+            ring_occ: 0,
             ring_pending: 0,
             retire_buf: Vec::new(),
             used_rd: Vec::new(),
@@ -300,6 +316,7 @@ impl Lane {
         for slot in &mut self.ring {
             slot.clear();
         }
+        self.ring_occ = 0;
         self.ring_pending = 0;
         self.retire_buf.clear();
         self.acc = Accum::default();
@@ -325,6 +342,7 @@ impl Lane {
         let Lane {
             ready,
             ring,
+            ring_occ,
             ring_pending,
             retire_buf,
             used_rd,
@@ -345,6 +363,7 @@ impl Lane {
         if !ring[slot].is_empty() {
             retire_buf.clear();
             retire_buf.append(&mut ring[slot]);
+            *ring_occ &= !(1u32 << slot);
             *ring_pending -= retire_buf.len();
             *done += retire_buf.len();
             for &node in retire_buf.iter() {
@@ -363,7 +382,9 @@ impl Lane {
 
         macro_rules! complete_at {
             ($cycle:expr, $nid:expr) => {{
-                ring[($cycle % RING as u64) as usize].push($nid);
+                let s = ($cycle % RING as u64) as usize;
+                ring[s].push($nid);
+                *ring_occ |= 1u32 << s;
                 *ring_pending += 1;
             }};
         }
@@ -441,15 +462,15 @@ impl Lane {
             acc.stall_cycles += 1;
         }
 
-        // advance to this lane's next event
+        // advance to this lane's next event; the nearest completion
+        // comes off the ring-occupancy mask in one rotate (every pending
+        // completion lies in `(now, now + RING]`, so residues are
+        // unambiguous — the same window the scalar probe loop assumes)
         let mut next = ready.next_at();
         if *ring_pending > 0 {
-            for d in 1..=RING as u64 {
-                if !ring[((now + d) % RING as u64) as usize].is_empty() {
-                    next = next.min(now + d);
-                    break;
-                }
-            }
+            let from = ((now + 1) % RING as u64) as u32;
+            let d = ring_occ.rotate_right(from).trailing_zeros() as u64;
+            next = next.min(now + 1 + d);
         }
         if *done >= n || next == u64::MAX {
             *finished = true;
@@ -459,12 +480,117 @@ impl Lane {
     }
 }
 
+/// Bitmask width of the global clock: one `u64` bit per lane, and one
+/// wheel slot per cycle residue. The kernel's hard lane cap.
+const WHEEL: usize = 64;
+
+/// The global batch clock — a single-level bucket queue (event wheel)
+/// of lane bitmasks keyed by cycle.
+///
+/// Window invariant: a lane stepped at cycle `now` re-arms for
+/// `next_visit > now`, and wheeled visits always satisfy
+/// `next_visit <= insert_now + WHEEL <= now + WHEEL` (the clock only
+/// advances to queued visits), so every wheeled event lies in
+/// `(now, now + WHEEL]` — cycle residues are unambiguous and the next
+/// event falls out of one rotate + `trailing_zeros` over `occ`. Visits
+/// beyond the window (far-future iteration gates) park in `far` and
+/// migrate into the wheel as the clock reaches them.
+struct EventWheel {
+    /// Lane bitmask per cycle residue (`cycle % WHEEL`).
+    slots: [u64; WHEEL],
+    /// Slot-occupancy summary: bit `s` set iff `slots[s] != 0`.
+    occ: u64,
+    /// Lanes whose next visit is beyond `now + WHEEL`.
+    far: u64,
+}
+
+impl EventWheel {
+    fn new() -> EventWheel {
+        EventWheel { slots: [0; WHEEL], occ: 0, far: 0 }
+    }
+
+    fn clear(&mut self) {
+        self.slots = [0; WHEEL];
+        self.occ = 0;
+        self.far = 0;
+    }
+
+    /// Queue lane `l`'s next visit at cycle `at` (strictly ahead of the
+    /// clock).
+    #[inline]
+    fn insert(&mut self, l: usize, at: u64, now: u64) {
+        debug_assert!(at > now, "lane re-arm must be strictly ahead of the clock");
+        if at - now <= WHEEL as u64 {
+            let s = (at % WHEEL as u64) as usize;
+            self.slots[s] |= 1u64 << l;
+            self.occ |= 1u64 << s;
+        } else {
+            self.far |= 1u64 << l;
+        }
+    }
+
+    /// Advance the clock to the earliest queued visit: returns the new
+    /// cycle and the bitmask of lanes due there (`None` when nothing is
+    /// queued). Far lanes whose visit enters the new window migrate into
+    /// the wheel here — a far event can become the nearest one after an
+    /// advance, so migration is part of the pop, not best-effort.
+    fn pop_next(&mut self, now: u64, lanes: &[Lane]) -> Option<(u64, u64)> {
+        let next = if self.occ != 0 {
+            let from = ((now + 1) % WHEEL as u64) as u32;
+            now + 1 + self.occ.rotate_right(from).trailing_zeros() as u64
+        } else if self.far != 0 {
+            // wheel empty: the nearest far visit is the next event
+            let mut m = self.far;
+            let mut min = u64::MAX;
+            while m != 0 {
+                let l = m.trailing_zeros() as usize;
+                m &= m - 1;
+                min = min.min(lanes[l].next_visit);
+            }
+            min
+        } else {
+            return None;
+        };
+        // Pop the due slot BEFORE migrating: a far visit at exactly
+        // `next + WHEEL` shares the slot residue of `next` and belongs
+        // to the emptied slot, not to this advance.
+        let mut due: u64 = 0;
+        let s = (next % WHEEL as u64) as usize;
+        if self.occ & (1u64 << s) != 0 {
+            due |= self.slots[s];
+            self.slots[s] = 0;
+            self.occ &= !(1u64 << s);
+        }
+        if self.far != 0 {
+            let mut m = self.far;
+            while m != 0 {
+                let l = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let at = lanes[l].next_visit;
+                if at == next {
+                    due |= 1u64 << l;
+                    self.far &= !(1u64 << l);
+                } else if at - next <= WHEEL as u64 {
+                    let sl = (at % WHEEL as u64) as usize;
+                    self.slots[sl] |= 1u64 << l;
+                    self.occ |= 1u64 << sl;
+                    self.far &= !(1u64 << l);
+                }
+            }
+        }
+        debug_assert!(due != 0, "advance must land on at least one due lane");
+        Some((next, due))
+    }
+}
+
 /// Struct-of-arrays scratch state for [`CompiledTrace::simulate_batch`]:
 /// the trace-shaped counters are lane-major flat vectors (lane `l` owns
 /// `[l*n, (l+1)*n)`), the iteration gates are computed once and shared
 /// by every lane, and the design-dependent event state is per [`Lane`].
 /// Like `SimArena`, an arena may be dirty from ANY previous batch —
-/// `simulate_batch` resets it allocation-preservingly.
+/// `simulate_batch` resets it allocation-preservingly, so reuse across
+/// campaign units is allocation-exact once the high-water trace × lane
+/// footprint has been reached (pinned by the `reuse` unit test below).
 pub struct BatchArena {
     lanes: Vec<Lane>,
     /// Lane-major unsatisfied-predecessor counts.
@@ -474,6 +600,8 @@ pub struct BatchArena {
     /// Shared per-batch iteration gates: `node.iter / unroll`, computed
     /// once for all lanes (knobs are batch-uniform).
     gates: Vec<u64>,
+    /// The global clock (fixed-size; cleared per batch).
+    wheel: EventWheel,
 }
 
 impl BatchArena {
@@ -485,6 +613,7 @@ impl BatchArena {
             remaining: Vec::new(),
             subs_left: Vec::new(),
             gates: Vec::new(),
+            wheel: EventWheel::new(),
         }
     }
 
@@ -542,14 +671,16 @@ impl<'t> CompiledTrace<'t> {
         if lanes == 0 {
             return Vec::new();
         }
+        assert!(lanes <= WHEEL, "simulate_batch caps at {WHEEL} lanes per call, got {lanes}");
         let n = self.trace.len();
         let unroll = knobs.unroll.max(1);
         let alus = knobs.alus.max(1);
 
         arena.reset(self, unroll, lanes);
-        let BatchArena { lanes: lane_vec, remaining, subs_left, gates } = arena;
+        let BatchArena { lanes: lane_vec, remaining, subs_left, gates, wheel } = arena;
         let lane_vec = &mut lane_vec[..lanes];
         let gates = &gates[..];
+        wheel.clear();
 
         // per-lane port config + counters + ready seed
         for (l, lane) in lane_vec.iter_mut().enumerate() {
@@ -571,34 +702,43 @@ impl<'t> CompiledTrace<'t> {
             }
         }
 
-        // Global lockstep clock: every lane is stepped at exactly the
-        // cycles its own scalar run would visit; the shared trace data
-        // stays hot across lanes working the same region of the DDG.
-        let mut active = lane_vec.iter().filter(|l| !l.finished).count();
+        // Global event-wheel clock: every lane is stepped at exactly the
+        // cycles its own scalar run would visit, the shared trace data
+        // stays hot across lanes working the same region of the DDG, and
+        // the clock advances in O(next event) — a stepped lane re-arms
+        // into the wheel and lanes not due at a cycle are never touched.
+        let mut active: u64 = 0;
+        for (l, lane) in lane_vec.iter().enumerate() {
+            if !lane.finished {
+                active |= 1u64 << l;
+            }
+        }
         let mut gcycle: u64 = 0;
-        while active > 0 {
-            let mut next_g = u64::MAX;
-            for (l, lane) in lane_vec.iter_mut().enumerate() {
-                if lane.finished {
-                    continue;
-                }
-                if lane.next_visit > gcycle {
-                    next_g = next_g.min(lane.next_visit);
-                    continue;
-                }
+        // every live lane's scalar run starts with a visit at cycle 0
+        let mut due = active;
+        while due != 0 {
+            let mut m = due;
+            while m != 0 {
+                let l = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let lane = &mut lane_vec[l];
                 let rem = &mut remaining[l * n..(l + 1) * n];
                 let subs = &mut subs_left[l * n..(l + 1) * n];
                 lane.step(self, gates, rem, subs, alus, gcycle);
                 if lane.finished {
-                    active -= 1;
+                    active &= !(1u64 << l);
                 } else {
-                    next_g = next_g.min(lane.next_visit);
+                    wheel.insert(l, lane.next_visit, gcycle);
                 }
             }
-            if next_g == u64::MAX {
-                break; // no events anywhere (or every lane drained)
+            if active == 0 {
+                break;
             }
-            gcycle = next_g;
+            let Some((next, d)) = wheel.pop_next(gcycle, lane_vec) else {
+                break; // no events anywhere (every live lane is idle)
+            };
+            gcycle = next;
+            due = d;
         }
 
         lane_vec
@@ -606,5 +746,154 @@ impl<'t> CompiledTrace<'t> {
             .zip(designs)
             .map(|(lane, design)| self.compose_output(design, alus, lane.cycle, &lane.acc))
             .collect()
+    }
+}
+
+/// Test seam for `tests/sched_props.rs` (`#[doc(hidden)]` — not API):
+/// drive a [`ReadyQ`] and a scalar-engine `BinaryHeap` mirror through
+/// the same randomized push / sync / pop / requeue script, respecting
+/// the engine's usage contract (pushes at or after the clock, one sync
+/// per visited cycle, requeue-then-stop on a stall, advance to the next
+/// event), and return the two pop sequences. They must be identical —
+/// that is the queue's exact-pop-order claim, under tie storms.
+#[doc(hidden)]
+pub fn readyq_heap_pop_orders(seed: u64, rounds: usize) -> (Vec<(u64, u32)>, Vec<(u64, u32)>) {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut q = ReadyQ::new();
+    let mut h: Heap = Heap::new();
+    let (mut qa, mut ha) = (Vec::new(), Vec::new());
+    let mut now: u64 = 0;
+    let mut next_id: u32 = 0;
+    for _ in 0..rounds {
+        // retire phase: a burst of pushes, mostly tied at `now` (the
+        // storm), arriving in shuffled node order
+        let burst = rng.below_usize(9);
+        let mut ids: Vec<u32> = (next_id..next_id + burst as u32).collect();
+        next_id += burst as u32;
+        for i in (1..ids.len()).rev() {
+            ids.swap(i, rng.below_usize(i + 1));
+        }
+        for id in ids {
+            let at = match rng.below(4) {
+                0 | 1 => now,
+                2 => now + 1 + rng.below(4),
+                _ => now + 10 + rng.below(100),
+            };
+            q.push(at, now, id);
+            h.push(Reverse((at, id)));
+        }
+        q.sync(now);
+        // issue phase: pop due events; sometimes re-queue the head like
+        // a port-stalled memory op (and stop, as the issue loops do)
+        for _ in 0..rng.below_usize(10) {
+            let Some((rc, id)) = q.pop_due() else { break };
+            qa.push((rc, id));
+            if let Some(Reverse(e)) = h.pop() {
+                ha.push(e);
+            }
+            if rng.below(8) == 0 {
+                q.requeue_front(rc, id);
+                h.push(Reverse((rc, id)));
+                break;
+            }
+        }
+        // advance like the engine: to the next event, at least one cycle
+        let next = q.next_at();
+        now = if next == u64::MAX { now + 1 } else { next.max(now + 1) };
+    }
+    // drain both queues to the end
+    loop {
+        q.sync(now);
+        while let Some(e) = q.pop_due() {
+            qa.push(e);
+            if let Some(Reverse(e2)) = h.pop() {
+                ha.push(e2);
+            }
+        }
+        let next = q.next_at();
+        if next == u64::MAX {
+            break;
+        }
+        now = next.max(now + 1);
+    }
+    (qa, ha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::MemKind;
+    use crate::sched::build_memory_model;
+    use crate::trace::{AluKind, Trace, TraceBuilder};
+
+    fn chain_trace(n: usize) -> Trace {
+        let mut b = TraceBuilder::new();
+        let a = b.array("a", 4, 64);
+        let mut prev: Option<u32> = None;
+        for i in 0..n {
+            if i % 5 == 0 {
+                b.next_iter();
+            }
+            let id = match prev {
+                Some(p) => b.alu(AluKind::FAdd, &[p]),
+                None => b.load(a, (i % 64) as u32),
+            };
+            prev = Some(id);
+        }
+        b.finish()
+    }
+
+    /// Unit-to-unit reuse is allocation-exact: once the arena has seen
+    /// its high-water (trace × lanes) footprint, later batches — same
+    /// size, smaller, or a different trace — never regrow any buffer.
+    #[test]
+    fn reuse_is_allocation_exact_after_high_water() {
+        let big = chain_trace(400);
+        let small = chain_trace(40);
+        let ct_big = CompiledTrace::new(&big, 8);
+        let ct_small = CompiledTrace::new(&small, 8);
+        let knobs = Knobs { unroll: 2, word_bytes: 8, alus: 4 };
+        let designs: Vec<MemDesign> = [1u32, 2, 4, 8]
+            .iter()
+            .map(|&b| build_memory_model(&big, &*MemKind::Banked { banks: b }.model(), 8))
+            .collect();
+
+        let mut arena = BatchArena::new();
+        // high-water pass, then record every buffer's capacity
+        let _ = ct_big.simulate_batch(&mut arena, &knobs, &designs);
+        let caps = (
+            arena.lanes.capacity(),
+            arena.remaining.capacity(),
+            arena.subs_left.capacity(),
+            arena.gates.capacity(),
+        );
+        // smaller trace, fewer lanes, then back to the high-water shape
+        let _ = ct_small.simulate_batch(&mut arena, &knobs, &designs[..2]);
+        let _ = ct_big.simulate_batch(&mut arena, &knobs, &designs);
+        let after = (
+            arena.lanes.capacity(),
+            arena.remaining.capacity(),
+            arena.subs_left.capacity(),
+            arena.gates.capacity(),
+        );
+        assert_eq!(caps, after, "unit-to-unit reuse regrew an arena buffer");
+    }
+
+    /// The event wheel hands back due lanes in exactly the cycles their
+    /// next_visit asks for, including far events parked past the window.
+    #[test]
+    fn event_wheel_pops_far_events_in_cycle_order() {
+        let mut lanes: Vec<Lane> = (0..3).map(|_| Lane::new()).collect();
+        let mut wheel = EventWheel::new();
+        lanes[0].next_visit = 5;
+        lanes[1].next_visit = WHEEL as u64 + 9; // beyond the first window
+        lanes[2].next_visit = 5;
+        for (l, lane) in lanes.iter().enumerate() {
+            wheel.insert(l, lane.next_visit, 0);
+        }
+        assert_eq!(wheel.pop_next(0, &lanes), Some((5, 0b101)));
+        assert_eq!(wheel.pop_next(5, &lanes), Some((WHEEL as u64 + 9, 0b010)));
+        assert_eq!(wheel.pop_next(WHEEL as u64 + 9, &lanes), None);
     }
 }

@@ -19,7 +19,9 @@
 //! [`CompiledTrace::compose_output`] are the single implementations of
 //! sub-word port arbitration and the Aladdin physical backend — which is
 //! what makes the batch kernel bit-identical by construction on those
-//! steps.
+//! steps. Per-node routing (word index, sub-word split, load/store
+//! class) is precompiled into one [`MemRoute`] SoA table so `try_mem`
+//! never dereferences trace nodes on the arbitration path.
 //!
 //! The compat wrappers [`super::simulate`] / [`super::simulate_design`]
 //! are thin shims over this engine and produce byte-identical
@@ -47,6 +49,22 @@ pub(super) enum NodeClass {
     Store,
 }
 
+/// Precompiled port routing for one trace node: everything the
+/// arbitration loop used to re-derive per issue attempt (trace-node
+/// deref, `mem_ref()` unwrap, store test, per-array sub-word count,
+/// word index) fused into one SoA record. Zeroed for non-memory nodes;
+/// register-promoted accesses keep their split but never reach
+/// `try_mem` (they drain through the free register queue).
+#[derive(Clone, Copy, Debug, Default)]
+pub(super) struct MemRoute {
+    /// Scratchpad word index of the first sub-access.
+    pub base_word: u32,
+    /// Port acquisitions for one full access (sub-word split).
+    pub subs: u32,
+    /// Store (write port) vs load (read port).
+    pub write: bool,
+}
+
 /// A design's port model resolved for the scheduler: the only part of
 /// the inner loop that differs between the lanes of a batched run.
 #[derive(Clone, Copy, Debug, Default)]
@@ -65,6 +83,11 @@ pub(super) struct PortCfg {
     pub per_bank: bool,
     /// Words per bank under block partitioning (0 when cyclic).
     pub block_size: u32,
+    /// `bank_count - 1` when `pow2` (cyclic slot = `word & bank_mask`).
+    pub bank_mask: u32,
+    /// Cyclic routing over a power-of-two bank count: the hot slot
+    /// computation strength-reduces `%` to `&` (identical results).
+    pub pow2: bool,
 }
 
 impl PortCfg {
@@ -79,7 +102,19 @@ impl PortCfg {
         let per_bank = bank_count > 0;
         // Block partitioning: contiguous address ranges per bank.
         let block_size = if block { design.depth.div_ceil(bank_count.max(1)).max(1) } else { 0 };
-        PortCfg { bank_count, rd_ports, wr_ports, shared, block, per_bank, block_size }
+        let pow2 = per_bank && !block && bank_count.is_power_of_two();
+        let bank_mask = if pow2 { bank_count - 1 } else { 0 };
+        PortCfg {
+            bank_count,
+            rd_ports,
+            wr_ports,
+            shared,
+            block,
+            per_bank,
+            block_size,
+            bank_mask,
+            pow2,
+        }
     }
 
     /// Per-cycle port-counter slots: one per bank, or one global pair.
@@ -151,13 +186,11 @@ pub struct CompiledTrace<'t> {
     pub(super) word_bytes: u32,
     /// Register-promotion mask per array.
     pub(super) promoted: Vec<bool>,
-    /// Port acquisitions per access, per array (sub-word splitting).
-    pub(super) subwords: Vec<u32>,
     /// Initial outstanding sub-accesses per node (0 for non-mem /
     /// promoted nodes) — the seed for `SimArena::subs_left`.
     pub(super) subs_init: Vec<u32>,
-    /// Scratchpad word index per mem node.
-    pub(super) base_words: Vec<u32>,
+    /// Precompiled per-node port routing ([`MemRoute`] SoA table).
+    pub(super) routes: Vec<MemRoute>,
     /// Issue resource class per node.
     pub(super) class: Vec<NodeClass>,
     /// Scratchpad depth (words) holding every non-promoted array.
@@ -189,12 +222,16 @@ impl<'t> CompiledTrace<'t> {
                 _ => 0,
             })
             .collect();
-        let base_words: Vec<u32> = trace
+        let routes: Vec<MemRoute> = trace
             .nodes
             .iter()
             .map(|nd| match nd.kind.mem_ref() {
-                Some((a, i)) => word_index(trace, a, i, word_bytes),
-                None => 0,
+                Some((a, i)) => MemRoute {
+                    base_word: word_index(trace, a, i, word_bytes),
+                    subs: subwords[a as usize],
+                    write: matches!(nd.kind, OpKind::Store { .. }),
+                },
+                None => MemRoute::default(),
             })
             .collect();
         let class: Vec<NodeClass> = trace
@@ -212,9 +249,8 @@ impl<'t> CompiledTrace<'t> {
             trace,
             word_bytes,
             promoted,
-            subwords,
             subs_init,
-            base_words,
+            routes,
             class,
             depth: footprint_depth(trace, word_bytes),
             reg_area_um2: promoted_reg_area(trace),
@@ -249,13 +285,11 @@ impl<'t> CompiledTrace<'t> {
 
     /// Try to issue the sub-word accesses of one memory op under `cfg`'s
     /// port budget; returns the number still outstanding after this
-    /// cycle. Shared verbatim by the scalar and batch engines.
+    /// cycle. Shared verbatim by the scalar and batch engines; the
+    /// per-node half of the routing decision is a single [`MemRoute`]
+    /// table read.
     pub(super) fn try_mem(&self, nid: u32, cfg: &PortCfg, st: &mut MemIssue<'_>) -> u32 {
-        let node = &self.trace.nodes[nid as usize];
-        let (array, _index) = node.kind.mem_ref().unwrap();
-        let is_write = matches!(node.kind, OpKind::Store { .. });
-        let total_subs = self.subwords[array as usize];
-        let base_word = self.base_words[nid as usize];
+        let MemRoute { base_word, subs: total_subs, write: is_write } = self.routes[nid as usize];
         let mut left = st.subs_left[nid as usize];
         let mut progressed = false;
         while left > 0 {
@@ -264,6 +298,8 @@ impl<'t> CompiledTrace<'t> {
                 0
             } else if cfg.block {
                 (((base_word + sub) / cfg.block_size).min(cfg.bank_count - 1)) as usize
+            } else if cfg.pow2 {
+                ((base_word + sub) & cfg.bank_mask) as usize
             } else {
                 ((base_word + sub) % cfg.bank_count) as usize
             };

@@ -31,11 +31,14 @@
 //!    between runs instead of reallocated; one arena per worker thread.
 //! 3. the scalar engine — [`CompiledTrace::simulate`] schedules one
 //!    design point against an arena. It is the correctness oracle.
-//! 4. [`batch`] — [`CompiledTrace::simulate_batch`] schedules up to L
-//!    compatible design points (same trace/word size/knobs; ports,
-//!    banking and model varying per lane) in ONE pass over the trace,
-//!    against a lane-major [`BatchArena`]; bit-identical to the scalar
-//!    engine per lane.
+//! 4. [`batch`] — [`CompiledTrace::simulate_batch`] schedules up to
+//!    [`crate::dse::MAX_LANES`] compatible design points (same trace /
+//!    word size / knobs; ports, banking and model varying per lane) in
+//!    ONE pass over the trace, against a lane-major [`BatchArena`].
+//!    The v2 kernel advances a global event wheel + active-lane bitmask
+//!    instead of scanning lanes per step, and routes memory ops through
+//!    tables precompiled on the [`CompiledTrace`]; still bit-identical
+//!    to the scalar engine per lane.
 //!
 //! [`simulate`] and [`simulate_design`] remain as compat wrappers
 //! (compile + fresh arena per call) with byte-identical [`SimOutput`];
@@ -48,6 +51,8 @@ pub mod compile;
 
 pub use arena::SimArena;
 pub use batch::BatchArena;
+#[doc(hidden)]
+pub use batch::readyq_heap_pop_orders;
 pub use compile::CompiledTrace;
 
 use crate::mem::{MemDesign, MemKind, MemModel};

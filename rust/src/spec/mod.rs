@@ -412,6 +412,8 @@ impl CampaignSpec {
         if sw.threads != 0 {
             let _ = writeln!(s, "threads = {}", sw.threads);
         }
+        // `lanes = 0` (auto-calibrated batch width, the default) is
+        // canonical-by-omission, mirroring `threads` above.
         if sw.lanes != 0 {
             let _ = writeln!(s, "lanes = {}", sw.lanes);
         }

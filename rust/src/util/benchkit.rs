@@ -115,6 +115,34 @@ impl Bench {
     }
 }
 
+/// Median over the per-invocation medians of every measurement recorded
+/// under `name` — the de-flaked statistic `perf-smoke --repeats N`
+/// reports (each repeat is one `Bench::run` call under the same name,
+/// so a single noisy repeat cannot drag the reported number).
+pub fn median_median_ns(results: &[Measurement], name: &str) -> f64 {
+    let meds: Vec<f64> =
+        results.iter().filter(|m| m.name == name).map(Measurement::median_ns).collect();
+    stats::median(&meds)
+}
+
+/// Host fingerprint for benchmark JSON: the CPU model string (from
+/// `/proc/cpuinfo`, best-effort — "unknown" off Linux) and the logical
+/// core count. Recorded in every `BENCH_*.json` so the perf trajectory
+/// is comparable across CI runners.
+pub fn host_fingerprint() -> (String, usize) {
+    let cpu = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|t| {
+            t.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split_once(':').map(|(_, v)| v.trim().to_string()))
+        })
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string());
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (cpu, cores)
+}
+
 /// Pick a human-friendly time unit.
 pub fn humanize_ns(ns: f64) -> (f64, &'static str) {
     if ns < 1e3 {
@@ -147,6 +175,22 @@ mod tests {
         let out = b.run("unit/other", None, || 1u8);
         assert_eq!(out, None);
         assert!(b.results.is_empty());
+    }
+
+    #[test]
+    fn median_of_repeats_ignores_one_noisy_run() {
+        let m = |ns: f64| Measurement { name: "x".into(), iters_ns: vec![ns], items: None };
+        let rs = vec![m(10.0), m(12.0), m(5000.0)];
+        assert_eq!(median_median_ns(&rs, "x"), 12.0);
+        let rs = vec![m(10.0), Measurement { name: "y".into(), iters_ns: vec![1.0], items: None }];
+        assert_eq!(median_median_ns(&rs, "x"), 10.0);
+    }
+
+    #[test]
+    fn host_fingerprint_is_nonempty() {
+        let (cpu, cores) = host_fingerprint();
+        assert!(!cpu.is_empty());
+        assert!(cores >= 1);
     }
 
     #[test]

@@ -198,6 +198,11 @@ fn campaign_sink_streams_byte_stable_and_resumes_without_resimulating() {
     let complete = campaign(&sink_a).run().unwrap();
     assert_eq!(complete.simulated, 0, "complete sink ⇒ zero re-simulation");
     assert_eq!(complete.resumed, full.total_points());
+    assert_eq!(complete.restored(), complete.resumed, "restored() is the resume count");
+    assert_eq!(
+        complete.points_per_s, 0.0,
+        "points_per_s counts fresh simulation only; a warm resume reports zero"
+    );
     for (a, b) in full.explorations().iter().zip(complete.explorations()) {
         for (x, y) in a.points().iter().zip(b.points()) {
             assert_eq!(x.out, y.out, "{}/{}", a.benchmark, x.id);
@@ -209,8 +214,9 @@ fn campaign_sink_streams_byte_stable_and_resumes_without_resimulating() {
 fn lane_batched_campaign_sink_is_byte_identical_to_sequential() {
     // The lane-batched simulate stage must not change a single sink
     // byte: a campaign forced onto the scalar engine (lanes = 1) and
-    // one running the batch kernel (lanes = 8) must write identical
-    // JSONL and produce identical results, point for point.
+    // one running the batch kernel at full width (lanes = 32) must
+    // write identical JSONL and produce identical results, point for
+    // point.
     let dir = std::env::temp_dir().join("amm_dse_campaign_lanes");
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
@@ -230,7 +236,7 @@ fn lane_batched_campaign_sink_is_byte_identical_to_sequential() {
     let scalar_sink = dir.join("scalar.jsonl");
     let batched_sink = dir.join("batched.jsonl");
     let scalar = run(1, &scalar_sink);
-    let batched = run(8, &batched_sink);
+    let batched = run(32, &batched_sink);
     assert_eq!(scalar.simulated, batched.simulated);
     assert!(batched.points_per_s > 0.0, "fresh campaigns report sustained throughput");
     assert_eq!(

@@ -152,6 +152,54 @@ fn dirty_batch_arena_resets_cleanly_between_different_traces() {
 }
 
 #[test]
+fn batch_matches_scalar_at_32_lanes_on_all_suite_benchmarks() {
+    // The v2 kernel's acceptance width: a full 32-wide lane group
+    // mixing every port-model family (banked/block/dual-port, XOR and
+    // LVT and flat AMMs, multipump, circuit multiport) in one
+    // `simulate_batch` pass must equal the scalar oracle lane-for-lane
+    // on every suite benchmark, with one dirty `BatchArena` throughout.
+    let mut kinds: Vec<MemKind> = Vec::new();
+    for b in [1u32, 2, 4, 8, 16, 32] {
+        kinds.push(MemKind::Banked { banks: b });
+    }
+    for b in [2u32, 4, 8, 16] {
+        kinds.push(MemKind::BankedBlock { banks: b });
+    }
+    for b in [2u32, 4] {
+        kinds.push(MemKind::BankedDualPort { banks: b });
+    }
+    for f in [2u32, 4] {
+        kinds.push(MemKind::MultiPump { factor: f });
+    }
+    for (r, w) in [(2u32, 1u32), (2, 2), (4, 2), (4, 4), (8, 4), (8, 8)] {
+        kinds.push(MemKind::XorAmm { read_ports: r, write_ports: w });
+        kinds.push(MemKind::LvtAmm { read_ports: r, write_ports: w });
+    }
+    for (r, w) in [(2u32, 1u32), (2, 2), (4, 2), (4, 4)] {
+        kinds.push(MemKind::XorFlat { read_ports: r, write_ports: w });
+    }
+    for (r, w) in [(4u32, 2u32), (8, 4)] {
+        kinds.push(MemKind::CircuitMp { read_ports: r, write_ports: w });
+    }
+    assert_eq!(kinds.len(), 32);
+    let knobs = Knobs { unroll: 4, word_bytes: 8, alus: 4 };
+    let mut batch = BatchArena::new();
+    let mut arena = SimArena::new();
+    for name in suite::ALL_BENCHMARKS {
+        let wl = suite::generate(name, Scale::Tiny);
+        let ct = CompiledTrace::new(&wl.trace, knobs.word_bytes);
+        let designs: Vec<_> = kinds
+            .iter()
+            .map(|k| sched::build_memory_model(&wl.trace, &*k.model(), knobs.word_bytes))
+            .collect();
+        let lanes = ct.simulate_batch(&mut batch, &knobs, &designs);
+        for (lane, design) in lanes.iter().zip(&designs) {
+            assert_eq!(*lane, ct.simulate(&mut arena, &knobs, design), "{name}/{}", design.id);
+        }
+    }
+}
+
+#[test]
 fn batch_handles_max_width_lane_groups() {
     // L = every model the default sweep enumerates — wider than the
     // auto lane count the dispatcher would ever form — all sharing one

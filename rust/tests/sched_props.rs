@@ -107,10 +107,11 @@ fn prop_cycles_lower_bounded_by_port_capacity() {
 #[test]
 fn prop_batch_bit_identical_to_scalar_on_random_lane_mixes() {
     // The lane-batched kernel's contract, fuzzed: random traces ×
-    // random lane mixes (1–6 lanes drawn from all four port-model
-    // families with random port counts) × random knobs must equal the
-    // scalar oracle lane-for-lane, `SimOutput` bit-for-bit. The batch
-    // arena is reused dirty across the two knob sets within a case.
+    // random lane mixes (1–32 lanes drawn from all four port-model
+    // families with random port counts, the full v2 width) × random
+    // knobs must equal the scalar oracle lane-for-lane, `SimOutput`
+    // bit-for-bit. The batch arena is reused dirty across the two knob
+    // sets within a case.
     check(
         Config::default().cases(40),
         |rng| rng.next_u64(),
@@ -129,7 +130,7 @@ fn prop_batch_bit_identical_to_scalar_on_random_lane_mixes() {
             let mut batch = BatchArena::new();
             let mut arena = SimArena::new();
             for knobs in &knob_sets {
-                let designs: Vec<_> = (0..1 + rng.below_usize(6))
+                let designs: Vec<_> = (0..1 + rng.below_usize(32))
                     .map(|_| {
                         let kind = match rng.below(4) {
                             0 => MemKind::Banked { banks: 1u32 << rng.below(3) },
@@ -157,6 +158,59 @@ fn prop_batch_bit_identical_to_scalar_on_random_lane_mixes() {
                 }
             }
             true
+        },
+        |_| vec![],
+    );
+}
+
+#[test]
+fn batch_matches_scalar_on_degenerate_traces() {
+    // Zero-mem-op and single-node traces exercise the v2 kernel's empty
+    // paths: lanes that never queue a memory completion (the ring-occ
+    // mask stays 0) and lanes that finish on their first visit (the
+    // event wheel drains immediately).
+    let mut pure_alu = TraceBuilder::new();
+    let mut prev: Vec<u32> = Vec::new();
+    for _ in 0..10 {
+        let id = pure_alu.alu(AluKind::FAdd, &prev);
+        prev = vec![id];
+    }
+    let pure_alu = pure_alu.finish();
+    let mut single = TraceBuilder::new();
+    single.alu(AluKind::FAdd, &[]);
+    let single = single.finish();
+    let knobs = Knobs { unroll: 1, word_bytes: 8, alus: 2 };
+    let mut batch = BatchArena::new();
+    let mut arena = SimArena::new();
+    for t in [&pure_alu, &single] {
+        t.validate().unwrap();
+        let designs: Vec<_> = [1u32, 2, 4, 8]
+            .iter()
+            .map(|&b| {
+                let kind = MemKind::Banked { banks: b };
+                sched::build_memory_model(t, &*kind.model(), knobs.word_bytes)
+            })
+            .collect();
+        let ct = CompiledTrace::new(t, knobs.word_bytes);
+        let lanes = ct.simulate_batch(&mut batch, &knobs, &designs);
+        for (lane, d) in lanes.iter().zip(&designs) {
+            assert_eq!(*lane, ct.simulate(&mut arena, &knobs, d));
+        }
+    }
+}
+
+#[test]
+fn prop_readyq_pop_order_matches_binary_heap_under_tie_storms() {
+    // The ReadyQ bucket queue must be order-equivalent to a plain
+    // BinaryHeap over (cycle, node-id) even when whole bursts of pushes
+    // land on one cycle: the batch kernel relies on this to keep every
+    // lane bit-identical to the scalar engine.
+    check(
+        Config::default().cases(60),
+        |rng| rng.next_u64(),
+        |seed| {
+            let (q, h) = sched::readyq_heap_pop_orders(*seed, 40);
+            q == h
         },
         |_| vec![],
     );
