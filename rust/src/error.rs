@@ -22,7 +22,8 @@ pub enum Error {
     },
     /// Malformed config file or option value.
     Config(String),
-    /// Benchmark name not in [`crate::suite::ALL_BENCHMARKS`].
+    /// Benchmark name neither in [`crate::suite::ALL_BENCHMARKS`] nor a
+    /// parametric `synth:` spec (see [`crate::suite::validate_name`]).
     UnknownBenchmark {
         /// The offending name.
         name: String,
@@ -68,8 +69,10 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::UnknownBenchmark { name } => write!(
                 f,
-                "unknown benchmark {name:?} (known: {:?})",
-                crate::suite::ALL_BENCHMARKS
+                "unknown benchmark {name:?} (known: {:?}; or a parametric synthetic name \
+                 like \"synth:stride=rand,rw=0.7,reuse=64\" — {})",
+                crate::suite::ALL_BENCHMARKS,
+                crate::suite::synthetic::DIAL_HELP
             ),
             Error::UnknownModel { id } => write!(
                 f,
@@ -118,6 +121,9 @@ mod tests {
         let e = Error::UnknownBenchmark { name: "nope".into() };
         assert!(e.to_string().contains("nope"));
         assert!(e.to_string().contains("gemm"));
+        // the synthetic namespace and its dials are advertised too
+        assert!(e.to_string().contains("synth:"));
+        assert!(e.to_string().contains("known dials"));
     }
 
     #[test]

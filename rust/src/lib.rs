@@ -98,7 +98,9 @@
 //! ## Module map
 //!
 //! * [`suite`] — faithful ports of 13 MachSuite benchmarks that produce
-//!   dynamic instruction traces with true data dependencies.
+//!   dynamic instruction traces with true data dependencies, plus the
+//!   [`suite::synthetic`] locality-dial generator behind parametric
+//!   `synth:stride=…,rw=…` benchmark names.
 //! * [`trace`] — the dynamic trace / data-dependence-graph substrate.
 //! * [`sram`] — CACTI-lite analytical SRAM macro model (45 nm).
 //! * [`synth`] — DC-lite gate-level model of AMM read/write-path logic.

@@ -7,7 +7,8 @@
 //! repro list                              list benchmarks + artifacts
 //! repro models                            list registered memory models
 //! repro trace <bench> [--scale s]         trace stats for one benchmark
-//! repro locality [--scale s]              Fig-5 locality table
+//! repro locality [bench...] [--scale s]   Fig-5 locality table
+//! repro locality-sweep [...]              AMM-benefit-vs-locality dial sweep
 //! repro simulate <bench> --mem <id> [...] one design point
 //! repro run <config.toml> [...]           spec-driven campaign (the canonical verb)
 //! repro merge <sinks...> [--config c]     merge shard sinks -> reports
@@ -54,6 +55,7 @@ fn run(args: &[String]) -> Result<()> {
         "models" => cmd_models(),
         "trace" => cmd_trace(&args[1..]),
         "locality" => cmd_locality(&args[1..]),
+        "locality-sweep" => cmd_locality_sweep(&args[1..]),
         "simulate" => cmd_simulate(&args[1..]),
         "run" => cmd_run(&args[1..]),
         "merge" => cmd_merge(&args[1..]),
@@ -78,7 +80,10 @@ USAGE:
   repro list
   repro models
   repro trace <benchmark> [--scale tiny|paper|large]
-  repro locality [--scale tiny|paper|large]
+  repro locality [<benchmark>...] [--scale tiny|paper|large]
+  repro locality-sweep [--config configs/locality.toml] [--scale s]
+            [--sink f.jsonl] [--cost-store f.cost.jsonl]
+            [--threads N] [--out-dir results] [--quiet]
   repro simulate <benchmark> --mem <id> [--unroll N] [--word N] [--alus N] [--scale s]
   repro run <config.toml> [--shard i/n] [--shard-strategy hash|weighted]
             [--sink f.jsonl] [--cost-store f.cost.jsonl] [--scale s]
@@ -129,6 +134,16 @@ under --data-dir, so re-submitting a finished spec issues zero
 backend batches. See README "Serving" for the endpoint table.
 
 Flags take `--name value` or `--name=value`; unknown flags are errors.
+
+BENCHMARK NAMES: everywhere a benchmark is named (trace, locality,
+simulate, config files, serve submissions) either a MachSuite name
+(`repro list`) or a parametric synthetic spec works, e.g.
+`synth:stride=rand,rw=0.7,reuse=64` — dials: stride=unit|s<K>|rand,
+mix=0..1, rw=0..1, reuse=32..1048576, conflict=0..1, seed=<u64>,
+n=64..16777216 (any order; omitted dials take defaults). See README
+"Synthetic workloads". `locality-sweep` runs the configs/locality.toml
+dial x port-model campaign and writes locality_amm.csv — AMM benefit
+(banked best time / AMM best time) against measured locality.
 
 MEMORY IDS: any id resolvable by the model registry (`repro models`),
 e.g. banked<N>, banked2p<N>, bankedblk<N>, pump<K>, lvt<R>r<W>w,
@@ -260,9 +275,9 @@ fn cmd_trace(rest: &[String]) -> Result<()> {
         .first()
         .cloned()
         .ok_or_else(|| Error::config("usage: repro trace <benchmark>"))?;
-    if !suite::ALL_BENCHMARKS.contains(&name.as_str()) {
-        return Err(Error::UnknownBenchmark { name });
-    }
+    // MachSuite or parametric `synth:` name; bad synth dials error with
+    // the known-dial listing
+    suite::validate_name(&name)?;
     let scale = args.scale_or(Scale::Paper)?;
     // one-shot path: plain generate, so the trace drops on exit instead
     // of pinning in the workload cache
@@ -288,14 +303,84 @@ fn cmd_trace(rest: &[String]) -> Result<()> {
 fn cmd_locality(rest: &[String]) -> Result<()> {
     let args = parse_args(rest, &["--scale"], &[])?;
     let scale = args.scale_or(Scale::Paper)?;
-    println!("{:<12} {:>10} {:>12}", "benchmark", "L_spatial", "stride1");
-    for name in suite::ALL_BENCHMARKS {
+    // Positional names (MachSuite or `synth:` specs) restrict the table;
+    // default stays the full Fig-5 suite.
+    let names: Vec<String> = if args.positional.is_empty() {
+        suite::ALL_BENCHMARKS.iter().map(|s| s.to_string()).collect()
+    } else {
+        for name in &args.positional {
+            suite::validate_name(name)?;
+        }
+        args.positional.clone()
+    };
+    let width = names.iter().map(|n| n.len()).max().unwrap_or(12).max(12);
+    println!("{:<width$} {:>10} {:>12}", "benchmark", "L_spatial", "stride1");
+    for name in &names {
         // each benchmark is generated exactly once here: plain generate
         // keeps peak memory at one trace, not thirteen
         let wl = suite::generate(name, scale);
         let rep = locality::analyze(&wl.trace);
-        println!("{:<12} {:>10.4} {:>12.4}", name, rep.spatial_locality(), rep.stride1_fraction());
+        println!(
+            "{:<width$} {:>10.4} {:>12.4}",
+            name,
+            rep.spatial_locality(),
+            rep.stride1_fraction()
+        );
     }
+    Ok(())
+}
+
+/// The locality-dial campaign preset: run `configs/locality.toml` (a
+/// synthetic dial sweep × the banked + AMM port models), then plot AMM
+/// benefit — fastest banked time / fastest AMM time — against the
+/// locality measured back from each generated trace. The sink/cost-store
+/// machinery is the ordinary campaign engine, so the sweep is resumable
+/// and warm-startable like any `repro run`.
+fn cmd_locality_sweep(rest: &[String]) -> Result<()> {
+    let args = parse_args(
+        rest,
+        &["--config", "--scale", "--sink", "--cost-store", "--threads", "--out-dir"],
+        &["--quiet"],
+    )?;
+    let cfg_path = args.get("--config").unwrap_or("configs/locality.toml").to_string();
+    let rc = config::load(Path::new(&cfg_path))?;
+    let mut spec = rc.campaign.clone();
+    spec.scale = args.scale_or(spec.scale)?;
+    if let Some(s) = args.get("--sink") {
+        spec.sink = Some(s.into());
+    }
+    if let Some(s) = args.get("--cost-store") {
+        spec.cost_store = Some(s.into());
+    }
+    if let Some(s) = args.get("--threads") {
+        spec.threads =
+            s.parse().map_err(|_| Error::config(format!("bad --threads {s:?}")))?;
+    }
+    let quiet = args.has("--quiet");
+    let out_dir = PathBuf::from(args.get("--out-dir").unwrap_or("results"));
+    if !quiet {
+        eprintln!(
+            "locality-sweep {}: {} dial point(s), {} planned unit(s)",
+            cfg_path,
+            spec.swept().len(),
+            spec.plan_keys().len()
+        );
+    }
+    let opts = campaign::ExecOptions { progress: !quiet, ..Default::default() };
+    let outcome = campaign::run(&spec, &opts)?;
+    let summaries = outcome.summaries();
+    let csv = report::locality_csv(&summaries);
+    let csv_path = out_dir.join("locality_amm.csv");
+    report::write_file(&csv_path, &csv)
+        .map_err(|e| Error::io(format!("write {}", csv_path.display()), e))?;
+    println!("{}", report::locality_ascii(&summaries));
+    if let Some(rho) = report::locality_benefit_spearman(&summaries) {
+        println!(
+            "spearman(locality, AMM benefit) = {rho:.3} (paper thesis: negative — \
+             the lower the spatial locality, the more true multi-porting buys)"
+        );
+    }
+    println!("wrote {}", csv_path.display());
     Ok(())
 }
 
@@ -306,9 +391,7 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
         .first()
         .cloned()
         .ok_or_else(|| Error::config("usage: repro simulate <benchmark> --mem <id>"))?;
-    if !suite::ALL_BENCHMARKS.contains(&name.as_str()) {
-        return Err(Error::UnknownBenchmark { name });
-    }
+    suite::validate_name(&name)?;
     let scale = args.scale_or(Scale::Paper)?;
     let mem_id = args.get("--mem").unwrap_or("banked1").to_string();
     // Registry resolution: any registered model id works, not just the
@@ -989,16 +1072,44 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
         println!("perf-smoke {name}: engine {speedup:.2}x points/sec vs per-point baseline");
         worst = worst.min(speedup);
     }
+    // Streaming-generation throughput: one Paper-equivalent synthetic
+    // trace (2^16 accesses = 131072 nodes), generated fresh each repeat
+    // (the `n` dial puts it past the cache-admission ceiling, so this
+    // times the generator, not the workload cache). Advisory — the
+    // number rides BENCH_sweep.json so generator regressions are
+    // visible in the artifact trail.
+    let synth_name = "synth:stride=rand,rw=0.7,reuse=256,seed=1,n=65536";
+    let mut synth_wall_ns = f64::INFINITY;
+    let mut synth_nodes = 0u64;
+    for _ in 0..repeats.max(1) {
+        let t0 = std::time::Instant::now();
+        let wl = suite::generate(synth_name, Scale::Tiny);
+        let ns = t0.elapsed().as_nanos() as f64;
+        synth_nodes = wl.trace.len() as u64;
+        synth_wall_ns = synth_wall_ns.min(ns);
+    }
+    let synth_nodes_per_s = synth_nodes as f64 / (synth_wall_ns / 1e9);
+    println!(
+        "perf-smoke synth: generated {synth_nodes} nodes in {:.2} ms ({:.0} nodes/s)",
+        synth_wall_ns / 1e6,
+        synth_nodes_per_s
+    );
     let json = format!(
         concat!(
             "{{\n  \"schema\": \"bench_sweep/v1\",\n  \"sweep\": \"quick\",\n",
             "  \"scale\": \"tiny\",\n  \"threads\": 1,\n  \"iters\": {},\n",
             "  \"repeats\": {},\n  \"host\": {},\n",
+            "  \"synth_generation\": {{\"name\": \"{}\", \"nodes\": {}, ",
+            "\"wall_ms\": {:.4}, \"nodes_per_s\": {:.1}}},\n",
             "  \"results\": [\n{}\n  ]\n}}\n"
         ),
         iters,
         repeats,
         host_json,
+        synth_name,
+        synth_nodes,
+        synth_wall_ns / 1e6,
+        synth_nodes_per_s,
         rows.join(",\n")
     );
     report::write_file(Path::new(&out_path), &json)

@@ -157,6 +157,94 @@ pub fn fig5_ascii(summaries: &[BenchSummary]) -> String {
     s
 }
 
+/// AMM benefit of one summary: fastest banked time / fastest AMM time
+/// (> 1 means true multi-porting wins), `None` when either side has no
+/// finite best (locality-only rows, or a sweep missing one family).
+pub fn amm_benefit(b: &BenchSummary) -> Option<f64> {
+    if b.best_banking_ns.is_finite() && b.best_amm_ns.is_finite() && b.best_amm_ns > 0.0 {
+        Some(b.best_banking_ns / b.best_amm_ns)
+    } else {
+        None
+    }
+}
+
+/// The locality-curve CSV: AMM benefit against measured locality, rows
+/// sorted by locality ascending (ties by name) so the file reads as the
+/// figure's x-axis. Rows without a computable benefit keep their
+/// locality and render the benefit field empty, like [`fig5_csv`].
+pub fn locality_csv(summaries: &[BenchSummary]) -> String {
+    let mut s = String::from(
+        "benchmark,spatial_locality,amm_benefit,best_banking_ns,best_amm_ns,n_points\n",
+    );
+    for b in sorted_by_locality(summaries) {
+        let _ = writeln!(
+            s,
+            "{},{:.4},{},{},{},{}",
+            b.name,
+            b.locality,
+            amm_benefit(b).map(|r| format!("{r:.4}")).unwrap_or_default(),
+            ns_field(b.best_banking_ns),
+            ns_field(b.best_amm_ns),
+            b.n_points
+        );
+    }
+    s
+}
+
+/// ASCII rendition of the locality curve: one bar per dial point, x-axis
+/// ordered by measured locality, bar length = AMM benefit (the `|` tick
+/// marks benefit 1.0 — parity between the best banked and best AMM
+/// design).
+pub fn locality_ascii(summaries: &[BenchSummary]) -> String {
+    let width = summaries.iter().map(|b| b.name.len()).max().unwrap_or(9).max(9);
+    let mut s = format!(
+        "{:<width$} {:>9} {:>11}  benefit (| = parity at 1.0)\n",
+        "benchmark", "L_spatial", "amm_benefit"
+    );
+    for b in sorted_by_locality(summaries) {
+        let (txt, chart) = match amm_benefit(b) {
+            Some(r) => (format!("{r:7.3}"), benefit_bar(r, 2.0, 28)),
+            None => ("      -".into(), String::new()),
+        };
+        let _ = writeln!(s, "{:<width$} {:>9.4} {txt:>11}  {chart}", b.name, b.locality);
+    }
+    s
+}
+
+/// Spearman rank correlation between measured locality and AMM benefit
+/// over the rows where the benefit is computable; `None` below 2 such
+/// rows. The paper's thesis makes this negative on a dial sweep.
+pub fn locality_benefit_spearman(summaries: &[BenchSummary]) -> Option<f64> {
+    let pairs: Vec<(f64, f64)> =
+        summaries.iter().filter_map(|b| amm_benefit(b).map(|r| (b.locality, r))).collect();
+    if pairs.len() < 2 {
+        return None;
+    }
+    let (xs, ys): (Vec<f64>, Vec<f64>) = pairs.into_iter().unzip();
+    Some(crate::util::stats::spearman(&xs, &ys))
+}
+
+/// Locality-ascending view of the summaries (ties broken by name so the
+/// ordering — and therefore the CSV bytes — is total and stable).
+fn sorted_by_locality(summaries: &[BenchSummary]) -> Vec<&BenchSummary> {
+    let mut v: Vec<&BenchSummary> = summaries.iter().collect();
+    v.sort_by(|a, b| {
+        a.locality.total_cmp(&b.locality).then_with(|| a.name.cmp(&b.name))
+    });
+    v
+}
+
+/// A benefit bar with a parity tick: `#` up to the value, `|` at 1.0.
+fn benefit_bar(v: f64, full: f64, width: usize) -> String {
+    let mut bar: Vec<u8> = bar(v, full, width).into_bytes();
+    bar.resize(width, b' ');
+    let tick = ((1.0 / full) * width as f64).round() as usize;
+    if tick < width && bar[tick] != b'#' {
+        bar[tick] = b'|';
+    }
+    String::from_utf8(bar).unwrap()
+}
+
 /// A best-time ASCII column: fixed-point when finite, `-` otherwise.
 fn ns_col(v: f64) -> String {
     if v.is_finite() {
@@ -267,6 +355,66 @@ mod tests {
         let aes_line = ascii.lines().find(|l| l.starts_with("aes")).unwrap();
         assert!(aes_line.trim_end().ends_with('-'), "{aes_line:?}");
         assert!(!ascii.contains("NaN"), "{ascii}");
+    }
+
+    fn summary(name: &str, locality: f64, bank: f64, amm: f64) -> BenchSummary {
+        BenchSummary {
+            name: name.into(),
+            locality,
+            perf_ratio: None,
+            best_banking_ns: bank,
+            best_amm_ns: amm,
+            n_points: 4,
+        }
+    }
+
+    #[test]
+    fn locality_csv_sorts_by_locality_and_blanks_missing_benefit() {
+        let rows = vec![
+            summary("synth:conflict=0", 0.25, 100.0, 100.0),
+            summary("synth:conflict=0.9", 0.05, 400.0, 110.0),
+            summary("aes-locality-only", 0.9, f64::NAN, f64::INFINITY),
+        ];
+        let csv = locality_csv(&rows);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(
+            lines[0],
+            "benchmark,spatial_locality,amm_benefit,best_banking_ns,best_amm_ns,n_points"
+        );
+        // locality ascending: the high-conflict low-locality row first
+        assert!(lines[1].starts_with("synth:conflict=0.9,0.0500,3.6364,"), "{}", lines[1]);
+        assert!(lines[2].starts_with("synth:conflict=0,0.2500,1.0000,"), "{}", lines[2]);
+        assert_eq!(lines[3], "aes-locality-only,0.9000,,,,4");
+        assert!(!csv.contains("NaN"), "{csv}");
+        // byte-stable: same input, same bytes
+        assert_eq!(csv, locality_csv(&rows));
+    }
+
+    #[test]
+    fn locality_ascii_marks_parity() {
+        let rows =
+            vec![summary("a", 0.3, 100.0, 50.0), summary("b", 0.1, 100.0, 100.0)];
+        let s = locality_ascii(&rows);
+        assert!(s.contains('#'));
+        assert!(s.contains('|'), "parity tick expected: {s}");
+        // b (locality 0.1) renders before a (0.3)
+        let bi = s.find("\nb ").unwrap();
+        let ai = s.find("\na ").unwrap();
+        assert!(bi < ai, "{s}");
+    }
+
+    #[test]
+    fn spearman_is_negative_on_an_anticorrelated_curve() {
+        let rows = vec![
+            summary("p0", 0.25, 100.0, 100.0),
+            summary("p1", 0.20, 150.0, 100.0),
+            summary("p2", 0.10, 250.0, 100.0),
+            summary("p3", 0.05, 400.0, 100.0),
+            summary("no-benefit", 0.5, f64::NAN, f64::NAN),
+        ];
+        let rho = locality_benefit_spearman(&rows).unwrap();
+        assert!(rho < -0.99, "rho={rho}");
+        assert_eq!(locality_benefit_spearman(&rows[..1]), None, "one point: no correlation");
     }
 
     #[test]

@@ -45,7 +45,8 @@ pub const SCHEMA: &str = "campaign-spec/v1";
 /// One row of the campaign plan, in display (Fig-5) order.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PlanEntry {
-    /// Benchmark name (validated against [`suite::ALL_BENCHMARKS`]).
+    /// Benchmark name: a [`suite::ALL_BENCHMARKS`] entry or a parametric
+    /// `synth:` name (validated by [`suite::validate_name`]).
     pub name: String,
     /// Swept benchmarks run the full sweep; non-swept rows contribute
     /// locality only (the grey rows of Fig 5).
@@ -305,9 +306,9 @@ impl CampaignSpec {
         }
         let mut seen = std::collections::HashSet::new();
         for e in &self.plan {
-            if !suite::ALL_BENCHMARKS.contains(&e.name.as_str()) {
-                return Err(Error::UnknownBenchmark { name: e.name.clone() });
-            }
+            // MachSuite names or parametric `synth:` specs (dial errors
+            // surface with the known-dial listing).
+            suite::validate_name(&e.name)?;
             if !seen.insert(e.name.as_str()) {
                 return Err(Error::config(format!(
                     "benchmark {:?} appears twice in the campaign plan",

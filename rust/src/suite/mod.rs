@@ -10,6 +10,10 @@
 //! The four DSE benchmarks of the paper's Fig 4 are `fft` (FFT-Strided),
 //! `gemm` (GEMM-NCUBED), `kmp` and `md_knn`; the remaining nine cover the
 //! spatial-locality sweep of Fig 5.
+//!
+//! Beyond MachSuite, the parametric `synth:` namespace ([`synthetic`])
+//! generates locality-dial streaming workloads; [`validate_name`] accepts
+//! both families and is the single name gate every front-end should use.
 
 pub mod aes;
 pub mod bfs;
@@ -23,10 +27,12 @@ pub mod sort_radix;
 pub mod spmv;
 pub mod stencil2d;
 pub mod stencil3d;
+pub mod synthetic;
 pub mod viterbi;
 
+use crate::error::{Error, Result};
 use crate::trace::Trace;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// A traced benchmark run.
@@ -94,11 +100,47 @@ pub const ALL_BENCHMARKS: [&str; 13] = [
     "viterbi",
 ];
 
+/// Validate a benchmark name: either a MachSuite name from
+/// [`ALL_BENCHMARKS`] or a parametric `synth:` spec. This is the single
+/// gate every front-end (CLI one-shots, campaign specs, serve) lowers
+/// through; synthetic dial errors surface as [`Error::Config`] listing
+/// the known dials, anything else as [`Error::UnknownBenchmark`].
+pub fn validate_name(name: &str) -> Result<()> {
+    if ALL_BENCHMARKS.contains(&name) {
+        return Ok(());
+    }
+    if synthetic::is_synthetic(name) {
+        synthetic::parse(name)?;
+        return Ok(());
+    }
+    Err(Error::UnknownBenchmark { name: name.to_string() })
+}
+
+/// Intern a dynamically-built benchmark name as `&'static str` so
+/// [`Workload::name`] stays a static str across both name families. Each
+/// distinct synthetic spec leaks its name once per process — bounded by
+/// the number of distinct configurations a run touches.
+pub(crate) fn intern_name(name: &str) -> &'static str {
+    static NAMES: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let mut set = NAMES.get_or_init(|| Mutex::new(HashSet::new())).lock().expect("name intern");
+    match set.get(name) {
+        Some(&s) => s,
+        None => {
+            let s: &'static str = Box::leak(name.to_string().into_boxed_str());
+            set.insert(s);
+            s
+        }
+    }
+}
+
 /// Generate a benchmark by name at the given scale.
 ///
 /// # Panics
-/// On an unknown name — callers validate against [`ALL_BENCHMARKS`].
+/// On an unknown name — callers validate via [`validate_name`].
 pub fn generate(name: &str, scale: Scale) -> Workload {
+    if synthetic::is_synthetic(name) {
+        return synthetic::generate(name, scale);
+    }
     match name {
         "aes" => aes::generate(match scale {
             Scale::Tiny => 1,
@@ -178,6 +220,14 @@ fn workload_cache() -> &'static Mutex<HashMap<(String, Scale), Arc<Workload>>> {
     CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
+/// Cache admission ceiling for synthetic traces, in closed-form node
+/// count: at or below (≤ Paper-scale synthetic, 2 × 32768 nodes) the
+/// workload is memoized like MachSuite; above it `generate_cached`
+/// bypasses the cache so a single `synth:...,n=<huge>` point can't pin
+/// hundreds of MB for the process lifetime (mirrors the PR 3 decision to
+/// keep Large traces out of long-lived state).
+pub const SYNTH_CACHE_MAX_NODES: u64 = 65_536;
+
 /// Memoized [`generate`]: each `(name, scale)` workload is generated at
 /// most once per process and shared by `Arc` afterwards. Benchmark
 /// generation is deterministic, so every caller sees the identical
@@ -186,8 +236,15 @@ fn workload_cache() -> &'static Mutex<HashMap<(String, Scale), Arc<Workload>>> {
 /// used to re-trace the same workload several times per process; now
 /// only the first caller pays. Cached workloads live for the process
 /// lifetime (a full `Paper`-scale suite is tens of MB), so one-shot
-/// paths should keep calling plain [`generate`].
+/// paths should keep calling plain [`generate`]. Synthetic workloads
+/// whose closed-form node count exceeds [`SYNTH_CACHE_MAX_NODES`] are
+/// generated fresh on every call instead of being pinned.
 pub fn generate_cached(name: &str, scale: Scale) -> Arc<Workload> {
+    if let Some(nodes) = synthetic::try_node_count(name, scale) {
+        if nodes > SYNTH_CACHE_MAX_NODES {
+            return Arc::new(generate(name, scale));
+        }
+    }
     if let Some(wl) =
         workload_cache().lock().expect("workload cache poisoned").get(&(name.to_string(), scale))
     {
@@ -234,6 +291,54 @@ mod tests {
         // the cached workload is the same deterministic generation
         assert_eq!(a.checksum, generate("stencil2d", Scale::Tiny).checksum);
         assert_eq!(a.trace.len(), generate("stencil2d", Scale::Tiny).trace.len());
+    }
+
+    #[test]
+    fn validate_name_accepts_both_families() {
+        validate_name("gemm").unwrap();
+        validate_name("synth:").unwrap();
+        validate_name("synth:stride=rand,rw=0.7,reuse=64").unwrap();
+        assert!(matches!(
+            validate_name("gemmm").unwrap_err(),
+            Error::UnknownBenchmark { .. }
+        ));
+        // a malformed synth spec is a Config error listing the dials
+        let e = validate_name("synth:warp=2").unwrap_err().to_string();
+        assert!(e.contains("known dials"), "{e}");
+    }
+
+    #[test]
+    fn synthetic_names_generate_and_intern() {
+        let name = "synth:stride=s4,rw=0.5,reuse=64,n=256";
+        let wl = generate(name, Scale::Tiny);
+        assert_eq!(wl.name, name);
+        wl.trace.validate().unwrap();
+        assert_eq!(wl.trace.len() as u64, 512);
+        // interning is stable across generations
+        let again = generate(name, Scale::Tiny);
+        assert!(std::ptr::eq(wl.name, again.name));
+    }
+
+    #[test]
+    fn synthetic_cache_bypass_boundary() {
+        // 2 nodes per access: n=32768 sits exactly at the ceiling
+        // (cached), n=32769 is one access above it (bypassed).
+        let at = "synth:stride=unit,n=32768";
+        assert_eq!(
+            synthetic::try_node_count(at, Scale::Tiny),
+            Some(SYNTH_CACHE_MAX_NODES)
+        );
+        let a = generate_cached(at, Scale::Tiny);
+        let b = generate_cached(at, Scale::Tiny);
+        assert!(Arc::ptr_eq(&a, &b), "at the ceiling must still cache");
+
+        let above = "synth:stride=unit,n=32769";
+        let c = generate_cached(above, Scale::Tiny);
+        let d = generate_cached(above, Scale::Tiny);
+        assert!(!Arc::ptr_eq(&c, &d), "above the ceiling must bypass the cache");
+        // bypass returns the same deterministic trace, just un-pinned
+        assert_eq!(c.checksum, d.checksum);
+        assert_eq!(c.trace.len(), d.trace.len());
     }
 
     #[test]

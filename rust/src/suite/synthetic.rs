@@ -1,0 +1,441 @@
+//! `suite::synthetic` — locality-dial streaming workload generator.
+//!
+//! MachSuite samples the spatial-locality axis only incidentally; this
+//! module turns it into a dial. A parametric benchmark name such as
+//! `synth:stride=rand,rw=0.7,reuse=64` describes a seeded, deterministic
+//! streaming access pattern that flows through the registry everywhere a
+//! MachSuite name does (generate, campaign specs, weighted sharding, the
+//! batch kernel's compatible groups, serve).
+//!
+//! # Name grammar
+//!
+//! `synth:` followed by zero or more comma-separated `dial=value` pairs
+//! (any order, no duplicates). Dials and defaults:
+//!
+//! | dial       | values                  | default | effect |
+//! |------------|-------------------------|---------|--------|
+//! | `stride`   | `unit` \| `s<K>` \| `rand` | `unit` | base address pattern: unit-stride stream, fixed K-element stride, or uniform-random within the window |
+//! | `mix`      | `0..=1`                 | `0`     | probability an access abandons the pattern for a uniform-random index (smoothly degrades spatial locality) |
+//! | `rw`       | `0..=1`                 | `0.7`   | read fraction; writes are interleaved deterministically (Bresenham over per-mille), so node counts stay closed-form |
+//! | `reuse`    | `32..=1048576`          | `256`   | working-set window in 4-byte elements the stream wraps within (reuse distance); ≥ 32 keeps the array past register promotion |
+//! | `conflict` | `0..=1`                 | `0`     | probability an access is forced to a 64-element-aligned index — one bank on every power-of-two banking, harmless to true multi-port |
+//! | `seed`     | any `u64`               | `1`     | RNG seed (xoshiro256** via SplitMix64) |
+//! | `n`        | `64..=16777216`         | per scale | access count override; otherwise Tiny/Paper/Large pick 2048/32768/524288 |
+//!
+//! Every access contributes exactly **2 trace nodes** (a memory op plus
+//! one ALU op), so `node_count = 2 × accesses` is computable in closed
+//! form without tracing — that is what `weight-table/v1` records for
+//! synthetic entries and what the `generate_cached` bypass checks.
+//!
+//! The generator streams: each access is produced on demand straight into
+//! [`TraceBuilder`], no intermediate workload buffer, so peak footprint is
+//! the trace itself plus the O(`reuse`) dependence cells.
+
+use super::{Scale, Workload};
+use crate::error::{Error, Result};
+use crate::trace::{AluKind, NodeId, TraceBuilder};
+use crate::util::rng::Rng;
+
+/// Name prefix that marks a parametric synthetic benchmark.
+pub const PREFIX: &str = "synth:";
+
+/// Element size of the synthetic data array (bytes).
+pub const ELEM_BYTES: u32 = 4;
+
+/// Alignment (in elements) of conflict-dial target indices. 64 elements ×
+/// 4 bytes = 256 bytes, a multiple of every swept `banks × word_bytes`
+/// (pow2 banks ≤ 32, word_bytes ≤ 8), so all conflict targets land in one
+/// bank under cyclic interleaving no matter the banked design point.
+pub const CONFLICT_ALIGN: u32 = 64;
+
+/// Lower bound on `reuse`: 32 elements × 4 bytes = 128 bytes, safely past
+/// the scheduler's 64-byte register-promotion threshold — a smaller window
+/// would bypass memory ports entirely and dissolve the experiment.
+pub const MIN_REUSE: u32 = 32;
+
+/// Upper bound on `reuse` (1 Mi elements = 4 MiB window).
+pub const MAX_REUSE: u32 = 1 << 20;
+
+/// Bounds on the `n` access-count override dial.
+pub const MIN_ACCESSES: u64 = 64;
+/// See [`MIN_ACCESSES`].
+pub const MAX_ACCESSES: u64 = 1 << 24;
+
+/// Independent accumulator lanes (bounds the value-dependence chain so
+/// ILP is limited by ports, not by one serial accumulator).
+const ILP_LANES: usize = 8;
+
+/// One-line dial reference, embedded in every parse error (the CLI
+/// "clear error listing the known dials" contract).
+pub const DIAL_HELP: &str = "known dials: stride=unit|s<K>|rand, mix=0..1, rw=0..1, \
+     reuse=32..1048576, conflict=0..1, seed=<u64>, n=64..16777216";
+
+/// Base address pattern selected by the `stride` dial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StridePattern {
+    /// Unit-stride stream (stride 1 element).
+    Unit,
+    /// Fixed stride of K elements.
+    Fixed(u32),
+    /// Uniform-random index per access.
+    Rand,
+}
+
+/// Parsed dial settings of one `synth:` name.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SynthParams {
+    /// `stride` dial.
+    pub stride: StridePattern,
+    /// `mix` dial: probability of a random jump.
+    pub mix: f64,
+    /// `rw` dial: read fraction.
+    pub rw: f64,
+    /// `reuse` dial: window length in elements.
+    pub reuse: u32,
+    /// `conflict` dial: probability of a bank-aligned forced index.
+    pub conflict: f64,
+    /// `seed` dial.
+    pub seed: u64,
+    /// `n` dial: access-count override (else scale decides).
+    pub n: Option<u64>,
+}
+
+impl Default for SynthParams {
+    fn default() -> Self {
+        SynthParams {
+            stride: StridePattern::Unit,
+            mix: 0.0,
+            rw: 0.7,
+            reuse: 256,
+            conflict: 0.0,
+            seed: 1,
+            n: None,
+        }
+    }
+}
+
+impl SynthParams {
+    /// Dynamic access count at `scale` (the `n` dial overrides).
+    pub fn accesses(&self, scale: Scale) -> u64 {
+        self.n.unwrap_or(match scale {
+            Scale::Tiny => 2_048,
+            Scale::Paper => 32_768,
+            Scale::Large => 524_288,
+        })
+    }
+
+    /// Closed-form trace node count: exactly 2 nodes per access (one
+    /// memory op + one ALU op), independent of every RNG draw.
+    pub fn node_count(&self, scale: Scale) -> u64 {
+        2 * self.accesses(scale)
+    }
+
+    /// Writes among the first `n` accesses under the deterministic
+    /// Bresenham interleave (`floor(n * wpm / 1000)`).
+    pub fn writes_among(&self, n: u64) -> u64 {
+        n * self.writes_per_mille() / 1000
+    }
+
+    fn writes_per_mille(&self) -> u64 {
+        ((1.0 - self.rw) * 1000.0).round() as u64
+    }
+
+    /// Canonical name (every dial spelled out, fixed order). Display /
+    /// debugging aid only — registry keys keep the user's spelling.
+    pub fn canonical_name(&self) -> String {
+        let stride = match self.stride {
+            StridePattern::Unit => "unit".to_string(),
+            StridePattern::Fixed(k) => format!("s{k}"),
+            StridePattern::Rand => "rand".to_string(),
+        };
+        let mut s = format!(
+            "{PREFIX}stride={stride},mix={},rw={},reuse={},conflict={},seed={}",
+            self.mix, self.rw, self.reuse, self.conflict, self.seed
+        );
+        if let Some(n) = self.n {
+            s.push_str(&format!(",n={n}"));
+        }
+        s
+    }
+}
+
+/// True if `name` is in the parametric `synth:` namespace (it may still
+/// fail to [`parse`]).
+pub fn is_synthetic(name: &str) -> bool {
+    name.starts_with(PREFIX)
+}
+
+fn bad(name: &str, detail: &str) -> Error {
+    Error::config(format!("bad synthetic benchmark {name:?}: {detail}; {DIAL_HELP}"))
+}
+
+fn unit_range(name: &str, key: &str, raw: &str) -> Result<f64> {
+    let v: f64 = raw
+        .parse()
+        .map_err(|_| bad(name, &format!("dial {key}={raw:?} is not a number")))?;
+    if !(0.0..=1.0).contains(&v) {
+        return Err(bad(name, &format!("dial {key}={raw} outside 0..=1")));
+    }
+    Ok(v)
+}
+
+/// Parse a `synth:` name into dial settings.
+///
+/// Dials may appear in any order; unknown or duplicate dials and
+/// out-of-range values are [`Error::Config`] listing the known dials.
+/// `synth:` alone selects all defaults.
+pub fn parse(name: &str) -> Result<SynthParams> {
+    let body = name
+        .strip_prefix(PREFIX)
+        .ok_or_else(|| bad(name, "missing synth: prefix"))?;
+    let mut p = SynthParams::default();
+    let mut seen: Vec<&str> = Vec::new();
+    for part in body.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            if body.trim().is_empty() {
+                continue; // bare "synth:" = all defaults
+            }
+            return Err(bad(name, "empty dial"));
+        }
+        let (key, raw) = part
+            .split_once('=')
+            .ok_or_else(|| bad(name, &format!("dial {part:?} is not key=value")))?;
+        let (key, raw) = (key.trim(), raw.trim());
+        if seen.contains(&key) {
+            return Err(bad(name, &format!("duplicate dial {key:?}")));
+        }
+        seen.push(key);
+        match key {
+            "stride" => {
+                p.stride = match raw {
+                    "unit" => StridePattern::Unit,
+                    "rand" => StridePattern::Rand,
+                    _ => {
+                        let k: u32 = raw
+                            .strip_prefix('s')
+                            .and_then(|d| d.parse().ok())
+                            .ok_or_else(|| {
+                                bad(name, &format!("dial stride={raw:?} is not unit, s<K> or rand"))
+                            })?;
+                        if !(1..=4096).contains(&k) {
+                            return Err(bad(name, &format!("stride s{k} outside s1..=s4096")));
+                        }
+                        StridePattern::Fixed(k)
+                    }
+                };
+            }
+            "mix" => p.mix = unit_range(name, "mix", raw)?,
+            "rw" => p.rw = unit_range(name, "rw", raw)?,
+            "conflict" => p.conflict = unit_range(name, "conflict", raw)?,
+            "reuse" => {
+                let v: u32 = raw
+                    .parse()
+                    .map_err(|_| bad(name, &format!("dial reuse={raw:?} is not an integer")))?;
+                if !(MIN_REUSE..=MAX_REUSE).contains(&v) {
+                    return Err(bad(
+                        name,
+                        &format!("reuse={v} outside {MIN_REUSE}..={MAX_REUSE}"),
+                    ));
+                }
+                p.reuse = v;
+            }
+            "seed" => {
+                p.seed = raw
+                    .parse()
+                    .map_err(|_| bad(name, &format!("dial seed={raw:?} is not a u64")))?;
+            }
+            "n" => {
+                let v: u64 = raw
+                    .parse()
+                    .map_err(|_| bad(name, &format!("dial n={raw:?} is not an integer")))?;
+                if !(MIN_ACCESSES..=MAX_ACCESSES).contains(&v) {
+                    return Err(bad(
+                        name,
+                        &format!("n={v} outside {MIN_ACCESSES}..={MAX_ACCESSES}"),
+                    ));
+                }
+                p.n = Some(v);
+            }
+            other => return Err(bad(name, &format!("unknown dial {other:?}"))),
+        }
+    }
+    Ok(p)
+}
+
+/// Closed-form node count for a `synth:` name, `None` if `name` is not a
+/// valid synthetic spec. Lets weighted sharding answer without tracing.
+pub fn try_node_count(name: &str, scale: Scale) -> Option<u64> {
+    if !is_synthetic(name) {
+        return None;
+    }
+    parse(name).ok().map(|p| p.node_count(scale))
+}
+
+/// Generate a synthetic workload from its parametric name.
+///
+/// # Panics
+/// On an invalid `synth:` spec — callers validate via
+/// [`crate::suite::validate_name`] first (mirrors the MachSuite
+/// `generate` contract).
+pub fn generate(name: &str, scale: Scale) -> Workload {
+    let params = parse(name).unwrap_or_else(|e| panic!("{e}"));
+    let (trace, checksum) = build(&params, scale);
+    Workload { name: super::intern_name(name), trace, checksum }
+}
+
+/// Stream the access pattern into a trace. Returns the trace plus a
+/// deterministic digest of the (address, read/write) stream — synthetic
+/// workloads compute nothing real, so the checksum certifies the *access
+/// stream*, not an algorithm result.
+pub fn build(params: &SynthParams, scale: Scale) -> (crate::trace::Trace, f64) {
+    let n = params.accesses(scale);
+    let window = params.reuse;
+    let mut b = TraceBuilder::new();
+    let data = b.array("synth_data", ELEM_BYTES, window);
+    let mut rng = Rng::new(params.seed);
+    let mut acc: [Option<NodeId>; ILP_LANES] = [None; ILP_LANES];
+    let mut pos: u32 = 0;
+    let wpm = params.writes_per_mille();
+    // Conflict targets: 64-element-aligned indices inside the window.
+    let aligned_slots = (window / CONFLICT_ALIGN).max(1) as u64;
+    let mut digest: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
+    for i in 0..n {
+        // Per-access decision order is part of the determinism contract:
+        // conflict draw, then mix draw, then the stride pattern.
+        let idx = if params.conflict > 0.0 && rng.chance(params.conflict) {
+            (rng.below(aligned_slots) as u32 * CONFLICT_ALIGN).min(window - 1)
+        } else if params.mix > 0.0 && rng.chance(params.mix) {
+            rng.below(window as u64) as u32
+        } else {
+            match params.stride {
+                StridePattern::Rand => rng.below(window as u64) as u32,
+                StridePattern::Unit => {
+                    let p = pos;
+                    pos = (pos + 1) % window;
+                    p
+                }
+                StridePattern::Fixed(k) => {
+                    let p = pos;
+                    pos = (pos + k) % window;
+                    p
+                }
+            }
+        };
+        // Deterministic read/write interleave: access i is a write iff
+        // the Bresenham accumulator crosses a per-mille boundary.
+        let write = (i + 1) * wpm / 1000 > i * wpm / 1000;
+        let lane = (i as usize) % ILP_LANES;
+        if write {
+            b.site(1);
+            let v = match acc[lane] {
+                Some(a) => b.alu(AluKind::FMul, &[a]),
+                None => b.alu(AluKind::FMul, &[]),
+            };
+            b.store(data, idx, &[v]);
+            acc[lane] = Some(v);
+        } else {
+            b.site(0);
+            let l = b.load(data, idx);
+            let f = match acc[lane] {
+                Some(a) => b.alu(AluKind::FAdd, &[l, a]),
+                None => b.alu(AluKind::FAdd, &[l]),
+            };
+            acc[lane] = Some(f);
+        }
+        b.next_iter();
+        digest = (digest ^ (idx as u64 | (write as u64) << 32)).wrapping_mul(0x1_0000_0000_01b3);
+    }
+    // Keep the digest exactly representable as f64 (< 2^52).
+    let checksum = (digest & ((1u64 << 52) - 1)) as f64;
+    (b.finish(), checksum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_bare_prefix() {
+        assert_eq!(parse("synth:").unwrap(), SynthParams::default());
+        let p = parse("synth:stride=rand,rw=0.7,reuse=64").unwrap();
+        assert_eq!(p.stride, StridePattern::Rand);
+        assert_eq!(p.rw, 0.7);
+        assert_eq!(p.reuse, 64);
+        assert_eq!(p.seed, 1);
+    }
+
+    #[test]
+    fn dial_order_is_irrelevant() {
+        let a = parse("synth:rw=0.5,stride=s4,seed=9").unwrap();
+        let b = parse("synth:seed=9,stride=s4,rw=0.5").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.canonical_name(), b.canonical_name());
+    }
+
+    #[test]
+    fn parse_errors_list_the_dials() {
+        for bad_name in [
+            "synth:warp=2",              // unknown dial
+            "synth:rw=1.5",              // out of range
+            "synth:reuse=8",             // below register-promotion floor
+            "synth:stride=diag",         // unknown pattern
+            "synth:stride",              // not key=value
+            "synth:rw=0.5,rw=0.5",       // duplicate
+            "synth:n=1",                 // below floor
+            "synth:mix=nope",            // not a number
+            "synth:rw=0.5,,seed=1",      // empty dial
+        ] {
+            let e = parse(bad_name).unwrap_err().to_string();
+            assert!(e.contains("known dials"), "{bad_name}: {e}");
+            assert!(e.contains("stride=unit|s<K>|rand"), "{bad_name}: {e}");
+        }
+    }
+
+    #[test]
+    fn node_count_is_closed_form_and_matches_generation() {
+        for name in
+            ["synth:", "synth:stride=rand,rw=0.4,reuse=64,seed=3", "synth:conflict=0.8,n=512"]
+        {
+            let p = parse(name).unwrap();
+            let (t, _) = build(&p, Scale::Tiny);
+            assert_eq!(t.len() as u64, p.node_count(Scale::Tiny), "{name}");
+            assert_eq!(try_node_count(name, Scale::Tiny), Some(p.node_count(Scale::Tiny)));
+        }
+        assert_eq!(try_node_count("gemm", Scale::Tiny), None);
+        assert_eq!(try_node_count("synth:warp=1", Scale::Tiny), None);
+    }
+
+    #[test]
+    fn rw_dial_sets_exact_write_count() {
+        for (rw, n) in [(1.0, 1000u64), (0.7, 1000), (0.5, 640), (0.0, 128)] {
+            let p = parse(&format!("synth:rw={rw},n={n}")).unwrap();
+            let (t, _) = build(&p, Scale::Tiny);
+            let stores = t
+                .nodes
+                .iter()
+                .filter(|nd| matches!(nd.kind, crate::trace::OpKind::Store { .. }))
+                .count() as u64;
+            assert_eq!(stores, p.writes_among(n), "rw={rw}");
+            assert_eq!(t.mem_ops() as u64, n, "rw={rw}: one mem op per access");
+        }
+    }
+
+    #[test]
+    fn window_fits_the_reuse_dial() {
+        let p = parse("synth:reuse=128,n=256").unwrap();
+        let (t, _) = build(&p, Scale::Tiny);
+        assert_eq!(t.arrays.len(), 1);
+        assert_eq!(t.arrays[0].length, 128);
+        assert_eq!(t.arrays[0].elem_bytes, ELEM_BYTES);
+        // Past the 64-byte register-promotion threshold by construction.
+        assert!(t.arrays[0].length as u64 * ELEM_BYTES as u64 > 64);
+    }
+
+    #[test]
+    fn scales_are_ordered() {
+        let p = SynthParams::default();
+        assert!(p.node_count(Scale::Tiny) < p.node_count(Scale::Paper));
+        assert!(p.node_count(Scale::Paper) < p.node_count(Scale::Large));
+    }
+}

@@ -1,0 +1,185 @@
+//! The locality-dial campaign contract: a synthetic conflict-pressure
+//! ramp swept against banked and true-multi-port organizations must
+//! produce a *monotone* AMM-benefit-vs-measured-locality curve, its
+//! JSONL sink must stay byte-stable and resumable with zero
+//! re-simulation (synthetic names regenerate deterministically, so a
+//! resumed campaign trusts the sink exactly like a MachSuite one), and
+//! the checked-in `configs/locality.toml` preset must keep parsing —
+//! dial commas inside quoted names and all.
+
+use amm_dse::campaign::{sink, Campaign};
+use amm_dse::dse::Sweep;
+use amm_dse::suite::Scale;
+use amm_dse::util::stats;
+use amm_dse::{config, report};
+
+/// The conflict-pressure ramp at unit stride: locality is degraded by
+/// one dial only, and every jump lands 64-element-aligned — the same
+/// bank on any power-of-two banking at 4-byte words — so the banked
+/// baseline stalls harder at each step while the true-port AMM stays
+/// port-limited. Fixed seed: the whole campaign is a pure function.
+const RAMP: [&str; 4] = [
+    "synth:stride=unit,conflict=0,seed=7",
+    "synth:stride=unit,conflict=0.3,seed=7",
+    "synth:stride=unit,conflict=0.6,seed=7",
+    "synth:stride=unit,conflict=0.9,seed=7",
+];
+
+/// Tiny-scale mirror of the `configs/locality.toml` sweep axes.
+fn ramp_sweep() -> Sweep {
+    Sweep {
+        unrolls: vec![4],
+        word_bytes: vec![4],
+        alus: vec![4],
+        bank_counts: vec![2, 8],
+        amm_ports: vec![(4, 2)],
+        include_multipump: false,
+        include_lvt: false,
+        ..Sweep::default()
+    }
+}
+
+fn ramp_campaign() -> Campaign {
+    Campaign::new().benchmarks(RAMP).scale(Scale::Tiny).sweep(ramp_sweep()).offline()
+}
+
+#[test]
+fn conflict_ramp_produces_a_monotone_amm_benefit_curve() {
+    let outcome = ramp_campaign().run().unwrap();
+    let summaries = outcome.summaries();
+    assert_eq!(summaries.len(), RAMP.len());
+
+    // Every ramp point prices both families, so every row has a benefit.
+    let benefits: Vec<f64> = summaries
+        .iter()
+        .map(|s| report::amm_benefit(s).unwrap_or_else(|| panic!("{}: no benefit", s.name)))
+        .collect();
+    let localities: Vec<f64> = summaries.iter().map(|s| s.locality).collect();
+
+    // The dial direction: more conflict pressure ⇒ strictly lower
+    // measured locality AND strictly more AMM benefit.
+    for i in 1..RAMP.len() {
+        assert!(
+            localities[i] < localities[i - 1],
+            "locality must fall along the ramp: {localities:?}"
+        );
+        assert!(
+            benefits[i] > benefits[i - 1],
+            "AMM benefit must rise along the ramp: {benefits:?}"
+        );
+    }
+    assert!(
+        benefits[RAMP.len() - 1] > 1.05 * benefits[0],
+        "the ramp should move the benefit materially: {benefits:?}"
+    );
+
+    // The figure itself: a perfectly anticorrelated four-point curve.
+    let rho = stats::spearman(&localities, &benefits);
+    assert!(rho <= -0.99, "benefit-vs-locality Spearman must be -1 on the ramp, got {rho}");
+    assert_eq!(report::locality_benefit_spearman(&summaries), Some(rho));
+
+    // Golden pin: the CSV is a pure function of (dials, seed, sweep) —
+    // an independent second campaign reproduces it byte for byte, rows
+    // sorted by ascending locality with a populated benefit column.
+    let csv = report::locality_csv(&summaries);
+    let again = ramp_campaign().run().unwrap();
+    assert_eq!(
+        report::locality_csv(&again.summaries()),
+        csv,
+        "locality CSV must be byte-stable across fresh runs"
+    );
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "benchmark,spatial_locality,amm_benefit,best_banking_ns,best_amm_ns,n_points"
+    );
+    let mut prev_loc = f64::NEG_INFINITY;
+    for line in lines {
+        let cols: Vec<&str> = line.split(',').collect();
+        // synthetic names carry commas; locality is column -5 from the end
+        let loc: f64 = cols[cols.len() - 5].parse().unwrap();
+        assert!(loc >= prev_loc, "CSV rows must sort by ascending locality:\n{csv}");
+        prev_loc = loc;
+        assert!(!cols[cols.len() - 4].is_empty(), "amm_benefit must be populated:\n{csv}");
+    }
+}
+
+#[test]
+fn synthetic_campaign_sink_is_byte_stable_and_resumes_without_resimulating() {
+    let dir = std::env::temp_dir().join("amm_dse_locality_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // ---- fresh run: one sink line per point, enumeration order -------
+    let sink_a = dir.join("a.jsonl");
+    let full = ramp_campaign().threads(4).sink(&sink_a).run().unwrap();
+    assert_eq!(full.resumed, 0);
+    assert_eq!(full.simulated, full.total_points());
+    let text = std::fs::read_to_string(&sink_a).unwrap();
+    assert_eq!(text.lines().count(), full.total_points());
+    let (records, torn) = sink::load(&sink_a).unwrap();
+    assert_eq!(records.len(), full.total_points());
+    assert!(!torn);
+    // the parametric names round-trip the sink verbatim
+    for (bench, _, _) in &records {
+        assert!(RAMP.contains(&bench.as_str()), "sink carried a mangled name: {bench:?}");
+    }
+
+    // ---- byte stability across identical fresh runs ------------------
+    let sink_b = dir.join("b.jsonl");
+    let _ = ramp_campaign().threads(4).sink(&sink_b).run().unwrap();
+    assert_eq!(
+        std::fs::read_to_string(&sink_b).unwrap(),
+        text,
+        "synthetic campaign JSONL must be byte-stable"
+    );
+
+    // ---- kill + resume: intact prefix plus a torn fragment -----------
+    let k = full.total_points() / 2;
+    let prefix: String = text.lines().take(k).map(|l| format!("{l}\n")).collect();
+    let torn_line = &text.lines().nth(k).unwrap()[..24];
+    let sink_c = dir.join("c.jsonl");
+    std::fs::write(&sink_c, format!("{prefix}{torn_line}")).unwrap();
+    let resumed = ramp_campaign().threads(4).sink(&sink_c).run().unwrap();
+    assert_eq!(resumed.resumed, k, "every intact line must be restored");
+    assert_eq!(
+        resumed.simulated,
+        full.total_points() - k,
+        "a resumed synthetic campaign re-simulates only the missing points"
+    );
+    for (a, b) in full.explorations().iter().zip(resumed.explorations()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        for (x, y) in a.points().iter().zip(b.points()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.out, y.out, "{}/{}", a.benchmark, x.id);
+        }
+    }
+
+    // ---- a complete sink resumes everything, simulates nothing, and
+    // still yields the identical figure --------------------------------
+    let complete = ramp_campaign().threads(4).sink(&sink_a).run().unwrap();
+    assert_eq!(complete.simulated, 0, "complete sink ⇒ zero re-simulation");
+    assert_eq!(complete.resumed, full.total_points());
+    assert_eq!(
+        report::locality_csv(&complete.summaries()),
+        report::locality_csv(&full.summaries()),
+        "a warm resume must reproduce the locality figure byte for byte"
+    );
+}
+
+#[test]
+fn the_checked_in_locality_preset_parses_and_round_trips() {
+    // The preset's names carry `=` and `,` inside quoted strings — the
+    // exact shape the line-based TOML subset must keep handling.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../configs/locality.toml");
+    let cfg = config::load(path.as_ref()).unwrap();
+    assert_eq!(cfg.scale, Scale::Paper);
+    assert_eq!(cfg.campaign.plan.len(), 8);
+    assert!(cfg.campaign.plan.iter().all(|e| e.name.starts_with("synth:")));
+    assert!(cfg.campaign.plan.iter().any(|e| e.name.contains("conflict=0.9")));
+    assert_eq!(cfg.sweep.word_bytes, vec![4], "preset must match the generator's element size");
+    assert_eq!(cfg.sweep.amm_ports, vec![(4, 2)]);
+    // and the lowered spec survives a TOML round trip, commas intact
+    let reparsed = amm_dse::CampaignSpec::parse(&cfg.campaign.to_toml()).unwrap();
+    assert_eq!(reparsed, cfg.campaign);
+}

@@ -1,0 +1,177 @@
+//! Property tests for the `suite::synthetic` locality-dial generator.
+//!
+//! The contracts: every dial combination yields a trace that passes
+//! `Trace::validate()`; generation is bit-identical for identical
+//! `(params, seed, scale)` and diverges across seeds; and each dial
+//! moves the *measured* Weinberg locality metric monotonically in its
+//! designed direction — the property that makes the locality-sweep
+//! figure's x-axis trustworthy.
+
+use amm_dse::locality;
+use amm_dse::suite::{self, synthetic, Scale};
+use amm_dse::trace::{OpKind, Trace};
+
+/// Structural digest of a trace: every node (kind, site, iter) and the
+/// full CSR successor structure folded FNV-style into one u64. Two
+/// traces with equal digests are the same DDG for the scheduler.
+fn digest(t: &Trace) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |x: u64| h = (h ^ x).wrapping_mul(0x1_0000_0000_01b3);
+    for n in &t.nodes {
+        let kind = match n.kind {
+            OpKind::Load { array, index } => 1u64 << 40 | (array as u64) << 32 | index as u64,
+            OpKind::Store { array, index } => 2u64 << 40 | (array as u64) << 32 | index as u64,
+            OpKind::Alu(k) => 3u64 << 40 | k.index() as u64,
+        };
+        mix(kind);
+        mix((n.site as u64) << 32 | n.iter as u64);
+    }
+    for &o in &t.succ_off {
+        mix(o as u64);
+    }
+    for &s in &t.succ {
+        mix(s as u64);
+    }
+    h
+}
+
+fn spatial(name: &str) -> f64 {
+    locality::analyze(&suite::generate(name, Scale::Tiny).trace).spatial_locality()
+}
+
+#[test]
+fn every_dial_combination_validates() {
+    // A grid over the generator's regimes: each axis at its extremes
+    // plus the defaults, including the awkward corners (all-writes,
+    // all-random, saturated conflict pressure, minimum window).
+    let names = [
+        "synth:",
+        "synth:stride=unit,rw=1,reuse=32,n=256",
+        "synth:stride=unit,rw=0,reuse=32,n=256",
+        "synth:stride=rand,mix=1,conflict=1,seed=42,n=256",
+        "synth:stride=s4096,reuse=1024,n=256",
+        "synth:stride=s3,mix=0.5,rw=0.3,reuse=100,conflict=0.5,seed=5,n=500",
+    ];
+    for name in names {
+        let wl = suite::generate(name, Scale::Tiny);
+        wl.trace.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(wl.checksum.is_finite(), "{name}");
+        assert!(wl.trace.mem_ops() > 0, "{name}");
+        let p = synthetic::parse(name).unwrap();
+        assert_eq!(wl.trace.len() as u64, p.node_count(Scale::Tiny), "{name}");
+    }
+}
+
+#[test]
+fn identical_params_are_bit_identical_across_generations() {
+    let name = "synth:stride=rand,mix=0.3,rw=0.6,reuse=128,conflict=0.2,seed=77";
+    let a = suite::generate(name, Scale::Tiny);
+    let b = suite::generate(name, Scale::Tiny);
+    assert_eq!(a.checksum, b.checksum);
+    assert_eq!(digest(&a.trace), digest(&b.trace), "same (params, seed, scale) must be bit-identical");
+    // dial order in the name must not matter either
+    let c = suite::generate(
+        "synth:seed=77,conflict=0.2,reuse=128,rw=0.6,mix=0.3,stride=rand",
+        Scale::Tiny,
+    );
+    assert_eq!(a.checksum, c.checksum);
+    assert_eq!(digest(&a.trace), digest(&c.trace), "dial order is not part of the identity");
+}
+
+#[test]
+fn different_seeds_differ_and_scales_nest() {
+    let a = suite::generate("synth:stride=rand,seed=1", Scale::Tiny);
+    let b = suite::generate("synth:stride=rand,seed=2", Scale::Tiny);
+    assert_ne!(a.checksum, b.checksum, "seeds must give different streams");
+    assert_ne!(digest(&a.trace), digest(&b.trace));
+    // scale moves only the access count, not the validity
+    let p = suite::generate("synth:stride=rand,seed=1", Scale::Paper);
+    p.trace.validate().unwrap();
+    assert!(a.trace.len() < p.trace.len());
+}
+
+#[test]
+fn stride_dial_moves_locality_down_through_the_ladder() {
+    let unit = spatial("synth:stride=unit,seed=7");
+    let s4 = spatial("synth:stride=s4,seed=7");
+    let s16 = spatial("synth:stride=s16,seed=7");
+    let rand = spatial("synth:stride=rand,seed=7");
+    assert!(
+        unit > s4 && s4 > s16 && s16 > rand,
+        "stride ladder must descend: unit={unit:.4} s4={s4:.4} s16={s16:.4} rand={rand:.4}"
+    );
+    assert!(unit > 0.15, "unit-stride 4-byte stream should be high-locality: {unit:.4}");
+    assert!(rand < 0.05, "random stream should be low-locality: {rand:.4}");
+}
+
+#[test]
+fn mix_dial_moves_locality_down() {
+    let m0 = spatial("synth:stride=unit,mix=0,seed=7");
+    let m4 = spatial("synth:stride=unit,mix=0.4,seed=7");
+    let m9 = spatial("synth:stride=unit,mix=0.9,seed=7");
+    assert!(
+        m0 > m4 && m4 > m9,
+        "mix must degrade locality monotonically: {m0:.4} > {m4:.4} > {m9:.4}"
+    );
+}
+
+#[test]
+fn conflict_dial_moves_locality_down() {
+    let c0 = spatial("synth:stride=unit,conflict=0,seed=7");
+    let c5 = spatial("synth:stride=unit,conflict=0.5,seed=7");
+    let c9 = spatial("synth:stride=unit,conflict=0.9,seed=7");
+    assert!(
+        c0 > c5 && c5 > c9,
+        "conflict pressure must degrade locality monotonically: {c0:.4} > {c5:.4} > {c9:.4}"
+    );
+}
+
+#[test]
+fn reuse_dial_moves_locality_up() {
+    // Pure deterministic stream (no RNG draws at mix=0, conflict=0,
+    // stride=unit): a larger window wraps less often, so fewer
+    // non-forward transitions and strictly higher measured locality.
+    let r64 = spatial("synth:stride=unit,reuse=64,seed=7");
+    let r256 = spatial("synth:stride=unit,reuse=256,seed=7");
+    let r1024 = spatial("synth:stride=unit,reuse=1024,seed=7");
+    assert!(
+        r64 < r256 && r256 < r1024,
+        "reuse window must raise locality monotonically: {r64:.6} < {r256:.6} < {r1024:.6}"
+    );
+}
+
+#[test]
+fn rw_dial_moves_the_read_fraction_not_the_address_stream() {
+    // Reads and writes share one address stream, so `rw` is not a
+    // locality dial; its monotone effect is the read fraction of the
+    // trace's memory ops, exact under the Bresenham interleave.
+    let mut fractions = Vec::new();
+    for rw in ["0.2", "0.5", "0.8"] {
+        let wl = suite::generate(&format!("synth:rw={rw},n=1000,seed=7"), Scale::Tiny);
+        let loads = wl
+            .trace
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Load { .. }))
+            .count();
+        assert_eq!(wl.trace.mem_ops(), 1000, "one mem op per access");
+        fractions.push(loads as f64 / 1000.0);
+    }
+    assert!(
+        fractions[0] < fractions[1] && fractions[1] < fractions[2],
+        "read fraction must follow the rw dial: {fractions:?}"
+    );
+    // and exactly: rw=0.5 over 1000 accesses = 500 writes
+    assert!((fractions[1] - 0.5).abs() < 1e-9, "{fractions:?}");
+}
+
+#[test]
+fn unknown_and_malformed_names_error_with_the_dial_listing() {
+    // The CLI bugfix contract, at the library gate all front-ends use.
+    let e = suite::validate_name("synth:stride=spiral").unwrap_err().to_string();
+    assert!(e.contains("known dials"), "{e}");
+    let e = suite::validate_name("sinth:stride=unit").unwrap_err().to_string();
+    assert!(e.contains("synth:"), "a typo'd prefix should advertise the namespace: {e}");
+    assert!(e.contains("known dials"), "{e}");
+    suite::validate_name("synth:stride=unit").unwrap();
+}
