@@ -215,10 +215,12 @@ fn outcome(scale: Scale, explorations: Vec<Exploration>, resumed: usize) -> Camp
         shard: None,
         explorations,
         simulated: 0,
+        memoized: 0,
         resumed,
         points_per_s: 0.0,
         cost_batches: 0,
         cost: Default::default(),
+        sim: Default::default(),
     }
 }
 

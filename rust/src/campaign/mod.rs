@@ -30,8 +30,18 @@
 //!    there (keyed by `(benchmark, scale, point id)`, so a sink written
 //!    at another scale can never satisfy a resume) are restored
 //!    verbatim and never re-simulated;
-//! 4. **score** — the macro-cost queries of every pending design, across
-//!    *all* benchmarks, go through
+//! 4. **compile** — one [`CompiledTrace`] per `(benchmark, word_bytes)`
+//!    group, shared by every model/knob variant in the group;
+//! 5. **probe** — each pending unit's canonical [`crate::sim::Key`]
+//!    (trace content hash + knobs + design id + engine version) is
+//!    probed against the tiered simulation stack ([`crate::sim`],
+//!    opened from [`CampaignSpec::sim_store`] or `<sink>.sim.jsonl`):
+//!    hits skip scoring, lane packing and the scheduler entirely and
+//!    stream straight to the sink writer, so a warm campaign against a
+//!    **fresh sink** re-simulates zero points and a superset sweep
+//!    simulates only the delta;
+//! 6. **score** — the macro-cost queries of every design still pending,
+//!    across *all* benchmarks, go through
 //!    [`crate::coordinator::Coordinator::score_designs`] as **one**
 //!    deduplicated batch, resolved through the tiered cost stack
 //!    ([`crate::cost`]): the campaign opens the persistent cost store
@@ -39,9 +49,7 @@
 //!    sink) before scoring and newly scored rows are flushed to it per
 //!    batch, so only shapes *no prior run ever scored* reach the PJRT
 //!    backend — a warmed re-run issues **zero** backend batches;
-//! 5. **compile** — one [`CompiledTrace`] per `(benchmark, word_bytes)`
-//!    group, shared by every model/knob variant in the group;
-//! 6. **simulate** — units sharing a compiled-trace group and
+//! 7. **simulate** — units sharing a compiled-trace group and
 //!    `(unroll, alus)` knobs are bucketed into lane chunks of up to the
 //!    sweep's `lanes` (0 = auto) and scored through the lane-batched
 //!    engine ([`crate::sched::CompiledTrace::simulate_batch`]; scalar
@@ -50,7 +58,7 @@
 //!    chunks across benchmark boundaries (no per-benchmark barrier) and
 //!    own one [`SimArena`] + [`BatchArena`] each for the entire
 //!    campaign;
-//! 7. **stream** — completed points flow through a reorder buffer to the
+//! 8. **stream** — completed points flow through a reorder buffer to the
 //!    append-only JSONL [`sink`] in enumeration order (with optional
 //!    stderr progress/ETA lines, [`ExecOptions::progress`]), so the
 //!    file grows as the in-order prefix completes, is byte-stable for
@@ -89,6 +97,12 @@ pub fn default_cost_store(sink: &Path) -> PathBuf {
     crate::util::jsonl::path_with_suffix(sink, ".cost.jsonl")
 }
 
+/// The default simulation-store path for a sinked campaign:
+/// `<sink>.sim.jsonl`, next to the cost store and status sidecar.
+pub fn default_sim_store(sink: &Path) -> PathBuf {
+    crate::util::jsonl::path_with_suffix(sink, ".sim.jsonl")
+}
+
 /// Execution-context knobs that ride *alongside* a [`CampaignSpec`]:
 /// they select how the plan runs here (cost service, progress
 /// reporting), not what the plan is, so they are never serialized.
@@ -112,6 +126,12 @@ pub struct ExecOptions {
     /// `<sink>.status.history.jsonl` alongside the last-write-wins
     /// sidecar (see [`sink::StatusWriter`]). 0 disables the ring.
     pub status_history: usize,
+    /// Probe the tiered simulation stack ([`crate::sim`]) before lane
+    /// packing, so units any prior run already simulated skip the
+    /// scheduler entirely (default on; coordinator-less offline runs
+    /// never probe). Disable to force every owned unit through the
+    /// engine — the half-warm golden uses this for its cold control.
+    pub sim_memo: bool,
 }
 
 impl Default for ExecOptions {
@@ -122,6 +142,7 @@ impl Default for ExecOptions {
             progress: false,
             cancel: None,
             status_history: sink::DEFAULT_HISTORY,
+            sim_memo: true,
         }
     }
 }
@@ -214,6 +235,14 @@ impl Campaign {
     /// [`crate::cost`].
     pub fn cost_store(mut self, path: impl Into<PathBuf>) -> Self {
         self.spec.cost_store = Some(path.into());
+        self
+    }
+
+    /// Persist (and warm-start from) the simulation-result store at
+    /// `path` (default for sinked runs: `<sink>.sim.jsonl`). See
+    /// [`crate::sim`].
+    pub fn sim_store(mut self, path: impl Into<PathBuf>) -> Self {
+        self.spec.sim_store = Some(path.into());
         self
     }
 
@@ -317,10 +346,10 @@ fn execute(
     let scale = spec.scale;
     let shard = spec.shard;
 
-    // ---- cost store: open the warm-start tier before scoring ----------
-    // The spec's explicit path wins; a sinked run derives
-    // `<sink>.cost.jsonl`. Offline (coordinator-less) runs score
-    // nothing and open nothing.
+    // ---- cost + sim stores: open the warm-start tiers up front --------
+    // The spec's explicit paths win; a sinked run derives
+    // `<sink>.cost.jsonl` / `<sink>.sim.jsonl`. Offline
+    // (coordinator-less) runs score nothing and open nothing.
     if let Some(coord) = coord {
         let store_path = spec
             .cost_store
@@ -328,6 +357,15 @@ fn execute(
             .or_else(|| spec.sink.as_ref().map(|s| default_cost_store(s)));
         if let Some(path) = &store_path {
             coord.open_cost_store(path)?;
+        }
+        if opts.sim_memo {
+            let sim_path = spec
+                .sim_store
+                .clone()
+                .or_else(|| spec.sink.as_ref().map(|s| default_sim_store(s)));
+            if let Some(path) = &sim_path {
+                coord.open_sim_store(path)?;
+            }
         }
     }
 
@@ -475,9 +513,59 @@ fn execute(
             done.len()
         ));
     }
-    let simulated = units.len();
+    if cancelled() {
+        return cancel_err();
+    }
+
+    // ---- compile: one CompiledTrace per (benchmark, word) group -------
+    // Compiled before scoring, because the simulation probe below keys
+    // on each group's trace content hash. (Option<Arc<..>> only to
+    // satisfy the pool's Default bound.)
+    let groups: Vec<Arc<CompiledTrace<'_>>> =
+        pool::parallel_map(&group_keys, threads, |&(bi, wb)| {
+            let wl = benches[bi].wl.as_ref().expect("groups only form for owned benchmarks");
+            Some(Arc::new(CompiledTrace::new(&wl.trace, wb)))
+        })
+        .into_iter()
+        .map(|g| g.expect("group compilation cannot fail"))
+        .collect();
+
+    // ---- probe: feed memoized units straight past the scheduler ------
+    // Every unit any prior run simulated under this scoring context +
+    // engine version answers from the sim stack (memo or persistent
+    // store) before lane packing: hits go straight to the sink writer
+    // with their enumeration `seq` (so ordering and sink byte-stability
+    // are untouched), and only the misses are scored, lane-packed and
+    // simulated. `keys` is seq-aligned with `units`; hit slots are
+    // taken (`None`) so the miss path below can move the rest.
+    let sim_stack = coord.filter(|_| opts.sim_memo).map(|c| c.sim_stack());
+    let mut sim = crate::sim::SimCounters::default();
+    let mut keys: Vec<Option<crate::sim::Key>> = Vec::new();
+    let mut hits: Vec<(usize, DesignPoint)> = Vec::new();
+    let mut hit_mask = vec![false; units.len()];
+    if let Some(stack) = sim_stack {
+        let before = stack.counters();
+        keys.reserve_exact(units.len());
+        for (i, u) in units.iter().enumerate() {
+            let knobs = &points[u.point].knobs;
+            let key = crate::sim::Key::of(&groups[u.group], knobs, &u.design);
+            match stack.probe(&key) {
+                Some(out) => {
+                    hits.push((i, dse::point_from(&u.design.id, u.design.is_amm, knobs, out)));
+                    hit_mask[i] = true;
+                    keys.push(None);
+                }
+                None => keys.push(Some(key)),
+            }
+        }
+        sim = stack.counters().since(&before);
+    }
+    let memoized = hits.len();
+    let simulated = units.len() - memoized;
 
     // ---- score: ONE deduplicated cost call for the whole campaign -----
+    // Only units that must actually be simulated need cost-patched
+    // designs (memoized units carry fully composed outputs already).
     // The stack answers from its memo/store tiers where it can; only
     // never-scored shapes reach the runtime backend (at most one
     // batch). Counter deltas attribute exactly this campaign's traffic
@@ -487,23 +575,18 @@ fn execute(
         return cancel_err();
     }
     if let Some(coord) = coord {
-        if !units.is_empty() {
+        if simulated > 0 {
             let before = coord.cost_counters();
-            coord.score_designs(units.iter_mut().map(|u| &mut u.design))?;
+            coord.score_designs(
+                units
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| !hit_mask[*i])
+                    .map(|(_, u)| &mut u.design),
+            )?;
             cost = coord.cost_counters().since(&before);
         }
     }
-
-    // ---- compile: one CompiledTrace per (benchmark, word) group -------
-    // (Option<Arc<..>> only to satisfy the pool's Default bound.)
-    let groups: Vec<Arc<CompiledTrace<'_>>> =
-        pool::parallel_map(&group_keys, threads, |&(bi, wb)| {
-            let wl = benches[bi].wl.as_ref().expect("groups only form for owned benchmarks");
-            Some(Arc::new(CompiledTrace::new(&wl.trace, wb)))
-        })
-        .into_iter()
-        .map(|g| g.expect("group compilation cannot fail"))
-        .collect();
 
     // ---- simulate + stream --------------------------------------------
     // One flat dispatch: workers steal units across benchmark
@@ -544,13 +627,15 @@ fn execute(
                 scale,
                 resumed,
                 units.len(),
+                memoized,
                 cost.hits(),
                 cost.misses,
                 cost.batches,
                 opts.status_history,
             ));
         }
-        let progress = opts.progress.then(|| Progress::new(resumed, units.len(), &cost));
+        let progress =
+            opts.progress.then(|| Progress::new(resumed, units.len(), memoized, &cost));
         let (s, r) = mpsc::channel::<(usize, String)>();
         tx = Some(Mutex::new(s));
         writer = Some(
@@ -559,6 +644,18 @@ fn execute(
                 .spawn(move || sink_writer(file, r, progress, status))
                 .expect("spawn campaign sink writer"),
         );
+    }
+    // Memoized units skip the dispatch entirely: their record lines go
+    // to the writer now, carrying their enumeration `seq`, so the
+    // reorder buffer interleaves them with fresh completions and the
+    // sink stays byte-identical to a cold run.
+    if let Some(tx) = &tx {
+        let tx = tx.lock().expect("sink sender poisoned");
+        for (i, p) in &hits {
+            let u = &units[*i];
+            let line = sink::record_line(&benches[u.bench].name, scale, p);
+            let _ = tx.send((u.seq, line));
+        }
     }
     // Lane-group the unit stream: units sharing a compiled-trace group
     // and (unroll, alus) knobs form one batched engine call (singletons
@@ -571,7 +668,9 @@ fn execute(
     let chunks: Vec<Vec<usize>> = {
         let mut index: HashMap<(usize, u32, u32), usize> = HashMap::new();
         let mut buckets: Vec<Vec<usize>> = Vec::new();
-        for (i, u) in units.iter().enumerate() {
+        // only the probe misses are re-packed into lane groups —
+        // memoized units already streamed to the writer above
+        for (i, u) in units.iter().enumerate().filter(|(i, _)| !hit_mask[*i]) {
             let k = &points[u.point].knobs;
             let b = *index.entry((u.group, k.unroll, k.alus)).or_insert_with(|| {
                 buckets.push(Vec::new());
@@ -613,6 +712,19 @@ fn execute(
                 scratch.extend(chunk.iter().map(|&i| units[i].design.clone()));
                 groups[first.group].simulate_batch(batch, knobs, scratch)
             };
+            if let Some(stack) = sim_stack {
+                // one memo insert + store append per chunk: a killed
+                // campaign still warms the next run up to its last chunk
+                let rows: Vec<(crate::sim::Key, SimOutput)> = chunk
+                    .iter()
+                    .zip(&sims)
+                    .map(|(&i, s)| {
+                        let key = keys[i].clone().expect("miss units keep their key");
+                        (key, s.clone())
+                    })
+                    .collect();
+                stack.record_all(&rows);
+            }
             chunk
                 .iter()
                 .zip(sims)
@@ -639,7 +751,7 @@ fn execute(
     if cancelled() {
         return cancel_err();
     }
-    for (i, p) in fresh.into_iter().flatten() {
+    for (i, p) in hits.into_iter().chain(fresh.into_iter().flatten()) {
         let u = &units[i];
         results[u.bench][u.point] = Some(p);
     }
@@ -677,10 +789,12 @@ fn execute(
         shard,
         explorations,
         simulated,
+        memoized,
         resumed,
         points_per_s,
         cost_batches: cost.batches,
         cost,
+        sim,
     })
 }
 
@@ -693,21 +807,28 @@ fn execute(
 struct Progress {
     resumed: usize,
     planned: usize,
+    /// Planned units answered by the sim stack — they arrive at the
+    /// writer as one instant burst, so ETA math uses fresh units only.
+    memoized: usize,
     every: usize,
-    /// Fixed suffix: scoring finishes before simulation starts, so the
-    /// counters are final by the time the first line prints.
+    /// Fixed suffix: probing and scoring finish before simulation
+    /// starts, so the counters are final by the time the first line
+    /// prints.
     cost_note: String,
     start: std::time::Instant,
 }
 
 impl Progress {
-    fn new(resumed: usize, planned: usize, cost: &CostCounters) -> Progress {
+    fn new(resumed: usize, planned: usize, memoized: usize, cost: &CostCounters) -> Progress {
+        let sim_note =
+            if memoized > 0 { format!(", {memoized} memoized") } else { String::new() };
         Progress {
             resumed,
             planned,
+            memoized,
             every: (planned / 20).max(1),
             cost_note: format!(
-                ", cost {} hit/{} miss/{} batch",
+                "{sim_note}, cost {} hit/{} miss/{} batch",
                 cost.hits(),
                 cost.misses,
                 cost.batches
@@ -725,12 +846,16 @@ impl Progress {
         let elapsed = self.start.elapsed().as_secs_f64();
         let pct = 100.0 * done as f64 / total as f64;
         let cost = &self.cost_note;
-        if received == 0 || received >= self.planned {
+        // ETA extrapolates from freshly simulated completions only —
+        // the memoized burst would otherwise fake an absurd rate.
+        let fresh = received.saturating_sub(self.memoized);
+        let fresh_planned = self.planned - self.memoized;
+        if fresh == 0 || fresh >= fresh_planned {
             eprintln!(
                 "campaign: {done}/{total} points ({pct:.0}%), {elapsed:.1}s elapsed{cost}"
             );
         } else {
-            let eta = elapsed / received as f64 * (self.planned - received) as f64;
+            let eta = elapsed / fresh as f64 * (fresh_planned - fresh) as f64;
             eprintln!(
                 "campaign: {done}/{total} points ({pct:.0}%), {elapsed:.1}s elapsed, eta {eta:.0}s{cost}"
             );
@@ -812,8 +937,16 @@ pub struct CampaignOutcome {
     /// One exploration per planned benchmark (locality-only rows carry
     /// an empty point set; sharded runs carry only their bucket).
     pub explorations: Vec<Exploration>,
-    /// Design points freshly simulated by this run.
+    /// Design points freshly simulated by this run — the scheduler
+    /// actually ran for these. Memoized and restored points never
+    /// count.
     pub simulated: usize,
+    /// Design points answered by the tiered simulation stack
+    /// ([`crate::sim`]) instead of the scheduler: in-process memo or
+    /// persistent sim-store hits. Distinct from [`Self::resumed`]
+    /// (sink restores) — a warm campaign against a *fresh* sink
+    /// reports `simulated: 0` with everything here.
+    pub memoized: usize,
     /// Design points restored from the sink instead of re-simulated
     /// (reported as both `resumed` and `restored` in the status
     /// sidecar; [`CampaignOutcome::restored`] is the reading accessor).
@@ -834,6 +967,10 @@ pub struct CampaignOutcome {
     /// Full cost-stack accounting for this campaign's scoring call
     /// (memo/store hits, backend misses and batches).
     pub cost: CostCounters,
+    /// Full sim-stack accounting for this campaign's probe pass
+    /// (memo/store hits and misses; `hits() ==`
+    /// [`CampaignOutcome::memoized`]).
+    pub sim: crate::sim::SimCounters,
 }
 
 impl CampaignOutcome {
@@ -983,6 +1120,7 @@ mod tests {
             .threads(3)
             .sink("results/x.jsonl")
             .cost_store("results/x.cost.jsonl")
+            .sim_store("results/x.sim.jsonl")
             .shard(1, 2);
         let spec = c.spec();
         assert_eq!(spec.swept(), ["gemm"]);
@@ -995,12 +1133,18 @@ mod tests {
             spec.cost_store.as_deref(),
             Some(std::path::Path::new("results/x.cost.jsonl"))
         );
+        assert_eq!(
+            spec.sim_store.as_deref(),
+            Some(std::path::Path::new("results/x.sim.jsonl"))
+        );
         assert_eq!(spec.shard, Some(Shard { index: 1, count: 2 }));
     }
 
     #[test]
-    fn default_cost_store_sits_next_to_the_sink() {
+    fn default_stores_sit_next_to_the_sink() {
         let p = default_cost_store(std::path::Path::new("results/s0.jsonl"));
         assert_eq!(p, std::path::Path::new("results/s0.jsonl.cost.jsonl"));
+        let p = default_sim_store(std::path::Path::new("results/s0.jsonl"));
+        assert_eq!(p, std::path::Path::new("results/s0.jsonl.sim.jsonl"));
     }
 }

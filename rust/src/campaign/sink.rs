@@ -82,22 +82,25 @@ pub const DEFAULT_HISTORY: usize = 64;
 /// ```json
 /// {"schema":"campaign-status/v1","sink":"s0.jsonl","shard":"0/2",
 ///  "scale":"tiny","done":123,"total":456,"resumed":10,"restored":10,
-///  "simulated":113,"eta_s":42.1,"points_per_s":350.0,"cost_hits":5,
-///  "cost_misses":7,"cost_batches":1,"complete":false,
+///  "memoized":20,"simulated":93,"eta_s":42.1,"points_per_s":350.0,
+///  "cost_hits":5,"cost_misses":7,"cost_batches":1,"complete":false,
 ///  "updated_unix":1690000000}
 /// ```
 ///
 /// `done` counts points *persisted to the sink* (resumed + written in
 /// order), `total` the shard's whole plan, `eta_s` is `null` until the
 /// first completion and after the last, `shard` is `null` for unsharded
-/// runs. `restored` (alias: the original `resumed`, kept for pollers of
-/// the v1 document) counts points recovered from the sink without
-/// re-simulation; `simulated` counts completions freshly scored this
-/// run — and `points_per_s` is derived STRICTLY from `simulated` over
-/// the stage's own wall clock (`null` until the first fresh
-/// completion), so a warm resume can never inflate the throughput
-/// number. Best-effort: an unwritable status file warns once and never
-/// fails the campaign.
+/// runs. Three distinct provenance counters partition the non-fresh
+/// work: `restored` (alias: the original `resumed`, kept for pollers of
+/// the v1 document) counts points recovered from *this sink* without
+/// re-simulation; `memoized` counts points satisfied by the tiered
+/// simulation store ([`crate::sim::SimStack`]) — planned work that
+/// never reached the kernel; `simulated` counts completions freshly
+/// scored this run — and `points_per_s` is derived STRICTLY from
+/// `simulated` over the stage's own wall clock (`null` until the first
+/// fresh completion), so neither a warm resume nor a warm sim store can
+/// inflate the throughput number. Best-effort: an unwritable status
+/// file warns once and never fails the campaign.
 ///
 /// Alongside the last-write-wins sidecar, every *emitted* document is
 /// also appended to a bounded history ring at
@@ -113,6 +116,7 @@ pub struct StatusWriter {
     scale: Scale,
     resumed: usize,
     planned: usize,
+    memoized: usize,
     cost_hits: usize,
     cost_misses: usize,
     cost_batches: usize,
@@ -134,6 +138,7 @@ impl StatusWriter {
         scale: Scale,
         resumed: usize,
         planned: usize,
+        memoized: usize,
         cost_hits: usize,
         cost_misses: usize,
         cost_batches: usize,
@@ -156,6 +161,7 @@ impl StatusWriter {
             scale,
             resumed,
             planned,
+            memoized,
             cost_hits,
             cost_misses,
             cost_batches,
@@ -189,19 +195,24 @@ impl StatusWriter {
         let done = self.resumed + written;
         let total = self.resumed + self.planned;
         let complete = written >= self.planned;
-        let eta = if received > 0 && received < self.planned {
+        // Everything below is strictly FRESH work: memoized completions
+        // cost no simulation time, so folding them into the rate would
+        // let a warm sim store fake an arbitrarily high throughput.
+        let fresh = received.saturating_sub(self.memoized);
+        let fresh_planned = self.planned.saturating_sub(self.memoized);
+        let eta = if fresh > 0 && fresh < fresh_planned {
             let elapsed = self.start.elapsed().as_secs_f64();
-            format!("{:.1}", elapsed / received as f64 * (self.planned - received) as f64)
+            format!("{:.1}", elapsed / fresh as f64 * (fresh_planned - fresh) as f64)
         } else {
             "null".to_string()
         };
         // Sustained fresh-simulation throughput since the stage started
-        // (null until the first completion lands) — the field serve
-        // fleets watch for live throughput regressions.
+        // (null until the first fresh completion lands) — the field
+        // serve fleets watch for live throughput regressions.
         let points_per_s = {
             let elapsed = self.start.elapsed().as_secs_f64();
-            if received > 0 && elapsed > 0.0 {
-                format!("{:.1}", received as f64 / elapsed)
+            if fresh > 0 && elapsed > 0.0 {
+                format!("{:.1}", fresh as f64 / elapsed)
             } else {
                 "null".to_string()
             }
@@ -217,7 +228,8 @@ impl StatusWriter {
         let body = format!(
             concat!(
                 "{{\"schema\":\"{}\",\"sink\":\"{}\",\"shard\":{},\"scale\":\"{}\",",
-                "\"done\":{},\"total\":{},\"resumed\":{},\"restored\":{},\"simulated\":{},",
+                "\"done\":{},\"total\":{},\"resumed\":{},\"restored\":{},",
+                "\"memoized\":{},\"simulated\":{},",
                 "\"eta_s\":{},\"points_per_s\":{},",
                 "\"cost_hits\":{},\"cost_misses\":{},\"cost_batches\":{},",
                 "\"complete\":{},\"updated_unix\":{}}}\n"
@@ -230,7 +242,8 @@ impl StatusWriter {
             total,
             self.resumed,
             self.resumed,
-            received,
+            self.memoized,
+            fresh,
             eta,
             points_per_s,
             self.cost_hits,
@@ -523,6 +536,7 @@ mod tests {
             Scale::Tiny,
             3,
             10,
+            1, // one point served by the sim store
             5,
             7,
             1,
@@ -540,7 +554,9 @@ mod tests {
             "\"total\":13",
             "\"resumed\":3",
             "\"restored\":3",
-            "\"simulated\":4",
+            "\"memoized\":1",
+            // 4 received minus the 1 memoized: simulated is fresh-only
+            "\"simulated\":3",
             "\"cost_hits\":5",
             "\"cost_misses\":7",
             "\"cost_batches\":1",
@@ -551,7 +567,7 @@ mod tests {
         }
         assert!(!text.contains("\"eta_s\":null"), "mid-run status carries an ETA: {text}");
         // the final write: complete, no ETA, null shard for unsharded
-        let mut unsharded = StatusWriter::new(&sink, None, Scale::Tiny, 0, 2, 0, 0, 0, 0);
+        let mut unsharded = StatusWriter::new(&sink, None, Scale::Tiny, 0, 2, 0, 0, 0, 0, 0);
         unsharded.update(2, 2, true);
         let text = std::fs::read_to_string(status_path(&sink)).unwrap();
         assert!(text.contains("\"shard\":null"), "{text}");
@@ -570,7 +586,7 @@ mod tests {
         let _ = std::fs::create_dir_all(&dir);
         let sink = dir.join("h.jsonl");
         let limit = 4usize;
-        let mut st = StatusWriter::new(&sink, None, Scale::Tiny, 0, 100, 0, 0, 0, limit);
+        let mut st = StatusWriter::new(&sink, None, Scale::Tiny, 0, 100, 0, 0, 0, 0, limit);
         for i in 0..(2 * limit + 3) {
             st.update(i, i, true); // force past the 100 ms throttle
         }
@@ -589,7 +605,7 @@ mod tests {
         assert!(newest.contains(&format!("\"done\":{}", 2 * limit + 2)), "{newest}");
         // a resumed writer keeps appending to the surviving ring
         let before = lines.len();
-        let mut resumed = StatusWriter::new(&sink, None, Scale::Tiny, 0, 100, 0, 0, 0, limit);
+        let mut resumed = StatusWriter::new(&sink, None, Scale::Tiny, 0, 100, 0, 0, 0, 0, limit);
         resumed.update(50, 50, true);
         let text = std::fs::read_to_string(history_path(&sink)).unwrap();
         assert_eq!(text.lines().count(), before + 1);

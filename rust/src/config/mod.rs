@@ -206,6 +206,12 @@ pub fn parse(text: &str) -> Result<RunConfig> {
                 .ok_or_else(|| Error::config("campaign.cost_store must be a string"))?;
             spec.cost_store = Some(s.into());
         }
+        if let Some(v) = t.get("sim_store") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("campaign.sim_store must be a string"))?;
+            spec.sim_store = Some(s.into());
+        }
         if let Some(v) = t.get("weights") {
             let s = v
                 .as_str()
@@ -377,6 +383,7 @@ mod tests {
             [campaign]
             benchmarks = ["gemm"]
             cost_store = "results/suite.cost.jsonl"
+            sim_store = "results/suite.sim.jsonl"
             weights = "results/weights.jsonl"
             shard = "0/2"
             shard_strategy = "weighted"
@@ -388,6 +395,10 @@ mod tests {
             spec.cost_store.as_deref(),
             Some(Path::new("results/suite.cost.jsonl"))
         );
+        assert_eq!(
+            spec.sim_store.as_deref(),
+            Some(Path::new("results/suite.sim.jsonl"))
+        );
         assert_eq!(spec.weights.as_deref(), Some(Path::new("results/weights.jsonl")));
         assert_eq!(spec.shard_strategy, ShardStrategy::Weighted);
         // round-trip: the canonical TOML re-parses to the same spec
@@ -395,6 +406,7 @@ mod tests {
         // defaults: no store, no weight table, hash strategy
         let plain = parse("benchmark = \"gemm\"\n").unwrap();
         assert!(plain.campaign.cost_store.is_none());
+        assert!(plain.campaign.sim_store.is_none());
         assert!(plain.campaign.weights.is_none());
         assert_eq!(plain.campaign.shard_strategy, ShardStrategy::Hash);
     }

@@ -37,6 +37,7 @@ use crate::cost::{self, CostCounters, CostStack};
 use crate::dse::{self, DesignPoint, Sweep, SweepPoint};
 use crate::error::Result;
 use crate::mem::MemDesign;
+use crate::sim::{SimCounters, SimStack};
 use crate::trace::Trace;
 use crate::util::pool;
 use std::path::Path;
@@ -52,6 +53,7 @@ pub use crate::cost::{
 pub struct Coordinator {
     cost: CostService,
     stack: CostStack,
+    sim: SimStack,
     _guard: ServiceGuard,
     /// Which backend scored the designs.
     pub backend: CostBackend,
@@ -68,10 +70,15 @@ impl Coordinator {
     pub fn with_artifacts(dir: std::path::PathBuf) -> Self {
         let (cost, guard, backend) = CostService::spawn(dir.clone());
         let fingerprint = cost::backend_fingerprint(backend, &dir);
+        // The sim stack shares the cost fingerprint: every SimOutput
+        // folds cost-patched numbers in, so simulation rows are only
+        // reusable within the scoring context that produced them.
+        let sim = SimStack::new(fingerprint.clone());
         let stack = CostStack::new(Box::new(cost.clone()), fingerprint);
         Coordinator {
             cost,
             stack,
+            sim,
             _guard: guard,
             backend,
             threads: pool::default_threads(),
@@ -104,6 +111,25 @@ impl Coordinator {
     /// Hit/miss/batch accounting for every scoring call so far.
     pub fn cost_counters(&self) -> CostCounters {
         self.stack.counters()
+    }
+
+    /// The tiered simulation-result stack campaigns probe before lane
+    /// packing (see [`crate::sim`]).
+    pub fn sim_stack(&self) -> &SimStack {
+        &self.sim
+    }
+
+    /// Attach (open or create) the persistent simulation store at
+    /// `path` — the warm-start tier that lets a campaign skip the
+    /// scheduler itself. See [`SimStack::open_store`] for replacement
+    /// rules.
+    pub fn open_sim_store(&self, path: &Path) -> Result<()> {
+        self.sim.open_store(path)
+    }
+
+    /// Hit/miss accounting for every simulation probe so far.
+    pub fn sim_counters(&self) -> SimCounters {
+        self.sim.counters()
     }
 
     /// The configured scheduler worker-thread count (what sweeps and

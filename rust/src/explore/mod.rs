@@ -54,6 +54,7 @@ pub struct Explorer {
     threads: usize,
     artifacts: Option<PathBuf>,
     cost_store: Option<PathBuf>,
+    sim_store: Option<PathBuf>,
     offline: bool,
 }
 
@@ -75,6 +76,7 @@ impl Explorer {
             threads: 0,
             artifacts: None,
             cost_store: None,
+            sim_store: None,
             offline: false,
         }
     }
@@ -118,6 +120,14 @@ impl Explorer {
     /// tiered cost stack (see [`crate::cost`]) for free.
     pub fn cost_store(mut self, path: impl Into<PathBuf>) -> Self {
         self.cost_store = Some(path.into());
+        self
+    }
+
+    /// Persist (and warm-start from) the simulation-result store at
+    /// `path` — a warm store lets a repeat exploration skip the
+    /// cycle-accurate kernel entirely (see [`crate::sim`]).
+    pub fn sim_store(mut self, path: impl Into<PathBuf>) -> Self {
+        self.sim_store = Some(path.into());
         self
     }
 
@@ -173,6 +183,9 @@ impl Explorer {
         let mut campaign = Campaign::new().benchmark(benchmark).scale(self.scale).sweep(sweep);
         if let Some(store) = self.cost_store {
             campaign = campaign.cost_store(store);
+        }
+        if let Some(store) = self.sim_store {
+            campaign = campaign.sim_store(store);
         }
         Ok(campaign)
     }

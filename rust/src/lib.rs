@@ -128,6 +128,11 @@
 //!   `cost-store/v1` JSONL store (fingerprint-keyed so stub- and
 //!   pjrt-scored rows never mix), and the runtime batch backend as the
 //!   miss path.
+//! * [`sim`] — the tiered simulation-result subsystem: canonical
+//!   [`sim::Key`]s (trace content hash + knobs + design + engine
+//!   version), the persistent `sim-store/v1` JSONL store, and the
+//!   [`sim::SimStack`] memo/store tiers the campaign probes before
+//!   lane packing, so warm campaigns skip simulation itself.
 //! * [`coordinator`] — the parallel DSE orchestrator: a thin front over
 //!   the cost stack that batches design-point cost queries.
 //! * [`report`] — CSV and ASCII-plot emitters for every paper figure.
@@ -155,6 +160,7 @@ pub mod dse;
 pub mod explore;
 pub mod runtime;
 pub mod cost;
+pub mod sim;
 pub mod coordinator;
 pub mod spec;
 pub mod campaign;

@@ -13,6 +13,7 @@
 //! repro run <config.toml> [...]           spec-driven campaign (the canonical verb)
 //! repro merge <sinks...> [--config c]     merge shard sinks -> reports
 //! repro cost-store <stat|gc|export> <f>   inspect/compact/export a cost store
+//! repro sim-store <stat|gc|export> <f>    inspect/compact/export a sim store
 //! repro sweep --config <file.toml>        config-driven sweep -> CSV
 //! repro figure fig4 [--bench b] [...]     regenerate Fig 4 CSV + plots
 //! repro figure fig5 [--scale s]           regenerate Fig 5 + correlation
@@ -32,6 +33,7 @@ use amm_dse::mem;
 use amm_dse::sched::Knobs;
 use amm_dse::spec::{Shard, ShardStrategy};
 use amm_dse::serve;
+use amm_dse::sim::SimStore;
 use amm_dse::suite::{self, Scale};
 use amm_dse::{campaign, config, locality, report, Campaign, Error, Explorer, Result};
 use std::path::{Path, PathBuf};
@@ -61,6 +63,7 @@ fn run(args: &[String]) -> Result<()> {
         "merge" => cmd_merge(&args[1..]),
         "serve" => cmd_serve(&args[1..]),
         "cost-store" => cmd_cost_store(&args[1..]),
+        "sim-store" => cmd_sim_store(&args[1..]),
         "sweep" => cmd_sweep(&args[1..]),
         "figure" => cmd_figure(&args[1..]),
         "synth-table" => cmd_synth_table(),
@@ -86,23 +89,27 @@ USAGE:
             [--threads N] [--out-dir results] [--quiet]
   repro simulate <benchmark> --mem <id> [--unroll N] [--word N] [--alus N] [--scale s]
   repro run <config.toml> [--shard i/n] [--shard-strategy hash|weighted]
-            [--sink f.jsonl] [--cost-store f.cost.jsonl] [--scale s]
-            [--weights w.jsonl] [--status-history N]
+            [--sink f.jsonl] [--cost-store f.cost.jsonl] [--sim-store f.sim.jsonl]
+            [--scale s] [--weights w.jsonl] [--status-history N]
             [--threads N] [--out-dir results] [--quiet]
   repro merge <sink.jsonl>... [--config <config.toml>] [--scale s]
             [--out-dir results] [--partial]
   repro merge --pool-stores <store.jsonl>... --out pooled.jsonl
+  repro merge --pool-sim-stores <store.jsonl>... --out pooled.jsonl
   repro serve [--addr host:port] [--workers N] [--data-dir serve-data]
             [--artifacts dir] [--status-history N]
   repro cost-store <stat|gc|export> <store.jsonl> [--out f.csv]
+  repro sim-store <stat|gc|export> <store.jsonl> [--out f.csv]
   repro sweep --config configs/<file>.toml [--out results/out.csv]
   repro figure fig4 [--bench <name>|all] [--scale s] [--out-dir results] [--sink f.jsonl]
   repro figure fig5 [--scale s] [--out-dir results] [--sink f.jsonl]
   repro synth-table
   repro port-scaling
   repro perf-smoke [--out BENCH_sweep.json] [--campaign-out BENCH_campaign.json]
-                   [--batch-out BENCH_batch.json] [--iters N] [--repeats N]
-                   [--min-speedup X] [--min-campaign-speedup X] [--min-batch-speedup X]
+                   [--batch-out BENCH_batch.json] [--simstore-out BENCH_simstore.json]
+                   [--iters N] [--repeats N] [--min-speedup X]
+                   [--min-campaign-speedup X] [--min-batch-speedup X]
+                   [--min-warm-speedup X]
 
 `run` is the canonical campaign verb: the config file (single-benchmark
 or `[campaign]`-table form, see configs/suite.toml) lowers to one
@@ -117,21 +124,29 @@ counters) so fleet tooling polls health without parsing stderr. Macro
 costs persist to a cost store (`--cost-store`, `[campaign]
 cost_store`, default `<sink>.cost.jsonl`): any later run sharing the
 store skips the runtime cost batch for every shape already scored
-under the same backend fingerprint. With --shard i/n, this process
+under the same backend fingerprint. Simulation results persist the
+same way to a sim store (`--sim-store`, `[campaign] sim_store`,
+default `<sink>.sim.jsonl`): any later run sharing the store skips
+the cycle-accurate scheduler itself for every design point already
+simulated under the same fingerprint + engine version — a warm
+re-run against a fresh sink reports `simulated: 0` with byte-identical
+results. With --shard i/n, this process
 runs only its deterministic 1/n bucket of the plan — run the other
 shards anywhere (any host: a spec is data), then reconcile with `repro
 merge`; `--shard-strategy weighted` balances shards by benchmark trace
 size instead of the uniform hash (a `--weights` table answers trace
 sizes from disk so hosts don't trace benchmarks they don't own).
 `merge --pool-stores` reconciles shard-fleet cost stores into one
-warm store (first-wins on conflicting fingerprint rows).
+warm store (first-wins on conflicting fingerprint rows), and
+`merge --pool-sim-stores` does the same for simulation stores.
 
 `serve` runs the campaign engine as a daemon: POST the same TOML spec
 to /campaigns, poll /campaigns/<id>/status, tail
 /campaigns/<id>/results?after=N, query /query/pareto and
-/cost-store/stat. Every job shares one coordinator and one cost store
-under --data-dir, so re-submitting a finished spec issues zero
-backend batches. See README "Serving" for the endpoint table.
+/cost-store/stat. Every job shares one coordinator, one cost store
+and one sim store under --data-dir, so re-submitting a finished spec
+issues zero backend batches and simulates zero points. See README
+"Serving" for the endpoint table.
 
 Flags take `--name value` or `--name=value`; unknown flags are errors.
 
@@ -437,6 +452,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             "--shard-strategy",
             "--sink",
             "--cost-store",
+            "--sim-store",
             "--scale",
             "--weights",
             "--status-history",
@@ -458,6 +474,9 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     }
     if let Some(s) = args.get("--cost-store") {
         spec.cost_store = Some(s.into());
+    }
+    if let Some(s) = args.get("--sim-store") {
+        spec.sim_store = Some(s.into());
     }
     if let Some(s) = args.get("--shard") {
         spec.shard = Some(Shard::parse(s)?);
@@ -499,9 +518,10 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     let outcome = campaign::run(&spec, &opts)?;
     if !quiet {
         eprintln!(
-            "campaign: {} points ({} simulated, {} restored) in {:.2?} ({:.0} points/s sustained, cost backend {}, {} cost batch(es), {} hit(s), {} miss(es))",
+            "campaign: {} points ({} simulated, {} memoized, {} restored) in {:.2?} ({:.0} points/s sustained, cost backend {}, {} cost batch(es), {} hit(s), {} miss(es))",
             outcome.total_points(),
             outcome.simulated,
+            outcome.memoized,
             outcome.resumed,
             t0.elapsed(),
             outcome.points_per_s,
@@ -511,12 +531,19 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             outcome.cost.misses
         );
     }
+    // always on stdout (CI's warm-store jobs grep it even with
+    // --quiet): a warm sim store makes this "simulated: 0"
+    println!(
+        "sim: simulated: {}, memoized: {}, restored: {}",
+        outcome.simulated, outcome.memoized, outcome.resumed
+    );
     if let Some(sh) = spec.shard {
         // a shard owns a partial result set: reports come from `merge`
         println!(
-            "shard {sh}: {} point(s) ({} simulated, {} restored){}",
+            "shard {sh}: {} point(s) ({} simulated, {} memoized, {} restored){}",
             outcome.total_points(),
             outcome.simulated,
+            outcome.memoized,
             outcome.resumed,
             spec.sink
                 .as_ref()
@@ -572,13 +599,23 @@ fn cmd_merge(rest: &[String]) -> Result<()> {
     let args = parse_args(
         rest,
         &["--config", "--scale", "--out-dir", "--out"],
-        &["--partial", "--pool-stores"],
+        &["--partial", "--pool-stores", "--pool-sim-stores"],
     )?;
+    if args.has("--pool-stores") && args.has("--pool-sim-stores") {
+        return Err(Error::config(
+            "--pool-stores and --pool-sim-stores are exclusive (pool one store kind at a time)",
+        ));
+    }
     if args.has("--pool-stores") {
         return cmd_pool_stores(&args);
     }
+    if args.has("--pool-sim-stores") {
+        return cmd_pool_sim_stores(&args);
+    }
     if args.get("--out").is_some() {
-        return Err(Error::config("--out is a --pool-stores flag (sinks use --out-dir)"));
+        return Err(Error::config(
+            "--out is a --pool-stores/--pool-sim-stores flag (sinks use --out-dir)",
+        ));
     }
     if args.positional.is_empty() {
         return Err(Error::config(
@@ -667,6 +704,40 @@ fn cmd_pool_stores(args: &Args) -> Result<()> {
     let (store, rep) = amm_dse::cost::store::pool(&inputs, &out)?;
     println!(
         "pooled {} store(s) -> {}: {} row(s) ({} added, {} already held, {} conflict(s) kept-first, {} malformed skipped)",
+        rep.inputs,
+        out.display(),
+        store.len(),
+        rep.added,
+        rep.already_held,
+        rep.conflicts,
+        rep.malformed,
+    );
+    for (fp, rows) in store.per_fingerprint() {
+        println!("  {fp}: {rows} row(s)");
+    }
+    Ok(())
+}
+
+/// `repro merge --pool-sim-stores`: the simulation-store twin of
+/// `--pool-stores`. Reconciles N shard-fleet sim stores into one warm
+/// store with the same first-wins contract, so a fleet's next campaign
+/// simulates only points no shard has seen.
+fn cmd_pool_sim_stores(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("--out").ok_or_else(|| {
+        Error::config("usage: repro merge --pool-sim-stores <store.jsonl>... --out pooled.jsonl")
+    })?);
+    if args.positional.is_empty() {
+        return Err(Error::config("--pool-sim-stores needs at least one input store"));
+    }
+    if args.get("--config").is_some() || args.get("--scale").is_some() || args.has("--partial") {
+        return Err(Error::config(
+            "--pool-sim-stores takes store files only (--config/--scale/--partial are sink-merge flags)",
+        ));
+    }
+    let inputs: Vec<&Path> = args.positional.iter().map(Path::new).collect();
+    let (store, rep) = amm_dse::sim::store::pool(&inputs, &out)?;
+    println!(
+        "pooled {} sim store(s) -> {}: {} row(s) ({} added, {} already held, {} conflict(s) kept-first, {} malformed skipped)",
         rep.inputs,
         out.display(),
         store.len(),
@@ -778,6 +849,68 @@ fn cmd_cost_store(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Operate on a persistent simulation store (`sim-store/v1`, see the
+/// `sim` module): the same stat/gc/export verbs as `cost-store`, over
+/// the store that lets warm campaigns skip the cycle-accurate kernel.
+fn cmd_sim_store(rest: &[String]) -> Result<()> {
+    let args = parse_args(rest, &["--out"], &[])?;
+    let usage = || {
+        Error::config("usage: repro sim-store <stat|gc|export> <store.jsonl> [--out f.csv]")
+    };
+    let verb = args.positional.first().cloned().ok_or_else(usage)?;
+    let path = args.positional.get(1).cloned().ok_or_else(usage)?;
+    let path = Path::new(&path);
+    match verb.as_str() {
+        "stat" => {
+            let store = SimStore::open(path)?;
+            let rep = store.report();
+            println!("sim store {}", path.display());
+            println!("  rows        {}", store.len());
+            println!(
+                "  skipped     {} malformed, {} duplicate(s), {} conflict(s){}",
+                rep.malformed,
+                rep.duplicates,
+                rep.conflicts,
+                if rep.torn_tail { ", torn tail" } else { "" }
+            );
+            for (fp, n) in store.per_fingerprint() {
+                println!("  {n:>6} x {fp}");
+            }
+            if rep.malformed + rep.duplicates + rep.conflicts > 0 || rep.torn_tail {
+                println!("  (run `repro sim-store gc {}` to compact)", path.display());
+            }
+        }
+        "gc" => {
+            let mut store = SimStore::open(path)?;
+            let before = store.len();
+            let dropped = store.gc()?;
+            println!(
+                "sim store {}: kept {} row(s), dropped {} line(s)",
+                path.display(),
+                before,
+                dropped
+            );
+        }
+        "export" => {
+            let csv = SimStore::open(path)?.export_csv();
+            match args.get("--out") {
+                Some(out) => {
+                    report::write_file(Path::new(out), &csv)
+                        .map_err(|e| Error::io(format!("write {out}"), e))?;
+                    println!("wrote {out}");
+                }
+                None => print!("{csv}"),
+            }
+        }
+        other => {
+            return Err(Error::config(format!(
+                "unknown sim-store verb {other:?} (stat|gc|export)"
+            )))
+        }
+    }
+    Ok(())
+}
+
 fn cmd_sweep(rest: &[String]) -> Result<()> {
     let args = parse_args(rest, &["--config", "--out"], &[])?;
     let cfg_path = args
@@ -846,10 +979,11 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
             let t0 = std::time::Instant::now();
             let outcome = campaign.run()?;
             eprintln!(
-                "fig4 campaign: {} benchmark(s), {} points ({} simulated, {} restored) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
+                "fig4 campaign: {} benchmark(s), {} points ({} simulated, {} memoized, {} restored) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
                 outcome.explorations().len(),
                 outcome.total_points(),
                 outcome.simulated,
+                outcome.memoized,
                 outcome.resumed,
                 t0.elapsed(),
                 outcome.backend_label(),
@@ -880,9 +1014,10 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
             let t0 = std::time::Instant::now();
             let outcome = campaign.run()?;
             eprintln!(
-                "fig5 campaign: {} points ({} simulated, {} restored) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
+                "fig5 campaign: {} points ({} simulated, {} memoized, {} restored) in {:.2?} (cost backend {}, {} cost batch(es), {} hit(s))",
                 outcome.total_points(),
                 outcome.simulated,
+                outcome.memoized,
                 outcome.resumed,
                 t0.elapsed(),
                 outcome.backend_label(),
@@ -974,6 +1109,13 @@ fn cmd_synth_table() -> Result<()> {
 ///    sequential per-benchmark `Explorer` runs and as one `Campaign`
 ///    (shared coordinator on both sides), and write suite points/sec +
 ///    campaign-vs-sequential speedup to `BENCH_campaign.json`.
+/// 4. **simstore** — seed a simulation store once (untimed), then time
+///    the same two-benchmark campaign cold (`sim_memo` off: every point
+///    through the scheduler) against warm (fresh coordinator per
+///    iteration, so every hit is an honest store hit including the
+///    JSONL parse). Asserts the warm side simulates zero points and
+///    writes warm-vs-cold speedup to `BENCH_simstore.json`
+///    (`bench_simstore/v1`, gated by `--min-warm-speedup`).
 ///
 /// `--repeats N` runs every timed side N times and reports the median
 /// of the per-run medians, so one noisy run cannot flip a CI gate; each
@@ -987,17 +1129,20 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
             "--out",
             "--campaign-out",
             "--batch-out",
+            "--simstore-out",
             "--iters",
             "--repeats",
             "--min-speedup",
             "--min-campaign-speedup",
             "--min-batch-speedup",
+            "--min-warm-speedup",
         ],
         &[],
     )?;
     let out_path = args.get("--out").unwrap_or("BENCH_sweep.json").to_string();
     let campaign_out = args.get("--campaign-out").unwrap_or("BENCH_campaign.json").to_string();
     let batch_out = args.get("--batch-out").unwrap_or("BENCH_batch.json").to_string();
+    let simstore_out = args.get("--simstore-out").unwrap_or("BENCH_simstore.json").to_string();
     let iters = args.u32_or("--iters", 7)? as usize;
     // De-flake knob: each section's timed pair runs `repeats` times and
     // the reported statistic is the median over per-run medians.
@@ -1024,6 +1169,10 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     // ratio — with the v2 event-wheel kernel on wide default-model
     // groups, CI ratchets this to 1.5x.
     let min_batch_speedup = args.f64_or("--min-batch-speedup", 0.0)?;
+    // Gate for the warm-vs-cold sim-store section (0 = report only):
+    // the warm side skips simulation entirely, so the ratio tracks
+    // store probe + parse overhead against real scheduler work.
+    let min_warm_speedup = args.f64_or("--min-warm-speedup", 0.0)?;
     let sweep = Sweep::quick();
     let mut rows = Vec::new();
     let mut worst = f64::INFINITY;
@@ -1274,6 +1423,97 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
         .map_err(|e| Error::io(format!("write {campaign_out}"), e))?;
     println!("wrote {campaign_out}");
 
+    // --- sim store: warm campaign vs cold re-simulation ---------------
+    // Same two-benchmark spec on both sides, no sink. The store is
+    // seeded once, untimed; the cold side disables the sim stack
+    // (`sim_memo: false`) so every point goes through the scheduler,
+    // and the warm side opens a fresh coordinator per iteration so the
+    // in-process memo tier starts empty — every hit is an honest store
+    // hit, JSONL parse included. The warm side must simulate zero
+    // points: that is the store's contract, so it is asserted here,
+    // not just reported.
+    let sdir = std::env::temp_dir().join("amm_dse_perf_simstore");
+    let _ = std::fs::remove_dir_all(&sdir);
+    std::fs::create_dir_all(&sdir)
+        .map_err(|e| Error::io(format!("create {}", sdir.display()), e))?;
+    let store_path = sdir.join("sim.jsonl");
+    let sspec = Campaign::new()
+        .benchmark("gemm")
+        .benchmark("fft")
+        .scale(Scale::Tiny)
+        .sweep(sweep.clone())
+        .threads(1)
+        .sim_store(&store_path)
+        .into_spec();
+    let sim_points = (sweep.points().len() * 2) as u64;
+    let cold_opts = campaign::ExecOptions { sim_memo: false, ..Default::default() };
+    let warm_opts = campaign::ExecOptions::default();
+    let seed_coord = amm_dse::coordinator::Coordinator::new();
+    let seeded = campaign::run_with(&sspec, &seed_coord, &warm_opts)?;
+    drop(seed_coord);
+    if seeded.simulated as u64 != sim_points {
+        return Err(Error::msg(format!(
+            "perf-smoke: seed campaign simulated {} of {sim_points} point(s) against an empty store",
+            seeded.simulated
+        )));
+    }
+    let siters = iters.clamp(1, 5);
+    let mut sbench = Bench::new(siters, 1);
+    let mut warm_simulated = usize::MAX;
+    let mut warm_memoized = 0usize;
+    for _ in 0..repeats {
+        sbench.run("simstore/pair/cold", Some(sim_points), || {
+            let coord = amm_dse::coordinator::Coordinator::new();
+            let o = campaign::run_with(&sspec, &coord, &cold_opts).expect("cold campaign");
+            o.total_points() as u64
+        });
+        sbench.run("simstore/pair/warm", Some(sim_points), || {
+            let coord = amm_dse::coordinator::Coordinator::new();
+            let o = campaign::run_with(&sspec, &coord, &warm_opts).expect("warm campaign");
+            warm_simulated = o.simulated;
+            warm_memoized = o.memoized;
+            o.total_points() as u64
+        });
+    }
+    let cold_ns = benchkit::median_median_ns(sbench.results(), "simstore/pair/cold");
+    let warm_ns = benchkit::median_median_ns(sbench.results(), "simstore/pair/warm");
+    let warm_speedup = cold_ns / warm_ns;
+    let spps = |ns: f64| sim_points as f64 / (ns / 1e9);
+    println!(
+        "perf-smoke simstore: warm campaign {warm_speedup:.2}x vs cold ({warm_memoized} memoized, {warm_simulated} simulated)"
+    );
+    if warm_simulated != 0 {
+        return Err(Error::msg(format!(
+            "perf-smoke: warm campaign simulated {warm_simulated} point(s); the sim store must satisfy all of them"
+        )));
+    }
+    let sjson = format!(
+        concat!(
+            "{{\n  \"schema\": \"bench_simstore/v1\",\n  \"sweep\": \"quick\",\n",
+            "  \"scale\": \"tiny\",\n  \"benchmarks\": 2,\n  \"threads\": 1,\n",
+            "  \"iters\": {},\n  \"repeats\": {},\n  \"host\": {},\n  \"points\": {},\n",
+            "  \"warm_memoized\": {},\n  \"warm_simulated\": {},\n",
+            "  \"cold_wall_ms\": {:.4},\n  \"warm_wall_ms\": {:.4},\n",
+            "  \"cold_points_per_s\": {:.1},\n  \"warm_points_per_s\": {:.1},\n",
+            "  \"speedup\": {:.3}\n}}\n"
+        ),
+        siters,
+        repeats,
+        host_json,
+        sim_points,
+        warm_memoized,
+        warm_simulated,
+        cold_ns / 1e6,
+        warm_ns / 1e6,
+        spps(cold_ns),
+        spps(warm_ns),
+        warm_speedup,
+    );
+    report::write_file(Path::new(&simstore_out), &sjson)
+        .map_err(|e| Error::io(format!("write {simstore_out}"), e))?;
+    println!("wrote {simstore_out}");
+    let _ = std::fs::remove_dir_all(&sdir);
+
     if min_speedup > 0.0 && worst < min_speedup {
         return Err(Error::msg(format!(
             "perf-smoke: worst engine speedup {worst:.3}x is below the required {min_speedup}x"
@@ -1287,6 +1527,11 @@ fn cmd_perf_smoke(rest: &[String]) -> Result<()> {
     if min_campaign_speedup > 0.0 && campaign_speedup < min_campaign_speedup {
         return Err(Error::msg(format!(
             "perf-smoke: campaign speedup {campaign_speedup:.3}x is below the required {min_campaign_speedup}x"
+        )));
+    }
+    if min_warm_speedup > 0.0 && warm_speedup < min_warm_speedup {
+        return Err(Error::msg(format!(
+            "perf-smoke: warm sim-store speedup {warm_speedup:.3}x is below the required {min_warm_speedup}x"
         )));
     }
     Ok(())

@@ -32,7 +32,16 @@ use super::{footprint_depth, fu_area, promoted_arrays, promoted_reg_area, Knobs,
 use super::{BASE_PERIOD_NS, FU_LEAK_UW_PER_UM2, REG_ACCESS_PJ};
 use crate::mem::{MemDesign, PortModel};
 use crate::trace::{OpKind, Trace};
+use crate::util::hash::{fnv1a, FNV_OFFSET};
 use std::cmp::Reverse;
+
+/// Semantic version of the scheduling engine. Folded into every
+/// [`crate::sim::Key`], so persisted simulation rows from an older
+/// kernel are quarantined rather than replayed: **bump this on any
+/// change that can alter a [`SimOutput`]** (issue rules, port
+/// arbitration, energy/area composition, trace compilation). Currently
+/// 2: the event-wheel lane-batched kernel (PR 8).
+pub const ENGINE_VERSION: u32 = 2;
 
 /// Which issue resource a node consumes (register promotion folded in;
 /// the banked-vs-true-port split stays design-dependent and is resolved
@@ -199,6 +208,47 @@ pub struct CompiledTrace<'t> {
     pub(super) reg_area_um2: f32,
     /// Op-mix-blended FU area per ALU issue slot, µm².
     pub(super) fu_blend: f32,
+    /// FNV-1a content hash of the underlying trace (arrays, node
+    /// stream, dependence edges) — the trace half of a simulation
+    /// memoization key ([`crate::sim::Key`]).
+    pub(super) trace_hash: u64,
+}
+
+/// FNV-1a over everything that makes two traces schedule identically:
+/// the array table (name, element size, length, base address), the
+/// node stream (op tag, operands, site, iteration) and the CSR
+/// dependence edges. Word size is *not* folded in — it is a separate
+/// key axis — so all word-size compilations of one trace share a hash.
+fn trace_content_hash(trace: &Trace) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, &(trace.arrays.len() as u64).to_le_bytes());
+    for a in &trace.arrays {
+        h = fnv1a(h, a.name.as_bytes());
+        h = fnv1a(h, &[0u8]);
+        h = fnv1a(h, &a.elem_bytes.to_le_bytes());
+        h = fnv1a(h, &a.length.to_le_bytes());
+        h = fnv1a(h, &a.base.to_le_bytes());
+    }
+    for nd in &trace.nodes {
+        let (tag, a, i) = match nd.kind {
+            OpKind::Load { array, index } => (0u8, u32::from(array), index),
+            OpKind::Store { array, index } => (1u8, u32::from(array), index),
+            OpKind::Alu(k) => (2u8, k.index() as u32, 0),
+        };
+        let mut buf = [0u8; 17];
+        buf[0] = tag;
+        buf[1..5].copy_from_slice(&a.to_le_bytes());
+        buf[5..9].copy_from_slice(&i.to_le_bytes());
+        buf[9..13].copy_from_slice(&nd.site.to_le_bytes());
+        buf[13..17].copy_from_slice(&nd.iter.to_le_bytes());
+        h = fnv1a(h, &buf);
+    }
+    for &off in &trace.succ_off {
+        h = fnv1a(h, &off.to_le_bytes());
+    }
+    for &s in &trace.succ {
+        h = fnv1a(h, &s.to_le_bytes());
+    }
+    h
 }
 
 impl<'t> CompiledTrace<'t> {
@@ -255,6 +305,7 @@ impl<'t> CompiledTrace<'t> {
             depth: footprint_depth(trace, word_bytes),
             reg_area_um2: promoted_reg_area(trace),
             fu_blend: fu_area(trace, 1),
+            trace_hash: trace_content_hash(trace),
         }
     }
 
@@ -281,6 +332,13 @@ impl<'t> CompiledTrace<'t> {
     /// FU area for `alus` issue slots, µm² (op-mix blend precomputed).
     pub fn fu_area(&self, alus: u32) -> f32 {
         self.fu_blend * alus as f32
+    }
+
+    /// FNV-1a content hash of the underlying trace — stable across
+    /// processes and hosts, so it can key persisted simulation rows
+    /// ([`crate::sim::Key`]).
+    pub fn content_hash(&self) -> u64 {
+        self.trace_hash
     }
 
     /// Try to issue the sub-word accesses of one memory op under `cfg`'s

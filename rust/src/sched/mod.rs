@@ -53,7 +53,7 @@ pub use arena::SimArena;
 pub use batch::BatchArena;
 #[doc(hidden)]
 pub use batch::readyq_heap_pop_orders;
-pub use compile::CompiledTrace;
+pub use compile::{CompiledTrace, ENGINE_VERSION};
 
 use crate::mem::{MemDesign, MemKind, MemModel};
 use crate::trace::Trace;

@@ -6,8 +6,10 @@
 //! history sidecars). Jobs are queued FIFO onto a fixed worker fleet
 //! that executes through one shared [`Coordinator`], so every job in
 //! the daemon's lifetime shares one cost service, one in-process macro
-//! memo, and one persistent cost store under the data dir — a warm
-//! re-submission of a spec scores with **0 backend batches**.
+//! memo, one persistent cost store, and one persistent simulation
+//! store under the data dir — a warm re-submission of a spec scores
+//! with **0 backend batches** and simulates **0 points** (the whole
+//! run answers from the shared [`crate::sim::SimStack`]).
 //!
 //! On restart the registry rescans the campaign directories: completed
 //! jobs stay queryable (Pareto endpoint), interrupted ones surface as
@@ -63,6 +65,9 @@ pub struct JobOutcome {
     pub points: usize,
     /// Points simulated fresh by this run.
     pub simulated: usize,
+    /// Points answered by the shared simulation stack (memo or
+    /// persistent sim store) instead of the scheduler.
+    pub memoized: usize,
     /// Points restored from the sink.
     pub resumed: usize,
     /// Runtime-backend batches issued (0 = fully warm).
@@ -78,6 +83,7 @@ impl JobOutcome {
         JobOutcome {
             points: o.total_points(),
             simulated: o.simulated,
+            memoized: o.memoized,
             resumed: o.resumed,
             cost_batches: o.cost_batches,
             cost_hits: o.cost.hits(),
@@ -128,6 +134,7 @@ struct Inner {
 pub struct JobQueue {
     root: PathBuf,
     shared_store: PathBuf,
+    shared_sim_store: PathBuf,
     shared_weights: PathBuf,
     inner: Mutex<Inner>,
     ready: Condvar,
@@ -144,6 +151,7 @@ impl JobQueue {
         let q = JobQueue {
             root: root.clone(),
             shared_store: data_dir.join("cost-store.jsonl"),
+            shared_sim_store: data_dir.join("sim-store.jsonl"),
             shared_weights: data_dir.join("weights.jsonl"),
             inner: Mutex::new(Inner { jobs: Vec::new(), queue: VecDeque::new(), next_id: 1 }),
             ready: Condvar::new(),
@@ -156,6 +164,11 @@ impl JobQueue {
     /// Path of the cost store every job shares.
     pub fn shared_store(&self) -> &Path {
         &self.shared_store
+    }
+
+    /// Path of the simulation store every job shares.
+    pub fn shared_sim_store(&self) -> &Path {
+        &self.shared_sim_store
     }
 
     /// Path of the trace-weight table every job shares.
@@ -211,8 +224,8 @@ impl JobQueue {
     }
 
     /// Accept a validated spec: assign an id, pin its sink / cost store
-    /// / weight table under the data dir, persist the canonical spec,
-    /// and queue it for the worker fleet.
+    /// / sim store / weight table under the data dir, persist the
+    /// canonical spec, and queue it for the worker fleet.
     pub fn submit(&self, mut spec: CampaignSpec) -> Result<JobView> {
         spec.validate()?;
         let mut inner = self.inner.lock().expect("job registry poisoned");
@@ -223,6 +236,7 @@ impl JobQueue {
             .map_err(|e| Error::io(format!("create {}", dir.display()), e))?;
         spec.sink = Some(dir.join("results.jsonl"));
         spec.cost_store = Some(self.shared_store.clone());
+        spec.sim_store = Some(self.shared_sim_store.clone());
         if spec.weights.is_none() {
             spec.weights = Some(self.shared_weights.clone());
         }
@@ -386,6 +400,7 @@ mod tests {
         assert_eq!(view.state, JobState::Queued);
         assert_eq!(view.spec.sink.as_deref(), Some(view.sink.as_path()));
         assert_eq!(view.spec.cost_store.as_deref(), Some(q.shared_store()));
+        assert_eq!(view.spec.sim_store.as_deref(), Some(q.shared_sim_store()));
         assert_eq!(view.spec.weights.as_deref(), Some(q.shared_weights()));
         let persisted = CampaignSpec::load(&view.dir.join("spec.toml")).unwrap();
         assert_eq!(persisted, view.spec, "spec.toml round-trips the executed spec");

@@ -2,8 +2,9 @@
 //! campaign engine (`repro serve`).
 //!
 //! One process owns one data directory, one [`Coordinator`] (so every
-//! job shares the memo → store → backend cost stack and a warm
-//! re-submission reaches the backend zero times), and one persistent
+//! job shares the memo → store → backend cost stack *and* the sim
+//! memo → sim store tiers — a warm re-submission reaches the backend
+//! zero times and simulates zero points), and one persistent
 //! [`jobs::JobQueue`] worker fleet. Campaign specs arrive as the same
 //! TOML `repro run --spec` takes; results, status sidecars and the
 //! shared cost store are plain files under the data dir, served
@@ -12,6 +13,7 @@
 //! ```text
 //! <data-dir>/
 //!   cost-store.jsonl            shared macro-cost store (cost-store/v1)
+//!   sim-store.jsonl             shared simulation store (sim-store/v1)
 //!   weights.jsonl               trace weight table (weight-table/v1)
 //!   campaigns/c0001/spec.toml   pinned spec (campaign-spec/v1)
 //!   campaigns/c0001/results.jsonl                 sink (campaign/v1)
@@ -58,7 +60,7 @@ pub struct ServeOptions {
     pub addr: String,
     /// Campaign worker threads (jobs run concurrently, ≥ 1).
     pub workers: usize,
-    /// Root for job dirs, the shared cost store and weight table.
+    /// Root for job dirs, the shared cost/sim stores and weight table.
     pub data_dir: PathBuf,
     /// Backend artifacts dir override (None: `AMM_DSE_ARTIFACTS` or
     /// the baked-in default, falling back to the Rust model).

@@ -312,10 +312,16 @@ fn job_json(view: &JobView) -> String {
     if let Some(o) = &view.outcome {
         s.push_str(&format!(
             concat!(
-                ",\"points\":{},\"simulated\":{},\"resumed\":{},",
+                ",\"points\":{},\"simulated\":{},\"memoized\":{},\"resumed\":{},",
                 "\"cost_batches\":{},\"cost_hits\":{},\"cost_misses\":{}"
             ),
-            o.points, o.simulated, o.resumed, o.cost_batches, o.cost_hits, o.cost_misses
+            o.points,
+            o.simulated,
+            o.memoized,
+            o.resumed,
+            o.cost_batches,
+            o.cost_hits,
+            o.cost_misses
         ));
     }
     s.push('}');

@@ -1,0 +1,137 @@
+//! Canonical simulation-result keys.
+//!
+//! A persisted simulation row is only reusable when *everything* the
+//! scheduler consumed matches:
+//!
+//! * the **trace** — content hash + node count of the compiled trace
+//!   ([`crate::sched::CompiledTrace::content_hash`]), so two benchmarks
+//!   (or two scales, or two `synth:` dial settings) can never satisfy
+//!   each other;
+//! * the **knobs** — unroll / word size / ALU count, exactly the
+//!   [`crate::sched::Knobs`] the engine schedules under;
+//! * the **design** — the memory organization's registry id (port
+//!   model, banking, AMM family) plus the scoring-context
+//!   *fingerprint* the design's cost numbers came from (see
+//!   [`crate::cost::key`]): a [`SimOutput`](crate::sched::SimOutput)
+//!   folds cost-patched fields (`period_ns`, energies, areas) into
+//!   every row, so rows scored under the stub mirror and rows scored
+//!   under the PJRT artifact must never cross-resolve;
+//! * the **engine** — [`crate::sched::ENGINE_VERSION`], bumped on any
+//!   semantic kernel change, so a fixed or re-modeled scheduler starts
+//!   cold instead of replaying stale results.
+//!
+//! [`key_hash`] combines the fingerprint and the key into the 64-bit
+//! FNV-1a id each `sim-store/v1` row carries; the store recomputes it
+//! on load, so corrupted or hand-edited rows are dropped, not served.
+
+use crate::mem::MemDesign;
+use crate::sched::{CompiledTrace, Knobs, ENGINE_VERSION};
+use crate::util::hash::{fnv1a, FNV_OFFSET};
+
+/// The canonical simulation key: everything one scheduler run depends
+/// on besides the scoring-context fingerprint (kept separate, like the
+/// cost store's, so one file can hold rows from several contexts).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Key {
+    /// Content hash of the compiled trace (arrays + node stream).
+    pub trace_hash: u64,
+    /// Node count of the compiled trace (cheap mismatch tripwire).
+    pub nodes: u64,
+    /// Unroll factor.
+    pub unroll: u32,
+    /// Scratchpad word size, bytes.
+    pub word_bytes: u32,
+    /// ALU issue slots.
+    pub alus: u32,
+    /// Memory-design registry id (e.g. `xor4r2w`).
+    pub mem: String,
+    /// [`ENGINE_VERSION`] the row was simulated under.
+    pub engine: u32,
+}
+
+impl Key {
+    /// The key of one work unit: a compiled trace, the knobs it will be
+    /// scheduled under, and the (cost-patched) design. The single home
+    /// of this projection — campaign probe and record both call it.
+    pub fn of(compiled: &CompiledTrace<'_>, knobs: &Knobs, design: &MemDesign) -> Key {
+        Key {
+            trace_hash: compiled.content_hash(),
+            nodes: compiled.trace().len() as u64,
+            unroll: knobs.unroll,
+            word_bytes: knobs.word_bytes,
+            alus: knobs.alus,
+            mem: design.id.clone(),
+            engine: ENGINE_VERSION,
+        }
+    }
+}
+
+/// Stable 64-bit id of one `(fingerprint, key)` pair: FNV-1a over the
+/// fingerprint bytes, a NUL, the mem id bytes, a NUL, then the numeric
+/// fields as little-endian words. Part of the `sim-store/v1` on-disk
+/// contract — change it and every existing store reads as corrupt.
+pub fn key_hash(fingerprint: &str, key: &Key) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, fingerprint.as_bytes());
+    h = fnv1a(h, &[0u8]);
+    h = fnv1a(h, key.mem.as_bytes());
+    h = fnv1a(h, &[0u8]);
+    h = fnv1a(h, &key.trace_hash.to_le_bytes());
+    h = fnv1a(h, &key.nodes.to_le_bytes());
+    for field in [key.unroll, key.word_bytes, key.alus, key.engine] {
+        h = fnv1a(h, &field.to_le_bytes());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Key {
+        Key {
+            trace_hash: 0xdead_beef_cafe_f00d,
+            nodes: 4096,
+            unroll: 8,
+            word_bytes: 8,
+            alus: 4,
+            mem: "xor4r2w".into(),
+            engine: ENGINE_VERSION,
+        }
+    }
+
+    #[test]
+    fn key_hash_is_stable_and_separates_every_field() {
+        let k = sample();
+        assert_eq!(key_hash("fp", &k), key_hash("fp", &k), "deterministic");
+        assert_ne!(key_hash("fp", &k), key_hash("other", &k), "fingerprint matters");
+        for tweak in [
+            Key { trace_hash: k.trace_hash ^ 1, ..k.clone() },
+            Key { nodes: k.nodes + 1, ..k.clone() },
+            Key { unroll: k.unroll + 1, ..k.clone() },
+            Key { word_bytes: k.word_bytes * 2, ..k.clone() },
+            Key { alus: k.alus + 1, ..k.clone() },
+            Key { mem: "lvt4r2w".into(), ..k.clone() },
+            Key { engine: k.engine + 1, ..k.clone() },
+        ] {
+            assert_ne!(key_hash("fp", &k), key_hash("fp", &tweak), "{tweak:?}");
+        }
+        // NUL separators keep variable-length prefixes unambiguous
+        let a = Key { mem: "ab".into(), ..k.clone() };
+        let b = Key { mem: "a".into(), ..k };
+        assert_ne!(key_hash("x", &a), key_hash("xb", &b));
+    }
+
+    #[test]
+    fn key_of_projects_the_unit() {
+        let wl = crate::suite::generate("stencil2d", crate::suite::Scale::Tiny);
+        let compiled = CompiledTrace::new(&wl.trace, 8);
+        let knobs = Knobs { unroll: 4, word_bytes: 8, alus: 2 };
+        let design = crate::mem::MemKind::Banked { banks: 4 }.build(compiled.depth(), 64);
+        let key = Key::of(&compiled, &knobs, &design);
+        assert_eq!(key.trace_hash, compiled.content_hash());
+        assert_eq!(key.nodes, wl.trace.len() as u64);
+        assert_eq!((key.unroll, key.word_bytes, key.alus), (4, 8, 2));
+        assert_eq!(key.mem, design.id);
+        assert_eq!(key.engine, ENGINE_VERSION);
+    }
+}

@@ -1,0 +1,377 @@
+//! Tiered simulation-result subsystem.
+//!
+//! A campaign's hot path is the cycle-accurate scheduler itself: the
+//! cost stack ([`crate::cost`]) already makes warm re-runs issue zero
+//! backend *cost* batches, but every design point was still
+//! re-*simulated* unless the exact same sink was resumed. Simulation is
+//! deterministic for a given [`Key`] (trace content + knobs + design +
+//! engine version) within one scoring context, so — like macro costs —
+//! results are treated as **artifacts**. Every work unit flows through
+//! one [`SimStack`] of three tiers, each a cheaper cache in front of
+//! the next:
+//!
+//! 1. **memo** — an in-process map; repeated dispatch inside one
+//!    process (serve jobs sharing a coordinator, sequential campaigns,
+//!    perf probes) never re-schedules a unit it has already seen;
+//! 2. **store** — the persistent on-disk [`SimStore`] (`sim-store/v1`
+//!    append-only JSONL, see [`store`]): a campaign opens it next to
+//!    its sink and flushes newly simulated rows after each worker
+//!    chunk, so a *new process* — a fresh sink, another shard host, a
+//!    superset sweep — starts warm and re-simulates only the delta.
+//!    Rows are keyed by a stable hash of the canonical [`Key`] plus
+//!    the scoring-context **fingerprint** (see [`key`]), so stub- and
+//!    pjrt-costed results can never cross-contaminate, and
+//!    [`crate::sched::ENGINE_VERSION`] quarantines rows from older
+//!    kernels;
+//! 3. **simulate** — the campaign's lane-batched kernel itself. Only
+//!    misses are re-packed into lane groups and scheduled; hits flow
+//!    straight to the sink writer.
+//!
+//! Unlike the cost stack, the compute tier is *not* inside the stack:
+//! the campaign owns lane packing and the worker pool, so [`SimStack`]
+//! exposes probe/record halves ([`SimStack::probe`] /
+//! [`SimStack::record_all`]) instead of a provider trait.
+//! [`SimCounters`] exposes hit/miss accounting — the campaign reports
+//! it (`memoized` in the summary, sidecar and outcome) and tests pin
+//! the "warm run simulates zero points" contract.
+
+pub mod key;
+pub mod store;
+
+pub use key::{key_hash, Key};
+pub use store::SimStore;
+
+use crate::error::Result;
+use crate::sched::SimOutput;
+use crate::util::log;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Snapshot of a [`SimStack`]'s accounting. Campaigns diff two
+/// snapshots ([`SimCounters::since`]) to report their own share of a
+/// long-lived coordinator's traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimCounters {
+    /// Units answered by the in-process memo tier.
+    pub memo_hits: usize,
+    /// Units answered by the persistent store tier.
+    pub store_hits: usize,
+    /// Units that had to be simulated.
+    pub misses: usize,
+}
+
+impl SimCounters {
+    /// Total cache hits (memo + store) — the campaign's `memoized`.
+    pub fn hits(&self) -> usize {
+        self.memo_hits + self.store_hits
+    }
+
+    /// The delta between this snapshot and an earlier one.
+    pub fn since(&self, earlier: &SimCounters) -> SimCounters {
+        SimCounters {
+            memo_hits: self.memo_hits.saturating_sub(earlier.memo_hits),
+            store_hits: self.store_hits.saturating_sub(earlier.store_hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+        }
+    }
+}
+
+/// The memo + store tiers in front of the campaign's batch kernel (see
+/// the module docs). Interior-mutable so a shared `&Coordinator` can
+/// probe from many workers and a campaign can attach a store without
+/// exclusive access.
+pub struct SimStack {
+    fingerprint: String,
+    memo: Mutex<HashMap<Key, SimOutput>>,
+    store: Mutex<Option<SimStore>>,
+    memo_hits: AtomicUsize,
+    store_hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl std::fmt::Debug for SimStack {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimStack")
+            .field("fingerprint", &self.fingerprint)
+            .field("counters", &self.counters())
+            .finish()
+    }
+}
+
+impl SimStack {
+    /// A stack persisting under `fingerprint` — the same scoring-context
+    /// fingerprint the cost stack uses, since every [`SimOutput`] folds
+    /// cost-patched numbers in. Starts with an empty memo and no store
+    /// attached.
+    pub fn new(fingerprint: String) -> Self {
+        SimStack {
+            fingerprint,
+            memo: Mutex::new(HashMap::new()),
+            store: Mutex::new(None),
+            memo_hits: AtomicUsize::new(0),
+            store_hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// The scoring-context fingerprint rows are persisted under.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Attach (open or create) the persistent store at `path`. A store
+    /// already open at the same path is kept; a different path replaces
+    /// it (with a warning — one stack persists to one store at a time).
+    pub fn open_store(&self, path: &Path) -> Result<()> {
+        let mut slot = self.store.lock().expect("sim store slot poisoned");
+        if let Some(open) = slot.as_ref() {
+            if open.path() == path {
+                return Ok(());
+            }
+            log::warn(format!(
+                "sim stack: replacing open store {} with {}",
+                open.path().display(),
+                path.display()
+            ));
+        }
+        *slot = Some(SimStore::open(path)?);
+        Ok(())
+    }
+
+    /// Path of the attached store, if any.
+    pub fn store_path(&self) -> Option<PathBuf> {
+        self.store
+            .lock()
+            .expect("sim store slot poisoned")
+            .as_ref()
+            .map(|s| s.path().to_path_buf())
+    }
+
+    /// Hit/miss accounting since construction.
+    pub fn counters(&self) -> SimCounters {
+        SimCounters {
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
+            store_hits: self.store_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Probe the cache tiers for one work unit. `Some` is a memoized
+    /// result (bit-identical to what simulation would produce); `None`
+    /// means the unit must be simulated and later fed back through
+    /// [`SimStack::record_all`]. A memo hit the attached store never
+    /// saw (it may have been attached — or swapped — after the unit was
+    /// simulated) is backfilled, so the store's content does not depend
+    /// on attach order.
+    pub fn probe(&self, key: &Key) -> Option<SimOutput> {
+        // one lock scope per probe, memo before store (every site that
+        // holds both acquires in this order)
+        let mut memo = self.memo.lock().expect("sim memo poisoned");
+        let mut store = self.store.lock().expect("sim store slot poisoned");
+        if let Some(out) = memo.get(key) {
+            let out = out.clone();
+            self.memo_hits.fetch_add(1, Ordering::Relaxed);
+            if let Some(s) = store.as_mut() {
+                if s.get(&self.fingerprint, key).is_none() {
+                    let row = [(key.clone(), out.clone())];
+                    if let Err(e) = s.append(&self.fingerprint, &row) {
+                        log::warn(format!(
+                            "sim store {}: {e} (row stays memoized; persistence skipped)",
+                            s.path().display()
+                        ));
+                    }
+                }
+            }
+            return Some(out);
+        }
+        if let Some(out) = store.as_ref().and_then(|s| s.get(&self.fingerprint, key)) {
+            memo.insert(key.clone(), out.clone());
+            self.store_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(out);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Record freshly simulated units: memoize them and flush the
+    /// genuinely new ones to the attached store in one buffered append.
+    /// Workers call this per chunk, so a killed campaign still warms
+    /// the next one — but persistence is a cache, not a result: an
+    /// unwritable store must not fail a fully simulated campaign.
+    pub fn record_all(&self, fresh: &[(Key, SimOutput)]) {
+        if fresh.is_empty() {
+            return;
+        }
+        let mut persist: Vec<(Key, SimOutput)> = Vec::new();
+        {
+            let mut memo = self.memo.lock().expect("sim memo poisoned");
+            for (key, out) in fresh {
+                // a unit recorded twice (lane-group overlap) persists once
+                if memo.insert(key.clone(), out.clone()).is_none() {
+                    persist.push((key.clone(), out.clone()));
+                }
+            }
+        }
+        if persist.is_empty() {
+            return;
+        }
+        let mut store = self.store.lock().expect("sim store slot poisoned");
+        if let Some(s) = store.as_mut() {
+            if let Err(e) = s.append(&self.fingerprint, &persist) {
+                log::warn(format!(
+                    "sim store {}: {e} (rows stay memoized; persistence skipped)",
+                    s.path().display()
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ENGINE_VERSION;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("amm_dse_sim_stack_unit");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(name);
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    fn keys() -> Vec<Key> {
+        ["bank4", "xor4r2w", "mp2x"]
+            .iter()
+            .map(|mem| Key {
+                trace_hash: 0xfeed_f00d,
+                nodes: 128,
+                unroll: 4,
+                word_bytes: 8,
+                alus: 4,
+                mem: (*mem).into(),
+                engine: ENGINE_VERSION,
+            })
+            .collect()
+    }
+
+    fn out_for(k: &Key) -> SimOutput {
+        SimOutput {
+            cycles: 1000 + k.mem.len() as u64,
+            period_ns: 1.25,
+            time_ns: 1250.0,
+            ..SimOutput::default()
+        }
+    }
+
+    fn simulate_all(stack: &SimStack, keys: &[Key]) -> Vec<SimOutput> {
+        // the campaign's probe → simulate-misses → record loop in
+        // miniature
+        let mut outs: Vec<Option<SimOutput>> = keys.iter().map(|k| stack.probe(k)).collect();
+        let fresh: Vec<(Key, SimOutput)> = keys
+            .iter()
+            .zip(&outs)
+            .filter(|(_, o)| o.is_none())
+            .map(|(k, _)| (k.clone(), out_for(k)))
+            .collect();
+        stack.record_all(&fresh);
+        for (k, slot) in keys.iter().zip(outs.iter_mut()) {
+            if slot.is_none() {
+                *slot = Some(out_for(k));
+            }
+        }
+        outs.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    #[test]
+    fn memo_tier_absorbs_repeat_probes() {
+        let stack = SimStack::new("fp-test".into());
+        let ks = keys();
+        let first = simulate_all(&stack, &ks);
+        let second = simulate_all(&stack, &ks);
+        assert_eq!(first, second);
+        let c = stack.counters();
+        assert_eq!((c.memo_hits, c.store_hits, c.misses), (3, 0, 3));
+        assert_eq!(c.hits(), 3);
+    }
+
+    #[test]
+    fn store_tier_warms_a_fresh_stack_to_zero_misses() {
+        let path = tmp("warm.jsonl");
+        let ks = keys();
+        let cold = SimStack::new("fp-test".into());
+        cold.open_store(&path).unwrap();
+        let cold_outs = simulate_all(&cold, &ks);
+        assert_eq!(cold.counters().misses, 3);
+
+        // a fresh stack (new process) over the same store: zero misses
+        let warm = SimStack::new("fp-test".into());
+        warm.open_store(&path).unwrap();
+        let warm_outs = simulate_all(&warm, &ks);
+        let c = warm.counters();
+        assert_eq!(c.misses, 0, "a warm store must absorb every probe");
+        assert_eq!(c.store_hits, 3);
+        assert_eq!(cold_outs, warm_outs, "stored rows must be bit-exact");
+    }
+
+    #[test]
+    fn fingerprints_keep_scoring_contexts_cold_for_each_other() {
+        let path = tmp("fp_cold.jsonl");
+        let ks = keys();
+        let a = SimStack::new("fp-a".into());
+        a.open_store(&path).unwrap();
+        simulate_all(&a, &ks);
+        // same store, different fingerprint: everything misses
+        let b = SimStack::new("fp-b".into());
+        b.open_store(&path).unwrap();
+        simulate_all(&b, &ks);
+        assert_eq!(b.counters().misses, 3, "foreign-fingerprint rows must not satisfy");
+        assert_eq!(b.counters().store_hits, 0);
+    }
+
+    #[test]
+    fn memo_hits_backfill_a_store_attached_after_recording() {
+        let path = tmp("backfill.jsonl");
+        let ks = keys();
+        let stack = SimStack::new("fp-test".into());
+        simulate_all(&stack, &ks);
+        assert_eq!(stack.counters().misses, 3);
+        stack.open_store(&path).unwrap();
+        simulate_all(&stack, &ks);
+        assert_eq!(stack.counters().misses, 3, "memo still absorbs the repeat");
+        // a fresh stack over the backfilled store is fully warm
+        let fresh = SimStack::new("fp-test".into());
+        fresh.open_store(&path).unwrap();
+        simulate_all(&fresh, &ks);
+        assert_eq!(fresh.counters().misses, 0, "backfilled store must warm a new process");
+        assert_eq!(fresh.counters().store_hits, 3);
+    }
+
+    #[test]
+    fn counters_diff_with_since() {
+        let stack = SimStack::new("fp".into());
+        let ks = keys();
+        simulate_all(&stack, &ks);
+        let mid = stack.counters();
+        simulate_all(&stack, &ks);
+        let delta = stack.counters().since(&mid);
+        assert_eq!(delta.misses, 0);
+        assert_eq!(delta.memo_hits, 3);
+        assert_eq!(delta.hits(), 3);
+    }
+
+    #[test]
+    fn open_store_is_idempotent_per_path() {
+        let path = tmp("idem.jsonl");
+        let stack = SimStack::new("fp".into());
+        stack.open_store(&path).unwrap();
+        simulate_all(&stack, &keys());
+        // reopening the same path must keep the loaded/written rows
+        stack.open_store(&path).unwrap();
+        simulate_all(&stack, &keys());
+        assert_eq!(stack.counters().misses, 3);
+        assert_eq!(stack.store_path().as_deref(), Some(path.as_path()));
+    }
+}

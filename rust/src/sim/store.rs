@@ -1,0 +1,617 @@
+//! The persistent simulation-result store: `sim-store/v1` append-only
+//! JSONL.
+//!
+//! Scheduling is deterministic for a given [`super::Key`] within one
+//! scoring context, so a simulation result is an **artifact**, not a
+//! per-run side effect: one flat JSON object per line, one line per
+//! simulated `(fingerprint, key)` pair. A store written by one campaign
+//! warms every later campaign, shard host, serve job or superset sweep
+//! that shares it — the miss path (the batch kernel itself) is only
+//! paid once per design point per engine version, ever.
+//!
+//! Properties, mirroring the cost store and the campaign result sink:
+//!
+//! * **self-contained rows** — every line carries the fingerprint, the
+//!   explicit key fields and the eleven [`SimOutput`] numbers, plus the
+//!   [`super::key::key_hash`] id recomputed on load, so corrupt or
+//!   hand-edited rows are detected and skipped rather than served;
+//! * **bit-exact round trip** — floats use Rust's shortest round-trip
+//!   formatting, so a warm run restores the *identical* bits a cold run
+//!   computed (the half-warm fig5/sink byte-equality golden depends on
+//!   this);
+//! * **kill-safe appends** — rows are appended in one buffered write
+//!   and flushed per chunk; a torn (newline-less) tail left by a kill
+//!   is detected on open and terminated before the next append;
+//! * **first record wins** — duplicate keys collapse, conflicting
+//!   payloads keep the first and are counted; [`SimStore::gc`]
+//!   compacts the file (drops malformed/duplicate/conflicting lines)
+//!   with an atomic tmp-file + rename rewrite.
+//!
+//! Rows simulated under different scoring contexts coexist in one file
+//! (a fleet can share a single store across stub and pjrt hosts);
+//! lookups are always fingerprint-filtered, and [`super::Key::engine`]
+//! quarantines rows from older kernels inside a context.
+
+use super::key::{key_hash, Key};
+use crate::error::{Error, Result};
+use crate::sched::SimOutput;
+use crate::util::jsonl::{field, path_with_suffix};
+use crate::util::log;
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Schema tag carried by every row.
+pub const SCHEMA: &str = "sim-store/v1";
+
+/// Accounting from opening (or gc-ing) a store file.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoadReport {
+    /// Parseable, hash-valid rows read.
+    pub records: usize,
+    /// Lines that failed to parse or failed the key-hash check.
+    pub malformed: usize,
+    /// Identical repeats of an already-loaded key, collapsed.
+    pub duplicates: usize,
+    /// Same-key rows with differing payloads (first wins).
+    pub conflicts: usize,
+    /// Whether the file ended in a torn (newline-less) tail.
+    pub torn_tail: bool,
+}
+
+/// A loaded simulation store: the full on-disk row set indexed by
+/// fingerprint, then key (nested so the per-unit probe on the dispatch
+/// path never re-hashes the fingerprint), plus the append path.
+#[derive(Debug)]
+pub struct SimStore {
+    path: PathBuf,
+    rows: BTreeMap<String, BTreeMap<Key, SimOutput>>,
+    report: LoadReport,
+    /// True while the on-disk file still ends in a torn tail (repaired
+    /// lazily by the next append).
+    torn_tail: bool,
+}
+
+impl SimStore {
+    /// Open a store, loading every valid row. A missing file is an
+    /// empty store (created on first append); unreadable files and
+    /// malformed *rows* are not fatal — rows are skipped and counted —
+    /// but a real read error on an existing file is.
+    pub fn open(path: impl Into<PathBuf>) -> Result<SimStore> {
+        let path = path.into();
+        let mut store = SimStore {
+            path,
+            rows: BTreeMap::new(),
+            report: LoadReport::default(),
+            torn_tail: false,
+        };
+        if !store.path.exists() {
+            return Ok(store);
+        }
+        let text = std::fs::read_to_string(&store.path)
+            .map_err(|e| Error::io(format!("read sim store {}", store.path.display()), e))?;
+        store.report.torn_tail = !text.is_empty() && !text.ends_with('\n');
+        store.torn_tail = store.report.torn_tail;
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Some((fp, key, out)) = parse_line(line) else {
+                store.report.malformed += 1;
+                continue;
+            };
+            match store.rows.entry(fp).or_default().entry(key) {
+                Entry::Occupied(prev) => {
+                    if bits(prev.get()) == bits(&out) {
+                        store.report.duplicates += 1;
+                    } else {
+                        store.report.conflicts += 1;
+                    }
+                }
+                Entry::Vacant(slot) => {
+                    slot.insert(out);
+                    store.report.records += 1;
+                }
+            }
+        }
+        if store.report.malformed > 0 || store.report.conflicts > 0 {
+            log::warn(format!(
+                "sim store {}: skipped {} malformed line(s), kept first of {} conflict(s)",
+                store.path.display(),
+                store.report.malformed,
+                store.report.conflicts
+            ));
+        }
+        Ok(store)
+    }
+
+    /// The file this store persists to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Load-time accounting (what `repro sim-store stat` prints).
+    pub fn report(&self) -> LoadReport {
+        self.report
+    }
+
+    /// Distinct `(fingerprint, key)` rows held.
+    pub fn len(&self) -> usize {
+        self.rows.values().map(BTreeMap::len).sum()
+    }
+
+    /// True when no rows are held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look one row up within a scoring context (this runs once per
+    /// memo-missed work unit on the campaign dispatch path).
+    pub fn get(&self, fingerprint: &str, key: &Key) -> Option<SimOutput> {
+        self.rows.get(fingerprint)?.get(key).cloned()
+    }
+
+    /// Row counts per fingerprint, sorted (for `stat`).
+    pub fn per_fingerprint(&self) -> Vec<(String, usize)> {
+        self.rows.iter().map(|(fp, m)| (fp.clone(), m.len())).collect()
+    }
+
+    /// Append freshly simulated rows (skipping keys already held) and
+    /// flush, creating the file/parents on first use and terminating a
+    /// torn tail so it can never merge with a fresh row. One buffered
+    /// write per call: the campaign flushes after each worker chunk, so
+    /// a killed campaign still warms the next one.
+    pub fn append(&mut self, fingerprint: &str, fresh: &[(Key, SimOutput)]) -> Result<()> {
+        let mut buf = String::new();
+        if self.torn_tail {
+            buf.push('\n');
+        }
+        if !fresh.is_empty() {
+            let held = self.rows.entry(fingerprint.to_string()).or_default();
+            for (key, out) in fresh {
+                if held.contains_key(key) {
+                    continue;
+                }
+                buf.push_str(&record_line(fingerprint, key, out));
+                buf.push('\n');
+                held.insert(key.clone(), out.clone());
+            }
+        }
+        if buf.is_empty() {
+            return Ok(());
+        }
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| Error::io(format!("create {}", dir.display()), e))?;
+            }
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| Error::io(format!("open sim store {}", self.path.display()), e))?;
+        f.write_all(buf.as_bytes())
+            .map_err(|e| Error::io(format!("append sim store {}", self.path.display()), e))?;
+        f.flush()
+            .map_err(|e| Error::io(format!("flush sim store {}", self.path.display()), e))?;
+        self.torn_tail = false;
+        Ok(())
+    }
+
+    /// Compact the file: rewrite the held row set (sorted by
+    /// fingerprint, then key — byte-stable) through a tmp file + atomic
+    /// rename, dropping every malformed/duplicate/conflicting line the
+    /// load skipped. Returns how many lines the rewrite shed.
+    pub fn gc(&mut self) -> Result<usize> {
+        let dropped = self.report.malformed
+            + self.report.duplicates
+            + self.report.conflicts
+            + usize::from(self.report.torn_tail);
+        let mut buf = String::new();
+        for (fp, held) in &self.rows {
+            for (key, out) in held {
+                buf.push_str(&record_line(fp, key, out));
+                buf.push('\n');
+            }
+        }
+        let tmp = path_with_suffix(&self.path, ".tmp");
+        std::fs::write(&tmp, buf.as_bytes())
+            .map_err(|e| Error::io(format!("write {}", tmp.display()), e))?;
+        std::fs::rename(&tmp, &self.path)
+            .map_err(|e| Error::io(format!("rename {} over store", tmp.display()), e))?;
+        self.torn_tail = false;
+        self.report = LoadReport { records: self.len(), ..LoadReport::default() };
+        Ok(dropped)
+    }
+
+    /// The whole row set as a CSV document (for `export`), sorted like
+    /// [`SimStore::gc`] writes.
+    pub fn export_csv(&self) -> String {
+        let mut s = String::from(concat!(
+            "fingerprint,trace,nodes,mem,unroll,word_bytes,alus,engine,",
+            "cycles,period_ns,time_ns,mem_area_um2,fu_area_um2,area_um2,",
+            "power_mw,dyn_energy_pj,mem_accesses,port_stalls,stall_cycles\n"
+        ));
+        for (fp, held) in &self.rows {
+            for (k, o) in held {
+                s.push_str(&format!(
+                    "{fp},{:016x},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    k.trace_hash,
+                    k.nodes,
+                    k.mem,
+                    k.unroll,
+                    k.word_bytes,
+                    k.alus,
+                    k.engine,
+                    o.cycles,
+                    o.period_ns,
+                    o.time_ns,
+                    o.mem_area_um2,
+                    o.fu_area_um2,
+                    o.area_um2,
+                    o.power_mw,
+                    o.dyn_energy_pj,
+                    o.mem_accesses,
+                    o.port_stalls,
+                    o.stall_cycles,
+                ));
+            }
+        }
+        s
+    }
+}
+
+/// Accounting from one [`pool`] call (what `repro merge
+/// --pool-sim-stores` prints).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolReport {
+    /// Input store files read.
+    pub inputs: usize,
+    /// Distinct rows held across the inputs (after each input's own
+    /// dedupe).
+    pub rows_seen: usize,
+    /// Rows appended to the output store.
+    pub added: usize,
+    /// Rows the output already held with the identical payload.
+    pub already_held: usize,
+    /// Rows whose key was already held with a *different* payload —
+    /// the earlier row wins (pre-existing output rows beat inputs,
+    /// earlier inputs beat later ones).
+    pub conflicts: usize,
+    /// Malformed/corrupt lines skipped across the inputs.
+    pub malformed: usize,
+}
+
+/// Reconcile N shard-fleet stores into one: open (or create) `out`,
+/// absorb every input's rows with first-wins semantics, and append the
+/// genuinely new rows in one sorted batch per `(input, fingerprint)` —
+/// the multi-host closing move of a sharded campaign, where each host
+/// accumulated its own simulation rows and the fleet wants one warm
+/// artifact.
+///
+/// First-wins ordering: rows already in `out` beat every input, and an
+/// earlier input beats a later one (matching the cost-store pool and
+/// load-time conflict rules). Conflicts can only arise across
+/// *different* engines or scoring contexts mis-sharing a fingerprint —
+/// counted and kept-first, never merged.
+pub fn pool<P: AsRef<Path>>(inputs: &[P], out: &Path) -> Result<(SimStore, PoolReport)> {
+    let mut store = SimStore::open(out)?;
+    let mut report = PoolReport { inputs: inputs.len(), ..PoolReport::default() };
+    for input in inputs {
+        let src = SimStore::open(input.as_ref())?;
+        report.malformed += src.report().malformed;
+        for (fp, held) in &src.rows {
+            let mut fresh: Vec<(Key, SimOutput)> = Vec::new();
+            for (key, out_row) in held {
+                report.rows_seen += 1;
+                match store.get(fp, key) {
+                    Some(prev) if bits(&prev) == bits(out_row) => report.already_held += 1,
+                    Some(_) => report.conflicts += 1,
+                    None => fresh.push((key.clone(), out_row.clone())),
+                }
+            }
+            report.added += fresh.len();
+            store.append(fp, &fresh)?;
+        }
+    }
+    Ok((store, report))
+}
+
+/// The raw bit patterns of an output (exact comparison: duplicate vs
+/// conflict must not be fooled by NaN or -0.0 semantics).
+fn bits(o: &SimOutput) -> [u64; 11] {
+    [
+        o.cycles,
+        u64::from(o.period_ns.to_bits()),
+        o.time_ns.to_bits(),
+        u64::from(o.mem_area_um2.to_bits()),
+        u64::from(o.fu_area_um2.to_bits()),
+        u64::from(o.area_um2.to_bits()),
+        u64::from(o.power_mw.to_bits()),
+        o.dyn_energy_pj.to_bits(),
+        o.mem_accesses,
+        o.port_stalls,
+        o.stall_cycles,
+    ]
+}
+
+/// Emit one store row. Floats use shortest round-trip formatting, so
+/// `parse_line(record_line(..))` reproduces the identical bits.
+pub fn record_line(fingerprint: &str, key: &Key, out: &SimOutput) -> String {
+    format!(
+        concat!(
+            "{{\"schema\":\"{}\",\"k\":\"{:016x}\",\"fp\":\"{}\",",
+            "\"trace\":\"{:016x}\",\"nodes\":{},\"mem\":\"{}\",",
+            "\"unroll\":{},\"word_bytes\":{},\"alus\":{},\"engine\":{},",
+            "\"cycles\":{},\"period_ns\":{},\"time_ns\":{},",
+            "\"mem_area_um2\":{},\"fu_area_um2\":{},\"area_um2\":{},",
+            "\"power_mw\":{},\"dyn_energy_pj\":{},\"mem_accesses\":{},",
+            "\"port_stalls\":{},\"stall_cycles\":{}}}"
+        ),
+        SCHEMA,
+        key_hash(fingerprint, key),
+        fingerprint,
+        key.trace_hash,
+        key.nodes,
+        key.mem,
+        key.unroll,
+        key.word_bytes,
+        key.alus,
+        key.engine,
+        out.cycles,
+        out.period_ns,
+        out.time_ns,
+        out.mem_area_um2,
+        out.fu_area_um2,
+        out.area_um2,
+        out.power_mw,
+        out.dyn_energy_pj,
+        out.mem_accesses,
+        out.port_stalls,
+        out.stall_cycles,
+    )
+}
+
+/// Parse one row back. `None` for malformed lines, foreign schemas, or
+/// rows whose recorded key hash does not match the recomputed one
+/// (corruption / hand edits) — the store treats all of those as absent.
+pub fn parse_line(line: &str) -> Option<(String, Key, SimOutput)> {
+    if field(line, "schema")? != SCHEMA {
+        return None;
+    }
+    let fp = field(line, "fp")?.to_string();
+    let key = Key {
+        trace_hash: u64::from_str_radix(field(line, "trace")?, 16).ok()?,
+        nodes: field(line, "nodes")?.parse().ok()?,
+        mem: field(line, "mem")?.to_string(),
+        unroll: field(line, "unroll")?.parse().ok()?,
+        word_bytes: field(line, "word_bytes")?.parse().ok()?,
+        alus: field(line, "alus")?.parse().ok()?,
+        engine: field(line, "engine")?.parse().ok()?,
+    };
+    let recorded = u64::from_str_radix(field(line, "k")?, 16).ok()?;
+    if recorded != key_hash(&fp, &key) {
+        return None;
+    }
+    let out = SimOutput {
+        cycles: field(line, "cycles")?.parse().ok()?,
+        period_ns: field(line, "period_ns")?.parse().ok()?,
+        time_ns: field(line, "time_ns")?.parse().ok()?,
+        mem_area_um2: field(line, "mem_area_um2")?.parse().ok()?,
+        fu_area_um2: field(line, "fu_area_um2")?.parse().ok()?,
+        area_um2: field(line, "area_um2")?.parse().ok()?,
+        power_mw: field(line, "power_mw")?.parse().ok()?,
+        dyn_energy_pj: field(line, "dyn_energy_pj")?.parse().ok()?,
+        mem_accesses: field(line, "mem_accesses")?.parse().ok()?,
+        port_stalls: field(line, "port_stalls")?.parse().ok()?,
+        stall_cycles: field(line, "stall_cycles")?.parse().ok()?,
+    };
+    Some((fp, key, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ENGINE_VERSION;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("amm_dse_sim_store_unit");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(name);
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    fn sample_key(mem: &str, unroll: u32) -> Key {
+        Key {
+            trace_hash: 0x1234_5678_9abc_def0,
+            nodes: 2048,
+            unroll,
+            word_bytes: 8,
+            alus: 4,
+            mem: mem.into(),
+            engine: ENGINE_VERSION,
+        }
+    }
+
+    fn sample_out() -> SimOutput {
+        SimOutput {
+            cycles: 123_456,
+            period_ns: 1.2345678,
+            time_ns: 152_415.7,
+            mem_area_um2: 98765.4,
+            fu_area_um2: 1234.5,
+            area_um2: 99999.9,
+            power_mw: 3.1415927,
+            dyn_energy_pj: 424_242.42,
+            mem_accesses: 65_536,
+            port_stalls: 512,
+            stall_cycles: 768,
+        }
+    }
+
+    #[test]
+    fn rows_round_trip_bit_for_bit() {
+        let key = sample_key("xor4r2w", 8);
+        let out = sample_out();
+        let line = record_line("rust-mirror/45nm/abc", &key, &out);
+        let (fp, k, o) = parse_line(&line).expect("must parse");
+        assert_eq!(fp, "rust-mirror/45nm/abc");
+        assert_eq!(k, key);
+        assert_eq!(bits(&o), bits(&out), "shortest float reprs reparse to identical bits");
+    }
+
+    #[test]
+    fn corrupt_rows_and_foreign_schemas_parse_to_none() {
+        let line = record_line("fp", &sample_key("bank4", 1), &sample_out());
+        assert!(parse_line("").is_none());
+        assert!(parse_line("{\"schema\":\"cost-store/v1\"}").is_none());
+        assert!(parse_line(&line[..line.len() / 2]).is_none(), "torn tail must not parse");
+        // flipping a field invalidates the recorded key hash
+        let tampered = line.replace("\"unroll\":1", "\"unroll\":2");
+        assert_ne!(line, tampered);
+        assert!(parse_line(&tampered).is_none(), "hash check must catch edits");
+    }
+
+    #[test]
+    fn store_appends_persist_and_reload() {
+        let path = tmp("roundtrip.jsonl");
+        let mut store = SimStore::open(&path).unwrap();
+        assert!(store.is_empty());
+        let rows =
+            vec![(sample_key("bank4", 1), sample_out()), (sample_key("xor4r2w", 4), sample_out())];
+        store.append("fp-a", &rows).unwrap();
+        assert_eq!(store.len(), 2);
+        // re-appending held keys writes nothing new
+        store.append("fp-a", &rows).unwrap();
+        let reloaded = SimStore::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(reloaded.report().records, 2);
+        assert_eq!(reloaded.report().duplicates, 0, "held keys must not re-append");
+        let got = reloaded.get("fp-a", &sample_key("bank4", 1)).unwrap();
+        assert_eq!(bits(&got), bits(&sample_out()));
+    }
+
+    #[test]
+    fn fingerprints_and_engine_versions_isolate_rows() {
+        let path = tmp("isolation.jsonl");
+        let mut store = SimStore::open(&path).unwrap();
+        let key = sample_key("mp2x", 2);
+        store.append("rust-mirror/45nm/aaaa", &[(key.clone(), sample_out())]).unwrap();
+        // stub-simulated rows are invisible to a pjrt-fingerprinted lookup
+        assert!(store.get("pjrt/cost_model/bbbb", &key).is_none());
+        assert!(store.get("rust-mirror/45nm/aaaa", &key).is_some());
+        // a bumped engine version quarantines the old row in-context
+        let newer = Key { engine: key.engine + 1, ..key.clone() };
+        assert!(store.get("rust-mirror/45nm/aaaa", &newer).is_none());
+        // both contexts coexist in one file
+        let mut other = sample_out();
+        other.cycles = 1;
+        store.append("pjrt/cost_model/bbbb", &[(key.clone(), other)]).unwrap();
+        let reloaded = SimStore::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(reloaded.get("rust-mirror/45nm/aaaa", &key).unwrap().cycles, 123_456);
+        assert_eq!(reloaded.get("pjrt/cost_model/bbbb", &key).unwrap().cycles, 1);
+        let per_fp = reloaded.per_fingerprint();
+        assert_eq!(per_fp.len(), 2);
+        assert!(per_fp.iter().all(|(_, n)| *n == 1), "{per_fp:?}");
+    }
+
+    #[test]
+    fn torn_tails_are_detected_and_repaired_by_the_next_append() {
+        let path = tmp("torn.jsonl");
+        let mut store = SimStore::open(&path).unwrap();
+        store.append("fp", &[(sample_key("bank1", 1), sample_out())]).unwrap();
+        // simulate a kill mid-append: a newline-less fragment
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, format!("{full}{}", &full[..30])).unwrap();
+        let mut reopened = SimStore::open(&path).unwrap();
+        assert!(reopened.report().torn_tail);
+        assert_eq!(reopened.len(), 1, "the torn fragment must not parse");
+        reopened.append("fp", &[(sample_key("bank1", 2), sample_out())]).unwrap();
+        // the repair newline keeps the fresh row parseable
+        let repaired = SimStore::open(&path).unwrap();
+        assert!(!repaired.report().torn_tail);
+        assert_eq!(repaired.len(), 2);
+        assert_eq!(repaired.report().malformed, 1, "the terminated fragment is skipped");
+    }
+
+    #[test]
+    fn gc_compacts_duplicates_conflicts_and_garbage() {
+        let path = tmp("gc.jsonl");
+        let key = sample_key("lvt4r2w", 4);
+        let good = record_line("fp", &key, &sample_out());
+        let mut conflicted = sample_out();
+        conflicted.cycles += 1;
+        let conflict = record_line("fp", &key, &conflicted);
+        std::fs::write(&path, format!("{good}\ngarbage line\n{good}\n{conflict}\n")).unwrap();
+        let mut store = SimStore::open(&path).unwrap();
+        let rep = store.report();
+        assert_eq!((rep.records, rep.malformed, rep.duplicates, rep.conflicts), (1, 1, 1, 1));
+        // first record wins the conflict
+        assert_eq!(store.get("fp", &key).unwrap().cycles, sample_out().cycles);
+        let dropped = store.gc().unwrap();
+        assert_eq!(dropped, 3);
+        let clean = SimStore::open(&path).unwrap();
+        let rep = clean.report();
+        assert_eq!((rep.records, rep.malformed, rep.duplicates, rep.conflicts), (1, 0, 0, 0));
+        // gc output is byte-stable
+        let once = std::fs::read_to_string(&path).unwrap();
+        SimStore::open(&path).unwrap().gc().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), once);
+    }
+
+    #[test]
+    fn pool_reconciles_shard_stores_first_wins() {
+        let a_path = tmp("pool_a.jsonl");
+        let b_path = tmp("pool_b.jsonl");
+        let out_path = tmp("pool_out.jsonl");
+        let shared = sample_key("bank4", 1);
+        let only_a = sample_key("bank4", 4);
+        let only_b = sample_key("xor4r2w", 1);
+        let mut a = SimStore::open(&a_path).unwrap();
+        a.append("fp", &[(shared.clone(), sample_out()), (only_a, sample_out())]).unwrap();
+        let mut b = SimStore::open(&b_path).unwrap();
+        let mut divergent = sample_out();
+        divergent.cycles += 1;
+        b.append("fp", &[(shared.clone(), divergent), (only_b, sample_out())]).unwrap();
+        let (pooled, rep) = pool(&[&a_path, &b_path], &out_path).unwrap();
+        assert_eq!(rep.inputs, 2);
+        assert_eq!(rep.rows_seen, 4);
+        assert_eq!(rep.added, 3, "shared key pools once");
+        assert_eq!(rep.conflicts, 1, "divergent payload for the shared key");
+        assert_eq!(rep.already_held, 0);
+        assert_eq!(pooled.len(), 3);
+        // first input wins the conflict
+        assert_eq!(pooled.get("fp", &shared).unwrap().cycles, sample_out().cycles);
+        // the output is a normal store: reload agrees
+        let reloaded = SimStore::open(&out_path).unwrap();
+        assert_eq!(reloaded.len(), 3);
+        assert_eq!(reloaded.report().records, 3);
+        // pooling again is a no-op: everything already held
+        let (_, again) = pool(&[&a_path, &b_path], &out_path).unwrap();
+        assert_eq!(again.added, 0);
+        assert_eq!(again.already_held, 3);
+        assert_eq!(again.conflicts, 1, "the divergent row still conflicts");
+        assert_eq!(SimStore::open(&out_path).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn export_csv_lists_every_row() {
+        let path = tmp("export.jsonl");
+        let mut store = SimStore::open(&path).unwrap();
+        store.append("fp-b", &[(sample_key("xor4r2w", 1), sample_out())]).unwrap();
+        store.append("fp-a", &[(sample_key("bank4", 1), sample_out())]).unwrap();
+        let csv = store.export_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3, "{csv}");
+        assert!(lines[0].starts_with("fingerprint,trace,nodes,mem"));
+        // sorted by fingerprint then key
+        assert!(lines[1].starts_with("fp-a,"));
+        assert!(lines[1].contains(",bank4,"));
+        assert!(lines[2].starts_with("fp-b,"));
+        assert!(lines[2].contains(",xor4r2w,"));
+    }
+}

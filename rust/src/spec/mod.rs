@@ -221,6 +221,10 @@ pub struct CampaignSpec {
     /// [`crate::cost`]). `None` derives `<sink>.cost.jsonl` when a sink
     /// is set; coordinator-less (offline) runs never open one.
     pub cost_store: Option<PathBuf>,
+    /// Persistent simulation-result store path (`sim-store/v1`, see
+    /// [`crate::sim`]). `None` derives `<sink>.sim.jsonl` when a sink
+    /// is set; coordinator-less (offline) runs never open one.
+    pub sim_store: Option<PathBuf>,
     /// Campaign-level worker threads (0 = fall through to
     /// `sweep.threads`, then the coordinator's count, then auto).
     pub threads: usize,
@@ -243,6 +247,7 @@ impl Default for CampaignSpec {
             sweep: Sweep::default(),
             sink: None,
             cost_store: None,
+            sim_store: None,
             threads: 0,
             shard: None,
             shard_strategy: ShardStrategy::Hash,
@@ -284,6 +289,12 @@ impl CampaignSpec {
     /// Set the persistent macro-cost store path.
     pub fn with_cost_store(mut self, path: impl Into<PathBuf>) -> Self {
         self.cost_store = Some(path.into());
+        self
+    }
+
+    /// Set the persistent simulation-result store path.
+    pub fn with_sim_store(mut self, path: impl Into<PathBuf>) -> Self {
+        self.sim_store = Some(path.into());
         self
     }
 
@@ -359,8 +370,8 @@ impl CampaignSpec {
     /// benchmarks are listed before locality-only rows (relative
     /// order within each group is preserved), defaults that parsing
     /// restores (`threads = 0`, `lanes = 0`, absent
-    /// sink/cost-store/shard, `hash` shard strategy, empty model
-    /// list) are omitted.
+    /// sink/cost-store/sim-store/shard, `hash` shard strategy, empty
+    /// model list) are omitted.
     /// `parse(to_toml(spec)) == spec` for specs already in
     /// canonical plan order, and `to_toml(parse(text)) == text` for
     /// canonical documents (pinned by `tests/spec_shard.rs`).
@@ -381,6 +392,9 @@ impl CampaignSpec {
         }
         if let Some(store) = &self.cost_store {
             let _ = writeln!(s, "cost_store = \"{}\"", store.display());
+        }
+        if let Some(store) = &self.sim_store {
+            let _ = writeln!(s, "sim_store = \"{}\"", store.display());
         }
         if let Some(w) = &self.weights {
             let _ = writeln!(s, "weights = \"{}\"", w.display());

@@ -108,15 +108,17 @@ fn campaign_issues_one_deduplicated_cost_batch_for_the_whole_suite() {
             assert_eq!(a.out, b.out, "{name}/{}", a.id);
         }
     }
-    // the sequential comparison runs re-queried only shapes the
-    // campaign already scored: the coordinator's memo tier answered
-    // every one of them, so the backend batch count never moved
+    // the sequential comparison runs re-dispatched only units the
+    // campaign already simulated: the coordinator's sim memo answered
+    // every one of them (so nothing was even re-scored), and the
+    // backend batch count never moved
     assert_eq!(
         coord.batches_issued(),
         1,
         "memo-warm re-scoring must not reach the runtime backend"
     );
-    assert!(coord.cost_counters().memo_hits > 0);
+    assert!(coord.sim_counters().hits() > 0, "re-runs answer from the sim memo");
+    assert_eq!(coord.sim_counters().misses, outcome.simulated);
 }
 
 #[test]
@@ -281,12 +283,15 @@ fn coordinator_backed_campaign_resumes_identically() {
         .run_with(&coord)
         .unwrap();
     assert_eq!(resumed.resumed, 5);
-    assert_eq!(resumed.simulated, full.total_points() - 5);
-    // the pending points still need scoring, but the shared
-    // coordinator's memo (and the `<sink>.cost.jsonl` store the first
-    // run flushed) already hold every macro shape: zero backend batches
+    // the pending points need no re-simulation either: the shared
+    // coordinator's sim memo (and the `<sink>.sim.jsonl` store the
+    // first run flushed) already hold every scheduled unit, so they
+    // skip the scheduler — and with zero fresh units there is nothing
+    // to score, so the backend batch count never moves
+    assert_eq!(resumed.simulated, 0, "warmed resume re-simulates nothing");
+    assert_eq!(resumed.memoized, full.total_points() - 5);
+    assert!(resumed.sim.hits() == resumed.memoized);
     assert_eq!(resumed.cost_batches, 0, "warmed resume must issue zero cost batches");
-    assert!(resumed.cost.hits() > 0);
     for (a, b) in full.explorations().iter().zip(resumed.explorations()) {
         for (x, y) in a.points().iter().zip(b.points()) {
             assert_eq!(x.out, y.out, "{}/{}", a.benchmark, x.id);

@@ -112,12 +112,17 @@ fn sink_plus_store_makes_a_resume_fully_free() {
     assert_eq!(resumed.resumed, full.total_points());
     assert_eq!(coord_b.batches_issued(), 0, "warmed resume must issue zero cost batches");
 
-    // fresh coordinator + LOST sink, kept store: everything
-    // re-simulates, nothing re-batches
+    // fresh coordinator + LOST sink, kept stores: nothing re-batches —
+    // and since the default `<sink>.sim.jsonl` simulation store also
+    // outlives the sink, nothing re-simulates either: every point
+    // rebuilds straight from the two stores
     std::fs::remove_file(&sink_path).unwrap();
+    let derived_sim = campaign::default_sim_store(&sink_path);
+    assert!(derived_sim.exists(), "sim store derives next to the sink: {}", derived_sim.display());
     let coord_c = coordinator(&dir);
     let rebuilt = run(&coord_c);
-    assert_eq!(rebuilt.simulated, full.total_points());
+    assert_eq!(rebuilt.simulated, 0, "the sim store outlives the sink");
+    assert_eq!(rebuilt.memoized, full.total_points());
     assert_eq!(coord_c.batches_issued(), 0, "store outlives the sink");
     assert_eq!(rebuilt.fig5_csv(), full.fig5_csv(), "byte-identical rebuild");
 }

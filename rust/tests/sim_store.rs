@@ -1,0 +1,217 @@
+//! The persistent simulation-store contract, end to end.
+//!
+//! Core claim (ROADMAP "Cross-campaign simulation reuse"): a scheduled
+//! design point is a reusable artifact. A campaign run against a store
+//! holding a *subset* of its units (here: one of two benchmarks) must
+//! simulate only the delta while producing a sink and fig5 CSV
+//! byte-identical to a cold run, at both the scalar engine (`lanes=1`)
+//! and a wide lane width (`lanes=32`); a fully warm re-run against a
+//! fresh sink must simulate **zero** points. Plus: engine-version
+//! quarantine on the row key, and a key-hash collision property over
+//! synthetic (`synth:`) trace configs.
+
+use amm_dse::campaign::{self, Campaign, ExecOptions};
+use amm_dse::coordinator::Coordinator;
+use amm_dse::dse::Sweep;
+use amm_dse::sched::{CompiledTrace, ENGINE_VERSION};
+use amm_dse::sim::{key_hash, Key, SimStore};
+use amm_dse::suite::{self, Scale};
+use amm_dse::util::propkit::{check, Config};
+use amm_dse::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A RustFallback coordinator rooted at an empty artifacts dir.
+fn coordinator(dir: &Path) -> Coordinator {
+    let artifacts = dir.join("artifacts");
+    let _ = std::fs::create_dir_all(&artifacts);
+    Coordinator::with_artifacts(artifacts)
+}
+
+#[test]
+fn half_warm_campaign_simulates_only_the_delta_and_matches_cold_bytes() {
+    for lanes in [1usize, 32] {
+        let dir = tmp_dir(&format!("amm_dse_sim_store_half_warm_{lanes}"));
+        let store_path = dir.join("suite.sim.jsonl");
+        let mut sweep = Sweep::quick();
+        sweep.lanes = lanes;
+        let n_points = sweep.points().len();
+        assert!(n_points > 0);
+
+        // ---- seed: a gemm-only run fills the store with HALF the
+        // units the two-benchmark campaign below will probe for
+        let seed_coord = coordinator(&dir);
+        let seeded = Campaign::new()
+            .benchmark("gemm")
+            .scale(Scale::Tiny)
+            .sweep(sweep.clone())
+            .sim_store(&store_path)
+            .run_with(&seed_coord)
+            .unwrap();
+        assert_eq!(seeded.simulated, n_points, "lanes={lanes}: empty store seeds cold");
+        assert_eq!(seeded.memoized, 0);
+
+        let spec_for = |sink: &Path| {
+            Campaign::new()
+                .benchmarks(["gemm", "fft"])
+                .scale(Scale::Tiny)
+                .sweep(sweep.clone())
+                .sink(sink)
+                .sim_store(&store_path)
+                .into_spec()
+        };
+
+        // ---- cold control: the sim stack is disabled outright, so
+        // every point goes through the scheduler
+        let cold_sink = dir.join("cold.jsonl");
+        let cold_opts = ExecOptions { sim_memo: false, ..ExecOptions::default() };
+        let cold_coord = coordinator(&dir);
+        let cold = campaign::run_with(&spec_for(&cold_sink), &cold_coord, &cold_opts).unwrap();
+        assert_eq!(cold.simulated, 2 * n_points, "lanes={lanes}: cold control simulates all");
+        assert_eq!(cold.memoized, 0);
+
+        // ---- half-warm: gemm units hit the store, only fft simulates
+        let warm_sink = dir.join("warm.jsonl");
+        let warm_coord = coordinator(&dir);
+        let warm = campaign::run_with(
+            &spec_for(&warm_sink),
+            &warm_coord,
+            &ExecOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(warm.memoized, n_points, "lanes={lanes}: the seeded half memoizes");
+        assert_eq!(warm.simulated, n_points, "lanes={lanes}: only the delta simulates");
+        assert_eq!(warm.sim.store_hits, n_points, "fresh coordinator: hits come from disk");
+        assert_eq!(warm.sim.misses, n_points);
+        assert_eq!(warm.fig5_csv(), cold.fig5_csv(), "lanes={lanes}: fig5 byte-identical");
+        let cold_bytes = std::fs::read(&cold_sink).unwrap();
+        let warm_bytes = std::fs::read(&warm_sink).unwrap();
+        assert_eq!(cold_bytes, warm_bytes, "lanes={lanes}: sinks byte-identical");
+
+        // ---- fully warm: a fresh sink + fresh coordinator re-runs the
+        // campaign without simulating a single point
+        let warm2_sink = dir.join("warm2.jsonl");
+        let warm2_coord = coordinator(&dir);
+        let warm2 = campaign::run_with(
+            &spec_for(&warm2_sink),
+            &warm2_coord,
+            &ExecOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(warm2.simulated, 0, "lanes={lanes}: a warm store absorbs the whole run");
+        assert_eq!(warm2.memoized, 2 * n_points);
+        assert_eq!(std::fs::read(&warm2_sink).unwrap(), cold_bytes);
+        assert_eq!(warm2.fig5_csv(), cold.fig5_csv());
+
+        // the store holds each unit exactly once (seed + delta; the
+        // warm passes appended nothing)
+        let store = SimStore::open(&store_path).unwrap();
+        assert_eq!(store.len(), 2 * n_points, "lanes={lanes}: one row per unit");
+        let rep = store.report();
+        assert_eq!((rep.malformed, rep.duplicates, rep.conflicts), (0, 0, 0));
+    }
+}
+
+#[test]
+fn engine_version_quarantines_rows_from_older_kernels() {
+    let dir = tmp_dir("amm_dse_sim_store_engine_ver");
+    let path = dir.join("ver.sim.jsonl");
+    let current = Key {
+        trace_hash: 0xabad_cafe,
+        nodes: 256,
+        unroll: 4,
+        word_bytes: 8,
+        alus: 4,
+        mem: "xor4r2w".into(),
+        engine: ENGINE_VERSION,
+    };
+    let stale = Key { engine: ENGINE_VERSION - 1, ..current.clone() };
+    let out = amm_dse::sched::SimOutput { cycles: 4242, ..Default::default() };
+    {
+        let mut store = SimStore::open(&path).unwrap();
+        store.append("fp", &[(stale.clone(), out.clone())]).unwrap();
+        store.append("fp", &[(current.clone(), out.clone())]).unwrap();
+    }
+    // a reopened store serves each engine version only its own rows
+    let store = SimStore::open(&path).unwrap();
+    assert_eq!(store.len(), 2);
+    assert_eq!(store.get("fp", &current), Some(out.clone()));
+    assert_eq!(store.get("fp", &stale), Some(out));
+    let future = Key { engine: ENGINE_VERSION + 1, ..current.clone() };
+    assert_eq!(store.get("fp", &future), None, "a bumped kernel must start cold");
+    // and the hashes themselves never alias across versions
+    assert_ne!(key_hash("fp", &current), key_hash("fp", &stale));
+    assert_ne!(key_hash("fp", &current), key_hash("fp", &future));
+}
+
+#[test]
+fn key_hashes_never_collide_across_synth_configs() {
+    // A pool of synthetic traces with different generator dials: each
+    // must compile to a distinct content hash...
+    let dials = [
+        "synth:stride=1,rw=0.5,reuse=64,seed=1,n=256",
+        "synth:stride=4,rw=0.5,reuse=64,seed=1,n=256",
+        "synth:stride=rand,rw=0.7,reuse=32,seed=2,n=256",
+        "synth:stride=rand,rw=0.3,reuse=128,seed=3,n=384",
+        "synth:stride=2,rw=0.9,reuse=16,seed=4,n=512",
+    ];
+    let traces: Vec<(u64, u64)> = dials
+        .iter()
+        .map(|d| {
+            let wl = suite::generate(d, Scale::Tiny);
+            let compiled = CompiledTrace::new(&wl.trace, 8);
+            (compiled.content_hash(), wl.trace.len() as u64)
+        })
+        .collect();
+    for (i, a) in traces.iter().enumerate() {
+        for b in &traces[i + 1..] {
+            assert_ne!(a.0, b.0, "synth dials must separate trace content");
+        }
+    }
+    // ...and over the whole (trace, knobs, mem, fingerprint) domain,
+    // two draws hash equal iff they ARE equal.
+    let mems = ["bank1", "bank4", "xor2r1w", "xor4r2w", "lvt2r2w", "mp2x"];
+    let fps = ["stub-v1", "pjrt-0123abcd"];
+    type Draw = (usize, u32, u32, u32, usize, usize);
+    let draw = |rng: &mut Rng| -> Draw {
+        (
+            rng.below_usize(traces.len()),
+            *rng.pick(&[1u32, 2, 4, 8, 16]),
+            *rng.pick(&[1u32, 2, 4, 8]),
+            *rng.pick(&[2u32, 4, 8, 16]),
+            rng.below_usize(mems.len()),
+            rng.below_usize(fps.len()),
+        )
+    };
+    let realize = |d: &Draw| -> (String, Key) {
+        let (t, unroll, word_bytes, alus, m, f) = *d;
+        let key = Key {
+            trace_hash: traces[t].0,
+            nodes: traces[t].1,
+            unroll,
+            word_bytes,
+            alus,
+            mem: mems[m].to_string(),
+            engine: ENGINE_VERSION,
+        };
+        (fps[f].to_string(), key)
+    };
+    check(
+        Config::default().cases(512),
+        |rng| (draw(rng), draw(rng)),
+        |(a, b)| {
+            let (fp_a, key_a) = realize(a);
+            let (fp_b, key_b) = realize(b);
+            let same_input = fp_a == fp_b && key_a == key_b;
+            let same_hash = key_hash(&fp_a, &key_a) == key_hash(&fp_b, &key_b);
+            same_input == same_hash
+        },
+        |_| vec![],
+    );
+}

@@ -20,7 +20,8 @@ fn sample_spec() -> CampaignSpec {
         .locality_only("kmp")
         .with_shard(0, 2)
         .with_shard_strategy(ShardStrategy::Weighted)
-        .with_cost_store("results/suite.cost.jsonl");
+        .with_cost_store("results/suite.cost.jsonl")
+        .with_sim_store("results/suite.sim.jsonl");
     spec.scale = Scale::Tiny;
     spec.sweep = sweep;
     spec.sink = Some(PathBuf::from("results/suite.jsonl"));
@@ -55,6 +56,7 @@ fn spec_round_trips_through_toml_byte_for_byte() {
     assert_eq!(minimal.scale, Scale::Paper);
     assert!(minimal.sink.is_none() && minimal.shard.is_none());
     assert!(minimal.cost_store.is_none());
+    assert!(minimal.sim_store.is_none());
     assert_eq!(minimal.shard_strategy, ShardStrategy::Hash);
     assert_eq!(minimal.threads, 0);
     // and a default-heavy spec also round-trips
